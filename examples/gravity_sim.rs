@@ -1,0 +1,58 @@
+//! BSF-Gravity demo: integrate a probe's trajectory through a cloud of
+//! motionless attractors with the parallel skeleton, then predict how far
+//! the computation would scale on a cluster.
+//!
+//! ```text
+//! cargo run --release --example gravity_sim
+//! ```
+
+use std::sync::Arc;
+
+use bsf::coordinator::{run_sequential, BsfProblem, LiveRunner};
+use bsf::experiments::paper_gravity_params;
+use bsf::linalg::generators::random_bodies;
+use bsf::model::BsfModel;
+use bsf::problems::GravityProblem;
+
+fn main() -> anyhow::Result<()> {
+    let n = 600;
+    let workload = random_bodies(n, 5.0, 2026);
+    println!("== BSF-Gravity: {n} attractors, probe from {:?} ==", workload.x0);
+
+    // Sequential trajectory (Algorithm 5).
+    let problem = GravityProblem::new(workload.clone(), 1e-3, 2e-6);
+    let seq = run_sequential(&problem, 25_000, None);
+    let t = seq.final_approx[6];
+    println!(
+        "sequential: {} steps to t = {:.2e}, final position ({:.3}, {:.3}, {:.3})",
+        seq.iterations, t, seq.final_approx[0], seq.final_approx[1], seq.final_approx[2]
+    );
+
+    // Parallel (Algorithm 6) with 3 workers — must match bit-for-bit in
+    // iteration count and closely in state.
+    let artifact_dir = std::path::Path::new("artifacts")
+        .join("manifest.json")
+        .exists()
+        .then(|| std::path::PathBuf::from("artifacts"));
+    let p: Arc<dyn BsfProblem> = Arc::new(GravityProblem::new(workload, 1e-3, 2e-6));
+    let mut runner = LiveRunner::new(3, 25_000);
+    runner.artifact_dir = artifact_dir;
+    let live = runner.run(p)?;
+    println!(
+        "live (K=3):  {} steps, final position ({:.3}, {:.3}, {:.3})",
+        live.iterations, live.final_approx[0], live.final_approx[1], live.final_approx[2]
+    );
+    assert_eq!(live.iterations, seq.iterations, "parallel must track sequential");
+
+    // Scalability forecast on the paper's cluster parameters.
+    for n_pred in [300usize, 600, 900, 1_200] {
+        let params = paper_gravity_params(n_pred).expect("published");
+        let model = BsfModel::new(params);
+        println!(
+            "paper cluster, n = {n_pred:>5}: K_BSF = {:>6.1} (peak speedup ≈ {:.0}x)",
+            model.k_bsf(),
+            model.speedup(model.k_bsf().round() as usize)
+        );
+    }
+    Ok(())
+}

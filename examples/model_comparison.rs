@@ -1,0 +1,56 @@
+//! Model comparison: BSF vs BSP vs LogGP on the same iterative workload —
+//! the paper's motivating claim is that only BSF yields a *closed-form*
+//! scalability boundary; the baselines must be swept numerically.
+//!
+//! ```text
+//! cargo run --release --example model_comparison
+//! ```
+
+use bsf::experiments::paper_jacobi_params;
+use bsf::model::bsp::{BspModel, BspParams};
+use bsf::model::logp::{LogGpModel, LogGpParams};
+use bsf::model::BsfModel;
+use bsf::net::NetworkParams;
+use bsf::util::Table;
+
+fn main() {
+    let net = NetworkParams::tornado_susu();
+    println!("== parallel computation models on BSF-Jacobi (paper Table 2 params) ==\n");
+    for n in [1_500usize, 5_000, 10_000, 16_000] {
+        let params = paper_jacobi_params(n).expect("published size");
+        let bsf = BsfModel::new(params);
+        let bsp = BspModel {
+            p: params,
+            m: BspParams { g: net.tau_tr, l_sync: 2.0 * net.latency },
+            words_down: n,
+            words_up: n,
+        };
+        let loggp = LogGpModel {
+            p: params,
+            m: LogGpParams { l: net.latency, o: 2e-6, g: 4e-6, big_g: net.tau_tr },
+            words_down: n,
+            words_up: n,
+        };
+
+        let mut t = Table::new(
+            format!("n = {n}: predicted speedup by model"),
+            &["K", "BSF (eq.9)", "BSP", "LogGP"],
+        );
+        for k in [1usize, 16, 64, 128, 256] {
+            t.row(&[
+                k.to_string(),
+                format!("{:.1}", bsf.speedup(k)),
+                format!("{:.1}", bsp.speedup(k)),
+                format!("{:.1}", loggp.speedup(k)),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "  boundary: BSF = {:.0} (closed form, eq. 14) | BSP = {} (numeric sweep) | \
+             LogGP = {} (numeric sweep)\n",
+            bsf.k_bsf(),
+            bsp.k_peak(2_000),
+            loggp.k_peak(2_000)
+        );
+    }
+}

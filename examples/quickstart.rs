@@ -1,0 +1,75 @@
+//! Quickstart: solve a linear system with the BSF skeleton and predict its
+//! scalability boundary — the library's two core capabilities in ~60 lines.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use bsf::coordinator::{run_sequential, BsfProblem, LiveRunner};
+use bsf::linalg::generators::dominant_system;
+use bsf::model::BsfModel;
+use bsf::net::NetworkParams;
+use bsf::problems::JacobiProblem;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A diagonally dominant system A x = b with solution x* = (1, …, 1).
+    let n = 512;
+    let problem = JacobiProblem::new(dominant_system(n), 1e-24);
+
+    // 2. Sequential reference (Algorithm 1).
+    let seq = run_sequential(&problem, 500, None);
+    println!(
+        "sequential: {} iterations, converged = {}, residual = {:.2e}",
+        seq.iterations,
+        seq.converged,
+        problem.system().residual(&seq.final_approx)
+    );
+
+    // 3. The same algorithm through the parallel skeleton (Algorithm 2),
+    //    4 live workers, PJRT kernels on the hot path when artifacts exist.
+    let artifact_dir = std::path::Path::new("artifacts")
+        .join("manifest.json")
+        .exists()
+        .then(|| std::path::PathBuf::from("artifacts"));
+    let problem: Arc<dyn BsfProblem> = Arc::new(JacobiProblem::new(dominant_system(n), 1e-24));
+    let mut runner = LiveRunner::new(4, 500);
+    runner.artifact_dir = artifact_dir;
+    let live = runner.run(problem.clone())?;
+    println!(
+        "live (K=4): {} iterations, converged = {}, wall = {:.3}s",
+        live.iterations, live.converged, live.wall
+    );
+    let max_dev: f64 = live
+        .final_approx
+        .iter()
+        .zip(&seq.final_approx)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    println!("live vs sequential max deviation: {max_dev:.2e}");
+
+    // 4. Predict the scalability boundary on the paper's cluster *before*
+    //    running anything at scale (the paper's headline capability).
+    //    At n = 512 a cluster wouldn't help (comm-bound — the model says
+    //    so!); the boundary becomes meaningful as n grows:
+    let tau_op = 9.3e-10; // seconds/arithmetic-op, Tornado-SUSU class node
+    for n_pred in [512usize, 4_096, 16_000, 64_000] {
+        let mut spec = problem.cost_spec();
+        spec.l = n_pred;
+        spec.words_down = n_pred;
+        spec.words_up = n_pred;
+        spec.ops_map_per_elem = n_pred as f64;
+        spec.ops_combine = n_pred as f64;
+        let params = spec.cost_params(tau_op, &NetworkParams::tornado_susu());
+        let model = BsfModel::new(params);
+        println!(
+            "predicted for a Tornado-SUSU-class cluster, n = {n_pred:>6}: \
+             K_BSF = {:>4.0} workers (peak speedup ≈ {:.0}x, comp/comm = {:.0})",
+            model.k_bsf(),
+            model.speedup((model.k_bsf().round() as usize).max(1)),
+            params.comp_comm_ratio(),
+        );
+    }
+    Ok(())
+}

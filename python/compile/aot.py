@@ -1,0 +1,87 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for Rust/PJRT.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every lowering uses ``return_tuple=True``; the Rust runtime unwraps with
+``to_tuple()``. A ``manifest.json`` records, per artifact, the argument and
+result shapes/dtypes so the Rust artifact registry can validate calls.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--sizes 256,512]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax ``Lowered`` to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_meta(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_one(name: str, fn, example_args) -> tuple[str, dict]:
+    """Lower one artifact; returns (hlo_text, manifest_entry)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_specs = jax.eval_shape(fn, *example_args)
+    if not isinstance(out_specs, tuple):
+        out_specs = (out_specs,)
+    entry = {
+        "inputs": [_spec_meta(a) for a in example_args],
+        "outputs": [_spec_meta(o) for o in out_specs],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, entry
+
+
+def build(out_dir: pathlib.Path, sizes, block: int) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"block": block, "sizes": list(sizes), "artifacts": {}}
+    for name, (fn, args) in model.artifact_specs(sizes, block).items():
+        text, entry = lower_one(name, fn, args)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        entry["file"] = path.name
+        manifest["artifacts"][name] = entry
+        print(f"  {name}: {len(text)} chars -> {path.name}")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="256,512,1024,2048")
+    ap.add_argument("--block", type=int, default=256)
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    manifest = build(pathlib.Path(args.out_dir), sizes, args.block)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (worker hot spots) and their pure-jnp oracles."""

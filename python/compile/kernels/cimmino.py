@@ -1,0 +1,81 @@
+"""Pallas kernel for BSF-Cimmino (linear inequalities, paper ref [31]).
+
+The Map over a worker's block of inequality rows computes, per violated row
+``a_i . x > b_i``, the projection correction ``-(max(0, a_i.x - b_i) /
+||a_i||^2) a_i``; the fold is n-vector addition. Zero rows (padding)
+contribute exactly zero.
+
+Tiling: the row block streams through VMEM ``TILE_ROWS`` rows at a time while
+the ``(n,)`` x-vector and the ``(n,)`` accumulator stay resident. VMEM per
+step (f64): ``TILE_ROWS*n*8 + 2*n*8 + TILE_ROWS*8`` — with TILE_ROWS = 64 and
+n = 2048 that is ~1.1 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import _R2_FLOOR
+
+#: Row-block size processed per worker call (AOT artifact granularity).
+BLOCK_ROWS = 256
+
+#: Rows per grid step inside the kernel.
+TILE_ROWS = 64
+
+
+def _cimmino_kernel(a_ref, b_ref, x_ref, o_ref):
+    """One row-tile of the Cimmino correction folding."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    resid = a @ x_ref[...] - b_ref[...]
+    viol = jnp.maximum(resid, 0.0)
+    nrm2 = jnp.sum(a * a, axis=1)
+    w = jnp.where(nrm2 > 0.0, viol / jnp.maximum(nrm2, _R2_FLOOR), 0.0)
+    o_ref[...] += -(w @ a)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def cimmino_map_block(
+    a_blk: jax.Array, b_blk: jax.Array, x: jax.Array, *, tile: int | None = None
+):
+    """Partial Cimmino correction over one block of inequality rows (Pallas).
+
+    Args:
+      a_blk: ``(B, n)`` constraint rows, ``B`` a multiple of ``tile``.
+      b_blk: ``(B,)`` right-hand sides.
+      x: ``(n,)`` current approximation.
+      tile: rows per grid step.
+
+    Returns:
+      ``(n,)`` partial correction (the block's folding).
+    """
+    b, n = a_blk.shape
+    if tile is None:
+        from .jacobi import _fit_tile
+
+        tile = _fit_tile(b, TILE_ROWS)
+    if b % tile != 0:
+        raise ValueError(f"block={b} not a multiple of tile={tile}")
+    grid = (b // tile,)
+    return pl.pallas_call(
+        _cimmino_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a_blk.dtype),
+        interpret=True,
+    )(a_blk, b_blk, x)

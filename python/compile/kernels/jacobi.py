@@ -1,0 +1,136 @@
+"""Pallas kernels for BSF-Jacobi (L1, the worker hot spot).
+
+The BSF-Jacobi Map (paper eq. 16) over a worker's column block is a
+column-block matvec ``s_blk = C[:, block] @ x[block]``. The kernel tiles the
+output vector into ``TILE_N`` rows per grid step so that one
+``(TILE_N, B)`` tile of C plus the ``(B,)`` x-block and the ``(TILE_N,)``
+accumulator stream through VMEM; the 2-D tile shape is MXU-friendly
+(``(TILE_N, B) @ (B, 1)``).
+
+VMEM budget per grid step (f64): ``TILE_N*B*8 + B*8 + TILE_N*8`` bytes.
+With TILE_N = 256, B = 256 that is ~0.53 MB — comfortably under the ~16 MB
+VMEM of a TPU core, leaving room for double-buffering (see DESIGN.md §9).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs on the Rust CPU client. Real-TPU performance is *estimated*
+from the BlockSpec in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Column-block width processed per worker call. Fixed so the AOT artifact
+#: set stays finite: a worker's sublist of any length is processed as
+#: ceil(len/B) calls on zero-padded blocks.
+BLOCK_B = 256
+
+#: Output-vector tile height per grid step.
+TILE_N = 256
+
+
+def _fit_tile(n: int, preferred: int) -> int:
+    """Largest divisor of ``n`` that does not exceed ``preferred``.
+
+    AOT sizes are powers of two so this returns ``preferred`` there; the
+    pytest/hypothesis sweep exercises irregular sizes too.
+    """
+    t = min(n, preferred)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+def _matvec_kernel(c_ref, x_ref, o_ref):
+    """One row-tile of the column-block matvec: ``o = C_tile @ x_blk``."""
+    o_ref[...] = c_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def jacobi_map_block(
+    c_blk: jax.Array, x_blk: jax.Array, *, tile_n: int | None = None
+):
+    """Partial folding of the Jacobi Map over one column block (Pallas).
+
+    Args:
+      c_blk: ``(n, B)`` column block of C; ``n`` must be a multiple of
+        ``tile_n`` (all AOT sizes are powers of two ≥ 256).
+      x_blk: ``(B,)`` slice of the current approximation (zero-padded tail).
+      tile_n: row-tile height (grid dimension); defaults to the largest
+        divisor of ``n`` not exceeding ``TILE_N``.
+
+    Returns:
+      ``(n,)`` partial folding, exactly ``c_blk @ x_blk``.
+    """
+    n, b = c_blk.shape
+    if tile_n is None:
+        tile_n = _fit_tile(n, TILE_N)
+    if n % tile_n != 0:
+        raise ValueError(f"n={n} not a multiple of tile_n={tile_n}")
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, b), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), c_blk.dtype),
+        interpret=True,
+    )(c_blk, x_blk)
+
+
+def _full_matvec_kernel(c_ref, x_ref, o_ref):
+    """Row-tile × column-block step of the full matvec with accumulation.
+
+    Grid is ``(row_tiles, col_blocks)``; the column dimension is the reduction
+    axis, so the output tile is revisited once per column block and
+    accumulated in place (initialised on the first visit).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += c_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "block_b"))
+def jacobi_full_matvec(
+    c: jax.Array,
+    x: jax.Array,
+    *,
+    tile_n: int | None = None,
+    block_b: int | None = None,
+):
+    """Full ``C @ x`` as a 2-D-grid Pallas kernel (used by the fused step).
+
+    The output tile stays VMEM-resident across the reduction axis; C streams
+    through one ``(tile_n, block_b)`` tile at a time.
+    """
+    n, m = c.shape
+    if tile_n is None:
+        tile_n = _fit_tile(n, TILE_N)
+    if block_b is None:
+        block_b = _fit_tile(m, BLOCK_B)
+    if n % tile_n != 0 or m % block_b != 0:
+        raise ValueError(f"shape ({n},{m}) not tiled by ({tile_n},{block_b})")
+    grid = (n // tile_n, m // block_b)
+    return pl.pallas_call(
+        _full_matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, block_b), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), c.dtype),
+        interpret=True,
+    )(c, x)

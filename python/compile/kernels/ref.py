@@ -1,0 +1,123 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact ``*_ref`` counterpart here,
+written with plain ``jax.numpy`` only. ``python/tests/`` asserts allclose
+between the two across hypothesis-generated shapes; the Rust integration tests
+check the AOT artifacts against values produced by these functions.
+
+All reference functions operate on the *block* granularity used by the BSF
+workers: a worker's sublist is processed as a sequence of fixed-shape blocks,
+the last block zero-padded. Padding exactness (zero columns / zero masses /
+zero rows contribute the identity of the fold operation) is part of the
+contract and is tested explicitly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Gravitational constant used by the simplified n-body problem (paper §6).
+#: The paper leaves G symbolic; we fix G = 1 (units absorbed into masses),
+#: which preserves the algorithm's arithmetic-operation counts exactly.
+GRAVITY_G = 1.0
+
+#: Guard for padded bodies that coincide with the probe point. Any padded
+#: entry has mass 0, so its contribution is exactly 0 regardless of the guard.
+_R2_FLOOR = 1e-30
+
+
+def jacobi_map_block_ref(c_blk, x_blk):
+    """Partial folding of BSF-Jacobi's Map over one column block.
+
+    Paper eq. (16): ``F_x(j) = x_j * c_j`` (j-th column of C scaled by the
+    j-th coordinate of x); the local Reduce is vector addition, so a block's
+    folding is ``sum_j x_j c_j == C[:, block] @ x[block]``.
+
+    Args:
+      c_blk: ``(n, B)`` column block of the iteration matrix C.
+      x_blk: ``(B,)`` matching slice of the current approximation.
+
+    Returns:
+      ``(n,)`` partial folding s_blk.
+    """
+    return c_blk @ x_blk
+
+
+def jacobi_post_ref(s, d, x_old):
+    """Master-side post-processing of one Jacobi iteration.
+
+    Algorithm 4 steps 8 and 10: ``x_new = s + d`` and the squared-norm
+    termination quantity ``||x_new - x_old||^2``. Returns ``(x_new, sqnorm)``.
+    """
+    x_new = s + d
+    diff = x_new - x_old
+    return x_new, jnp.dot(diff, diff)
+
+
+def gravity_map_block_ref(y_blk, m_blk, x):
+    """Partial acceleration over one block of motionless bodies.
+
+    Paper eq. (35): ``f_X(Y_i, m_i) = G * m_i / ||Y_i - X||^2 * (Y_i - X)``,
+    folded with 3-vector addition. Bodies with zero mass (padding) contribute
+    exactly zero.
+
+    Args:
+      y_blk: ``(B, 3)`` body positions.
+      m_blk: ``(B,)`` body masses (0 for padded slots).
+      x: ``(3,)`` current position of the probe body.
+
+    Returns:
+      ``(3,)`` partial acceleration.
+    """
+    d = y_blk - x[None, :]
+    r2 = jnp.maximum(jnp.sum(d * d, axis=1), _R2_FLOOR)
+    w = GRAVITY_G * m_blk / r2
+    return jnp.sum(w[:, None] * d, axis=0)
+
+
+def gravity_post_ref(v, alpha, x, eta):
+    """Master-side post-processing of one BSF-Gravity iteration.
+
+    Algorithm 6 steps 8–10 with the paper's time-slot rule
+    ``Delta_t(V, alpha) = eta / (||V||^2 * ||alpha||^4)``.
+
+    Returns ``(v_new, x_new, delta_t)``.
+    """
+    v2 = jnp.dot(v, v)
+    a2 = jnp.dot(alpha, alpha)
+    delta_t = eta / (v2 * a2 * a2)
+    v_new = v + alpha * delta_t
+    x_new = x + v_new * delta_t
+    return v_new, x_new, delta_t
+
+
+def cimmino_map_block_ref(a_blk, b_blk, x):
+    """Partial Cimmino correction over one block of inequality rows.
+
+    For the system ``A x <= b`` (ref [31]), each violated row contributes the
+    projection step ``-(max(0, a_i.x - b_i)/||a_i||^2) a_i``; the fold is
+    vector addition. Zero rows (padding) contribute exactly zero.
+
+    Args:
+      a_blk: ``(B, n)`` block of constraint rows.
+      b_blk: ``(B,)`` right-hand sides.
+      x: ``(n,)`` current approximation.
+
+    Returns:
+      ``(n,)`` partial correction vector.
+    """
+    resid = a_blk @ x - b_blk
+    viol = jnp.maximum(resid, 0.0)
+    nrm2 = jnp.sum(a_blk * a_blk, axis=1)
+    w = jnp.where(nrm2 > 0.0, viol / jnp.maximum(nrm2, _R2_FLOOR), 0.0)
+    return -(w @ a_blk)
+
+
+def jacobi_step_ref(c, d, x):
+    """One full Jacobi iteration ``x' = C x + d`` with termination quantity.
+
+    This is the L2 (whole-model) oracle: the fused artifact
+    ``jacobi_step_n{N}`` must match it. Returns ``(x_new, sqnorm)``.
+    """
+    s = c @ x
+    return jacobi_post_ref(s, d, x)

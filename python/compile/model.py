@@ -1,0 +1,152 @@
+"""L2 — the JAX compute graphs of the BSF applications (build-time only).
+
+Each function here is the *model layer* of one BSF application: it composes
+the L1 Pallas kernels (``kernels/``) into the per-iteration computation that
+the paper's Algorithm 2 distributes between master and workers. They are
+lowered once by ``aot.py`` to HLO text and executed from Rust via PJRT;
+Python never runs on the request path.
+
+Artifact granularity (see DESIGN.md §7):
+
+* ``*_map_block`` — a worker-side block call. A worker's sublist of any
+  length is processed as ``ceil(len/B)`` zero-padded fixed-shape block calls,
+  so the artifact set stays finite (no per-K recompiles).
+* ``*_post`` — the master-side post-processing (Compute + StopCond
+  quantities, Algorithm 1 steps 5/7).
+* ``jacobi_step`` — the fused single-node iteration (used by the calibration
+  path and as the L2 fusion showcase).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cimmino, gravity, jacobi
+from .kernels.ref import jacobi_post_ref
+
+
+# --------------------------------------------------------------------------
+# BSF-Jacobi (paper §5, Algorithms 3 & 4)
+# --------------------------------------------------------------------------
+
+def jacobi_map_block(c_blk, x_blk):
+    """Worker Map+local-Reduce over one column block: ``C[:,blk] @ x[blk]``."""
+    return (jacobi.jacobi_map_block(c_blk, x_blk),)
+
+
+def jacobi_post(s, d, x_old):
+    """Master post-processing: ``x_new = s + d``, ``||x_new - x_old||^2``.
+
+    Algorithm 4 steps 8 and 10. Returns ``(x_new, sqnorm)``.
+    """
+    return jacobi_post_ref(s, d, x_old)
+
+
+def jacobi_step(c, d, x):
+    """Fused single-node Jacobi iteration (Pallas matvec + post).
+
+    Returns ``(x_new, sqnorm)``. Used for calibration runs where the whole
+    list lives on one node, and as the fused-L2 artifact.
+    """
+    s = jacobi.jacobi_full_matvec(c, x)
+    return jacobi_post_ref(s, d, x)
+
+
+# --------------------------------------------------------------------------
+# BSF-Gravity (paper §6, Algorithms 5 & 6)
+# --------------------------------------------------------------------------
+
+def gravity_map_block(y_blk, m_blk, x):
+    """Worker Map+local-Reduce over one body block: partial acceleration."""
+    return (gravity.gravity_map_block(y_blk, m_blk, x),)
+
+
+def gravity_post(v, alpha, x, eta):
+    """Master post-processing: Algorithm 6 steps 8–10.
+
+    ``delta_t = eta / (||V||^2 ||alpha||^4)`` (13 arithmetic ops in the
+    paper's accounting), then the velocity/position updates.
+    Returns ``(v_new, x_new, delta_t)``.
+    """
+    v2 = jnp.dot(v, v)
+    a2 = jnp.dot(alpha, alpha)
+    delta_t = eta / (v2 * a2 * a2)
+    v_new = v + alpha * delta_t
+    x_new = x + v_new * delta_t
+    return v_new, x_new, delta_t
+
+
+# --------------------------------------------------------------------------
+# BSF-Cimmino (linear inequalities, paper ref [31])
+# --------------------------------------------------------------------------
+
+def cimmino_map_block(a_blk, b_blk, x):
+    """Worker Map+local-Reduce over one row block: partial correction."""
+    return (cimmino.cimmino_map_block(a_blk, b_blk, x),)
+
+
+def cimmino_post(s, x_old, lam):
+    """Master post-processing: relaxed update ``x_new = x_old + lam * s``.
+
+    Returns ``(x_new, sqnorm)`` where sqnorm is ``||x_new - x_old||^2``
+    (the termination quantity).
+    """
+    x_new = x_old + lam * s
+    diff = x_new - x_old
+    return x_new, jnp.dot(diff, diff)
+
+
+# --------------------------------------------------------------------------
+# Shape specs for AOT lowering (shared with aot.py and the pytest suite)
+# --------------------------------------------------------------------------
+
+def f64(*shape):
+    """ShapeDtypeStruct helper (the whole stack is f64, like the paper's C++)."""
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def artifact_specs(sizes=(256, 512, 1024, 2048), block=256):
+    """The full AOT artifact set: name -> (fn, example_args).
+
+    ``sizes`` are the n values compiled for; ``block`` is the worker block
+    width B (must match ``kernels.jacobi.BLOCK_B`` etc.).
+    """
+    specs = {}
+    for n in sizes:
+        # AOT map kernels use a single grid step (tile = full extent):
+        # interpret-mode Pallas lowers each grid step into a while-loop
+        # body with dynamic slices, which XLA-CPU executes ~25x slower
+        # than a plain dot. On a real TPU target the multi-step BlockSpec
+        # (TILE_N x B streaming through VMEM) is the right shape — see
+        # DESIGN.md "Hardware adaptation"; the tiled variants remain
+        # exercised by the pytest suite.
+        specs[f"jacobi_map_n{n}"] = (
+            lambda c, x, _n=n: (jacobi.jacobi_map_block(c, x, tile_n=_n),),
+            (f64(n, block), f64(block)),
+        )
+        specs[f"jacobi_post_n{n}"] = (
+            lambda s, d, x: jacobi_post(s, d, x),
+            (f64(n), f64(n), f64(n)),
+        )
+        specs[f"jacobi_step_n{n}"] = (
+            lambda c, d, x: jacobi_step(c, d, x),
+            (f64(n, n), f64(n), f64(n)),
+        )
+        specs[f"cimmino_map_n{n}"] = (
+            lambda a, b, x, _blk=block: (cimmino.cimmino_map_block(a, b, x, tile=_blk),),
+            (f64(block, n), f64(block), f64(n)),
+        )
+        specs[f"cimmino_post_n{n}"] = (
+            lambda s, x, lam: cimmino_post(s, x, lam),
+            (f64(n), f64(n), f64()),
+        )
+    specs[f"gravity_map_b{block}"] = (
+        gravity_map_block,
+        (f64(block, 3), f64(block), f64(3)),
+    )
+    specs["gravity_post"] = (
+        lambda v, a, x, eta: gravity_post(v, a, x, eta),
+        (f64(3), f64(3), f64(3), f64()),
+    )
+    return specs

@@ -1,0 +1,23 @@
+"""Shared pytest fixtures for the L1/L2 test suite."""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import jax
+
+# The whole stack is f64 (like the paper's C++ implementation); must be set
+# before any tracing happens.
+jax.config.update("jax_enable_x64", True)
+
+# Make `compile` importable when pytest is run from python/ or the repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xB5F)

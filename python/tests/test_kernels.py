@@ -1,0 +1,226 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (n, block widths, tile factors) and dtypes; the
+kernels must match ``ref.py`` to tight f64 tolerances and exact f32-relative
+tolerances. Padding exactness — a zero-padded tail must contribute the fold
+identity — is tested explicitly because the Rust workers rely on it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cimmino, gravity, jacobi, ref
+
+F64 = np.float64
+F32 = np.float32
+
+# Valid (tile | size) pairs: tile divides size.
+_TILES = [32, 64, 128, 256]
+
+
+def _mk_rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _allclose(got, want, dtype):
+    rtol = 1e-12 if dtype == F64 else 1e-5
+    atol = 1e-12 if dtype == F64 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+
+
+# --------------------------------------------------------------------------
+# jacobi_map_block
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 6),
+    tile=st.sampled_from(_TILES),
+    b=st.sampled_from([32, 64, 256]),
+    dtype=st.sampled_from([F64, F32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_jacobi_map_block_matches_ref(n_tiles, tile, b, dtype, seed):
+    rng = _mk_rng(seed)
+    n = n_tiles * tile
+    c = jnp.asarray(rng.standard_normal((n, b)), dtype=dtype)
+    x = jnp.asarray(rng.standard_normal(b), dtype=dtype)
+    got = jacobi.jacobi_map_block(c, x, tile_n=tile)
+    _allclose(got, ref.jacobi_map_block_ref(c, x), dtype)
+
+
+def test_jacobi_map_block_rejects_untiled_n():
+    c = jnp.zeros((100, 32))
+    x = jnp.zeros(32)
+    with pytest.raises(ValueError, match="not a multiple"):
+        jacobi.jacobi_map_block(c, x, tile_n=64)
+
+
+def test_jacobi_map_padding_exact(rng):
+    """A zero-padded column tail contributes exactly nothing."""
+    n, b, used = 256, 256, 100
+    c = np.zeros((n, b))
+    x = np.zeros(b)
+    c[:, :used] = rng.standard_normal((n, used))
+    x[:used] = rng.standard_normal(used)
+    got = jacobi.jacobi_map_block(jnp.asarray(c), jnp.asarray(x))
+    want = c[:, :used] @ x[:used]
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# --------------------------------------------------------------------------
+# jacobi_full_matvec (fused step's hot spot)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_tiles=st.integers(1, 4),
+    m_tiles=st.integers(1, 4),
+    tile=st.sampled_from([32, 64]),
+    dtype=st.sampled_from([F64, F32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_jacobi_full_matvec_matches_ref(n_tiles, m_tiles, tile, dtype, seed):
+    rng = _mk_rng(seed)
+    n, m = n_tiles * tile, m_tiles * tile
+    c = jnp.asarray(rng.standard_normal((n, m)), dtype=dtype)
+    x = jnp.asarray(rng.standard_normal(m), dtype=dtype)
+    got = jacobi.jacobi_full_matvec(c, x, tile_n=tile, block_b=tile)
+    _allclose(got, c @ x, dtype)
+
+
+def test_jacobi_step_matches_ref(rng):
+    n = 128
+    c = jnp.asarray(rng.standard_normal((n, n)))
+    d = jnp.asarray(rng.standard_normal(n))
+    x = jnp.asarray(rng.standard_normal(n))
+    from compile import model
+
+    x_new, sqnorm = model.jacobi_step(c, d, x)
+    want_x, want_sq = ref.jacobi_step_ref(c, d, x)
+    _allclose(x_new, want_x, F64)
+    _allclose(sqnorm, want_sq, F64)
+
+
+# --------------------------------------------------------------------------
+# gravity_map_block
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 4),
+    tile=st.sampled_from([32, 64, 256]),
+    dtype=st.sampled_from([F64, F32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gravity_map_block_matches_ref(tiles, tile, dtype, seed):
+    rng = _mk_rng(seed)
+    b = tiles * tile
+    y = jnp.asarray(rng.standard_normal((b, 3)) * 10.0, dtype=dtype)
+    m = jnp.asarray(np.abs(rng.standard_normal(b)) + 0.1, dtype=dtype)
+    x = jnp.asarray(rng.standard_normal(3), dtype=dtype)
+    got = gravity.gravity_map_block(y, m, x, tile=tile)
+    want = ref.gravity_map_block_ref(y, m, x)
+    rtol = 1e-10 if dtype == F64 else 2e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=rtol)
+
+
+def test_gravity_padding_exact(rng):
+    """Zero-mass padded bodies contribute exactly zero, even at the probe."""
+    b, used = 256, 77
+    y = np.zeros((b, 3))
+    m = np.zeros(b)
+    y[:used] = rng.standard_normal((used, 3)) * 5.0
+    m[:used] = np.abs(rng.standard_normal(used)) + 0.1
+    x = rng.standard_normal(3)
+    # Padded bodies sit exactly at the probe position: worst case for the
+    # r^2 guard. Mass 0 must still kill the contribution.
+    y[used:] = x
+    got = gravity.gravity_map_block(jnp.asarray(y), jnp.asarray(m), jnp.asarray(x))
+    want = ref.gravity_map_block_ref(
+        jnp.asarray(y[:used]), jnp.asarray(m[:used]), jnp.asarray(x)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+def test_gravity_two_body_analytic():
+    """Single unit-mass body at distance r: |alpha| = G/r^2 * r = G/r."""
+    y = np.zeros((32, 3))
+    m = np.zeros(32)
+    y[0] = [2.0, 0.0, 0.0]
+    m[0] = 1.0
+    x = jnp.zeros(3)
+    got = np.asarray(
+        gravity.gravity_map_block(jnp.asarray(y), jnp.asarray(m), x, tile=32)
+    )
+    # d = (2,0,0), r^2 = 4 -> alpha = 1/4 * (2,0,0) = (0.5, 0, 0)
+    np.testing.assert_allclose(got, [0.5, 0.0, 0.0], atol=1e-15)
+
+
+# --------------------------------------------------------------------------
+# cimmino_map_block
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 4),
+    tile=st.sampled_from([32, 64]),
+    n=st.sampled_from([16, 64, 256]),
+    dtype=st.sampled_from([F64, F32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cimmino_map_block_matches_ref(tiles, tile, n, dtype, seed):
+    rng = _mk_rng(seed)
+    b = tiles * tile
+    a = jnp.asarray(rng.standard_normal((b, n)), dtype=dtype)
+    rhs = jnp.asarray(rng.standard_normal(b), dtype=dtype)
+    x = jnp.asarray(rng.standard_normal(n), dtype=dtype)
+    got = cimmino.cimmino_map_block(a, rhs, x, tile=tile)
+    _allclose(got, ref.cimmino_map_block_ref(a, rhs, x), dtype)
+
+
+def test_cimmino_satisfied_rows_contribute_zero(rng):
+    """Rows with a_i.x <= b_i must contribute nothing."""
+    n = 64
+    a = rng.standard_normal((32, n))
+    x = rng.standard_normal(n)
+    rhs = a @ x + 1.0  # all satisfied with slack 1
+    got = cimmino.cimmino_map_block(
+        jnp.asarray(a), jnp.asarray(rhs), jnp.asarray(x), tile=32
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(n))
+
+
+def test_cimmino_padding_exact(rng):
+    """Zero rows (padding) contribute exactly zero."""
+    n, b, used = 64, 64, 20
+    a = np.zeros((b, n))
+    rhs = np.zeros(b)
+    a[:used] = rng.standard_normal((used, n))
+    rhs[:used] = rng.standard_normal(used)
+    x = rng.standard_normal(n)
+    got = cimmino.cimmino_map_block(
+        jnp.asarray(a), jnp.asarray(rhs), jnp.asarray(x), tile=64
+    )
+    want = ref.cimmino_map_block_ref(
+        jnp.asarray(a[:used]), jnp.asarray(rhs[:used]), jnp.asarray(x)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+def test_cimmino_single_violated_row_projects_onto_halfspace(rng):
+    """One violated row: x + correction must land on the hyperplane a.x = b."""
+    n = 16
+    a = np.zeros((32, n))
+    rhs = np.zeros(32)
+    a[0] = rng.standard_normal(n)
+    x = rng.standard_normal(n)
+    rhs[0] = a[0] @ x - 3.0  # violated by 3
+    corr = np.asarray(
+        cimmino.cimmino_map_block(jnp.asarray(a), jnp.asarray(rhs), jnp.asarray(x), tile=32)
+    )
+    np.testing.assert_allclose(a[0] @ (x + corr), rhs[0], atol=1e-10)

@@ -1,0 +1,87 @@
+//! Bench: the live skeleton's per-iteration overhead.
+//!
+//! The coordinator must not be the bottleneck (DESIGN.md §9): its per-
+//! iteration cost (broadcast + gather + fold + bookkeeping) is measured
+//! with a near-zero-compute problem, so everything measured here is
+//! skeleton overhead. Compare against the per-iteration `t_Map` of real
+//! problems (milliseconds) — overhead should be ≪ that.
+//!
+//! ```text
+//! cargo bench --bench coordinator_hotpath
+//! ```
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use bsf::coordinator::{BsfProblem, CostSpec, LiveRunner};
+use bsf::runtime::KernelRuntime;
+use bsf::util::bench::{bench, human_time};
+
+/// A problem whose compute is a single multiply — pure skeleton overhead.
+#[derive(Debug)]
+struct Noop {
+    l: usize,
+    payload: usize,
+}
+
+impl BsfProblem for Noop {
+    fn name(&self) -> &str {
+        "noop"
+    }
+    fn list_len(&self) -> usize {
+        self.l
+    }
+    fn initial_approx(&self) -> Vec<f64> {
+        vec![1.0; self.payload]
+    }
+    fn map_fold(&self, _r: Range<usize>, x: &[f64], _k: Option<&KernelRuntime>) -> Vec<f64> {
+        let mut out = vec![0.0; self.payload];
+        out[0] = x[0] * 2.0;
+        out
+    }
+    fn fold_identity(&self) -> Vec<f64> {
+        vec![0.0; self.payload]
+    }
+    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
+        a[0] += b[0];
+        a
+    }
+    fn post(&self, _x: &[f64], s: &[f64], _i: usize) -> (Vec<f64>, bool) {
+        let mut next = vec![1.0; self.payload];
+        next[0] = s[0] * 0.5;
+        (next, false)
+    }
+    fn cost_spec(&self) -> CostSpec {
+        CostSpec {
+            l: self.l,
+            words_down: self.payload,
+            words_up: self.payload,
+            ops_map_per_elem: 1.0,
+            ops_combine: 1.0,
+            ops_post: 1.0,
+        }
+    }
+}
+
+fn main() {
+    println!("== coordinator_hotpath: skeleton overhead per iteration ==");
+    let iters = 400;
+    for k in [1usize, 2, 4, 8] {
+        for payload in [8usize, 4_096] {
+            let r = bench(
+                &format!("live K={k}, payload={payload} f64 ({iters} iters)"),
+                1,
+                5,
+                || {
+                    let p: Arc<dyn BsfProblem> = Arc::new(Noop { l: 1_024, payload });
+                    let report = LiveRunner::new(k, iters).run(p).unwrap();
+                    std::hint::black_box(report.iterations);
+                },
+            );
+            println!(
+                "    -> per-iteration overhead: {}",
+                human_time(r.summary.median / iters as f64)
+            );
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate Fig. 6 / Table 3 (BSF-Jacobi speedup curves, paper
+//! parameters) and time the whole pipeline per size.
+//!
+//! ```text
+//! cargo bench --bench fig6_jacobi_speedup
+//! ```
+
+use bsf::experiments::{
+    analytic_provider, boundary_row, paper_jacobi_params, ExperimentCtx,
+};
+use bsf::util::bench::bench;
+use bsf::util::Rng;
+
+fn main() {
+    let ctx = ExperimentCtx { quick: true, ..Default::default() };
+    println!("== fig6_jacobi_speedup: per-size curve regeneration ==");
+    let mut rows = Vec::new();
+    for n in [1_500usize, 5_000, 10_000, 16_000] {
+        let params = paper_jacobi_params(n).expect("published");
+        bench(&format!("fig6 curve n={n}"), 1, 5, || {
+            let mut prov = analytic_provider(&params);
+            let mut rng = Rng::new(1);
+            let row = boundary_row(&ctx, n, &params, n, n, &mut prov, &mut rng);
+            std::hint::black_box(&row);
+        });
+        let mut prov = analytic_provider(&params);
+        let mut rng = Rng::new(1);
+        rows.push(boundary_row(&ctx, n, &params, n, n, &mut prov, &mut rng));
+    }
+    println!("\nregenerated Table 3 (paper K_test: 40/60/120/160):");
+    for r in rows {
+        println!(
+            "  n={:<6} K_BSF={:<6.0} K_test={:<6.0} err={:.3}",
+            r.n, r.k_bsf, r.k_test, r.error
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate Fig. 7 / Table 4 (BSF-Gravity speedup curves, paper
+//! parameters) and time the pipeline per size.
+//!
+//! ```text
+//! cargo bench --bench fig7_gravity_speedup
+//! ```
+
+use bsf::experiments::{
+    analytic_provider, boundary_row, paper_gravity_params, ExperimentCtx,
+};
+use bsf::util::bench::bench;
+use bsf::util::Rng;
+
+fn main() {
+    let ctx = ExperimentCtx { quick: true, ..Default::default() };
+    println!("== fig7_gravity_speedup: per-size curve regeneration ==");
+    let mut rows = Vec::new();
+    for n in [300usize, 600, 900, 1_200] {
+        let params = paper_gravity_params(n).expect("published");
+        bench(&format!("fig7 curve n={n}"), 1, 5, || {
+            let mut prov = analytic_provider(&params);
+            let mut rng = Rng::new(1);
+            let row = boundary_row(&ctx, n, &params, 7, 3, &mut prov, &mut rng);
+            std::hint::black_box(&row);
+        });
+        let mut prov = analytic_provider(&params);
+        let mut rng = Rng::new(1);
+        rows.push(boundary_row(&ctx, n, &params, 7, 3, &mut prov, &mut rng));
+    }
+    println!("\nregenerated Table 4 (paper K_test: 60/140/200/280):");
+    for r in rows {
+        println!(
+            "  n={:<6} K_BSF={:<6.0} K_test={:<6.0} err={:.3}",
+            r.n, r.k_bsf, r.k_test, r.error
+        );
+    }
+}

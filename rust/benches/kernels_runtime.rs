@@ -1,0 +1,67 @@
+//! Bench: PJRT artifact execution vs native Rust on the worker hot path.
+//!
+//! Measures per-call latency of the AOT Pallas kernels (`jacobi_map`,
+//! `gravity_map`, `cimmino_map`) through the runtime, against the
+//! bit-equivalent native implementations — quantifying the PJRT call
+//! overhead and the crossover block size. Requires `make artifacts`.
+//!
+//! ```text
+//! cargo bench --bench kernels_runtime
+//! ```
+
+use bsf::linalg::generators::paper_system;
+use bsf::problems::{GravityProblem, JacobiProblem};
+use bsf::coordinator::BsfProblem;
+use bsf::runtime::{KernelRuntime, Tensor};
+use bsf::util::bench::bench_throughput;
+use bsf::util::Rng;
+
+fn main() {
+    println!("== kernels_runtime ==");
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let rt = KernelRuntime::open(dir).expect("open runtime");
+    let mut rng = Rng::new(42);
+
+    // Raw artifact call: jacobi_map_n{N} (one block of B columns).
+    for n in [256usize, 1024, 2048] {
+        let Some(name) = rt.manifest().jacobi_map(n) else { continue };
+        rt.warm(&name).unwrap();
+        let b = rt.block();
+        let c: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..b).map(|_| rng.normal()).collect();
+        let flops = (2 * n * b) as u64;
+        bench_throughput(&format!("pjrt jacobi_map n={n} B={b}"), 3, 30, flops, || {
+            let out = rt
+                .execute(&name, &[Tensor::mat(c.clone(), n, b), Tensor::vec(x.clone())])
+                .unwrap();
+            std::hint::black_box(&out);
+        });
+    }
+
+    // Whole-problem map_fold: kernel path vs native path.
+    for n in [1024usize, 2048] {
+        let p = JacobiProblem::new(paper_system(n), 1e-12);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let flops = (2 * n * n) as u64;
+        bench_throughput(&format!("jacobi map_fold n={n} [pjrt]"), 2, 15, flops, || {
+            std::hint::black_box(p.map_fold(0..n, &x, Some(&rt)));
+        });
+        bench_throughput(&format!("jacobi map_fold n={n} [native]"), 2, 15, flops, || {
+            std::hint::black_box(p.map_fold(0..n, &x, None));
+        });
+    }
+
+    // Gravity block kernel.
+    let g = GravityProblem::new(bsf::linalg::generators::random_bodies(1024, 5.0, 7), 1e-3, 1.0);
+    let xg = g.initial_approx();
+    bench_throughput("gravity map_fold n=1024 [pjrt]", 2, 15, 17 * 1024, || {
+        std::hint::black_box(g.map_fold(0..1024, &xg, Some(&rt)));
+    });
+    bench_throughput("gravity map_fold n=1024 [native]", 2, 15, 17 * 1024, || {
+        std::hint::black_box(g.map_fold(0..1024, &xg, None));
+    });
+}

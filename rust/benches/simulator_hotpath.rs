@@ -1,0 +1,61 @@
+//! Bench: the discrete-event engine + cluster-timeline hot path.
+//!
+//! A full Fig.-6 sweep simulates ~10⁵ Algorithm-2 iterations; each
+//! iteration at K workers is ~4K tasks, so the engine must sustain
+//! millions of tasks/second (DESIGN.md §9 target: ≥ 1 M events/s).
+//!
+//! ```text
+//! cargo bench --bench simulator_hotpath
+//! ```
+
+use bsf::simulator::{simulate_iteration, AnalyticCost, Engine, SimParams};
+use bsf::util::bench::bench_throughput;
+use bsf::util::Rng;
+
+fn main() {
+    println!("== simulator_hotpath ==");
+
+    // Raw engine: chain + fan-out graphs.
+    for tasks in [1_000usize, 100_000] {
+        bench_throughput(&format!("engine chain, {tasks} tasks"), 2, 10, tasks as u64, || {
+            let mut e = Engine::new();
+            let mut prev = e.task(0, 1e-9);
+            for i in 1..tasks {
+                let t = e.task((i % 64) as u32, 1e-9);
+                e.dep(prev, t);
+                prev = t;
+            }
+            std::hint::black_box(e.run());
+        });
+    }
+
+    // Full Algorithm-2 iterations at representative scales.
+    let l = 16_000;
+    for k in [16usize, 128, 512] {
+        let tasks_per_iter = 4 * k as u64; // bcast + compute + reduce + folds
+        let mut prov = AnalyticCost { t_map_full: 0.77, l, t_a: 2.1e-5, t_p: 5.6e-5 };
+        let params = SimParams::new(l, l);
+        let mut rng = Rng::new(7);
+        bench_throughput(
+            &format!("simulate_iteration K={k} (l={l})"),
+            5,
+            30,
+            tasks_per_iter,
+            || {
+                std::hint::black_box(simulate_iteration(k, l, &params, &mut prov, &mut rng));
+            },
+        );
+    }
+
+    // A whole quick Fig-6-style sweep (one size).
+    let mut prov = AnalyticCost { t_map_full: 0.373, l: 10_000, t_a: 9.31e-6, t_p: 3.7e-5 };
+    let params = SimParams::new(10_000, 10_000);
+    let mut rng = Rng::new(8);
+    bench_throughput("sweep n=10000, K=1..270 x3 iters", 1, 5, 270 * 3, || {
+        for k in 1..=270usize {
+            for _ in 0..3 {
+                std::hint::black_box(simulate_iteration(k, 10_000, &params, &mut prov, &mut rng));
+            }
+        }
+    });
+}

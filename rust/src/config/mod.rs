@@ -1,0 +1,12 @@
+//! Configuration system: experiment/cluster settings from simple
+//! `key = value` config files (an INI-like TOML subset — offline build, no
+//! external parser) plus `--key=value` CLI overrides.
+//!
+//! Precedence: defaults < config file < CLI overrides. Every experiment
+//! binary and the `bsf` CLI share this loader, so a cluster description
+//! (latency, bandwidth, per-op time, jitter) can be pinned in a file and
+//! reused across runs.
+
+mod settings;
+
+pub use settings::{ClusterConfig, Settings};

@@ -1,0 +1,245 @@
+//! `key = value` settings store with file + CLI layering.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::net::{CollectiveAlgo, NetworkParams};
+use crate::simulator::ReduceMode;
+
+/// A layered string→string settings store.
+#[derive(Debug, Clone, Default)]
+pub struct Settings {
+    values: BTreeMap<String, String>,
+}
+
+impl Settings {
+    /// Empty settings.
+    pub fn new() -> Settings {
+        Settings::default()
+    }
+
+    /// Load from an INI-like file: `key = value` lines, `#`/`;` comments,
+    /// blank lines ignored, optional `[section]` headers that prefix keys
+    /// with `section.`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Settings> {
+        let src = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        let mut s = Settings::new();
+        s.merge_str(&src)?;
+        Ok(s)
+    }
+
+    /// Merge config text (later keys win).
+    pub fn merge_str(&mut self, src: &str) -> Result<()> {
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim();
+            // strip optional quotes
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = &val[1..val.len() - 1];
+            }
+            self.values.insert(key, val.to_string());
+        }
+        Ok(())
+    }
+
+    /// Apply `--key=value` style CLI overrides; unrecognised args are
+    /// returned untouched (for the caller's own flags).
+    pub fn merge_cli<'a>(&mut self, args: impl IntoIterator<Item = &'a str>) -> Vec<String> {
+        let mut rest = Vec::new();
+        for a in args {
+            if let Some(kv) = a.strip_prefix("--") {
+                if let Some((k, v)) = kv.split_once('=') {
+                    self.values.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+            }
+            rest.push(a.to_string());
+        }
+        rest
+    }
+
+    /// Set a value programmatically.
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    /// f64 lookup with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not a number")),
+        }
+    }
+
+    /// usize lookup with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("config {key}={v}: not an integer")),
+        }
+    }
+
+    /// bool lookup with default (`true/false/1/0/yes/no`).
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("config {key}={v}: not a boolean"),
+        }
+    }
+
+    /// All keys (sorted).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+/// The modelled cluster, as read from settings (section `[cluster]`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterConfig {
+    /// Interconnect parameters.
+    pub net: NetworkParams,
+    /// Collective schedule.
+    pub algo: CollectiveAlgo,
+    /// Reduce strategy.
+    pub reduce_mode: ReduceMode,
+    /// Compute jitter sigma for the simulator.
+    pub jitter_comp: f64,
+    /// Communication jitter sigma.
+    pub jitter_comm: f64,
+    /// Master count (1 = the BSF model).
+    pub masters: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            net: NetworkParams::tornado_susu(),
+            algo: CollectiveAlgo::BinomialTree,
+            reduce_mode: ReduceMode::TreeMasterFold,
+            jitter_comp: 0.0,
+            jitter_comm: 0.0,
+            masters: 1,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Read from settings keys `cluster.latency`, `cluster.tau_tr`,
+    /// `cluster.collective` (`tree`|`linear`), `cluster.reduce`
+    /// (`paper`|`mpi-reduce`|`gather`), `cluster.jitter_comp`,
+    /// `cluster.jitter_comm`, `cluster.masters`.
+    pub fn from_settings(s: &Settings) -> Result<ClusterConfig> {
+        let d = ClusterConfig::default();
+        let algo = match s.get("cluster.collective").unwrap_or("tree") {
+            "tree" => CollectiveAlgo::BinomialTree,
+            "linear" => CollectiveAlgo::Linear,
+            other => bail!("cluster.collective={other}: expected tree|linear"),
+        };
+        let reduce_mode = match s.get("cluster.reduce").unwrap_or("paper") {
+            "paper" => ReduceMode::TreeMasterFold,
+            "mpi-reduce" | "tree" => ReduceMode::InTree,
+            "gather" => ReduceMode::GatherThenFold,
+            other => bail!("cluster.reduce={other}: expected paper|mpi-reduce|gather"),
+        };
+        Ok(ClusterConfig {
+            net: NetworkParams {
+                latency: s.f64_or("cluster.latency", d.net.latency)?,
+                tau_tr: s.f64_or("cluster.tau_tr", d.net.tau_tr)?,
+            },
+            algo,
+            reduce_mode,
+            jitter_comp: s.f64_or("cluster.jitter_comp", 0.0)?,
+            jitter_comm: s.f64_or("cluster.jitter_comm", 0.0)?,
+            masters: s.usize_or("cluster.masters", 1)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let mut s = Settings::new();
+        s.merge_str(
+            "# comment\nfoo = 1\n[cluster]\nlatency = 2e-5\ncollective = \"linear\"\n; more\n",
+        )
+        .unwrap();
+        assert_eq!(s.get("foo"), Some("1"));
+        assert_eq!(s.get("cluster.latency"), Some("2e-5"));
+        assert_eq!(s.get("cluster.collective"), Some("linear"));
+    }
+
+    #[test]
+    fn cli_overrides_and_passthrough() {
+        let mut s = Settings::new();
+        s.merge_str("a = 1\n").unwrap();
+        let rest = s.merge_cli(["--a=2", "run", "--flag"]);
+        assert_eq!(s.get("a"), Some("2"));
+        assert_eq!(rest, vec!["run", "--flag"]);
+    }
+
+    #[test]
+    fn typed_lookups() {
+        let mut s = Settings::new();
+        s.merge_str("x = 2.5\nn = 10\nb = yes\n").unwrap();
+        assert_eq!(s.f64_or("x", 0.0).unwrap(), 2.5);
+        assert_eq!(s.f64_or("missing", 7.0).unwrap(), 7.0);
+        assert_eq!(s.usize_or("n", 0).unwrap(), 10);
+        assert!(s.bool_or("b", false).unwrap());
+        assert!(s.f64_or("b", 0.0).is_err());
+    }
+
+    #[test]
+    fn cluster_config_defaults_and_overrides() {
+        let mut s = Settings::new();
+        let d = ClusterConfig::from_settings(&s).unwrap();
+        assert_eq!(d, ClusterConfig::default());
+        s.merge_str("[cluster]\nlatency = 1e-6\ncollective = linear\nreduce = gather\nmasters = 2\n")
+            .unwrap();
+        let c = ClusterConfig::from_settings(&s).unwrap();
+        assert_eq!(c.net.latency, 1e-6);
+        assert_eq!(c.algo, CollectiveAlgo::Linear);
+        assert_eq!(c.reduce_mode, ReduceMode::GatherThenFold);
+        assert_eq!(c.masters, 2);
+    }
+
+    #[test]
+    fn bad_enum_rejected() {
+        let mut s = Settings::new();
+        s.merge_str("[cluster]\ncollective = ring\n").unwrap();
+        assert!(ClusterConfig::from_settings(&s).is_err());
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let mut s = Settings::new();
+        assert!(s.merge_str("just words\n").is_err());
+    }
+}

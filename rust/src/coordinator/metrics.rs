@@ -1,0 +1,139 @@
+//! Per-iteration timing instrumentation of the live runner.
+//!
+//! The quantities mirror the BSF cost vocabulary so calibration can read
+//! them off directly: communication wall time (→ `t_c`), per-worker
+//! Map+fold durations (→ `t_Map`+`t_Rdc`), and master post time (→ `t_p`).
+
+use crate::util::stats::Summary;
+
+/// Timings of one Algorithm-2 iteration (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterationMetrics {
+    /// Master-side wall time from broadcast start to last partial received,
+    /// minus the slowest worker's compute time — i.e. the communication +
+    /// synchronisation share of the round trip.
+    pub comm: f64,
+    /// Per-worker Map+local-fold durations, indexed by worker-1.
+    pub map_fold: Vec<f64>,
+    /// Master fold of the K partials.
+    pub master_fold: f64,
+    /// Master Compute + StopCond duration.
+    pub post: f64,
+    /// Full iteration wall time at the master.
+    pub total: f64,
+}
+
+impl IterationMetrics {
+    /// Slowest worker's compute time (the straggler).
+    pub fn map_max(&self) -> f64 {
+        self.map_fold.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Mean worker compute time.
+    pub fn map_mean(&self) -> f64 {
+        if self.map_fold.is_empty() {
+            0.0
+        } else {
+            self.map_fold.iter().sum::<f64>() / self.map_fold.len() as f64
+        }
+    }
+}
+
+/// All iterations of one run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Per-iteration records, in order.
+    pub iterations: Vec<IterationMetrics>,
+}
+
+impl Metrics {
+    /// Number of recorded iterations.
+    pub fn len(&self) -> usize {
+        self.iterations.len()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.iterations.is_empty()
+    }
+
+    /// Summary of total iteration times.
+    pub fn total_summary(&self) -> Summary {
+        Summary::of(&self.iterations.iter().map(|m| m.total).collect::<Vec<_>>())
+    }
+
+    /// Summary of the slowest-worker compute times.
+    pub fn map_summary(&self) -> Summary {
+        Summary::of(&self.iterations.iter().map(|m| m.map_max()).collect::<Vec<_>>())
+    }
+
+    /// Summary of master post times.
+    pub fn post_summary(&self) -> Summary {
+        Summary::of(&self.iterations.iter().map(|m| m.post).collect::<Vec<_>>())
+    }
+
+    /// Summary of communication shares.
+    pub fn comm_summary(&self) -> Summary {
+        Summary::of(&self.iterations.iter().map(|m| m.comm).collect::<Vec<_>>())
+    }
+
+    /// Drop the first `n` iterations (warmup: first-touch, cache effects,
+    /// lazy artifact compilation).
+    pub fn without_warmup(&self, n: usize) -> Metrics {
+        Metrics { iterations: self.iterations.iter().skip(n).cloned().collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(total: f64) -> IterationMetrics {
+        IterationMetrics {
+            comm: 0.1,
+            map_fold: vec![1.0, 2.0, 1.5],
+            master_fold: 0.01,
+            post: 0.05,
+            total,
+        }
+    }
+
+    #[test]
+    fn map_max_and_mean() {
+        let it = m(3.0);
+        assert_eq!(it.map_max(), 2.0);
+        assert!((it.map_mean() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summaries() {
+        let ms = Metrics { iterations: vec![m(3.0), m(4.0), m(5.0)] };
+        assert_eq!(ms.len(), 3);
+        assert!((ms.total_summary().mean - 4.0).abs() < 1e-12);
+        assert_eq!(ms.map_summary().max, 2.0);
+        assert!((ms.post_summary().mean - 0.05).abs() < 1e-12);
+        assert!((ms.comm_summary().mean - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmup_skips() {
+        let ms = Metrics { iterations: vec![m(10.0), m(1.0), m(1.0)] };
+        let w = ms.without_warmup(1);
+        assert_eq!(w.len(), 2);
+        assert!((w.total_summary().mean - 1.0).abs() < 1e-12);
+        assert!(!w.is_empty());
+    }
+
+    #[test]
+    fn empty_map_fold_mean_zero() {
+        let it = IterationMetrics {
+            comm: 0.0,
+            map_fold: vec![],
+            master_fold: 0.0,
+            post: 0.0,
+            total: 0.0,
+        };
+        assert_eq!(it.map_mean(), 0.0);
+        assert_eq!(it.map_max(), 0.0);
+    }
+}

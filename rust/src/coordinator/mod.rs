@@ -1,0 +1,176 @@
+//! The BSF skeleton — the paper's Algorithm 1 → Algorithm 2 machinery.
+//!
+//! A numerical method is plugged in by implementing [`BsfProblem`]: the
+//! Map + local-Reduce over an index range of the problem's list, the fold
+//! `⊕`, and the master-side `Compute`/`StopCond`. The skeleton then
+//! provides, with no further problem code:
+//!
+//! * [`run_sequential`] — Algorithm 1, the ground-truth serial execution;
+//! * [`LiveRunner`] — Algorithm 2 over real threads and the in-process
+//!   transport ([`crate::net::transport`]), with per-step metrics for
+//!   calibration;
+//! * [`calibrate_problem`] — the §6/§7-Q6 measurement recipe, producing the
+//!   cost parameters (Table 2's rows) for the analytic model and simulator.
+//!
+//! This mirrors the paper's published C++ BSF-skeleton
+//! (github.com/leonid-sokolinsky/BSF-skeleton) with the MPI fabric replaced
+//! by threads+channels and the compute hot spot replaced by AOT-compiled
+//! XLA executables.
+
+mod metrics;
+mod runner;
+
+pub use metrics::{IterationMetrics, Metrics};
+pub use runner::{calibrate_problem, run_sequential, LiveRunner, RunReport};
+
+use std::ops::Range;
+
+use crate::runtime::KernelRuntime;
+
+/// Per-iteration payload/op-count description used to derive analytic cost
+/// parameters (the §5 quantities `c_c`, `c_Map`, `c_a`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostSpec {
+    /// List length `l`.
+    pub l: usize,
+    /// f64 words the master sends to each worker per iteration (the
+    /// approximation).
+    pub words_down: usize,
+    /// f64 words each worker returns (the partial folding).
+    pub words_up: usize,
+    /// Arithmetic ops to Map one list element (`c_Map / l`).
+    pub ops_map_per_elem: f64,
+    /// Arithmetic ops for one `⊕` application (`c_a`).
+    pub ops_combine: f64,
+    /// Arithmetic ops for the master's Compute + StopCond (`≈ t_p / τ_op`).
+    pub ops_post: f64,
+}
+
+impl CostSpec {
+    /// Analytic [`crate::model::CostParams`] given machine speeds: `τ_op`
+    /// (seconds per arithmetic op) and the interconnect. This is the
+    /// "before any implementation" path of the paper (§5: eqs. 20–23).
+    pub fn cost_params(
+        &self,
+        tau_op: f64,
+        net: &crate::net::NetworkParams,
+    ) -> crate::model::CostParams {
+        crate::model::CostParams {
+            l: self.l,
+            t_c: net.t_c(self.words_down, self.words_up),
+            t_p: self.ops_post * tau_op,
+            t_map: self.ops_map_per_elem * self.l as f64 * tau_op,
+            t_a: self.ops_combine * tau_op,
+        }
+    }
+}
+
+/// A BSF algorithm: the problem-specific plugs of Algorithms 1/2.
+///
+/// The approximation and the partial foldings are opaque f64 payloads
+/// (problems define their own encoding; e.g. BSF-Gravity packs
+/// `[X, V, t]` downlink and a 3-vector uplink).
+pub trait BsfProblem: Send + Sync {
+    /// Human-readable name (reports, traces).
+    fn name(&self) -> &str;
+
+    /// Length `l` of the list A.
+    fn list_len(&self) -> usize;
+
+    /// The initial approximation `x⁽⁰⁾` (downlink encoding).
+    fn initial_approx(&self) -> Vec<f64>;
+
+    /// Worker step (Algorithm 2 steps 3–4): Map over `range` of the list
+    /// and locally fold with `⊕`. `kernels` is this worker's PJRT runtime
+    /// when artifacts are available; implementations fall back to native
+    /// Rust when `None` or when no artifact matches the problem size.
+    fn map_fold(&self, range: Range<usize>, x: &[f64], kernels: Option<&KernelRuntime>)
+        -> Vec<f64>;
+
+    /// The fold identity (empty-range result).
+    fn fold_identity(&self) -> Vec<f64>;
+
+    /// The associative `⊕` (Algorithm 2 step 6's master fold).
+    fn combine(&self, a: Vec<f64>, b: Vec<f64>) -> Vec<f64>;
+
+    /// Master step (Algorithm 1 steps 5–7): `Compute` the next
+    /// approximation from the current one and the full folding `s`, and
+    /// evaluate `StopCond`. Returns `(next_approx, stop)`.
+    fn post(&self, x: &[f64], s: &[f64], iteration: usize) -> (Vec<f64>, bool);
+
+    /// Payload/op-count description for analytic cost modelling.
+    fn cost_spec(&self) -> CostSpec;
+}
+
+#[cfg(test)]
+pub(crate) mod test_problems {
+    use super::*;
+
+    /// Toy problem: x ∈ R, list = weights w_j; iteration computes
+    /// s = Σ w_j · x and then x' = s/2 + 1, stopping when |x' − x| < 1e-12.
+    /// Fixed point (for Σw = 1): x* = x/2 + 1 ⇒ x* = 2.
+    #[derive(Debug)]
+    pub struct Relaxation {
+        pub weights: Vec<f64>,
+    }
+
+    impl Relaxation {
+        pub fn unit(l: usize) -> Relaxation {
+            Relaxation { weights: vec![1.0 / l as f64; l] }
+        }
+    }
+
+    impl BsfProblem for Relaxation {
+        fn name(&self) -> &str {
+            "relaxation"
+        }
+        fn list_len(&self) -> usize {
+            self.weights.len()
+        }
+        fn initial_approx(&self) -> Vec<f64> {
+            vec![0.0]
+        }
+        fn map_fold(
+            &self,
+            range: Range<usize>,
+            x: &[f64],
+            _kernels: Option<&KernelRuntime>,
+        ) -> Vec<f64> {
+            let s: f64 = self.weights[range].iter().map(|w| w * x[0]).sum();
+            vec![s]
+        }
+        fn fold_identity(&self) -> Vec<f64> {
+            vec![0.0]
+        }
+        fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
+            a[0] += b[0];
+            a
+        }
+        fn post(&self, x: &[f64], s: &[f64], _iteration: usize) -> (Vec<f64>, bool) {
+            let next = s[0] / 2.0 + 1.0;
+            let stop = (next - x[0]).abs() < 1e-12;
+            (vec![next], stop)
+        }
+        fn cost_spec(&self) -> CostSpec {
+            CostSpec {
+                l: self.weights.len(),
+                words_down: 1,
+                words_up: 1,
+                ops_map_per_elem: 1.0,
+                ops_combine: 1.0,
+                ops_post: 3.0,
+            }
+        }
+    }
+
+    #[test]
+    fn cost_spec_to_params() {
+        let p = Relaxation::unit(100).cost_spec();
+        let net = crate::net::NetworkParams { latency: 1e-5, tau_tr: 1e-8 };
+        let cp = p.cost_params(1e-9, &net);
+        assert_eq!(cp.l, 100);
+        assert!((cp.t_map - 100.0 * 1e-9).abs() < 1e-18);
+        assert!((cp.t_a - 1e-9).abs() < 1e-20);
+        assert!((cp.t_c - net.t_c(1, 1)).abs() < 1e-20);
+    }
+}

@@ -1,0 +1,369 @@
+//! Runners: sequential (Algorithm 1) and live master/worker (Algorithm 2).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{BsfProblem, IterationMetrics, Metrics};
+use crate::lists::partition_even;
+use crate::model::Calibration;
+use crate::net::transport::{fabric, Downlink};
+use crate::runtime::KernelRuntime;
+use crate::util::Timer;
+
+/// Outcome of a run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Iterations executed (including the final one).
+    pub iterations: usize,
+    /// The final approximation (downlink encoding).
+    pub final_approx: Vec<f64>,
+    /// True if the run stopped because `StopCond` fired (vs the iteration
+    /// cap).
+    pub converged: bool,
+    /// Per-iteration timings.
+    pub metrics: Metrics,
+    /// Total wall time (seconds).
+    pub wall: f64,
+}
+
+/// Algorithm 1 — the sequential reference execution. Ground truth for every
+/// parallel runner: `LiveRunner` must produce identical approximations
+/// (up to fold-order roundoff).
+pub fn run_sequential(
+    problem: &dyn BsfProblem,
+    max_iters: usize,
+    kernels: Option<&KernelRuntime>,
+) -> RunReport {
+    let timer = Timer::start();
+    let l = problem.list_len();
+    let mut x = problem.initial_approx();
+    let mut iterations = 0;
+    let mut converged = false;
+    let mut metrics = Metrics::default();
+    while iterations < max_iters {
+        let mut it_timer = Timer::start();
+        let s = problem.map_fold(0..l, &x, kernels);
+        let map_time = it_timer.lap();
+        let (next, stop) = problem.post(&x, &s, iterations);
+        let post_time = it_timer.lap();
+        x = next;
+        iterations += 1;
+        metrics.iterations.push(IterationMetrics {
+            comm: 0.0,
+            map_fold: vec![map_time],
+            master_fold: 0.0,
+            post: post_time,
+            total: map_time + post_time,
+        });
+        if stop {
+            converged = true;
+            break;
+        }
+    }
+    RunReport { iterations, final_approx: x, converged, metrics, wall: timer.elapsed() }
+}
+
+/// Algorithm 2 over real threads — the live BSF skeleton.
+#[derive(Debug, Clone)]
+pub struct LiveRunner {
+    /// Worker count K.
+    pub k: usize,
+    /// Iteration cap (StopCond may fire earlier).
+    pub max_iters: usize,
+    /// Artifact directory for per-worker PJRT runtimes (`None` = native
+    /// Rust compute only).
+    pub artifact_dir: Option<PathBuf>,
+    /// Bound on each gather (worker failure detection).
+    pub gather_timeout: Duration,
+    /// Degraded-mode recovery: when a worker dies (panic / hang past the
+    /// gather timeout), the master marks it dead, computes its sublist
+    /// itself from then on, and the iteration stream continues — the
+    /// result is identical because Map is deterministic and `⊕` is
+    /// associative. Off by default (a dead worker aborts the run, like
+    /// `MPI_ERRORS_ARE_FATAL`).
+    pub fault_tolerant: bool,
+}
+
+impl LiveRunner {
+    /// Runner with defaults (no artifacts, 60 s gather timeout).
+    pub fn new(k: usize, max_iters: usize) -> LiveRunner {
+        LiveRunner {
+            k,
+            max_iters,
+            artifact_dir: None,
+            gather_timeout: Duration::from_secs(60),
+            fault_tolerant: false,
+        }
+    }
+
+    /// Use AOT artifacts from `dir` on the worker hot path.
+    pub fn with_artifacts(mut self, dir: impl Into<PathBuf>) -> LiveRunner {
+        self.artifact_dir = Some(dir.into());
+        self
+    }
+
+    /// Execute Algorithm 2. Spawns K worker threads, runs the master loop
+    /// on the calling thread, joins everything before returning.
+    pub fn run(&self, problem: Arc<dyn BsfProblem>) -> Result<RunReport> {
+        if self.k == 0 {
+            bail!("LiveRunner needs at least one worker");
+        }
+        let timer = Timer::start();
+        let l = problem.list_len();
+        let parts = partition_even(l, self.k);
+        let (master, workers) = fabric(self.k);
+
+        let mut handles = Vec::with_capacity(self.k);
+        for w in workers {
+            let problem = problem.clone();
+            let range = parts.range(w.id - 1);
+            let artifact_dir = self.artifact_dir.clone();
+            handles.push(std::thread::spawn(move || {
+                // Each worker owns its PJRT runtime (the client is not
+                // Send); a failed open degrades to native compute.
+                let kernels = artifact_dir.and_then(|d| KernelRuntime::open(d).ok());
+                loop {
+                    match w.recv() {
+                        Ok(Downlink::Approximation { x, epoch }) => {
+                            let t = Timer::start();
+                            let partial = problem.map_fold(range.clone(), &x, kernels.as_ref());
+                            let dt = t.elapsed();
+                            if w.send(epoch, partial, dt).is_err() {
+                                break; // master gone; nothing to report to
+                            }
+                        }
+                        Ok(Downlink::Stop { .. }) | Err(_) => break,
+                    }
+                }
+            }));
+        }
+
+        let run = self.master_loop(problem.as_ref(), &master);
+        // Always release the workers, even on error paths (best-effort:
+        // a dead worker's closed channel must not prevent the Stop from
+        // reaching the live ones).
+        master.broadcast_best_effort(&Downlink::Stop {
+            iterations: run.as_ref().map(|r| r.0).unwrap_or(0),
+        });
+        for h in handles {
+            let joined = h.join();
+            if !self.fault_tolerant {
+                joined.ok().context("worker thread panicked")?;
+            }
+        }
+        let (iterations, final_approx, converged, metrics) = run?;
+        Ok(RunReport { iterations, final_approx, converged, metrics, wall: timer.elapsed() })
+    }
+
+    fn master_loop(
+        &self,
+        problem: &dyn BsfProblem,
+        master: &crate::net::transport::MasterEndpoint,
+    ) -> Result<(usize, Vec<f64>, bool, Metrics)> {
+        let l = problem.list_len();
+        let parts = partition_even(l, self.k);
+        let mut alive = vec![true; self.k];
+        // Lazily-opened master-side runtime for recovered sublists.
+        let mut master_kernels: Option<Option<KernelRuntime>> = None;
+        let mut x = problem.initial_approx();
+        let mut iterations = 0;
+        let mut converged = false;
+        let mut metrics = Metrics::default();
+        while iterations < self.max_iters {
+            let mut it_timer = Timer::start();
+            let epoch = iterations as u64;
+            let (ups, dead) = if self.fault_tolerant {
+                let newly_dead = master.broadcast_alive(
+                    &Downlink::Approximation { x: x.clone(), epoch },
+                    &mut alive,
+                );
+                for w in newly_dead {
+                    log::warn!("worker {w} died before broadcast; master takes over its sublist");
+                }
+                let (got, missing) = master.gather_partial(&alive, epoch, self.gather_timeout);
+                for &w in &missing {
+                    log::warn!("worker {w} missed the gather deadline; marked dead");
+                    alive[w - 1] = false;
+                }
+                let ups: Vec<crate::net::transport::Uplink> = got.into_iter().flatten().collect();
+                let dead: Vec<usize> =
+                    (1..=self.k).filter(|w| !alive[w - 1]).collect();
+                (ups, dead)
+            } else {
+                master.broadcast(&Downlink::Approximation { x: x.clone(), epoch })?;
+                (master.gather(epoch, self.gather_timeout)?, Vec::new())
+            };
+            let roundtrip = it_timer.lap();
+            let map_fold: Vec<f64> = ups.iter().map(|u| u.map_seconds).collect();
+            let mut acc = problem.fold_identity();
+            for u in &ups {
+                acc = problem.combine(acc, u.partial.clone());
+            }
+            // Degraded mode: the master computes dead workers' sublists.
+            for w in dead {
+                let kern = master_kernels
+                    .get_or_insert_with(|| {
+                        self.artifact_dir.clone().and_then(|d| KernelRuntime::open(d).ok())
+                    })
+                    .as_ref();
+                let partial = problem.map_fold(parts.range(w - 1), &x, kern);
+                acc = problem.combine(acc, partial);
+            }
+            let master_fold = it_timer.lap();
+            let (next, stop) = problem.post(&x, &acc, iterations);
+            let post = it_timer.lap();
+            let slowest = map_fold.iter().copied().fold(0.0, f64::max);
+            metrics.iterations.push(IterationMetrics {
+                comm: (roundtrip - slowest).max(0.0),
+                map_fold,
+                master_fold,
+                post,
+                total: roundtrip + master_fold + post,
+            });
+            x = next;
+            iterations += 1;
+            if stop {
+                converged = true;
+                break;
+            }
+        }
+        Ok((iterations, x, converged, metrics))
+    }
+}
+
+/// The §6/§7-Q6 calibration recipe: run one master + one worker live for
+/// `iters` iterations (after `warmup` unrecorded ones), measure `t_Map`,
+/// `t_a`, `t_p` on real payloads, and return the samples.
+///
+/// `t_a` is measured directly by timing `⊕` over representative partials
+/// (`combine_reps` applications); the whole-list Reduce sample is then
+/// `(l − 1) · t_a` per eq. (6), and the Map sample is the measured
+/// map+fold time minus the fold share.
+pub fn calibrate_problem(
+    problem: Arc<dyn BsfProblem>,
+    artifact_dir: Option<PathBuf>,
+    warmup: usize,
+    iters: usize,
+    combine_reps: usize,
+) -> Result<Calibration> {
+    let runner = LiveRunner {
+        k: 1,
+        max_iters: warmup + iters,
+        artifact_dir: artifact_dir.clone(),
+        gather_timeout: Duration::from_secs(600),
+        fault_tolerant: false,
+    };
+    let report = runner.run(problem.clone())?;
+    let metrics = report.metrics.without_warmup(warmup.min(report.metrics.len().saturating_sub(1)));
+    if metrics.is_empty() {
+        bail!("calibration run produced no measurable iterations");
+    }
+
+    // Direct t_a measurement on real partials.
+    let l = problem.list_len();
+    let kernels = artifact_dir.and_then(|d| KernelRuntime::open(d).ok());
+    let x = problem.initial_approx();
+    let sample_partial = problem.map_fold(0..l, &x, kernels.as_ref());
+    let mut t_a_samples = Vec::with_capacity(combine_reps);
+    for _ in 0..combine_reps {
+        let a = sample_partial.clone();
+        let b = sample_partial.clone();
+        let t = Timer::start();
+        let c = problem.combine(a, b);
+        t_a_samples.push(t.elapsed());
+        std::hint::black_box(&c);
+    }
+    t_a_samples.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+    let t_a = t_a_samples[t_a_samples.len() / 2];
+
+    let mut cal = Calibration { l, ..Default::default() };
+    for it in &metrics.iterations {
+        let map_plus_fold = it.map_max();
+        let fold_share = (l.saturating_sub(1)) as f64 * t_a;
+        cal.map_samples.push((map_plus_fold - fold_share).max(0.0));
+        cal.reduce_samples.push(fold_share);
+        cal.post_samples.push(it.post);
+        cal.comm_samples.push(it.comm);
+    }
+    Ok(cal)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::test_problems::Relaxation;
+
+    #[test]
+    fn sequential_converges_to_fixed_point() {
+        let p = Relaxation::unit(100);
+        let r = run_sequential(&p, 200, None);
+        assert!(r.converged, "did not converge in {} iters", r.iterations);
+        assert!((r.final_approx[0] - 2.0).abs() < 1e-9);
+        assert_eq!(r.metrics.len(), r.iterations);
+    }
+
+    #[test]
+    fn live_matches_sequential_for_all_k() {
+        let seq = run_sequential(&Relaxation::unit(101), 200, None);
+        for k in [1usize, 2, 3, 7] {
+            let p: Arc<dyn BsfProblem> = Arc::new(Relaxation::unit(101));
+            let live = LiveRunner::new(k, 200).run(p).unwrap();
+            assert!(live.converged);
+            assert_eq!(live.iterations, seq.iterations, "k={k}");
+            assert!(
+                (live.final_approx[0] - seq.final_approx[0]).abs() < 1e-12,
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn live_respects_iteration_cap() {
+        let p: Arc<dyn BsfProblem> = Arc::new(Relaxation::unit(50));
+        let r = LiveRunner::new(2, 3).run(p).unwrap();
+        assert_eq!(r.iterations, 3);
+        assert!(!r.converged);
+        assert_eq!(r.metrics.len(), 3);
+    }
+
+    #[test]
+    fn live_k_more_than_l_still_correct() {
+        // More workers than list elements: some sublists are empty.
+        let seq = run_sequential(&Relaxation::unit(3), 200, None);
+        let p: Arc<dyn BsfProblem> = Arc::new(Relaxation::unit(3));
+        let live = LiveRunner::new(6, 200).run(p).unwrap();
+        assert!((live.final_approx[0] - seq.final_approx[0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        let p: Arc<dyn BsfProblem> = Arc::new(Relaxation::unit(10));
+        assert!(LiveRunner::new(0, 1).run(p).is_err());
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let p: Arc<dyn BsfProblem> = Arc::new(Relaxation::unit(64));
+        let r = LiveRunner::new(4, 5).run(p).unwrap();
+        for it in &r.metrics.iterations {
+            assert_eq!(it.map_fold.len(), 4);
+            assert!(it.total > 0.0);
+        }
+    }
+
+    #[test]
+    fn calibration_produces_positive_params() {
+        let p: Arc<dyn BsfProblem> = Arc::new(Relaxation::unit(1000));
+        let cal = calibrate_problem(p, None, 2, 8, 32).unwrap();
+        assert_eq!(cal.l, 1000);
+        assert_eq!(cal.map_samples.len(), 8);
+        let params =
+            cal.params_with_net(&crate::net::NetworkParams::tornado_susu(), 1, 1);
+        assert!(params.t_map >= 0.0);
+        assert!(params.t_a > 0.0);
+        assert!(params.t_p > 0.0);
+    }
+}

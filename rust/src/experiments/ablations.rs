@@ -1,0 +1,192 @@
+//! Ablations over the design choices the BSF model bakes in (DESIGN.md
+//! ABL1–ABL3):
+//!
+//! * **Collectives** — eq. (8) assumes `O(log K)` tree collectives; the
+//!   ablation swaps in flat/linear ones and shows the boundary collapse.
+//! * **Masters** — §7 Q5: two or more masters admit no closed-form
+//!   boundary; the simulator still *runs* such configurations, so we show
+//!   what the model cannot predict.
+//! * **Baselines** — BSF vs BSP vs LogGP predicted iteration times and
+//!   numerically-swept peaks on the same algorithm (no other model yields
+//!   eq. (14); each baseline's peak requires a sweep).
+
+use anyhow::Result;
+
+use crate::experiments::common::{
+    analytic_provider, k_sweep, paper_jacobi_params, simulated_curve, ExperimentCtx,
+};
+use crate::model::bsp::{BspModel, BspParams};
+use crate::model::logp::{LogGpModel, LogGpParams};
+use crate::model::BsfModel;
+use crate::net::CollectiveAlgo;
+use crate::simulator::ReduceMode;
+use crate::util::{Rng, Table};
+
+/// ABL1: binomial-tree vs linear collectives (and in-tree vs gather
+/// reduce) on the n = 5000 Jacobi workload.
+pub fn ablation_collectives(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
+    let n = 5_000;
+    let params = paper_jacobi_params(n).expect("published");
+    let model = BsfModel::new(params);
+    let k_bsf = model.k_bsf();
+    let ks = k_sweep(k_bsf * 1.2, ctx.quick);
+    let iters = if ctx.quick { 3 } else { 7 };
+
+    let mut t = Table::new(
+        format!("Ablation ABL1 (Jacobi n={n}): collective algorithm vs boundary"),
+        &["collective", "reduce", "K_test (sim)", "peak speedup", "K_BSF (eq.14)"],
+    );
+    for (algo, algo_name) in
+        [(CollectiveAlgo::BinomialTree, "tree"), (CollectiveAlgo::Linear, "linear")]
+    {
+        for (mode, mode_name) in [
+            (ReduceMode::TreeMasterFold, "paper (tree+master-fold)"),
+            (ReduceMode::InTree, "mpi-reduce (in-tree)"),
+            (ReduceMode::GatherThenFold, "flat gather+fold"),
+        ] {
+            let mut cluster = ctx.cluster;
+            cluster.algo = algo;
+            cluster.reduce_mode = mode;
+            let sub = ExperimentCtx { cluster, ..ctx.clone() };
+            let sim = sub.sim_params(n, n);
+            let mut prov = analytic_provider(&params);
+            let mut rng = Rng::new(ctx.seed ^ 0xAB1);
+            let curve = simulated_curve(&sub, &sim, n, &mut prov, &ks, iters, &mut rng);
+            let pk = crate::model::scalability::peak_knee(&curve, (ks.len() / 10).max(5), 0.99).expect("curve");
+            t.row(&[
+                algo_name.into(),
+                mode_name.into(),
+                pk.k.to_string(),
+                format!("{:.1}", pk.speedup),
+                format!("{k_bsf:.0}"),
+            ]);
+        }
+    }
+    ctx.save("ablation_collectives", &t);
+    Ok(vec![t])
+}
+
+/// ABL2: master-count ablation (§7 Q5). The model covers `masters = 1`
+/// only; the simulator shows what 2/4-master farms would do.
+pub fn ablation_masters(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
+    let n = 5_000;
+    let params = paper_jacobi_params(n).expect("published");
+    let k_bsf = BsfModel::new(params).k_bsf();
+    let ks = k_sweep(k_bsf * 1.5, ctx.quick);
+    let iters = if ctx.quick { 3 } else { 7 };
+
+    let mut t = Table::new(
+        format!("Ablation ABL2 (Jacobi n={n}): master count (§7 Q5)"),
+        &["masters", "K_test (sim)", "peak speedup", "closed form?"],
+    );
+    for masters in [1usize, 2, 4] {
+        let mut cluster = ctx.cluster;
+        cluster.masters = masters;
+        let sub = ExperimentCtx { cluster, ..ctx.clone() };
+        let sim = sub.sim_params(n, n);
+        let mut prov = analytic_provider(&params);
+        let mut rng = Rng::new(ctx.seed ^ 0xAB2);
+        let curve = simulated_curve(&sub, &sim, n, &mut prov, &ks, iters, &mut rng);
+        let pk = crate::model::scalability::peak_knee(&curve, (ks.len() / 10).max(5), 0.99).expect("curve");
+        t.row(&[
+            masters.to_string(),
+            pk.k.to_string(),
+            format!("{:.1}", pk.speedup),
+            if masters == 1 { format!("yes: K_BSF={k_bsf:.0}") } else { "no (paper §7 Q5)".into() },
+        ]);
+    }
+    ctx.save("ablation_masters", &t);
+    Ok(vec![t])
+}
+
+/// ABL3: BSF vs BSP vs LogGP on the same Algorithm-2 pattern.
+pub fn baselines(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
+    let mut out = Vec::new();
+    for n in [5_000usize, 10_000] {
+        let params = paper_jacobi_params(n).expect("published");
+        let bsf = BsfModel::new(params);
+        let bsp = BspModel {
+            p: params,
+            m: BspParams { g: ctx.cluster.net.tau_tr, l_sync: 2.0 * ctx.cluster.net.latency },
+            words_down: n,
+            words_up: n,
+        };
+        let loggp = LogGpModel {
+            p: params,
+            m: LogGpParams {
+                l: ctx.cluster.net.latency,
+                o: 2e-6,
+                g: 4e-6,
+                big_g: ctx.cluster.net.tau_tr,
+            },
+            words_down: n,
+            words_up: n,
+        };
+        let mut t = Table::new(
+            format!("Baselines ABL3 (Jacobi n={n}): predicted iteration time + peak"),
+            &["K", "T_K BSF", "T_K BSP", "T_K LogGP"],
+        );
+        for k in [1usize, 8, 32, 64, 128, 256, 512] {
+            t.row(&[
+                k.to_string(),
+                format!("{:.2e}", bsf.t_k(k)),
+                format!("{:.2e}", bsp.t_k(k)),
+                format!("{:.2e}", loggp.t_k(k)),
+            ]);
+        }
+        t.row(&[
+            "peak K".into(),
+            format!("{:.0} (closed form)", bsf.k_bsf()),
+            format!("{} (swept)", bsp.k_peak(2_000)),
+            format!("{} (swept)", loggp.k_peak(2_000)),
+        ]);
+        ctx.save(&format!("baselines_n{n}"), &t);
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_collective_collapses_boundary() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        let t = ablation_collectives(&ctx).unwrap().remove(0);
+        let csv = t.to_csv();
+        let rows: Vec<Vec<&str>> =
+            csv.lines().skip(1).map(|l| l.split(',').collect()).collect();
+        let k_of = |algo: &str, mode: &str| -> f64 {
+            rows.iter()
+                .find(|r| r[0] == algo && r[1] == mode)
+                .map(|r| r[2].parse().unwrap())
+                .unwrap()
+        };
+        assert!(
+            k_of("linear", "flat gather+fold") < k_of("tree", "mpi-reduce (in-tree)"),
+            "linear should peak earlier: {csv}"
+        );
+        // mpi-reduce folds in-tree, so it peaks no earlier than the
+        // paper's master-fold accounting
+        assert!(
+            k_of("tree", "mpi-reduce (in-tree)") >= k_of("tree", "paper (tree+master-fold)"),
+            "{csv}"
+        );
+    }
+
+    #[test]
+    fn baselines_produce_peaks() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        let ts = baselines(&ctx).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert!(ts[0].to_csv().contains("closed form"));
+    }
+
+    #[test]
+    fn masters_ablation_runs() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        let t = ablation_masters(&ctx).unwrap().remove(0);
+        assert_eq!(t.len(), 3);
+    }
+}

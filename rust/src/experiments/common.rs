@@ -1,0 +1,354 @@
+//! Shared experiment machinery: contexts, paper-published parameters,
+//! calibration plumbing, and the simulated speedup-curve generator.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ClusterConfig;
+use crate::coordinator::{calibrate_problem, BsfProblem};
+use crate::linalg::generators;
+use crate::model::scalability::SpeedupPoint;
+use crate::model::{speedup_curve, BsfModel, CostParams};
+use crate::problems::{CimminoProblem, GravityProblem, JacobiProblem};
+use crate::simulator::{simulate_run, AnalyticCost, CostProvider, SampledCost, SimParams};
+use crate::util::{Rng, Table};
+
+/// Which application an experiment drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProblemKind {
+    /// BSF-Jacobi (§5).
+    Jacobi,
+    /// BSF-Gravity (§6).
+    Gravity,
+    /// BSF-Cimmino (ref [31]).
+    Cimmino,
+}
+
+impl ProblemKind {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<ProblemKind> {
+        match s {
+            "jacobi" => Some(ProblemKind::Jacobi),
+            "gravity" => Some(ProblemKind::Gravity),
+            "cimmino" => Some(ProblemKind::Cimmino),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the problem at size `n` on its standard workload.
+    pub fn build(&self, n: usize) -> Arc<dyn BsfProblem> {
+        match self {
+            ProblemKind::Jacobi => Arc::new(JacobiProblem::new(generators::paper_system(n), 1e-12)),
+            ProblemKind::Gravity => {
+                Arc::new(GravityProblem::new(generators::random_bodies(n, 5.0, 42), 1e-3, f64::MAX))
+            }
+            ProblemKind::Cimmino => Arc::new(CimminoProblem::new(
+                generators::feasible_inequalities(n, (n / 4).max(8), 0.1, 7),
+                1.5,
+                1e-20,
+            )),
+        }
+    }
+}
+
+/// Shared experiment context (CLI flags + config file).
+#[derive(Debug, Clone)]
+pub struct ExperimentCtx {
+    /// Modelled cluster (network, collectives, jitter, masters).
+    pub cluster: ClusterConfig,
+    /// Where to save CSVs.
+    pub out_dir: PathBuf,
+    /// AOT artifact directory for live calibration runs.
+    pub artifact_dir: Option<PathBuf>,
+    /// Reduced sizes/iterations for CI-speed runs.
+    pub quick: bool,
+    /// Root seed for all stochastic parts.
+    pub seed: u64,
+}
+
+impl Default for ExperimentCtx {
+    fn default() -> Self {
+        let artifact_dir = {
+            let p = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+            p.join("manifest.json").exists().then_some(p)
+        };
+        ExperimentCtx {
+            cluster: ClusterConfig::default(),
+            out_dir: PathBuf::from("results"),
+            artifact_dir,
+            quick: false,
+            seed: 0xB5F,
+        }
+    }
+}
+
+impl ExperimentCtx {
+    /// Save a table as CSV under the out dir (best effort; report errors
+    /// but don't fail the experiment).
+    pub fn save(&self, name: &str, table: &Table) {
+        let path = self.out_dir.join(format!("{name}.csv"));
+        if let Err(e) = table.save_csv(&path) {
+            eprintln!("warning: could not save {path:?}: {e}");
+        }
+    }
+
+    /// Simulation parameters for a problem's payload sizes.
+    pub fn sim_params(&self, words_down: usize, words_up: usize) -> SimParams {
+        SimParams {
+            net: self.cluster.net,
+            algo: self.cluster.algo,
+            reduce_mode: self.cluster.reduce_mode,
+            words_down,
+            words_up,
+            jitter_comp: self.cluster.jitter_comp,
+            jitter_comm: self.cluster.jitter_comm,
+            masters: self.cluster.masters,
+        }
+    }
+}
+
+/// The paper's published BSF-Jacobi cost parameters (Table 2; L = 1.5e-5).
+pub fn paper_jacobi_params(n: usize) -> Option<CostParams> {
+    let (t_c, t_p, t_a, t_map) = match n {
+        1_500 => (7.20e-5, 5.01e-6, 1.89e-6, 6.23e-3),
+        5_000 => (1.06e-3, 1.72e-5, 5.27e-6, 9.28e-2),
+        10_000 => (2.17e-3, 3.70e-5, 9.31e-6, 3.73e-1),
+        16_000 => (2.95e-3, 5.61e-5, 2.10e-5, 7.73e-1),
+        _ => return None,
+    };
+    Some(CostParams { l: n, t_c, t_p, t_map, t_a })
+}
+
+/// The paper's published BSF-Gravity cost parameters (§6: `t_p = 9.5e-7`,
+/// `t_a = 4.7e-9`, per-n `t_Map`).
+///
+/// NOTE on `t_c`: the §6 text prints `t_c = 5·10⁻⁵`, but Table 4's
+/// published boundaries (69/141/210/279) are *impossible* under that value
+/// — even with `t_a → 0` the peak of eq. (9) is `t_Map·ln2/t_c ≈ 50` at
+/// n = 300. Solving Table 4's boundaries for `t_c` gives ≈ 3.6·10⁻⁵
+/// consistently across all four sizes, so we use that (reproducing the
+/// paper's own table); the discrepancy is recorded in EXPERIMENTS.md.
+pub fn paper_gravity_params(n: usize) -> Option<CostParams> {
+    let t_map = match n {
+        300 => 3.6e-3,
+        600 => 7.46e-3,
+        900 => 1.12e-2,
+        1_200 => 1.5e-2,
+        _ => return None,
+    };
+    Some(CostParams { l: n, t_c: 3.6e-5, t_p: 9.5e-7, t_map, t_a: 4.7e-9 })
+}
+
+/// A [`NetworkParams`] consistent with a published `t_c`: keeps the
+/// paper's latency `L = 1.5e-5` and solves `t_c = p2p(down) + p2p(up)`
+/// for the effective per-word time. Paper-params experiments must charge
+/// the simulator with *this* network, not the global default — otherwise
+/// the simulated timeline and the analytic metric disagree on `t_c`
+/// itself and the comparison is meaningless.
+pub fn effective_net(t_c: f64, words_down: usize, words_up: usize) -> crate::net::NetworkParams {
+    effective_net_with_latency(t_c, words_down, words_up, 1.5e-5)
+}
+
+/// [`effective_net`] with an explicit latency (for clusters other than the
+/// paper's testbed).
+pub fn effective_net_with_latency(
+    t_c: f64,
+    words_down: usize,
+    words_up: usize,
+    latency: f64,
+) -> crate::net::NetworkParams {
+    let words = (words_down + words_up) as f64;
+    let tau_tr = ((t_c - 2.0 * latency) / words).max(0.0);
+    crate::net::NetworkParams { latency, tau_tr }
+}
+
+/// K values to sweep for a curve expected to peak near `k_hint`:
+/// dense at small K, sparser beyond, up to ~2.4 × the hint.
+pub fn k_sweep(k_hint: f64, quick: bool) -> Vec<usize> {
+    let k_max = ((k_hint * 2.4).ceil() as usize).max(16);
+    let stride = if quick { (k_max / 24).max(1) } else { (k_max / 96).max(1) };
+    let mut ks = vec![1usize];
+    let mut k = stride.max(2);
+    while k <= k_max {
+        ks.push(k);
+        k += stride;
+    }
+    ks.dedup();
+    ks
+}
+
+/// Simulate the "empirical" speedup curve: the discrete-event timeline of
+/// Algorithm 2 at each K, with compute times from `provider` and the
+/// context's network model. `iters` simulated iterations are averaged per
+/// point.
+pub fn simulated_curve(
+    ctx: &ExperimentCtx,
+    params: &SimParams,
+    l: usize,
+    provider: &mut dyn CostProvider,
+    ks: &[usize],
+    iters: usize,
+    rng: &mut Rng,
+) -> Vec<SpeedupPoint> {
+    let _ = ctx;
+    speedup_curve(ks, |k| {
+        let runs = simulate_run(k, l, iters, params, provider, rng);
+        runs.iter().map(|t| t.total).sum::<f64>() / runs.len() as f64
+    })
+}
+
+/// A provider built from published analytic parameters (paper-params mode).
+pub fn analytic_provider(p: &CostParams) -> AnalyticCost {
+    AnalyticCost { t_map_full: p.t_map, l: p.l, t_a: p.t_a, t_p: p.t_p }
+}
+
+/// A provider built from live calibration samples (measured mode).
+pub fn sampled_provider(cal: &crate::model::Calibration, p: &CostParams, seed: u64) -> SampledCost {
+    SampledCost {
+        per_elem: cal.map_samples.iter().map(|s| s / cal.l as f64).collect(),
+        t_a: p.t_a,
+        t_p: p.t_p,
+        rng: Rng::new(seed),
+    }
+}
+
+/// Calibrate a problem instance live (1 master + 1 worker, kernels when
+/// available) and return `(CostParams, Calibration)` on the context's
+/// network.
+pub fn calibrate(
+    ctx: &ExperimentCtx,
+    problem: Arc<dyn BsfProblem>,
+) -> Result<(CostParams, crate::model::Calibration)> {
+    let spec = problem.cost_spec();
+    let (warmup, iters, reps) = if ctx.quick { (1, 4, 16) } else { (3, 12, 64) };
+    let cal = calibrate_problem(problem, ctx.artifact_dir.clone(), warmup, iters, reps)?;
+    let params = cal.params_with_net(&ctx.cluster.net, spec.words_down, spec.words_up);
+    Ok((params, cal))
+}
+
+/// One row of a boundary-comparison table: analytic K_BSF vs simulated
+/// K_test, with eq. (26) error.
+#[derive(Debug, Clone, Copy)]
+pub struct BoundaryRow {
+    /// Problem size.
+    pub n: usize,
+    /// Closed-form boundary (eq. 14).
+    pub k_bsf: f64,
+    /// Simulated-peak boundary.
+    pub k_test: f64,
+    /// eq. (26) error.
+    pub error: f64,
+    /// Peak speedup observed in the simulated curve.
+    pub peak_speedup: f64,
+    /// K-range within 1% of the smoothed peak (the plateau): any K inside
+    /// is an equally valid "measured boundary".
+    pub plateau: (usize, usize),
+}
+
+/// Context for measured-mode experiments: this machine's node is ~10x
+/// faster than the paper's 2010-era Xeon, so on the default (Tornado)
+/// network small-n workloads fall out of the model's compute-intensive
+/// regime. When the caller did not override the network, measured mode
+/// models a proportionally modern fabric (1 µs latency, 10 GB/s).
+pub fn measured_cluster(ctx: &ExperimentCtx) -> ExperimentCtx {
+    let mut c = ctx.clone();
+    if c.cluster.net == crate::net::NetworkParams::tornado_susu() {
+        c.cluster.net = crate::net::NetworkParams::fast_fabric();
+    }
+    c
+}
+
+/// Compute a boundary comparison for one parameter set. The simulator is
+/// always charged a network consistent with `params.t_c` (see
+/// [`effective_net`]).
+pub fn boundary_row(
+    ctx: &ExperimentCtx,
+    n: usize,
+    params: &CostParams,
+    words_down: usize,
+    words_up: usize,
+    provider: &mut dyn CostProvider,
+    rng: &mut Rng,
+) -> BoundaryRow {
+    let model = BsfModel::new(*params);
+    let k_bsf = model.k_bsf();
+    let ks = k_sweep(k_bsf, ctx.quick);
+    let mut sim = ctx.sim_params(words_down, words_up);
+    sim.net =
+        effective_net_with_latency(params.t_c, words_down, words_up, ctx.cluster.net.latency);
+    let iters = if ctx.quick { 3 } else { 7 };
+    let curve = simulated_curve(ctx, &sim, params.l, provider, &ks, iters, rng);
+    let w = (ks.len() / 10).max(5);
+    let pk = crate::model::scalability::peak_knee(&curve, w, 0.99).expect("non-empty curve");
+    let plateau =
+        crate::model::scalability::peak_plateau(&curve, w, 0.99).expect("non-empty curve");
+    BoundaryRow {
+        n,
+        k_bsf,
+        k_test: pk.k as f64,
+        error: crate::model::prediction_error(pk.k as f64, k_bsf),
+        peak_speedup: pk.speedup,
+        plateau,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_sweep_shape() {
+        let ks = k_sweep(100.0, false);
+        assert_eq!(ks[0], 1);
+        assert!(*ks.last().unwrap() >= 200);
+        assert!(ks.windows(2).all(|w| w[0] < w[1]));
+        let quick = k_sweep(100.0, true);
+        assert!(quick.len() < ks.len());
+    }
+
+    #[test]
+    fn paper_params_present_for_published_sizes() {
+        for n in [1_500, 5_000, 10_000, 16_000] {
+            assert!(paper_jacobi_params(n).is_some());
+        }
+        assert!(paper_jacobi_params(123).is_none());
+        for n in [300, 600, 900, 1_200] {
+            assert!(paper_gravity_params(n).is_some());
+        }
+        assert!(paper_gravity_params(50).is_none());
+    }
+
+    #[test]
+    fn problem_kind_parse_and_build() {
+        assert_eq!(ProblemKind::parse("jacobi"), Some(ProblemKind::Jacobi));
+        assert_eq!(ProblemKind::parse("nope"), None);
+        let p = ProblemKind::Jacobi.build(32);
+        assert_eq!(p.list_len(), 32);
+        let g = ProblemKind::Gravity.build(64);
+        assert_eq!(g.list_len(), 64);
+        let c = ProblemKind::Cimmino.build(40);
+        assert_eq!(c.list_len(), 40);
+    }
+
+    /// The headline validation at unit-test scale: simulated peak vs
+    /// closed-form boundary on the paper's own n=10000 parameters must
+    /// agree within the paper's error band (≤ 15 %).
+    #[test]
+    fn paper_params_boundary_within_band() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        let params = paper_jacobi_params(10_000).unwrap();
+        let mut prov = analytic_provider(&params);
+        let mut rng = Rng::new(1);
+        let row = boundary_row(&ctx, 10_000, &params, 10_000, 10_000, &mut prov, &mut rng);
+        assert!(
+            row.error < 0.20,
+            "K_BSF={:.1} K_test={} err={:.2}",
+            row.k_bsf,
+            row.k_test,
+            row.error
+        );
+        assert!(row.peak_speedup > 10.0);
+    }
+}

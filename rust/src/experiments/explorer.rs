@@ -1,0 +1,135 @@
+//! Design-space explorer: K_BSF contours over problem size × interconnect.
+//!
+//! The model's whole purpose is estimating scalability *before* building
+//! anything; this harness turns eq. (14) into a planning table — for each
+//! (n, τ_tr) cell, the boundary and the peak speedup — so one can read off
+//! e.g. "at n = 50k on a 10 GB/s fabric, stop buying nodes past ~600".
+
+use anyhow::Result;
+
+use crate::coordinator::CostSpec;
+use crate::experiments::common::{ExperimentCtx, ProblemKind};
+use crate::model::BsfModel;
+use crate::net::NetworkParams;
+use crate::util::Table;
+
+/// Per-word transfer times swept (s/f64): 40 GbE-class down to HDR-IB-class.
+const TAUS: [(f64, &str); 4] = [
+    (1.6e-9, "40 GB/s"),
+    (8.0e-10 * 10.0, "1 GB/s"),
+    (9.13e-8, "Tornado (eff.)"),
+    (8.0e-7, "10 MB/s"),
+];
+
+/// Problem sizes swept.
+const NS: [usize; 5] = [1_000, 4_000, 16_000, 64_000, 256_000];
+
+fn spec_for(kind: ProblemKind, n: usize) -> CostSpec {
+    // Analytic op counts (same rescaling the CLI `predict` uses).
+    match kind {
+        ProblemKind::Jacobi => CostSpec {
+            l: n,
+            words_down: n,
+            words_up: n,
+            ops_map_per_elem: n as f64,
+            ops_combine: n as f64,
+            ops_post: 4.0 * n as f64 + 1.0,
+        },
+        ProblemKind::Gravity => CostSpec {
+            l: n,
+            words_down: 7,
+            words_up: 3,
+            ops_map_per_elem: 17.0,
+            ops_combine: 3.0,
+            ops_post: 26.0,
+        },
+        ProblemKind::Cimmino => {
+            let cols = (n / 4).max(8);
+            CostSpec {
+                l: n,
+                words_down: cols,
+                words_up: cols,
+                ops_map_per_elem: 6.0 * cols as f64 + 2.0,
+                ops_combine: cols as f64,
+                ops_post: 5.0 * cols as f64 + 2.0,
+            }
+        }
+    }
+}
+
+/// Run the explorer for one problem kind at a given node speed.
+pub fn explorer(ctx: &ExperimentCtx, kind: ProblemKind, tau_op: f64) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        format!(
+            "Design-space explorer: {kind:?}, τ_op = {tau_op:.1e} s/op — \
+             K_BSF (peak speedup) per n × interconnect"
+        ),
+        &{
+            let mut h = vec!["n"];
+            h.extend(TAUS.iter().map(|(_, name)| *name));
+            h
+        },
+    );
+    for &n in &NS {
+        let mut row = vec![n.to_string()];
+        for &(tau_tr, _) in &TAUS {
+            let net = NetworkParams { latency: ctx.cluster.net.latency, tau_tr };
+            let params = spec_for(kind, n).cost_params(tau_op, &net);
+            let m = BsfModel::new(params);
+            let k = m.k_bsf();
+            if k < 1.5 {
+                row.push("—".into());
+            } else {
+                let a = m.speedup((k.round() as usize).max(1));
+                row.push(format!("{k:.0} ({a:.0}x)"));
+            }
+        }
+        t.row(&row);
+    }
+    ctx.save(&format!("explorer_{kind:?}").to_lowercase(), &t);
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_grows_with_n_and_bandwidth() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        let t = explorer(&ctx, ProblemKind::Jacobi, 1e-9).unwrap().remove(0);
+        assert_eq!(t.len(), NS.len());
+        let csv = t.to_csv();
+        let rows: Vec<Vec<String>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(str::to_string).collect())
+            .collect();
+        let k_of = |row: usize, col: usize| -> f64 {
+            rows[row][col].trim_matches('"').split(' ').next().unwrap().parse().unwrap_or(0.0)
+        };
+        // fastest fabric, growing n: boundary must grow
+        assert!(k_of(4, 1) > k_of(0, 1), "{csv}");
+        // fixed n = 64000: faster fabric must not lower the boundary
+        assert!(k_of(3, 1) >= k_of(3, 3), "{csv}");
+    }
+
+    #[test]
+    fn comm_bound_cells_are_dashes() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        // Gravity on a very slow per-op node: boundary exists everywhere;
+        // Jacobi at n=1000 on the slowest fabric should be comm-bound.
+        let t = explorer(&ctx, ProblemKind::Jacobi, 1e-10).unwrap().remove(0);
+        let csv = t.to_csv();
+        assert!(csv.contains('—'), "{csv}");
+    }
+
+    #[test]
+    fn all_kinds_render() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        for kind in [ProblemKind::Jacobi, ProblemKind::Gravity, ProblemKind::Cimmino] {
+            let t = explorer(&ctx, kind, 1e-9).unwrap();
+            assert_eq!(t.len(), 1);
+        }
+    }
+}

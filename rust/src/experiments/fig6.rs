@@ -1,0 +1,152 @@
+//! Figure 6 — BSF-Jacobi speedup curves, simulated ("empirical") vs
+//! analytic, per problem size.
+//!
+//! For each `n`, prints the speedup series over K (paper: solid/empirical
+//! vs dotted/analytic, with the red boundary line = K_BSF). In
+//! paper-params mode the sizes are the paper's {1500, 5000, 10000, 16000}
+//! with Table 2's costs; in measured mode the sizes are calibrated live on
+//! this machine.
+
+use anyhow::Result;
+
+use crate::experiments::common::{
+    analytic_provider, calibrate, k_sweep, paper_jacobi_params, sampled_provider, simulated_curve,
+    ExperimentCtx, ProblemKind,
+};
+use crate::model::BsfModel;
+use crate::util::{table::sci, Rng, Table};
+
+/// Write the Fig.-6/7-style SVG: simulated (solid) vs analytic (dashed)
+/// speedup with the red K_BSF boundary line — the paper's plot format.
+pub(crate) fn save_curve_svg(
+    ctx: &ExperimentCtx,
+    name: &str,
+    title: &str,
+    curve: &[crate::model::SpeedupPoint],
+    model: &BsfModel,
+    k_bsf: f64,
+) {
+    use crate::util::svg::{Chart, Series};
+    let mut chart = Chart::new(title, "K (worker nodes)", "speedup a(K)");
+    chart.push(Series::solid(
+        "simulated cluster",
+        curve.iter().map(|p| (p.k as f64, p.speedup)).collect(),
+        "#1f77b4",
+    ));
+    chart.push(Series::dashed(
+        "BSF model (eq. 9)",
+        curve.iter().map(|p| (p.k as f64, model.speedup(p.k))).collect(),
+        "#444444",
+    ));
+    chart.vline(k_bsf, format!("K_BSF = {k_bsf:.0}"));
+    let path = ctx.out_dir.join(format!("{name}.svg"));
+    if let Err(e) = chart.save(&path) {
+        eprintln!("warning: could not save {path:?}: {e}");
+    }
+}
+
+/// Sizes used in measured mode (kernel artifacts exist for ≤ 2048; larger
+/// sizes run the native path — both are the same map semantics).
+const MEASURED_SIZES: [usize; 3] = [512, 1024, 2048];
+
+/// Run Figure 6. Returns one table per size (speedup series) plus a peak
+/// summary; saves CSVs into `ctx.out_dir`.
+pub fn fig6(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
+    let mut out = Vec::new();
+    let mut summary = Table::new(
+        if measured {
+            "Fig. 6 summary (measured on this machine, projected on modelled cluster)"
+        } else {
+            "Fig. 6 summary (paper's Table 2 parameters)"
+        },
+        &["n", "K_BSF (eq.14)", "K_test (sim peak)", "peak speedup", "err (eq.26)"],
+    );
+    let measured_ctx = crate::experiments::common::measured_cluster(ctx);
+    let ctx = if measured { &measured_ctx } else { ctx };
+    let mut rng = Rng::new(ctx.seed);
+
+    let sizes: Vec<usize> = if measured {
+        let mut s = MEASURED_SIZES.to_vec();
+        if ctx.quick {
+            s.truncate(2);
+        }
+        s
+    } else {
+        vec![1_500, 5_000, 10_000, 16_000]
+    };
+
+    for n in sizes {
+        // --- cost parameters for this size ---
+        let (params, provider): (_, Box<dyn crate::simulator::CostProvider>) = if measured {
+            let problem = ProblemKind::Jacobi.build(n);
+            let (params, cal) = calibrate(ctx, problem)?;
+            let prov = sampled_provider(&cal, &params, ctx.seed ^ n as u64);
+            (params, Box::new(prov))
+        } else {
+            let params = paper_jacobi_params(n).expect("published size");
+            (params, Box::new(analytic_provider(&params)))
+        };
+        let mut provider = provider;
+
+        let model = BsfModel::new(params);
+        let k_bsf = model.k_bsf();
+        let ks = k_sweep(k_bsf, ctx.quick);
+        let mut sim_params = ctx.sim_params(n, n);
+        sim_params.net = crate::experiments::common::effective_net_with_latency(
+            params.t_c, n, n, ctx.cluster.net.latency);
+        
+        let iters = if ctx.quick { 3 } else { 7 };
+        let curve = simulated_curve(ctx, &sim_params, n, provider.as_mut(), &ks, iters, &mut rng);
+
+        let mut t = Table::new(
+            format!("Fig. 6, n = {n}: BSF-Jacobi speedup (K_BSF = {k_bsf:.1})"),
+            &["K", "a_sim (empirical)", "a_BSF (eq.9)", "T_K sim", "T_K eq.8"],
+        );
+        for p in &curve {
+            t.row(&[
+                p.k.to_string(),
+                format!("{:.2}", p.speedup),
+                format!("{:.2}", model.speedup(p.k)),
+                sci(p.t_k),
+                sci(model.t_k(p.k)),
+            ]);
+        }
+        ctx.save(&format!("fig6_n{n}{}", if measured { "_measured" } else { "" }), &t);
+        save_curve_svg(
+            ctx,
+            &format!("fig6_n{n}{}", if measured { "_measured" } else { "" }),
+            &format!("BSF-Jacobi speedup, n = {n}"),
+            &curve,
+            &model,
+            k_bsf,
+        );
+
+        let pk = crate::model::scalability::peak_knee(&curve, (ks.len() / 10).max(5), 0.99).expect("curve");
+        summary.row(&[
+            n.to_string(),
+            format!("{k_bsf:.1}"),
+            pk.k.to_string(),
+            format!("{:.1}", pk.speedup),
+            format!("{:.3}", crate::model::prediction_error(pk.k as f64, k_bsf)),
+        ]);
+        out.push(t);
+    }
+    ctx.save(if measured { "fig6_summary_measured" } else { "fig6_summary" }, &summary);
+    out.push(summary);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_mode_reproduces_curve_shape() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        let tables = fig6(&ctx, false).unwrap();
+        // 4 sizes + summary
+        assert_eq!(tables.len(), 5);
+        let summary = tables.last().unwrap();
+        assert_eq!(summary.len(), 4);
+    }
+}

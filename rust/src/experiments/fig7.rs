@@ -1,0 +1,133 @@
+//! Figure 7 — BSF-Gravity speedup curves, simulated vs analytic.
+//!
+//! Paper-params mode uses §6's published constants (`t_c = 5e-5`,
+//! `t_p = 9.5e-7`, `t_a = 4.7e-9`, per-n `t_Map`) over
+//! n ∈ {300, 600, 900, 1200}; measured mode calibrates the live
+//! BSF-Gravity at the same sizes (they are small enough to run directly).
+
+use anyhow::Result;
+
+use crate::experiments::common::{
+    analytic_provider, calibrate, k_sweep, paper_gravity_params, sampled_provider,
+    simulated_curve, ExperimentCtx, ProblemKind,
+};
+use crate::model::BsfModel;
+use crate::util::{table::sci, Rng, Table};
+
+/// Payload sizes for BSF-Gravity (downlink `[X|V|t]`, uplink α).
+const WORDS_DOWN: usize = 7;
+const WORDS_UP: usize = 3;
+
+/// Run Figure 7. Returns one table per size plus a peak summary.
+pub fn fig7(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
+    let mut out = Vec::new();
+    let mut summary = Table::new(
+        if measured {
+            "Fig. 7 summary (measured on this machine, projected on modelled cluster)"
+        } else {
+            "Fig. 7 summary (paper's §6 parameters)"
+        },
+        &["n", "K_BSF (eq.14)", "K_test (sim peak)", "peak speedup", "err (eq.26)"],
+    );
+    let measured_ctx = crate::experiments::common::measured_cluster(ctx);
+    let ctx = if measured { &measured_ctx } else { ctx };
+    let mut rng = Rng::new(ctx.seed ^ 0x9);
+
+    // Paper sizes for paper-params mode. Measured mode uses block-multiple
+    // sizes (B = 256): at n = 300 the PJRT per-call overhead (~45 µs)
+    // dominates the map and breaks the model's linear-in-chunk assumption;
+    // at multiples of the block the per-element cost is constant and the
+    // model applies.
+    let mut sizes = if measured {
+        vec![4_096usize, 16_384, 65_536]
+    } else {
+        vec![300usize, 600, 900, 1_200]
+    };
+    if ctx.quick {
+        sizes.truncate(2);
+    }
+
+    for n in sizes {
+        let (params, provider): (_, Box<dyn crate::simulator::CostProvider>) = if measured {
+            let problem = ProblemKind::Gravity.build(n);
+            let (params, cal) = calibrate(ctx, problem)?;
+            let prov = sampled_provider(&cal, &params, ctx.seed ^ n as u64);
+            (params, Box::new(prov))
+        } else {
+            let params = paper_gravity_params(n).expect("published size");
+            (params, Box::new(analytic_provider(&params)))
+        };
+        let mut provider = provider;
+
+        let model = BsfModel::new(params);
+        let k_bsf = model.k_bsf();
+        let ks = k_sweep(k_bsf, ctx.quick);
+        let mut sim_params = ctx.sim_params(WORDS_DOWN, WORDS_UP);
+        sim_params.net = crate::experiments::common::effective_net_with_latency(
+            params.t_c, WORDS_DOWN, WORDS_UP, ctx.cluster.net.latency);
+        
+        let iters = if ctx.quick { 3 } else { 7 };
+        let curve = simulated_curve(ctx, &sim_params, n, provider.as_mut(), &ks, iters, &mut rng);
+
+        let mut t = Table::new(
+            format!("Fig. 7, n = {n}: BSF-Gravity speedup (K_BSF = {k_bsf:.1})"),
+            &["K", "a_sim (empirical)", "a_BSF (eq.9)", "T_K sim", "T_K eq.8"],
+        );
+        for p in &curve {
+            t.row(&[
+                p.k.to_string(),
+                format!("{:.2}", p.speedup),
+                format!("{:.2}", model.speedup(p.k)),
+                sci(p.t_k),
+                sci(model.t_k(p.k)),
+            ]);
+        }
+        ctx.save(&format!("fig7_n{n}{}", if measured { "_measured" } else { "" }), &t);
+        crate::experiments::fig6::save_curve_svg(
+            ctx,
+            &format!("fig7_n{n}{}", if measured { "_measured" } else { "" }),
+            &format!("BSF-Gravity speedup, n = {n}"),
+            &curve,
+            &model,
+            k_bsf,
+        );
+
+        let pk = crate::model::scalability::peak_knee(&curve, (ks.len() / 10).max(5), 0.99).expect("curve");
+        summary.row(&[
+            n.to_string(),
+            format!("{k_bsf:.1}"),
+            pk.k.to_string(),
+            format!("{:.1}", pk.speedup),
+            format!("{:.3}", crate::model::prediction_error(pk.k as f64, k_bsf)),
+        ]);
+        out.push(t);
+    }
+    ctx.save(if measured { "fig7_summary_measured" } else { "fig7_summary" }, &summary);
+    out.push(summary);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper's Table 4 says K_BSF ∈ {69, 141, 210, 279} for the four sizes.
+    #[test]
+    fn paper_mode_k_bsf_matches_table4() {
+        for (n, want) in [(300usize, 69.0), (600, 141.0), (900, 210.0), (1_200, 279.1)] {
+            let params = paper_gravity_params(n).unwrap();
+            let got = BsfModel::new(params).k_bsf();
+            assert!(
+                (got - want).abs() / want < 0.03,
+                "n={n}: got {got:.1}, paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn quick_run_produces_tables() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        let tables = fig7(&ctx, false).unwrap();
+        assert_eq!(tables.len(), 3); // 2 sizes + summary in quick mode
+    }
+}

@@ -1,0 +1,38 @@
+//! Experiment harnesses — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §5 for the index) plus the ablations.
+//!
+//! Two data sources feed every experiment:
+//!
+//! * **paper-params mode** — the cost parameters published in the paper
+//!   (Table 2 for Jacobi; §6's gravity constants). This checks the
+//!   *models and simulator* against the paper's own numbers, independent
+//!   of this machine.
+//! * **measured mode** — parameters calibrated live on this machine
+//!   (1 master + 1 worker, PJRT kernels on the hot path), then projected
+//!   onto the modelled cluster network. This is the full-stack
+//!   reproduction: L1 kernels → L2 model → L3 skeleton → simulator →
+//!   analytic boundary.
+//!
+//! Every harness returns [`crate::util::Table`]s that the CLI prints and
+//! saves as CSV under `results/`.
+
+mod ablations;
+mod common;
+mod explorer;
+pub(crate) mod fig6;
+mod fig7;
+mod sqrt_law;
+mod tables;
+
+pub use ablations::{ablation_collectives, ablation_masters, baselines};
+pub use common::{
+    analytic_provider, boundary_row, calibrate, effective_net, effective_net_with_latency, k_sweep,
+    paper_gravity_params,
+    paper_jacobi_params, sampled_provider, simulated_curve, BoundaryRow, ExperimentCtx,
+    ProblemKind,
+};
+pub use explorer::explorer;
+pub use fig6::fig6;
+pub use fig7::fig7;
+pub use sqrt_law::sqrt_law;
+pub use tables::{table2, table3, table4};

@@ -1,0 +1,125 @@
+//! The √n growth law (eqs. 24–25 and 36–37): the scalability boundary of
+//! both applications grows as `O(√n)`.
+//!
+//! Sweeps n over a wide range, computes the closed-form boundary from the
+//! analytic cost specs (eqs. 20–23 for Jacobi, §6's counts for Gravity),
+//! and fits the growth exponent in log-log space — the paper predicts 0.5.
+
+use anyhow::Result;
+
+use crate::experiments::common::ExperimentCtx;
+use crate::model::scalability::growth_exponent;
+use crate::model::BsfModel;
+use crate::net::NetworkParams;
+use crate::util::Table;
+
+/// τ_op matching the paper's testbed (derived from Table 2:
+/// `t_a = n·τ_op` at n = 10000 gives ≈ 9.3e-10 s/op).
+const TAU_OP: f64 = 9.3e-10;
+
+fn jacobi_params(n: usize, net: &NetworkParams) -> crate::model::CostParams {
+    // eqs. (20)-(23): t_c = 2(nτ_tr + L), t_Map = n²τ_op, t_a = nτ_op.
+    crate::model::CostParams {
+        l: n,
+        t_c: 2.0 * (n as f64 * net.tau_tr + net.latency),
+        t_p: 4.0 * n as f64 * TAU_OP,
+        t_map: (n as f64) * (n as f64) * TAU_OP,
+        t_a: n as f64 * TAU_OP,
+    }
+}
+
+fn gravity_params(n: usize, net: &NetworkParams) -> crate::model::CostParams {
+    // §6: t_c = 6τ_tr + 2L, t_Map = 17nτ_op, t_a = 3τ_op.
+    crate::model::CostParams {
+        l: n,
+        t_c: 6.0 * net.tau_tr + 2.0 * net.latency,
+        t_p: 26.0 * TAU_OP,
+        t_map: 17.0 * n as f64 * TAU_OP,
+        t_a: 3.0 * TAU_OP,
+    }
+}
+
+/// Run the growth-law sweep for both applications.
+pub fn sqrt_law(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
+    let net = ctx.cluster.net;
+    let jacobi_ns: Vec<usize> =
+        [1_000usize, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000, 128_000].to_vec();
+    // Gravity's √n regime starts when 29/3·n dominates (t_c/(t_a·ln2))² —
+    // around n ≈ 1e7 on these machine constants. The sweep spans the
+    // transition: linear growth at the paper's own Table 4 sizes (their
+    // boundaries grow ∝ n!), bending to √n asymptotically (eq. 37).
+    let gravity_ns: Vec<usize> =
+        [300usize, 1_200, 10_000, 100_000, 1_000_000, 10_000_000, 100_000_000, 1_000_000_000]
+            .to_vec();
+
+    let mut out = Vec::new();
+    for (name, ns, f) in [
+        ("jacobi", jacobi_ns, jacobi_params as fn(usize, &NetworkParams) -> _),
+        ("gravity", gravity_ns, gravity_params as fn(usize, &NetworkParams) -> _),
+    ] {
+        let mut t = Table::new(
+            format!("√n law ({name}): K_BSF vs n (eqs. 24–25 / 36–37)"),
+            &["n", "K_BSF", "K_BSF/√n"],
+        );
+        let mut points = Vec::new();
+        for &n in &ns {
+            let k = BsfModel::new(f(n, &net)).k_bsf();
+            points.push((n as f64, k));
+            t.row(&[n.to_string(), format!("{k:.1}"), format!("{:.3}", k / (n as f64).sqrt())]);
+        }
+        // Fit the asymptotic tail (largest half of the sweep): the paper's
+        // O(√n) claim is asymptotic; gravity is still pre-asymptotic at its
+        // published sizes.
+        let tail = &points[points.len() / 2..];
+        let p = growth_exponent(tail);
+        t.row(&["fit exponent (tail)".into(), format!("{p:.3}"), "(paper: 0.5)".into()]);
+        ctx.save(&format!("sqrt_law_{name}"), &t);
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponents_near_half_in_asymptotic_regime() {
+        let net = NetworkParams::tornado_susu();
+        // Jacobi's √n regime needs 2n ≫ (c/2)² ≈ 2e4, i.e. n ≳ 1e6.
+        let pts: Vec<(f64, f64)> = [1_000_000usize, 4_000_000, 16_000_000, 64_000_000]
+            .iter()
+            .map(|&n| (n as f64, BsfModel::new(jacobi_params(n, &net)).k_bsf()))
+            .collect();
+        let p = growth_exponent(&pts);
+        assert!((p - 0.5).abs() < 0.1, "jacobi exponent {p}");
+        // Gravity's tiny t_a pushes the regime out to n ~ 1e8.
+        let pts: Vec<(f64, f64)> = [100_000_000usize, 400_000_000, 1_600_000_000]
+            .iter()
+            .map(|&n| (n as f64, BsfModel::new(gravity_params(n, &net)).k_bsf()))
+            .collect();
+        let p = growth_exponent(&pts);
+        assert!((p - 0.5).abs() < 0.1, "gravity exponent {p}");
+    }
+
+    #[test]
+    fn gravity_preasymptotic_is_linear_like_table4() {
+        // The paper's own Table 4 boundaries grow ∝ n (69→279 for
+        // 300→1200); the model reproduces that pre-asymptotic behaviour.
+        let net = NetworkParams::tornado_susu();
+        let pts: Vec<(f64, f64)> = [300usize, 600, 1_200]
+            .iter()
+            .map(|&n| (n as f64, BsfModel::new(gravity_params(n, &net)).k_bsf()))
+            .collect();
+        let p = growth_exponent(&pts);
+        assert!(p > 0.8, "pre-asymptotic exponent {p} should be near 1");
+    }
+
+    #[test]
+    fn tables_render() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        let ts = sqrt_law(&ctx).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert!(ts[0].to_csv().contains("fit exponent"));
+    }
+}

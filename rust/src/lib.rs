@@ -1,0 +1,49 @@
+//! # bsf — Bulk Synchronous Farm
+//!
+//! A production-shaped reproduction of
+//! *"BSF: a parallel computation model for scalability estimation of iterative
+//! numerical algorithms on cluster computing systems"* (L. B. Sokolinsky,
+//! JPDC 2020, doi 10.1016/j.jpdc.2020.12.009).
+//!
+//! The crate provides, as first-class subsystems:
+//!
+//! * [`lists`] — the Bird–Meertens list algebra (`Map`/`Reduce`, the promotion
+//!   theorem, sublist partitioning) that BSF algorithms are specified in;
+//! * [`linalg`] — a dense linear-algebra substrate (vectors, matrices, the
+//!   paper's scalable test systems);
+//! * [`coordinator`] — the BSF *skeleton*: a [`coordinator::BsfProblem`] trait
+//!   plus master/worker runners that mechanically parallelize Algorithm 1 into
+//!   Algorithm 2;
+//! * [`net`] — the message-passing substrate: costed virtual-clock channels and
+//!   MPI-style collectives (binomial tree and linear);
+//! * [`simulator`] — a discrete-event cluster simulator that executes
+//!   Algorithm-2 timelines for arbitrary `K` (the stand-in for the paper's
+//!   480-node "Tornado SUSU" cluster);
+//! * [`model`] — the cost metrics: the BSF model (eqs. 6–14), plus BSP and
+//!   LogP/LogGP baselines, calibration, and scalability-boundary analysis;
+//! * [`problems`] — the paper's applications: BSF-Jacobi, BSF-Gravity,
+//!   BSF-Cimmino (linear inequalities, ref [31]) and a Map-only Monte-Carlo
+//!   estimator (§7 Q2, ref [33]);
+//! * [`runtime`] — the PJRT runtime that loads AOT-compiled HLO artifacts
+//!   (JAX + Pallas, built once by `make artifacts`) and executes them on the
+//!   worker hot path;
+//! * [`experiments`] — harnesses regenerating every table and figure of the
+//!   paper's evaluation (Fig. 6, Fig. 7, Tables 2–4) plus ablations.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for measured
+//! results.
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod linalg;
+pub mod lists;
+pub mod model;
+pub mod net;
+pub mod problems;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

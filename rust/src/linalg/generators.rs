@@ -1,0 +1,251 @@
+//! Workload generators for the evaluation harness.
+//!
+//! * [`paper_system`] — the paper's §6 scalable linear system (solution
+//!   `x* = (1,…,1)`), used to regenerate Fig. 6 / Tables 2–3 workloads.
+//! * [`dominant_system`] — a strongly diagonally dominant system on which the
+//!   Jacobi iteration provably converges (used for correctness tests; the
+//!   paper's matrix is only weakly dominant and Jacobi need not converge on
+//!   it — the paper measures *timing*, not convergence).
+//! * [`random_bodies`] — body distributions for BSF-Gravity (Fig. 7 / Table 4).
+//! * [`feasible_inequalities`] — random feasible `A x ≤ b` systems for
+//!   BSF-Cimmino with a known interior point.
+
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+/// A linear system `A x = b` together with its Jacobi iteration data
+/// `C, d` (paper §5: `c_ij = -a_ij/a_ii` off-diagonal, `d_i = b_i/a_ii`).
+#[derive(Debug, Clone)]
+pub struct LinearSystem {
+    /// Coefficient matrix `A`.
+    pub a: Matrix,
+    /// Right-hand side `b`.
+    pub b: Vec<f64>,
+    /// Jacobi iteration matrix `C`.
+    pub c: Matrix,
+    /// Jacobi offset `d`.
+    pub d: Vec<f64>,
+}
+
+impl LinearSystem {
+    /// Derive the Jacobi `C, d` from `A, b`; panics on a zero diagonal.
+    pub fn from_ab(a: Matrix, b: Vec<f64>) -> LinearSystem {
+        let n = a.rows();
+        assert_eq!(a.cols(), n, "Jacobi needs a square system");
+        assert_eq!(b.len(), n);
+        let mut c = Matrix::zeros(n, n);
+        let mut d = vec![0.0; n];
+        for i in 0..n {
+            let aii = a.get(i, i);
+            assert!(aii != 0.0, "zero diagonal at {i}");
+            for j in 0..n {
+                if j != i {
+                    c.set(i, j, -a.get(i, j) / aii);
+                }
+            }
+            d[i] = b[i] / aii;
+        }
+        LinearSystem { a, b, c, d }
+    }
+
+    /// Dimension `n`.
+    pub fn n(&self) -> usize {
+        self.d.len()
+    }
+
+    /// Residual `‖A x − b‖` (solution-quality check).
+    pub fn residual(&self, x: &[f64]) -> f64 {
+        let ax = self.a.matvec(x);
+        crate::linalg::norm2(&crate::linalg::sub(&ax, &self.b))
+    }
+}
+
+/// The paper's scalable test system (§6):
+///
+/// ```text
+/// A = [[1, 1, …, 1],          b = [n, n+1, …, 2n-1]
+///      [1, 2, 1, …],
+///      [1, …, 1, n]]           (a_ii = i, off-diag = 1)
+/// ```
+///
+/// Unique solution `x* = (1, …, 1)` since row i sums to `(n-1) + i = b_i`.
+pub fn paper_system(n: usize) -> LinearSystem {
+    assert!(n >= 2, "paper system needs n >= 2");
+    let a = Matrix::from_fn(n, n, |i, j| if i == j { (i + 1) as f64 } else { 1.0 });
+    let b: Vec<f64> = (0..n).map(|i| (n + i) as f64).collect();
+    LinearSystem::from_ab(a, b)
+}
+
+/// Strongly diagonally dominant system with solution `x* = (1, …, 1)`:
+/// `a_ij = 1` off-diagonal, `a_ii = n + i + 1` (dominance margin > n).
+/// Jacobi's iteration matrix has `‖C‖_∞ ≤ (n-1)/(n+1) < 1`, so the method
+/// converges geometrically — suitable for convergence tests.
+pub fn dominant_system(n: usize) -> LinearSystem {
+    assert!(n >= 2);
+    let a = Matrix::from_fn(n, n, |i, j| if i == j { (n + i + 1) as f64 } else { 1.0 });
+    let ones = vec![1.0; n];
+    let b = a.matvec(&ones);
+    LinearSystem::from_ab(a, b)
+}
+
+/// A random n-body workload for BSF-Gravity: `n` bodies uniform in a cube of
+/// half-side `extent` centred at the origin, masses uniform in
+/// `[0.5, 1.5)`, and a probe at `(extent*2, 0, 0)` with unit initial speed
+/// toward the cloud — matching the paper's simplified problem setup.
+#[derive(Debug, Clone)]
+pub struct BodyWorkload {
+    /// Positions, length `n`, each `[x, y, z]`.
+    pub bodies: Vec<[f64; 3]>,
+    /// Masses, length `n`.
+    pub masses: Vec<f64>,
+    /// Probe initial position.
+    pub x0: [f64; 3],
+    /// Probe initial velocity.
+    pub v0: [f64; 3],
+}
+
+/// Generate a [`BodyWorkload`] deterministically from `seed`.
+pub fn random_bodies(n: usize, extent: f64, seed: u64) -> BodyWorkload {
+    let mut rng = Rng::new(seed);
+    let bodies: Vec<[f64; 3]> = (0..n)
+        .map(|_| {
+            [
+                rng.range(-extent, extent),
+                rng.range(-extent, extent),
+                rng.range(-extent, extent),
+            ]
+        })
+        .collect();
+    let masses: Vec<f64> = (0..n).map(|_| rng.range(0.5, 1.5)).collect();
+    BodyWorkload {
+        bodies,
+        masses,
+        x0: [2.0 * extent, 0.0, 0.0],
+        v0: [-1.0, 0.0, 0.0],
+    }
+}
+
+/// A feasible inequality system `A x ≤ b` (m rows, n cols) with a known
+/// interior point `x_int` (margin ≥ `slack` on every row), plus a starting
+/// point well outside the feasible region.
+#[derive(Debug, Clone)]
+pub struct InequalitySystem {
+    /// Constraint rows.
+    pub a: Matrix,
+    /// Right-hand sides.
+    pub b: Vec<f64>,
+    /// A point satisfying every row with margin ≥ `slack`.
+    pub interior: Vec<f64>,
+    /// Infeasible starting point for the iteration.
+    pub x0: Vec<f64>,
+}
+
+/// Generate a random feasible system: rows are unit-normal directions, and
+/// `b_i = a_i · x_int + slack` so `x_int` is `slack`-deep inside.
+pub fn feasible_inequalities(m: usize, n: usize, slack: f64, seed: u64) -> InequalitySystem {
+    let mut rng = Rng::new(seed);
+    let interior: Vec<f64> = (0..n).map(|_| rng.range(-1.0, 1.0)).collect();
+    let mut a = Matrix::zeros(m, n);
+    let mut b = vec![0.0; m];
+    for i in 0..m {
+        let mut row: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let nrm = crate::linalg::norm2(&row).max(1e-12);
+        for v in row.iter_mut() {
+            *v /= nrm;
+        }
+        for (j, v) in row.iter().enumerate() {
+            a.set(i, j, *v);
+        }
+        b[i] = crate::linalg::dot(&row, &interior) + slack;
+    }
+    // Start far along a random direction so a good fraction of rows are violated.
+    let mut x0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let nrm = crate::linalg::norm2(&x0).max(1e-12);
+    for v in x0.iter_mut() {
+        *v = *v / nrm * 10.0 * (slack + 1.0);
+    }
+    InequalitySystem { a, b, interior, x0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+
+    #[test]
+    fn paper_system_solution_is_ones() {
+        for n in [2usize, 5, 64] {
+            let sys = paper_system(n);
+            let ones = vec![1.0; n];
+            assert!(sys.residual(&ones) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn paper_system_matches_paper_matrix() {
+        let sys = paper_system(4);
+        // A diag = 1,2,3,4; off-diag 1; b = [4,5,6,7]
+        assert_eq!(sys.a.get(0, 0), 1.0);
+        assert_eq!(sys.a.get(3, 3), 4.0);
+        assert_eq!(sys.a.get(2, 0), 1.0);
+        assert_eq!(sys.b, vec![4.0, 5.0, 6.0, 7.0]);
+        // C: c_ij = -1/a_ii off-diag, 0 diag
+        assert_eq!(sys.c.get(1, 0), -0.5);
+        assert_eq!(sys.c.get(1, 1), 0.0);
+        // d_i = b_i / a_ii
+        assert_eq!(sys.d[1], 2.5);
+    }
+
+    #[test]
+    fn dominant_system_converges_by_jacobi() {
+        let n = 32;
+        let sys = dominant_system(n);
+        let mut x = sys.d.clone();
+        for _ in 0..200 {
+            let mut next = sys.c.matvec(&x);
+            for (v, di) in next.iter_mut().zip(&sys.d) {
+                *v += di;
+            }
+            x = next;
+        }
+        let err: f64 = x.iter().map(|v| (v - 1.0).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-10, "max err {err}");
+    }
+
+    #[test]
+    fn random_bodies_deterministic_and_bounded() {
+        let w1 = random_bodies(100, 5.0, 42);
+        let w2 = random_bodies(100, 5.0, 42);
+        assert_eq!(w1.bodies, w2.bodies);
+        assert_eq!(w1.masses, w2.masses);
+        assert!(w1.bodies.iter().flatten().all(|&c| c.abs() <= 5.0));
+        assert!(w1.masses.iter().all(|&m| (0.5..1.5).contains(&m)));
+        let w3 = random_bodies(100, 5.0, 43);
+        assert_ne!(w1.bodies, w3.bodies);
+    }
+
+    #[test]
+    fn feasible_inequalities_interior_is_feasible() {
+        let sys = feasible_inequalities(50, 8, 0.1, 7);
+        for i in 0..50 {
+            let lhs = dot(sys.a.row(i), &sys.interior);
+            assert!(lhs <= sys.b[i] - 0.099, "row {i}");
+        }
+    }
+
+    #[test]
+    fn feasible_inequalities_x0_violates_something() {
+        let sys = feasible_inequalities(50, 8, 0.1, 7);
+        let violated = (0..50)
+            .filter(|&i| dot(sys.a.row(i), &sys.x0) > sys.b[i])
+            .count();
+        assert!(violated > 0, "starting point should be infeasible");
+    }
+
+    #[test]
+    #[should_panic(expected = "zero diagonal")]
+    fn zero_diagonal_rejected() {
+        let a = Matrix::from_vec(2, 2, vec![0.0, 1.0, 1.0, 1.0]);
+        LinearSystem::from_ab(a, vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,189 @@
+//! Dense row-major matrix with the access patterns the BSF problems need:
+//! row slices (Cimmino's constraint rows), column gathers (Jacobi's
+//! `F_x(j) = x_j c_j`), matvec, and a column-block extractor matching the
+//! AOT kernel layout `(n, B)`.
+
+use crate::linalg::vector::dot;
+
+/// Dense row-major `rows × cols` matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a closure `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer (must have `rows*cols` elements).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    /// Mutable element accessor.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Row `i` as a slice (zero-copy).
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Column `j` gathered into a new vector.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Raw row-major buffer.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Matrix–vector product `A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dimension mismatch");
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// `y += A[:, j0..j1] @ x_blk` — the column-block partial matvec that is
+    /// BSF-Jacobi's worker folding (the rust-native twin of the Pallas
+    /// kernel; used as fallback for sizes with no AOT artifact).
+    pub fn col_block_matvec_acc(&self, j0: usize, j1: usize, x_blk: &[f64], y: &mut [f64]) {
+        assert!(j1 <= self.cols && j0 <= j1, "column range out of bounds");
+        assert_eq!(x_blk.len(), j1 - j0, "x block length mismatch");
+        assert_eq!(y.len(), self.rows, "output length mismatch");
+        for i in 0..self.rows {
+            let row = &self.data[i * self.cols + j0..i * self.cols + j1];
+            y[i] += dot(row, x_blk);
+        }
+    }
+
+    /// Copy the column block `A[:, j0..j1]` into a row-major `(rows, j1-j0)`
+    /// buffer — the exact input layout of the `jacobi_map` AOT artifact,
+    /// zero-padded to `width` columns.
+    pub fn col_block_padded(&self, j0: usize, j1: usize, width: usize) -> Vec<f64> {
+        assert!(j1 <= self.cols && j0 <= j1 && j1 - j0 <= width);
+        let mut out = vec![0.0; self.rows * width];
+        for i in 0..self.rows {
+            let src = &self.data[i * self.cols + j0..i * self.cols + j1];
+            out[i * width..i * width + (j1 - j0)].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Transpose (used by tests and generators).
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Matrix {
+        // [[1,2,3],[4,5,6]]
+        Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn accessors() {
+        let m = sample();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.get(1, 2), 6.0);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.col(1), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn set_and_from_fn() {
+        let mut m = Matrix::zeros(2, 2);
+        m.set(0, 1, 9.0);
+        assert_eq!(m.get(0, 1), 9.0);
+        let f = Matrix::from_fn(3, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(f.get(2, 1), 21.0);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = sample();
+        assert_eq!(m.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn matvec_checks_dims() {
+        sample().matvec(&[1.0]);
+    }
+
+    #[test]
+    fn col_block_matvec_acc_equals_full() {
+        let m = Matrix::from_fn(5, 7, |i, j| ((i + 1) * (j + 2)) as f64);
+        let x: Vec<f64> = (0..7).map(|j| (j as f64) - 3.0).collect();
+        let full = m.matvec(&x);
+        let mut acc = vec![0.0; 5];
+        m.col_block_matvec_acc(0, 3, &x[0..3], &mut acc);
+        m.col_block_matvec_acc(3, 7, &x[3..7], &mut acc);
+        for (a, b) in acc.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn col_block_padded_layout() {
+        let m = sample();
+        let blk = m.col_block_padded(1, 3, 4);
+        // rows of [[2,3,0,0],[5,6,0,0]]
+        assert_eq!(blk, vec![2.0, 3.0, 0.0, 0.0, 5.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(2, 1), 6.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer size mismatch")]
+    fn from_vec_checks_size() {
+        Matrix::from_vec(2, 2, vec![1.0]);
+    }
+}

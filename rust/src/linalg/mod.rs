@@ -1,0 +1,15 @@
+//! Dense linear-algebra substrate.
+//!
+//! The BSF applications operate on dense vectors and matrices; this module
+//! supplies exactly the operations the paper's algorithms need (§5, §6,
+//! ref [31]) plus the workload generators used by the evaluation — notably
+//! the paper's scalable test system (§6) whose unique solution is
+//! `x* = (1, …, 1)`.
+
+mod matrix;
+mod vector;
+
+pub mod generators;
+
+pub use matrix::Matrix;
+pub use vector::{axpy, dot, norm2, scale, sq_norm2, sub};

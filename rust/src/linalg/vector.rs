@@ -1,0 +1,74 @@
+//! Dense vector operations over `&[f64]` / `Vec<f64>`.
+//!
+//! Free functions (not a newtype) so the coordinator, problems and runtime
+//! can pass slices around without conversions; the hot paths (`dot`,
+//! `axpy`) are written to autovectorize.
+
+/// Dot product `x · y`.
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// Squared Euclidean norm `‖x‖²` (the paper's termination quantity).
+pub fn sq_norm2(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm `‖x‖`.
+pub fn norm2(x: &[f64]) -> f64 {
+    sq_norm2(x).sqrt()
+}
+
+/// `y += a * x` in place.
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Elementwise difference `x - y` as a new vector.
+pub fn sub(x: &[f64], y: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a - b).collect()
+}
+
+/// Scale in place: `x *= a`.
+pub fn scale(a: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(sq_norm2(&[3.0, 4.0]), 25.0);
+        assert_eq!(norm2(&[3.0, 4.0]), 5.0);
+    }
+
+    #[test]
+    fn axpy_updates_in_place() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[10.0, 20.0], &mut y);
+        assert_eq!(y, vec![21.0, 41.0]);
+    }
+
+    #[test]
+    fn sub_and_scale() {
+        assert_eq!(sub(&[5.0, 7.0], &[1.0, 2.0]), vec![4.0, 5.0]);
+        let mut x = vec![2.0, -3.0];
+        scale(-1.5, &mut x);
+        assert_eq!(x, vec![-3.0, 4.5]);
+    }
+}

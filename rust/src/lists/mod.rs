@@ -1,0 +1,134 @@
+//! Bird–Meertens list algebra — the specification language of BSF algorithms.
+//!
+//! The BSF model (paper §3) requires an algorithm to be expressed as
+//! operations over *lists* through the higher-order functions `Map` (eq. 2)
+//! and `Reduce` (eq. 3) with an associative fold operation `⊕`. The entire
+//! parallelization rests on the **promotion theorem** (eq. 5):
+//!
+//! ```text
+//! Reduce(⊕, Map(F, A₁ ++ … ++ A_K))
+//!     = Reduce(⊕, Map(F, A₁)) ⊕ … ⊕ Reduce(⊕, Map(F, A_K))
+//! ```
+//!
+//! which lets K workers fold disjoint sublists independently and the master
+//! fold the K partials. This module provides the sequential semantics
+//! (ground truth for every parallel runner) and the sublist partitioning of
+//! eq. (4).
+
+mod partition;
+
+pub use partition::{partition_even, Partition};
+
+/// An associative binary operation with identity, i.e. a monoid over `B`.
+///
+/// Associativity is a *requirement* of the BSF model (paper §3); it is what
+/// makes the promotion theorem — and thus the whole parallelization — valid.
+/// Property tests verify associativity for every monoid shipped in
+/// [`crate::problems`].
+pub trait Monoid<B> {
+    /// The identity element of `⊕` (`combine(identity(), b) == b`).
+    fn identity(&self) -> B;
+    /// The associative operation `⊕`.
+    fn combine(&self, a: B, b: B) -> B;
+}
+
+/// Vector addition in `R^n` — the fold of BSF-Jacobi and BSF-Cimmino.
+#[derive(Debug, Clone, Copy)]
+pub struct VecAdd {
+    /// Dimension `n` (the identity is the zero vector of this length).
+    pub n: usize,
+}
+
+impl Monoid<Vec<f64>> for VecAdd {
+    fn identity(&self) -> Vec<f64> {
+        vec![0.0; self.n]
+    }
+    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
+        debug_assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter_mut().zip(&b) {
+            *x += y;
+        }
+        a
+    }
+}
+
+/// Scalar addition — the fold of Map-only/Monte-Carlo style algorithms.
+#[derive(Debug, Clone, Copy)]
+pub struct Add;
+
+impl Monoid<f64> for Add {
+    fn identity(&self) -> f64 {
+        0.0
+    }
+    fn combine(&self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+}
+
+/// The higher-order function `Map` (paper eq. 2): applies `f` to each element
+/// of the list, preserving order.
+pub fn map<A, B>(f: impl Fn(&A) -> B, list: &[A]) -> Vec<B> {
+    list.iter().map(f).collect()
+}
+
+/// The higher-order function `Reduce` (paper eq. 3): folds the list with the
+/// monoid's `⊕`, returning the identity for an empty list.
+pub fn reduce<B>(m: &impl Monoid<B>, list: Vec<B>) -> B {
+    list.into_iter().fold(m.identity(), |a, b| m.combine(a, b))
+}
+
+/// `Reduce(⊕, Map(F, A))` — the fused worker-side step of Algorithm 2
+/// (steps 3–4), without materialising the intermediate list `B`.
+pub fn map_reduce<A, B>(f: impl Fn(&A) -> B, m: &impl Monoid<B>, list: &[A]) -> B {
+    list.iter().fold(m.identity(), |acc, a| m.combine(acc, f(a)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let xs = [1, 2, 3];
+        assert_eq!(map(|x| x * 10, &xs), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn reduce_empty_is_identity() {
+        assert_eq!(reduce(&Add, vec![]), 0.0);
+        let v = VecAdd { n: 3 };
+        assert_eq!(reduce(&v, vec![]), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn map_reduce_equals_composition() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let f = |x: &f64| x * 2.0;
+        let fused = map_reduce(f, &Add, &xs);
+        let composed = reduce(&Add, map(f, &xs));
+        assert_eq!(fused, composed);
+    }
+
+    #[test]
+    fn vec_add_is_elementwise() {
+        let m = VecAdd { n: 2 };
+        assert_eq!(m.combine(vec![1.0, 2.0], vec![10.0, 20.0]), vec![11.0, 22.0]);
+    }
+
+    /// The promotion theorem (paper eq. 5) on a concrete instance.
+    #[test]
+    fn promotion_theorem_concrete() {
+        let xs: Vec<f64> = (0..97).map(|i| (i as f64).sin()).collect();
+        let f = |x: &f64| x * x;
+        let full = map_reduce(f, &Add, &xs);
+        for k in [1, 2, 3, 7, 97] {
+            let parts = partition_even(xs.len(), k);
+            let partials: Vec<f64> = parts
+                .ranges()
+                .map(|r| map_reduce(f, &Add, &xs[r]))
+                .collect();
+            let folded = reduce(&Add, partials);
+            assert!((full - folded).abs() < 1e-12, "k={k}");
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Sublist partitioning — eq. (4): `A = A₁ ++ … ++ A_K`.
+//!
+//! The paper assumes for simplicity that `l` is a multiple of `K`; real
+//! workloads are not, so [`partition_even`] distributes the remainder one
+//! element at a time to the first `l mod K` sublists (the standard MPI block
+//! distribution). Invariants — coverage, disjointness, balance within 1 —
+//! are enforced by property tests in `rust/tests/`.
+
+use std::ops::Range;
+
+/// A partition of `0..len` into `k` contiguous ranges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    /// Start offsets, length `k+1`; sublist `j` is `offsets[j]..offsets[j+1]`.
+    offsets: Vec<usize>,
+}
+
+impl Partition {
+    /// Number of sublists.
+    pub fn k(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total length covered.
+    pub fn len(&self) -> usize {
+        *self.offsets.last().expect("non-empty offsets")
+    }
+
+    /// True when the covered list is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `j`-th sublist's index range.
+    pub fn range(&self, j: usize) -> Range<usize> {
+        self.offsets[j]..self.offsets[j + 1]
+    }
+
+    /// Length of the `j`-th sublist.
+    pub fn size(&self, j: usize) -> usize {
+        self.offsets[j + 1] - self.offsets[j]
+    }
+
+    /// Iterator over all sublist ranges.
+    pub fn ranges(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.k()).map(|j| self.range(j))
+    }
+
+    /// The largest sublist length — the straggler bound that determines the
+    /// parallel Map time in eq. (8)'s `(t_Map + (l-K) t_a)/K` term.
+    pub fn max_size(&self) -> usize {
+        (0..self.k()).map(|j| self.size(j)).max().unwrap_or(0)
+    }
+}
+
+/// Partition `len` items into `k` contiguous near-even sublists.
+///
+/// Panics if `k == 0`. Sublists may be empty when `len < k` (the model
+/// requires `l ≥ K` for meaningful speedup, but the skeleton must not fall
+/// over outside that regime).
+pub fn partition_even(len: usize, k: usize) -> Partition {
+    assert!(k > 0, "partition_even: k must be positive");
+    let base = len / k;
+    let extra = len % k;
+    let mut offsets = Vec::with_capacity(k + 1);
+    let mut at = 0usize;
+    offsets.push(0);
+    for j in 0..k {
+        at += base + usize::from(j < extra);
+        offsets.push(at);
+    }
+    Partition { offsets }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_multiple() {
+        let p = partition_even(12, 4);
+        assert_eq!(p.k(), 4);
+        assert!((0..4).all(|j| p.size(j) == 3));
+        assert_eq!(p.len(), 12);
+    }
+
+    #[test]
+    fn remainder_spread_to_front() {
+        let p = partition_even(10, 4);
+        let sizes: Vec<usize> = (0..4).map(|j| p.size(j)).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn covers_all_contiguously() {
+        let p = partition_even(17, 5);
+        let mut expect = 0;
+        for r in p.ranges() {
+            assert_eq!(r.start, expect);
+            expect = r.end;
+        }
+        assert_eq!(expect, 17);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let p = partition_even(3, 7);
+        assert_eq!(p.len(), 3);
+        let nonempty = p.ranges().filter(|r| !r.is_empty()).count();
+        assert_eq!(nonempty, 3);
+        assert_eq!(p.max_size(), 1);
+    }
+
+    #[test]
+    fn single_worker_takes_all() {
+        let p = partition_even(100, 1);
+        assert_eq!(p.range(0), 0..100);
+        assert_eq!(p.max_size(), 100);
+    }
+
+    #[test]
+    fn empty_list() {
+        let p = partition_even(0, 3);
+        assert!(p.is_empty());
+        assert!(p.ranges().all(|r| r.is_empty()));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_k_panics() {
+        partition_even(5, 0);
+    }
+
+    #[test]
+    fn balance_within_one() {
+        for len in [0usize, 1, 13, 100, 1023] {
+            for k in [1usize, 2, 3, 10, 64] {
+                let p = partition_even(len, k);
+                let max = p.max_size();
+                let min = (0..k).map(|j| p.size(j)).min().unwrap();
+                assert!(max - min <= 1, "len={len} k={k}");
+            }
+        }
+    }
+}

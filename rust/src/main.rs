@@ -1,0 +1,342 @@
+//! `bsf` — the BSF command-line interface.
+//!
+//! ```text
+//! bsf experiment <name> [--measured=1] [--quick=1] [--out=results] [--config=FILE] [--cluster.*=...]
+//!     names: fig6 | fig7 | table2 | table3 | table4 | sqrt-law |
+//!            ablation-collectives | ablation-masters | baselines | all
+//! bsf run       --problem=jacobi|gravity|cimmino --n=512 --k=4 [--iters=N] [--no-artifacts=1]
+//! bsf calibrate --problem=jacobi --n=1024
+//! bsf predict   --problem=jacobi --n=10000 [--tau-op=9.3e-10]
+//! bsf sweep     --problem=jacobi --n=1024 [--kmax=K]
+//! ```
+//!
+//! Any `--key=value` flag overrides the config file (see
+//! `bsf::config::Settings`); `[cluster]` keys describe the modelled
+//! interconnect.
+
+
+use anyhow::{anyhow, bail, Result};
+
+use bsf::config::{ClusterConfig, Settings};
+use bsf::coordinator::{calibrate_problem, LiveRunner};
+use bsf::experiments::{
+    ablation_collectives, ablation_masters, baselines, fig6, fig7, paper_jacobi_params, sqrt_law,
+    table2, table3, table4, ExperimentCtx, ProblemKind,
+};
+use bsf::model::BsfModel;
+use bsf::util::{table::sci, Rng, Table};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "usage: bsf <experiment|run|calibrate|predict|sweep|trace> [--key=value ...]\n\
+     experiments: fig6 fig7 table2 table3 table4 sqrt-law \
+     ablation-collectives ablation-masters baselines explorer all"
+        .to_string()
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut settings = Settings::new();
+    if let Some(path) = args.iter().find_map(|a| a.strip_prefix("--config=")) {
+        settings = Settings::load(path)?;
+    }
+    let rest = settings.merge_cli(args.iter().map(String::as_str));
+    let rest: Vec<&str> = rest.iter().map(String::as_str).collect();
+
+    let ctx = make_ctx(&settings)?;
+    match rest.first().copied() {
+        Some("experiment") => {
+            let name = rest.get(1).copied().ok_or_else(|| anyhow!(usage()))?;
+            run_experiment(&ctx, &settings, name)
+        }
+        Some("run") => cmd_run(&ctx, &settings),
+        Some("calibrate") => cmd_calibrate(&ctx, &settings),
+        Some("predict") => cmd_predict(&ctx, &settings),
+        Some("sweep") => cmd_sweep(&ctx, &settings),
+        Some("trace") => cmd_trace(&ctx, &settings),
+        _ => bail!(usage()),
+    }
+}
+
+fn make_ctx(settings: &Settings) -> Result<ExperimentCtx> {
+    let mut ctx = ExperimentCtx {
+        cluster: ClusterConfig::from_settings(settings)?,
+        ..Default::default()
+    };
+    if let Some(out) = settings.get("out") {
+        ctx.out_dir = out.into();
+    }
+    ctx.quick = settings.bool_or("quick", false)?;
+    ctx.seed = settings.usize_or("seed", 0xB5F)? as u64;
+    if settings.bool_or("no-artifacts", false)? {
+        ctx.artifact_dir = None;
+    }
+    Ok(ctx)
+}
+
+fn print_tables(tables: &[Table]) {
+    for t in tables {
+        println!("{}", t.render());
+    }
+}
+
+fn run_experiment(ctx: &ExperimentCtx, settings: &Settings, name: &str) -> Result<()> {
+    let measured = settings.bool_or("measured", false)?;
+    let tables = match name {
+        "fig6" => fig6(ctx, measured)?,
+        "fig7" => fig7(ctx, measured)?,
+        "table2" => table2(ctx, measured)?,
+        "table3" => table3(ctx, measured)?,
+        "table4" => table4(ctx, measured)?,
+        "sqrt-law" => sqrt_law(ctx)?,
+        "ablation-collectives" => ablation_collectives(ctx)?,
+        "ablation-masters" => ablation_masters(ctx)?,
+        "baselines" => baselines(ctx)?,
+        "explorer" => {
+            let kind = settings
+                .get("problem")
+                .and_then(ProblemKind::parse)
+                .unwrap_or(ProblemKind::Jacobi);
+            let tau_op = settings.f64_or("tau-op", 9.3e-10)?;
+            bsf::experiments::explorer(ctx, kind, tau_op)?
+        }
+        "all" => {
+            let mut all = Vec::new();
+            for (label, f) in [
+                ("fig6", fig6 as fn(&ExperimentCtx, bool) -> Result<Vec<Table>>),
+                ("fig7", fig7),
+                ("table2", table2),
+                ("table3", table3),
+                ("table4", table4),
+            ] {
+                eprintln!("== running {label} (paper params) ==");
+                all.extend(f(ctx, false)?);
+                if measured {
+                    eprintln!("== running {label} (measured) ==");
+                    all.extend(f(ctx, true)?);
+                }
+            }
+            eprintln!("== running sqrt-law ==");
+            all.extend(sqrt_law(ctx)?);
+            eprintln!("== running ablations + baselines ==");
+            all.extend(ablation_collectives(ctx)?);
+            all.extend(ablation_masters(ctx)?);
+            all.extend(baselines(ctx)?);
+            all
+        }
+        other => bail!("unknown experiment '{other}'\n{}", usage()),
+    };
+    print_tables(&tables);
+    println!("(CSV copies saved under {:?})", ctx.out_dir);
+    Ok(())
+}
+
+fn problem_from(settings: &Settings) -> Result<(ProblemKind, usize)> {
+    let kind = settings
+        .get("problem")
+        .and_then(ProblemKind::parse)
+        .ok_or_else(|| anyhow!("--problem=jacobi|gravity|cimmino required"))?;
+    let n = settings.usize_or("n", 1024)?;
+    Ok((kind, n))
+}
+
+fn cmd_run(ctx: &ExperimentCtx, settings: &Settings) -> Result<()> {
+    let (kind, n) = problem_from(settings)?;
+    let k = settings.usize_or("k", 4)?;
+    let iters = settings.usize_or("iters", 1000)?;
+    let problem = kind.build(n);
+    let name = problem.name().to_string();
+    let mut runner = LiveRunner::new(k, iters);
+    runner.artifact_dir = ctx.artifact_dir.clone();
+    println!("running {name} (n={n}) live with K={k} workers...");
+    let report = runner.run(problem)?;
+    let mut t = Table::new(
+        format!("{name}: live run, K={k}, n={n}"),
+        &["iterations", "converged", "wall (s)", "mean iter (s)", "mean map (s)", "mean post (s)"],
+    );
+    let m = report.metrics.without_warmup(1.min(report.metrics.len().saturating_sub(1)));
+    t.row(&[
+        report.iterations.to_string(),
+        report.converged.to_string(),
+        format!("{:.3}", report.wall),
+        sci(m.total_summary().mean),
+        sci(m.map_summary().mean),
+        sci(m.post_summary().mean),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_calibrate(ctx: &ExperimentCtx, settings: &Settings) -> Result<()> {
+    let (kind, n) = problem_from(settings)?;
+    let problem = kind.build(n);
+    let spec = problem.cost_spec();
+    let cal = calibrate_problem(problem, ctx.artifact_dir.clone(), 3, 12, 64)?;
+    let params = cal.params_with_net(&ctx.cluster.net, spec.words_down, spec.words_up);
+    let model = BsfModel::new(params);
+    let mut t = Table::new(
+        format!("calibration: {kind:?} n={n} (network: modelled cluster)"),
+        &["t_c", "t_p", "t_a", "t_Map", "comp/comm", "K_BSF (eq.14)"],
+    );
+    t.row(&[
+        sci(params.t_c),
+        sci(params.t_p),
+        sci(params.t_a),
+        sci(params.t_map),
+        format!("{:.0}", params.comp_comm_ratio()),
+        format!("{:.1}", model.k_bsf()),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_predict(ctx: &ExperimentCtx, settings: &Settings) -> Result<()> {
+    let (kind, n) = problem_from(settings)?;
+    let tau_op = settings.f64_or("tau-op", 9.3e-10)?;
+    // Analytic-only path (paper §5: before any implementation): cost spec
+    // from the problem's op counts, machine speeds from flags.
+    let params = if let (ProblemKind::Jacobi, Some(p)) = (kind, paper_jacobi_params(n)) {
+        println!("(using the paper's published Table 2 parameters for n={n})");
+        p
+    } else {
+        let problem = kind.build(n.min(4096)); // spec only; rescaled below
+        let mut spec = problem.cost_spec();
+        rescale_spec(&mut spec, kind, n);
+        spec.cost_params(tau_op, &ctx.cluster.net)
+    };
+    let model = BsfModel::new(params);
+    let mut t = Table::new(
+        format!("prediction: {kind:?} n={n}"),
+        &["T_1 (eq.7)", "K_BSF (eq.14)", "a(K_BSF)", "a(2·K_BSF)"],
+    );
+    let k_bsf = model.k_bsf();
+    t.row(&[
+        sci(model.t1()),
+        format!("{k_bsf:.1}"),
+        format!("{:.1}", model.speedup((k_bsf.round() as usize).max(1))),
+        format!("{:.1}", model.speedup(((2.0 * k_bsf).round() as usize).max(1))),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Rescale a cost spec captured at a small instance to dimension `n`
+/// (op counts are analytic in n for all shipped problems).
+fn rescale_spec(spec: &mut bsf::coordinator::CostSpec, kind: ProblemKind, n: usize) {
+    match kind {
+        ProblemKind::Jacobi => {
+            spec.l = n;
+            spec.words_down = n;
+            spec.words_up = n;
+            spec.ops_map_per_elem = n as f64;
+            spec.ops_combine = n as f64;
+            spec.ops_post = 4.0 * n as f64 + 1.0;
+        }
+        ProblemKind::Gravity => {
+            spec.l = n;
+        }
+        ProblemKind::Cimmino => {
+            let cols = (n / 4).max(8);
+            spec.l = n;
+            spec.words_down = cols;
+            spec.words_up = cols;
+            spec.ops_map_per_elem = 6.0 * cols as f64 + 2.0;
+            spec.ops_combine = cols as f64;
+            spec.ops_post = 5.0 * cols as f64 + 2.0;
+        }
+    }
+}
+
+fn cmd_sweep(ctx: &ExperimentCtx, settings: &Settings) -> Result<()> {
+    let (kind, n) = problem_from(settings)?;
+    let problem = kind.build(n);
+    let spec = problem.cost_spec();
+    println!("calibrating {kind:?} n={n} live (1 master + 1 worker)...");
+    let cal = calibrate_problem(problem, ctx.artifact_dir.clone(), 2, 8, 32)?;
+    let params = cal.params_with_net(&ctx.cluster.net, spec.words_down, spec.words_up);
+    let model = BsfModel::new(params);
+    let k_bsf = model.k_bsf();
+    let kmax = settings.usize_or("kmax", (k_bsf * 2.4) as usize)?;
+    let ks = bsf::experiments::k_sweep(kmax as f64 / 2.4, ctx.quick);
+    let mut prov = bsf::simulator::SampledCost {
+        per_elem: cal.map_samples.iter().map(|s| s / cal.l as f64).collect(),
+        t_a: params.t_a,
+        t_p: params.t_p,
+        rng: Rng::new(ctx.seed),
+    };
+    let sim = ctx.sim_params(spec.words_down, spec.words_up);
+    let mut rng = Rng::new(ctx.seed ^ 0x5);
+    let curve = bsf::experiments::simulated_curve(ctx, &sim, params.l, &mut prov, &ks, 5, &mut rng);
+    let mut t = Table::new(
+        format!("sweep: {kind:?} n={n}, K_BSF={k_bsf:.1}"),
+        &["K", "T_K sim", "a_sim", "a_BSF (eq.9)"],
+    );
+    for p in &curve {
+        t.row(&[
+            p.k.to_string(),
+            sci(p.t_k),
+            format!("{:.2}", p.speedup),
+            format!("{:.2}", model.speedup(p.k)),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// `bsf trace --problem=jacobi --n=5000 --k=16 [--out=results]` — simulate
+/// one Algorithm-2 iteration and export its per-node timeline as Chrome
+/// trace-event JSON (open in chrome://tracing or ui.perfetto.dev).
+fn cmd_trace(ctx: &ExperimentCtx, settings: &Settings) -> Result<()> {
+    let (kind, n) = problem_from(settings)?;
+    let k = settings.usize_or("k", 16)?;
+    // Paper parameters when available, else analytic from the cost spec.
+    let params = match kind {
+        ProblemKind::Jacobi => paper_jacobi_params(n),
+        ProblemKind::Gravity => bsf::experiments::paper_gravity_params(n),
+        ProblemKind::Cimmino => None,
+    }
+    .unwrap_or_else(|| {
+        let problem = kind.build(n.min(4096));
+        let mut spec = problem.cost_spec();
+        rescale_spec(&mut spec, kind, n);
+        spec.cost_params(settings.f64_or("tau-op", 9.3e-10).unwrap_or(9.3e-10), &ctx.cluster.net)
+    });
+    let spec_words = match kind {
+        ProblemKind::Gravity => (7usize, 3usize),
+        _ => (n, n),
+    };
+    let mut sim = ctx.sim_params(spec_words.0, spec_words.1);
+    sim.net = bsf::experiments::effective_net_with_latency(
+        params.t_c,
+        spec_words.0,
+        spec_words.1,
+        ctx.cluster.net.latency,
+    );
+    let mut prov = bsf::experiments::analytic_provider(&params);
+    let mut rng = Rng::new(ctx.seed);
+    let (timing, trace) =
+        bsf::simulator::trace_iteration(k, params.l, &sim, &mut prov, &mut rng);
+    let path = ctx.out_dir.join(format!("trace_{kind:?}_n{n}_k{k}.json").to_lowercase());
+    trace.save(&path)?;
+    println!(
+        "one iteration at K={k}: total {:.3e}s (bcast {:.1e}, map {:.1e}, reduce {:.1e}); \
+         master utilization {:.0}%, slowest worker {:.0}%",
+        timing.total,
+        timing.broadcast_done,
+        timing.map_done - timing.broadcast_done,
+        timing.reduce_done - timing.map_done,
+        100.0 * trace.utilization(0),
+        100.0
+            * (1..=k as u32)
+                .map(|w| trace.utilization(w))
+                .fold(0.0, f64::max),
+    );
+    println!("trace written to {path:?} ({} events) — open in chrome://tracing", trace.events.len());
+    Ok(())
+}

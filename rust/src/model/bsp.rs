@@ -1,0 +1,123 @@
+//! The BSP baseline (Valiant 1990, paper §2).
+//!
+//! A BSP superstep costs `w + h·g + L_sync` where `w` is the local-compute
+//! maximum, `h` the largest per-processor message volume of the h-relation,
+//! `g` the per-word gap and `L_sync` the barrier cost. One Algorithm-2
+//! iteration is two supersteps:
+//!
+//! 1. master broadcasts the approximation (h = K·words_down at the master),
+//!    workers Map + locally Reduce;
+//! 2. workers send partials (h = K·words_up at the master), master folds
+//!    and post-processes.
+//!
+//! BSP has no notion of tree collectives — the h-relation is charged at the
+//! congested root — so its predicted iteration time grows linearly in K and
+//! its implied boundary is far more pessimistic than BSF's. That contrast
+//! is the `baselines` experiment.
+
+use crate::model::CostParams;
+
+/// BSP machine parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BspParams {
+    /// Per-word gap `g` (seconds/word).
+    pub g: f64,
+    /// Barrier synchronisation cost `L_sync` (seconds).
+    pub l_sync: f64,
+}
+
+/// BSP prediction of one Algorithm-2 iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct BspModel {
+    /// Algorithm cost parameters (shared vocabulary with the BSF model).
+    pub p: CostParams,
+    /// Machine parameters.
+    pub m: BspParams,
+    /// Downlink payload words (approximation size).
+    pub words_down: usize,
+    /// Uplink payload words (partial folding size).
+    pub words_up: usize,
+}
+
+impl BspModel {
+    /// Predicted time of one iteration with `k` workers.
+    ///
+    /// Superstep 1: `w₁ = (t_Map + (l−k)·t_a)/k` (worker Map + local fold),
+    /// `h₁ = k·words_down` at the master.
+    /// Superstep 2: `w₂ = (k−1)·t_a + t_p` (master fold + post),
+    /// `h₂ = k·words_up` at the master.
+    pub fn t_k(&self, k: usize) -> f64 {
+        assert!(k >= 1);
+        let kf = k as f64;
+        let p = &self.p;
+        let w1 = (p.t_map + (p.l as f64 - kf) * p.t_a) / kf;
+        let h1 = kf * self.words_down as f64;
+        let w2 = (kf - 1.0) * p.t_a + p.t_p;
+        let h2 = kf * self.words_up as f64;
+        (w1 + h1 * self.m.g + self.m.l_sync) + (w2 + h2 * self.m.g + self.m.l_sync)
+    }
+
+    /// Predicted speedup `T_1 / T_K`.
+    pub fn speedup(&self, k: usize) -> f64 {
+        self.t_k(1) / self.t_k(k)
+    }
+
+    /// Numeric speedup peak over `K ∈ [1, k_max]` (BSP yields no closed
+    /// form for this pattern — the paper's motivating observation).
+    pub fn k_peak(&self, k_max: usize) -> usize {
+        (1..=k_max)
+            .max_by(|&a, &b| {
+                self.speedup(a)
+                    .partial_cmp(&self.speedup(b))
+                    .expect("finite speedups")
+            })
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> BspModel {
+        BspModel {
+            p: CostParams { l: 10_000, t_c: 2.17e-3, t_p: 3.7e-5, t_map: 0.373, t_a: 9.31e-6 },
+            m: BspParams { g: 9.13e-8, l_sync: 3e-5 },
+            words_down: 10_000,
+            words_up: 10_000,
+        }
+    }
+
+    #[test]
+    fn t1_dominated_by_compute() {
+        let m = model();
+        let t1 = m.t_k(1);
+        assert!(t1 > 0.37 && t1 < 0.6, "t1={t1}");
+    }
+
+    #[test]
+    fn speedup_at_1_is_1() {
+        assert!((model().speedup(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_h_relation_limits_scalability() {
+        let m = model();
+        // BSP's h-relation grows ~linearly in K at the root, so its peak
+        // must come earlier than the BSF model's log-collective peak.
+        let bsf = crate::model::BsfModel::new(m.p);
+        let bsp_peak = m.k_peak(1_000);
+        let bsf_peak = bsf.k_bsf();
+        assert!(
+            (bsp_peak as f64) < bsf_peak,
+            "bsp={bsp_peak} bsf={bsf_peak:.0}"
+        );
+    }
+
+    #[test]
+    fn speedup_degrades_at_large_k() {
+        let m = model();
+        let pk = m.k_peak(1_000);
+        assert!(m.speedup(pk) > m.speedup(1_000));
+    }
+}

@@ -1,0 +1,154 @@
+//! Calibration: recovering the BSF cost parameters from measurements.
+//!
+//! The paper determines Table 2's values "experimentally … using a
+//! configuration with one master and one worker" (§6) and prescribes the
+//! measure-and-divide recipe for multicore nodes (§7, Q6). This module
+//! implements that recipe over per-step timing samples produced by the
+//! live runner's [`crate::coordinator::StepMetrics`]:
+//!
+//! * `t_Map`  — median worker Map time over the whole list;
+//! * `t_a`    — median time per `⊕` application (measured over a batch and
+//!   divided, §7's recipe);
+//! * `t_p`    — median master Compute+StopCond time;
+//! * `t_c`    — from the network parameters and payload sizes
+//!   (eq. 20 shape), or measured round-trip when available.
+
+use crate::model::CostParams;
+use crate::net::NetworkParams;
+use crate::util::stats::Summary;
+
+/// Raw timing samples from a calibration run (one master + one worker).
+#[derive(Debug, Clone, Default)]
+pub struct Calibration {
+    /// Whole-list Map durations per iteration (seconds).
+    pub map_samples: Vec<f64>,
+    /// Whole-list local-Reduce durations per iteration (seconds); divided
+    /// by `l − 1` to obtain `t_a` (eq. 6).
+    pub reduce_samples: Vec<f64>,
+    /// Master post-processing durations per iteration (seconds).
+    pub post_samples: Vec<f64>,
+    /// Measured master↔worker exchange durations per iteration, if the
+    /// transport exposes them (the in-process fabric's are not
+    /// representative of a cluster, so `params_with_net` is preferred).
+    pub comm_samples: Vec<f64>,
+    /// List length.
+    pub l: usize,
+}
+
+impl Calibration {
+    /// Robust location estimate used throughout (median — timing samples
+    /// are right-skewed by OS noise).
+    fn location(samples: &[f64]) -> f64 {
+        Summary::of(samples).median
+    }
+
+    /// Derive [`CostParams`] charging communication from the postal network
+    /// model (`t_c = p2p(words_down) + p2p(words_up)`, eq. 20's shape) —
+    /// the standard path when simulating a target cluster.
+    pub fn params_with_net(
+        &self,
+        net: &NetworkParams,
+        words_down: usize,
+        words_up: usize,
+    ) -> CostParams {
+        assert!(self.l >= 2, "need l >= 2");
+        CostParams {
+            l: self.l,
+            t_c: net.t_c(words_down, words_up),
+            t_p: Self::location(&self.post_samples),
+            t_map: Self::location(&self.map_samples),
+            t_a: Self::location(&self.reduce_samples) / (self.l - 1) as f64,
+        }
+    }
+
+    /// Derive [`CostParams`] using measured round-trip samples for `t_c`
+    /// (only meaningful when the transport is a real interconnect).
+    pub fn params_measured(&self) -> CostParams {
+        assert!(self.l >= 2, "need l >= 2");
+        assert!(!self.comm_samples.is_empty(), "no comm samples recorded");
+        CostParams {
+            l: self.l,
+            t_c: Self::location(&self.comm_samples),
+            t_p: Self::location(&self.post_samples),
+            t_map: Self::location(&self.map_samples),
+            t_a: Self::location(&self.reduce_samples) / (self.l - 1) as f64,
+        }
+    }
+
+    /// Relative spread (CV) of the Map samples — used to set the
+    /// simulator's compute-jitter sigma.
+    pub fn map_jitter_sigma(&self) -> f64 {
+        Summary::of(&self.map_samples).cv()
+    }
+
+    /// Merge samples from another calibration run (e.g. repeated trials).
+    pub fn merge(&mut self, other: &Calibration) {
+        assert_eq!(self.l, other.l, "cannot merge different list lengths");
+        self.map_samples.extend_from_slice(&other.map_samples);
+        self.reduce_samples.extend_from_slice(&other.reduce_samples);
+        self.post_samples.extend_from_slice(&other.post_samples);
+        self.comm_samples.extend_from_slice(&other.comm_samples);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cal() -> Calibration {
+        Calibration {
+            map_samples: vec![0.10, 0.11, 0.09, 0.10, 0.50], // one outlier
+            reduce_samples: vec![0.099, 0.101, 0.100],
+            post_samples: vec![1e-4, 1.2e-4, 0.8e-4],
+            comm_samples: vec![2e-3, 2.2e-3, 1.8e-3],
+            l: 101,
+        }
+    }
+
+    #[test]
+    fn median_resists_outliers() {
+        let p = cal().params_with_net(&NetworkParams::tornado_susu(), 101, 101);
+        assert!((p.t_map - 0.10).abs() < 1e-12, "t_map={}", p.t_map);
+    }
+
+    #[test]
+    fn t_a_divides_by_l_minus_1() {
+        let p = cal().params_with_net(&NetworkParams::tornado_susu(), 101, 101);
+        assert!((p.t_a - 0.100 / 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn t_c_from_postal_model() {
+        let net = NetworkParams { latency: 1e-5, tau_tr: 1e-8 };
+        let p = cal().params_with_net(&net, 1000, 1000);
+        assert!((p.t_c - net.t_c(1000, 1000)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn measured_t_c_uses_samples() {
+        let p = cal().params_measured();
+        assert!((p.t_c - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_concatenates() {
+        let mut a = cal();
+        let b = cal();
+        a.merge(&b);
+        assert_eq!(a.map_samples.len(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "different list lengths")]
+    fn merge_checks_l() {
+        let mut a = cal();
+        let mut b = cal();
+        b.l = 5;
+        a.merge(&b);
+    }
+
+    #[test]
+    fn jitter_sigma_nonzero_for_noisy_samples() {
+        assert!(cal().map_jitter_sigma() > 0.1);
+    }
+}

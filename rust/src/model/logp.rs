@@ -1,0 +1,153 @@
+//! LogP / LogGP baselines (Culler et al. 1993; Alexandrov et al. 1997 —
+//! paper §2, refs [12], [38]).
+//!
+//! LogP charges a short message `o + L + o` and spaces consecutive sends by
+//! the gap `g`; LogGP adds a per-byte gap `G` for long messages, making a
+//! message of `m` bytes cost `o + (m−1)·G + L + o`.
+//!
+//! Instantiated on Algorithm 2 with tree collectives (depth `⌈log2 K⌉+…` as
+//! in the LogP broadcast literature), LogGP predicts iteration times close
+//! to the BSF model's — the point of the comparison is that neither LogP
+//! nor LogGP *yields a closed-form scalability boundary*; the prediction
+//! must be swept numerically, which is exactly what the paper's
+//! introduction argues motivates BSF.
+
+use crate::model::CostParams;
+
+/// LogGP machine parameters (seconds; `big_g` per *word* to share the f64
+/// vocabulary of the rest of the crate).
+#[derive(Debug, Clone, Copy)]
+pub struct LogGpParams {
+    /// Wire latency `L`.
+    pub l: f64,
+    /// Per-message CPU overhead `o` (send or receive side).
+    pub o: f64,
+    /// Inter-message gap `g`.
+    pub g: f64,
+    /// Per-word gap `G` (long-message bandwidth term).
+    pub big_g: f64,
+}
+
+impl LogGpParams {
+    /// Cost of one message of `words` f64 under LogGP:
+    /// `o + (words−1)·G + L + o`.
+    pub fn message(&self, words: usize) -> f64 {
+        let w = words.saturating_sub(1) as f64;
+        self.o + w * self.big_g + self.l + self.o
+    }
+
+    /// Cost of `n` back-to-back messages of `words` each from one node:
+    /// `(n−1)·g + message(words)` (LogP pipelining rule).
+    pub fn pipelined(&self, n: usize, words: usize) -> f64 {
+        (n.saturating_sub(1)) as f64 * self.g + self.message(words)
+    }
+}
+
+/// LogGP prediction of one Algorithm-2 iteration with tree collectives.
+#[derive(Debug, Clone, Copy)]
+pub struct LogGpModel {
+    /// Algorithm cost parameters.
+    pub p: CostParams,
+    /// Machine parameters.
+    pub m: LogGpParams,
+    /// Downlink payload words.
+    pub words_down: usize,
+    /// Uplink payload words.
+    pub words_up: usize,
+}
+
+impl LogGpModel {
+    /// Tree depth for K receivers.
+    fn depth(k: usize) -> f64 {
+        ((k + 1) as f64).log2().ceil()
+    }
+
+    /// Predicted time of one iteration with `k` workers.
+    pub fn t_k(&self, k: usize) -> f64 {
+        assert!(k >= 1);
+        let kf = k as f64;
+        let p = &self.p;
+        let bcast = Self::depth(k) * self.m.message(self.words_down);
+        let map = (p.t_map + (p.l as f64 - kf) * p.t_a) / kf;
+        let reduce = Self::depth(k) * (self.m.message(self.words_up) + p.t_a);
+        let post = p.t_p + self.m.message(0); // exit flag
+        bcast + map + reduce + post
+    }
+
+    /// Predicted speedup `T_1 / T_K`.
+    pub fn speedup(&self, k: usize) -> f64 {
+        self.t_k(1) / self.t_k(k)
+    }
+
+    /// Numeric speedup peak over `K ∈ [1, k_max]`.
+    pub fn k_peak(&self, k_max: usize) -> usize {
+        (1..=k_max)
+            .max_by(|&a, &b| {
+                self.speedup(a)
+                    .partial_cmp(&self.speedup(b))
+                    .expect("finite speedups")
+            })
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine() -> LogGpParams {
+        LogGpParams { l: 1.5e-5, o: 2e-6, g: 4e-6, big_g: 9.13e-8 }
+    }
+
+    fn model() -> LogGpModel {
+        LogGpModel {
+            p: CostParams { l: 10_000, t_c: 2.17e-3, t_p: 3.7e-5, t_map: 0.373, t_a: 9.31e-6 },
+            m: machine(),
+            words_down: 10_000,
+            words_up: 10_000,
+        }
+    }
+
+    #[test]
+    fn message_cost_formula() {
+        let m = machine();
+        // o + (w-1)G + L + o
+        let want = 2e-6 + 999.0 * 9.13e-8 + 1.5e-5 + 2e-6;
+        assert!((m.message(1_000) - want).abs() < 1e-15);
+        // zero/one-word messages cost the constant part only
+        assert_eq!(m.message(0), m.message(1));
+    }
+
+    #[test]
+    fn pipelined_adds_gaps() {
+        let m = machine();
+        let one = m.pipelined(1, 100);
+        let five = m.pipelined(5, 100);
+        assert!((five - one - 4.0 * m.g).abs() < 1e-15);
+    }
+
+    #[test]
+    fn speedup_at_1_is_1() {
+        assert!((model().speedup(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_same_ballpark_as_bsf() {
+        let lg = model();
+        let bsf = crate::model::BsfModel::new(lg.p);
+        let lg_peak = lg.k_peak(2_000) as f64;
+        let bsf_peak = bsf.k_bsf();
+        // Same communication structure, slightly different constants:
+        // peaks agree within a factor of 2.
+        let ratio = lg_peak / bsf_peak;
+        assert!((0.5..2.0).contains(&ratio), "loggp={lg_peak} bsf={bsf_peak}");
+    }
+
+    #[test]
+    fn unimodal_in_practice() {
+        let lg = model();
+        let pk = lg.k_peak(2_000);
+        assert!(lg.speedup(pk) >= lg.speedup(pk.saturating_sub(10).max(1)));
+        assert!(lg.speedup(pk) > lg.speedup(2_000));
+    }
+}

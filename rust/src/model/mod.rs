@@ -1,0 +1,26 @@
+//! Cost metrics — the analytical heart of the paper.
+//!
+//! * [`bsf`] — the BSF cost metric: per-iteration times `T_1` (eq. 7) and
+//!   `T_K` (eq. 8), the speedup function `a_BSF(K)` (eq. 9) with its
+//!   properties (10)–(12), and the closed-form scalability boundary
+//!   `K_BSF` (Proposition 1 / eq. 14).
+//! * [`bsp`] and [`logp`] — baseline models (Valiant's BSP; LogP/LogGP)
+//!   instantiated on the same Algorithm-2 communication pattern, for the
+//!   `baselines` comparison experiment. Neither yields a closed-form
+//!   boundary — the paper's point — but both predict iteration times we
+//!   can contrast with BSF's.
+//! * [`calibrate`] — recover the cost parameters from live measurements on
+//!   one master + one worker, the way the paper's §6 does (Table 2).
+//! * [`scalability`] — speedup-curve utilities: peak finding over integer K,
+//!   the prediction-error metric (eq. 26), and the `O(√n)` growth-law check
+//!   (eqs. 24–25, 36–37).
+
+pub mod bsf;
+pub mod bsp;
+pub mod calibrate;
+pub mod logp;
+pub mod scalability;
+
+pub use bsf::{BsfModel, CostParams};
+pub use calibrate::Calibration;
+pub use scalability::{prediction_error, speedup_curve, SpeedupPoint};

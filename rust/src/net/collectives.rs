@@ -1,0 +1,178 @@
+//! MPI-style collective schedules and their costs.
+//!
+//! Eq. (8) of the paper assumes a good MPI implementation performs a
+//! broadcast or reduce over K processes in `O(log K)` point-to-point rounds
+//! (Hoefler et al., paper ref [35]). The canonical such schedule is the
+//! **binomial tree**: in round r, every process that already holds the
+//! message forwards it to a partner, doubling the covered set.
+//!
+//! We implement both the binomial tree and the naive **linear** (flat)
+//! schedule; the `ablation-collectives` experiment contrasts them — the
+//! linear schedule turns eq. (8)'s `log2(K)·t_c` term into `K·t_c` and
+//! collapses the scalability boundary, which is precisely why the paper's
+//! model assumes tree collectives.
+
+use crate::net::NetworkParams;
+
+/// Which collective schedule the cluster uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveAlgo {
+    /// Binomial tree: `ceil(log2(K+1))` rounds for K receivers.
+    BinomialTree,
+    /// Flat: the root contacts each of the K receivers in sequence.
+    Linear,
+}
+
+/// A concrete send schedule: list of rounds, each a set of `(from, to)`
+/// pairs that proceed in parallel. Node 0 is the root (master); nodes
+/// `1..=k` are the workers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CollectiveSchedule {
+    /// Rounds of parallel point-to-point transfers.
+    pub rounds: Vec<Vec<(usize, usize)>>,
+    /// Total participant count (root + k receivers).
+    pub size: usize,
+}
+
+impl CollectiveSchedule {
+    /// Broadcast schedule from the root to `k` receivers.
+    pub fn broadcast(algo: CollectiveAlgo, k: usize) -> CollectiveSchedule {
+        let size = k + 1;
+        let rounds = match algo {
+            CollectiveAlgo::Linear => (1..=k).map(|w| vec![(0usize, w)]).collect(),
+            CollectiveAlgo::BinomialTree => {
+                // Covered set doubles each round: after r rounds, nodes
+                // 0..2^r hold the message (capped at size).
+                let mut rounds = Vec::new();
+                let mut covered = 1usize;
+                while covered < size {
+                    let mut round = Vec::new();
+                    let senders = covered.min(size - covered);
+                    for s in 0..senders {
+                        round.push((s, covered + s));
+                    }
+                    covered += senders;
+                    rounds.push(round);
+                }
+                rounds
+            }
+        };
+        CollectiveSchedule { rounds, size }
+    }
+
+    /// Reduce schedule (k leaves folding into the root): the broadcast
+    /// schedule reversed, with edges flipped.
+    pub fn reduce(algo: CollectiveAlgo, k: usize) -> CollectiveSchedule {
+        let bcast = CollectiveSchedule::broadcast(algo, k);
+        let rounds = bcast
+            .rounds
+            .into_iter()
+            .rev()
+            .map(|round| round.into_iter().map(|(a, b)| (b, a)).collect())
+            .collect();
+        CollectiveSchedule { rounds, size: bcast.size }
+    }
+
+    /// Number of rounds (the latency-critical depth).
+    pub fn depth(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Completion time of the collective for a payload of `words` f64:
+    /// each round costs one point-to-point message; `combine_cost` is added
+    /// per round at the receiving side (e.g. `t_a` for a reduce's `⊕`;
+    /// 0 for a broadcast).
+    pub fn cost(&self, net: &NetworkParams, words: usize, combine_cost: f64) -> f64 {
+        self.depth() as f64 * (net.p2p(words) + combine_cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn covered_by(s: &CollectiveSchedule) -> Vec<usize> {
+        // Simulate the broadcast: who holds the message at the end?
+        let mut has = vec![false; s.size];
+        has[0] = true;
+        for round in &s.rounds {
+            let snapshot = has.clone();
+            for &(from, to) in round {
+                assert!(snapshot[from], "sender {from} doesn't hold the message");
+                has[to] = true;
+            }
+        }
+        (0..s.size).filter(|&i| has[i]).collect()
+    }
+
+    #[test]
+    fn binomial_broadcast_covers_everyone() {
+        for k in [1usize, 2, 3, 4, 7, 8, 100] {
+            let s = CollectiveSchedule::broadcast(CollectiveAlgo::BinomialTree, k);
+            assert_eq!(covered_by(&s).len(), k + 1, "k={k}");
+        }
+    }
+
+    #[test]
+    fn binomial_depth_is_log() {
+        for (k, want) in [(1usize, 1usize), (2, 2), (3, 2), (4, 3), (7, 3), (8, 4), (100, 7)] {
+            let s = CollectiveSchedule::broadcast(CollectiveAlgo::BinomialTree, k);
+            assert_eq!(s.depth(), want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn linear_broadcast_depth_is_k() {
+        let s = CollectiveSchedule::broadcast(CollectiveAlgo::Linear, 9);
+        assert_eq!(s.depth(), 9);
+        assert_eq!(covered_by(&s).len(), 10);
+    }
+
+    #[test]
+    fn reduce_mirrors_broadcast() {
+        let b = CollectiveSchedule::broadcast(CollectiveAlgo::BinomialTree, 5);
+        let r = CollectiveSchedule::reduce(CollectiveAlgo::BinomialTree, 5);
+        assert_eq!(b.depth(), r.depth());
+        // Every reduce edge is a flipped broadcast edge.
+        let b_edges: Vec<(usize, usize)> = b.rounds.iter().flatten().copied().collect();
+        let r_edges: Vec<(usize, usize)> = r.rounds.iter().flatten().map(|&(a, b)| (b, a)).collect();
+        let mut b_sorted = b_edges.clone();
+        let mut r_sorted = r_edges.clone();
+        b_sorted.sort_unstable();
+        r_sorted.sort_unstable();
+        assert_eq!(b_sorted, r_sorted);
+    }
+
+    #[test]
+    fn reduce_edges_flow_toward_root() {
+        let r = CollectiveSchedule::reduce(CollectiveAlgo::BinomialTree, 7);
+        // After all rounds, information from every leaf must reach node 0:
+        // run the dataflow.
+        let mut holds: Vec<std::collections::HashSet<usize>> =
+            (0..r.size).map(|i| std::collections::HashSet::from([i])).collect();
+        for round in &r.rounds {
+            let snapshot = holds.clone();
+            for &(from, to) in round {
+                let s = snapshot[from].clone();
+                holds[to].extend(s);
+            }
+        }
+        assert_eq!(holds[0].len(), r.size, "root must fold all partials");
+    }
+
+    #[test]
+    fn cost_scales_with_depth_and_payload() {
+        let net = NetworkParams { latency: 1e-5, tau_tr: 1e-8 };
+        let tree = CollectiveSchedule::broadcast(CollectiveAlgo::BinomialTree, 8);
+        let lin = CollectiveSchedule::broadcast(CollectiveAlgo::Linear, 8);
+        assert!(tree.cost(&net, 1000, 0.0) < lin.cost(&net, 1000, 0.0));
+        let with_combine = tree.cost(&net, 1000, 1e-6);
+        assert!((with_combine - tree.cost(&net, 1000, 0.0) - tree.depth() as f64 * 1e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn k1_single_round() {
+        let s = CollectiveSchedule::broadcast(CollectiveAlgo::BinomialTree, 1);
+        assert_eq!(s.rounds, vec![vec![(0, 1)]]);
+    }
+}

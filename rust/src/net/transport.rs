@@ -1,0 +1,284 @@
+//! Live in-process transport: master ↔ K worker threads over std channels.
+//!
+//! This is the fabric of the **live runner** — real parallel execution on
+//! this machine, used for correctness checks and for calibrating the BSF
+//! cost parameters exactly the way the paper prescribes (§7, Q6: run on one
+//! node, measure, divide).
+//!
+//! The message vocabulary mirrors Algorithm 2: the master broadcasts the
+//! current approximation (Step 2/3), each worker returns its partial folding
+//! (Step 5/6), and the master broadcasts the exit flag (Step 10/13). Both
+//! broadcast phases are *implicit global synchronisations*, exactly as the
+//! paper notes.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// One iteration's downlink payload: the current approximation (opaque f64
+/// blob; problems define the encoding) or a stop signal.
+#[derive(Debug, Clone)]
+pub enum Downlink {
+    /// Next iteration's approximation, tagged with the iteration number
+    /// (the *epoch*) so late uplinks from recovered/hung workers can be
+    /// identified and discarded.
+    Approximation {
+        /// The approximation payload.
+        x: Vec<f64>,
+        /// Iteration number.
+        epoch: u64,
+    },
+    /// Terminate: the StopCond fired (carries the final iteration count).
+    Stop { iterations: usize },
+}
+
+/// One worker's uplink payload: its partial folding.
+#[derive(Debug, Clone)]
+pub struct Uplink {
+    /// Worker id `1..=K`.
+    pub worker: usize,
+    /// Epoch echoed from the downlink (stale-partial detection).
+    pub epoch: u64,
+    /// Partial folding `s_j` (encoding defined by the problem).
+    pub partial: Vec<f64>,
+    /// Seconds the worker spent in Map + local fold this iteration
+    /// (calibration metadata; a real MPI skeleton would piggyback this the
+    /// same way).
+    pub map_seconds: f64,
+}
+
+/// Master-side endpoint: one sender per worker, one shared return channel.
+#[derive(Debug)]
+pub struct MasterEndpoint {
+    downlinks: Vec<Sender<Downlink>>,
+    uplink: Receiver<Uplink>,
+}
+
+/// Worker-side endpoint.
+#[derive(Debug)]
+pub struct WorkerEndpoint {
+    /// This worker's id (`1..=K`).
+    pub id: usize,
+    downlink: Receiver<Downlink>,
+    uplink: Sender<Uplink>,
+}
+
+/// Create a master endpoint and `k` worker endpoints.
+pub fn fabric(k: usize) -> (MasterEndpoint, Vec<WorkerEndpoint>) {
+    let (up_tx, up_rx) = channel::<Uplink>();
+    let mut downlinks = Vec::with_capacity(k);
+    let mut workers = Vec::with_capacity(k);
+    for id in 1..=k {
+        let (d_tx, d_rx) = channel::<Downlink>();
+        downlinks.push(d_tx);
+        workers.push(WorkerEndpoint { id, downlink: d_rx, uplink: up_tx.clone() });
+    }
+    (MasterEndpoint { downlinks, uplink: up_rx }, workers)
+}
+
+/// Error surfaced when a peer disappears (worker panic / master drop).
+#[derive(Debug, thiserror::Error)]
+pub enum TransportError {
+    /// A worker's channel closed before the protocol finished.
+    #[error("worker {0} disconnected")]
+    WorkerGone(usize),
+    /// The master's channel closed.
+    #[error("master disconnected")]
+    MasterGone,
+    /// Timed out waiting for worker partials.
+    #[error("timed out waiting for {missing} of {expected} partials")]
+    Timeout {
+        /// How many partials never arrived.
+        missing: usize,
+        /// How many were expected.
+        expected: usize,
+    },
+}
+
+impl MasterEndpoint {
+    /// Number of attached workers.
+    pub fn k(&self) -> usize {
+        self.downlinks.len()
+    }
+
+    /// `SendToAllWorkers(x)` — Algorithm 2 Step 2.
+    pub fn broadcast(&self, msg: &Downlink) -> Result<(), TransportError> {
+        for (i, tx) in self.downlinks.iter().enumerate() {
+            tx.send(msg.clone()).map_err(|_| TransportError::WorkerGone(i + 1))?;
+        }
+        Ok(())
+    }
+
+    /// `RecvFromWorkers(s_1..s_K)` — Algorithm 2 Step 5. Returns partials
+    /// ordered by worker id. `timeout` bounds the whole gather.
+    pub fn gather(&self, epoch: u64, timeout: Duration) -> Result<Vec<Uplink>, TransportError> {
+        let (got, missing) = self.gather_partial(&vec![true; self.k()], epoch, timeout);
+        if missing.is_empty() {
+            Ok(got.into_iter().map(|o| o.expect("no missing")).collect())
+        } else {
+            Err(TransportError::Timeout { missing: missing.len(), expected: self.k() })
+        }
+    }
+
+    /// Fault-tolerant gather: wait (up to `timeout`) for partials from the
+    /// workers marked alive in `expect`; returns whatever arrived plus the
+    /// ids (1-based) that never answered. Never errors — the caller decides
+    /// how to recover (see `LiveRunner::fault_tolerant`).
+    pub fn gather_partial(
+        &self,
+        expect: &[bool],
+        epoch: u64,
+        timeout: Duration,
+    ) -> (Vec<Option<Uplink>>, Vec<usize>) {
+        let k = self.k();
+        debug_assert_eq!(expect.len(), k);
+        let want = expect.iter().filter(|&&e| e).count();
+        let mut got: Vec<Option<Uplink>> = (0..k).map(|_| None).collect();
+        let mut received = 0usize;
+        let deadline = std::time::Instant::now() + timeout;
+        while received < want {
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            match self.uplink.recv_timeout(remaining) {
+                Ok(up) => {
+                    if up.epoch != epoch {
+                        // Stale partial from a worker that missed an
+                        // earlier deadline: discard (its range was already
+                        // recovered by the master that iteration).
+                        continue;
+                    }
+                    let idx = up.worker - 1;
+                    if got[idx].is_none() && expect[idx] {
+                        received += 1;
+                    }
+                    got[idx] = Some(up);
+                }
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let missing = (0..k)
+            .filter(|&i| expect[i] && got[i].is_none())
+            .map(|i| i + 1)
+            .collect();
+        (got, missing)
+    }
+
+    /// Best-effort broadcast: deliver to every worker whose channel is
+    /// still open, ignoring dead peers (used for the final Stop — a plain
+    /// `broadcast` would abort at the first closed channel and leave the
+    /// remaining workers blocked on `recv` forever).
+    pub fn broadcast_best_effort(&self, msg: &Downlink) {
+        for tx in &self.downlinks {
+            let _ = tx.send(msg.clone());
+        }
+    }
+
+    /// Broadcast to the workers marked alive only (dead peers are skipped
+    /// instead of erroring). Returns ids (1-based) newly found dead.
+    pub fn broadcast_alive(&self, msg: &Downlink, alive: &mut [bool]) -> Vec<usize> {
+        let mut newly_dead = Vec::new();
+        for (i, tx) in self.downlinks.iter().enumerate() {
+            if alive[i] && tx.send(msg.clone()).is_err() {
+                alive[i] = false;
+                newly_dead.push(i + 1);
+            }
+        }
+        newly_dead
+    }
+}
+
+impl WorkerEndpoint {
+    /// `RecvFromMaster(x)` — blocks until the next downlink.
+    pub fn recv(&self) -> Result<Downlink, TransportError> {
+        self.downlink.recv().map_err(|_| TransportError::MasterGone)
+    }
+
+    /// `SendToMaster(s_j)`.
+    pub fn send(&self, epoch: u64, partial: Vec<f64>, map_seconds: f64) -> Result<(), TransportError> {
+        self.uplink
+            .send(Uplink { worker: self.id, epoch, partial, map_seconds })
+            .map_err(|_| TransportError::MasterGone)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn roundtrip_one_iteration() {
+        let (master, workers) = fabric(4);
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|w| {
+                std::thread::spawn(move || loop {
+                    match w.recv().unwrap() {
+                        Downlink::Approximation { x, epoch } => {
+                            let s: f64 = x.iter().sum::<f64>() * w.id as f64;
+                            w.send(epoch, vec![s], 0.0).unwrap();
+                        }
+                        Downlink::Stop { .. } => break,
+                    }
+                })
+            })
+            .collect();
+
+        master.broadcast(&Downlink::Approximation { x: vec![1.0, 2.0], epoch: 0 }).unwrap();
+        let partials = master.gather(0, Duration::from_secs(5)).unwrap();
+        assert_eq!(partials.len(), 4);
+        // ordered by worker id; worker j returns 3*j
+        for (i, p) in partials.iter().enumerate() {
+            assert_eq!(p.worker, i + 1);
+            assert_eq!(p.partial, vec![3.0 * (i + 1) as f64]);
+        }
+        master.broadcast(&Downlink::Stop { iterations: 1 }).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn gather_times_out_on_silent_worker() {
+        let (master, workers) = fabric(2);
+        // Only worker 1 answers.
+        let w1 = &workers[0];
+        w1.send(0, vec![1.0], 0.0).unwrap();
+        let err = master.gather(0, Duration::from_millis(50)).unwrap_err();
+        match err {
+            TransportError::Timeout { missing, expected } => {
+                assert_eq!((missing, expected), (1, 2));
+            }
+            other => panic!("unexpected: {other}"),
+        }
+        drop(workers);
+    }
+
+    #[test]
+    fn broadcast_detects_dead_worker() {
+        let (master, workers) = fabric(2);
+        drop(workers); // both endpoints gone
+        let err = master.broadcast(&Downlink::Stop { iterations: 0 }).unwrap_err();
+        assert!(matches!(err, TransportError::WorkerGone(1)));
+    }
+
+    #[test]
+    fn worker_detects_dead_master() {
+        let (master, workers) = fabric(1);
+        drop(master);
+        let w = &workers[0];
+        assert!(matches!(w.recv().unwrap_err(), TransportError::MasterGone));
+    }
+
+    #[test]
+    fn gather_completes_on_first_partial_per_worker() {
+        let (master, workers) = fabric(1);
+        workers[0].send(0, vec![1.0], 0.0).unwrap();
+        let got = master.gather(0, Duration::from_millis(50)).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].partial, vec![1.0]);
+        // The lock-step protocol sends exactly one partial per iteration;
+        // a second send is consumed by the *next* gather.
+        workers[0].send(1, vec![2.0], 0.0).unwrap();
+        let got2 = master.gather(1, Duration::from_millis(50)).unwrap();
+        assert_eq!(got2[0].partial, vec![2.0]);
+    }
+}

@@ -1,0 +1,490 @@
+//! BSF-Cimmino: iterative solver for systems of linear inequalities
+//! `A x ≤ b` (paper ref [31] — the author's companion application of the
+//! BSF model; the method is a Cimmino-style simultaneous-projection
+//! iteration).
+//!
+//! The list is the constraint rows; the Map over row `i` is the projection
+//! correction for violated rows:
+//!
+//! ```text
+//! F_x(i) = −(max(0, aᵢ·x − bᵢ) / ‖aᵢ‖²) · aᵢ
+//! ```
+//!
+//! the fold is n-vector addition, and the master applies the relaxed
+//! update `x' = x + (λ/m)·s` (mean-projection form; Fejér-monotone for
+//! `0 < λ < 2`), stopping when `‖x' − x‖² < ε` — by which point the
+//! iterate satisfies every inequality to within the projection residual.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{BsfProblem, CostSpec};
+use crate::linalg::generators::InequalitySystem;
+use crate::linalg::{dot, sq_norm2, sub};
+use crate::runtime::{KernelRuntime, Tensor};
+
+/// The BSF-Cimmino problem.
+#[derive(Debug)]
+pub struct CimminoProblem {
+    sys: InequalitySystem,
+    /// Relaxation λ ∈ (0, 2).
+    pub lambda: f64,
+    /// Termination threshold ε on `‖x' − x‖²`.
+    pub epsilon: f64,
+    /// Packed `(B,n)` row blocks + rhs for the kernel path, keyed by
+    /// `(i0, i1, B)` — iteration-invariant (see EXPERIMENTS.md §Perf).
+    block_cache: Mutex<HashMap<(usize, usize, usize), (Arc<Vec<f64>>, Arc<Vec<f64>>)>>,
+}
+
+impl CimminoProblem {
+    /// Wrap an inequality system.
+    pub fn new(sys: InequalitySystem, lambda: f64, epsilon: f64) -> CimminoProblem {
+        assert!(lambda > 0.0 && lambda < 2.0, "λ must be in (0,2)");
+        CimminoProblem { sys, lambda, epsilon, block_cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Packed `(a_blk, b_blk)` for rows `i0..i1`, zero-padded to `b` rows,
+    /// cached.
+    fn packed_block(&self, i0: usize, i1: usize, b: usize) -> (Arc<Vec<f64>>, Arc<Vec<f64>>) {
+        let n = self.n();
+        let mut cache = self.block_cache.lock().expect("block cache poisoned");
+        cache
+            .entry((i0, i1, b))
+            .or_insert_with(|| {
+                let mut a_blk = vec![0.0; b * n];
+                let mut b_blk = vec![0.0; b];
+                for (slot, i) in (i0..i1).enumerate() {
+                    a_blk[slot * n..(slot + 1) * n].copy_from_slice(self.sys.a.row(i));
+                    b_blk[slot] = self.sys.b[i];
+                }
+                (Arc::new(a_blk), Arc::new(b_blk))
+            })
+            .clone()
+    }
+
+    /// Rows m.
+    pub fn m(&self) -> usize {
+        self.sys.b.len()
+    }
+
+    /// Columns n.
+    pub fn n(&self) -> usize {
+        self.sys.a.cols()
+    }
+
+    /// The underlying system.
+    pub fn system(&self) -> &InequalitySystem {
+        &self.sys
+    }
+
+    /// Count of violated rows at `x` (solution-quality check).
+    pub fn violated(&self, x: &[f64], tol: f64) -> usize {
+        (0..self.m())
+            .filter(|&i| dot(self.sys.a.row(i), x) > self.sys.b[i] + tol)
+            .count()
+    }
+
+    fn native_block(&self, range: Range<usize>, x: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        let mut acc = vec![0.0; n];
+        for i in range {
+            let row = self.sys.a.row(i);
+            let resid = dot(row, x) - self.sys.b[i];
+            if resid > 0.0 {
+                let nrm2 = sq_norm2(row);
+                if nrm2 > 0.0 {
+                    let w = resid / nrm2;
+                    for (a, r) in acc.iter_mut().zip(row) {
+                        *a -= w * r;
+                    }
+                }
+            }
+        }
+        acc
+    }
+}
+
+impl BsfProblem for CimminoProblem {
+    fn name(&self) -> &str {
+        "bsf-cimmino"
+    }
+
+    fn list_len(&self) -> usize {
+        self.m()
+    }
+
+    fn initial_approx(&self) -> Vec<f64> {
+        self.sys.x0.clone()
+    }
+
+    fn map_fold(&self, range: Range<usize>, x: &[f64], kernels: Option<&KernelRuntime>) -> Vec<f64> {
+        let n = self.n();
+        if range.is_empty() {
+            return vec![0.0; n];
+        }
+        if let Some(rt) = kernels {
+            if let Some(name) = rt.manifest().cimmino_map(n) {
+                let b = rt.block();
+                let mut acc = vec![0.0; n];
+                let mut i0 = range.start;
+                while i0 < range.end {
+                    let i1 = (i0 + b).min(range.end);
+                    let (a_blk, b_blk) = self.packed_block(i0, i1, b);
+                    match rt.execute(
+                        &name,
+                        &[
+                            Tensor::mat_shared(a_blk, b, n),
+                            Tensor::vec_shared(b_blk),
+                            Tensor::vec(x.to_vec()),
+                        ],
+                    ) {
+                        Ok(outs) => {
+                            for (a, v) in acc.iter_mut().zip(&outs[0]) {
+                                *a += v;
+                            }
+                        }
+                        Err(_) => {
+                            let nat = self.native_block(i0..i1, x);
+                            for (a, v) in acc.iter_mut().zip(&nat) {
+                                *a += v;
+                            }
+                        }
+                    }
+                    i0 = i1;
+                }
+                return acc;
+            }
+        }
+        self.native_block(range, x)
+    }
+
+    fn fold_identity(&self) -> Vec<f64> {
+        vec![0.0; self.n()]
+    }
+
+    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
+        for (x, y) in a.iter_mut().zip(&b) {
+            *x += y;
+        }
+        a
+    }
+
+    fn post(&self, x: &[f64], s: &[f64], _iteration: usize) -> (Vec<f64>, bool) {
+        let scale = self.lambda / self.m() as f64;
+        let next: Vec<f64> = x.iter().zip(s).map(|(xi, si)| xi + scale * si).collect();
+        let stop = sq_norm2(&sub(&next, x)) < self.epsilon;
+        (next, stop)
+    }
+
+    fn cost_spec(&self) -> CostSpec {
+        let n = self.n();
+        CostSpec {
+            l: self.m(),
+            words_down: n,
+            words_up: n,
+            // per row: dot (2n) + residual + norm (2n) + scale-add (2n).
+            ops_map_per_elem: 6.0 * n as f64 + 2.0,
+            ops_combine: n as f64,
+            // x' = x + λ/m·s (2n) + ‖x'−x‖² (3n) + compare.
+            ops_post: 5.0 * n as f64 + 2.0,
+        }
+    }
+}
+
+/// Non-stationary BSF-Cimmino (the actual subject of paper ref [31]):
+/// the right-hand side drifts over iterations, `b(t) = b + t·δ`, and the
+/// iterate must *track* the moving feasible region rather than converge.
+///
+/// Downlink encoding: `[x (n) | t]`. The Map for row `i` at time `t` is the
+/// projection correction against `b_i + t·δ_i`; the fold is unchanged. The
+/// kernel path reuses the `cimmino_map` artifact with an ephemeral shifted
+/// `b`-block (the `A` blocks stay cached). There is no StopCond in the
+/// stationary sense — the run ends at the horizon `t_end`, and solution
+/// quality is the violation count against the *current* b(t).
+#[derive(Debug)]
+pub struct NonStationaryCimmino {
+    inner: CimminoProblem,
+    /// Per-row drift rate δ (b changes by δ each iteration).
+    pub drift: Vec<f64>,
+    /// Iterations to run (the tracking horizon).
+    pub horizon: usize,
+}
+
+impl NonStationaryCimmino {
+    /// Wrap a stationary problem with a drift vector.
+    pub fn new(inner: CimminoProblem, drift: Vec<f64>, horizon: usize) -> NonStationaryCimmino {
+        assert_eq!(drift.len(), inner.m(), "one drift rate per row");
+        NonStationaryCimmino { inner, drift, horizon }
+    }
+
+    /// The shifted right-hand side at time `t`.
+    pub fn b_at(&self, t: f64) -> Vec<f64> {
+        self.inner.sys.b.iter().zip(&self.drift).map(|(b, d)| b + t * d).collect()
+    }
+
+    /// Violations of the *current* constraints at `[x|t]`.
+    pub fn violated_now(&self, approx: &[f64], tol: f64) -> usize {
+        let n = self.inner.n();
+        let (x, t) = (&approx[..n], approx[n]);
+        let b = self.b_at(t);
+        (0..self.inner.m())
+            .filter(|&i| dot(self.inner.sys.a.row(i), x) > b[i] + tol)
+            .count()
+    }
+}
+
+impl BsfProblem for NonStationaryCimmino {
+    fn name(&self) -> &str {
+        "bsf-cimmino-nonstationary"
+    }
+
+    fn list_len(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn initial_approx(&self) -> Vec<f64> {
+        let mut x = self.inner.sys.x0.clone();
+        x.push(0.0); // t
+        x
+    }
+
+    fn map_fold(&self, range: Range<usize>, approx: &[f64], kernels: Option<&KernelRuntime>) -> Vec<f64> {
+        let n = self.inner.n();
+        let (x, t) = (&approx[..n], approx[n]);
+        if range.is_empty() {
+            return vec![0.0; n];
+        }
+        if let Some(rt) = kernels {
+            if let Some(name) = rt.manifest().cimmino_map(n) {
+                let bw = rt.block();
+                let mut acc = vec![0.0; n];
+                let mut i0 = range.start;
+                while i0 < range.end {
+                    let i1 = (i0 + bw).min(range.end);
+                    let (a_blk, _) = self.inner.packed_block(i0, i1, bw);
+                    // Ephemeral shifted b-block (changes every iteration).
+                    let mut b_blk = vec![0.0; bw];
+                    for (slot, i) in (i0..i1).enumerate() {
+                        b_blk[slot] = self.inner.sys.b[i] + t * self.drift[i];
+                    }
+                    if let Ok(outs) = rt.execute(
+                        &name,
+                        &[
+                            Tensor::mat_shared(a_blk, bw, n),
+                            Tensor::vec(b_blk),
+                            Tensor::vec(x.to_vec()),
+                        ],
+                    ) {
+                        for (a, v) in acc.iter_mut().zip(&outs[0]) {
+                            *a += v;
+                        }
+                    } else {
+                        let nat = self.native_shifted(i0..i1, x, t);
+                        for (a, v) in acc.iter_mut().zip(&nat) {
+                            *a += v;
+                        }
+                    }
+                    i0 = i1;
+                }
+                return acc;
+            }
+        }
+        self.native_shifted(range, x, t)
+    }
+
+    fn fold_identity(&self) -> Vec<f64> {
+        vec![0.0; self.inner.n()]
+    }
+
+    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
+        for (x, y) in a.iter_mut().zip(&b) {
+            *x += y;
+        }
+        a
+    }
+
+    fn post(&self, approx: &[f64], s: &[f64], iteration: usize) -> (Vec<f64>, bool) {
+        let n = self.inner.n();
+        let scale = self.inner.lambda / self.inner.m() as f64;
+        let mut next: Vec<f64> =
+            approx[..n].iter().zip(s).map(|(xi, si)| xi + scale * si).collect();
+        next.push((iteration + 1) as f64); // advance t
+        let stop = iteration + 1 >= self.horizon;
+        (next, stop)
+    }
+
+    fn cost_spec(&self) -> CostSpec {
+        self.inner.cost_spec()
+    }
+}
+
+impl NonStationaryCimmino {
+    fn native_shifted(&self, range: Range<usize>, x: &[f64], t: f64) -> Vec<f64> {
+        let n = self.inner.n();
+        let mut acc = vec![0.0; n];
+        for i in range {
+            let row = self.inner.sys.a.row(i);
+            let resid = dot(row, x) - (self.inner.sys.b[i] + t * self.drift[i]);
+            if resid > 0.0 {
+                let nrm2 = sq_norm2(row);
+                if nrm2 > 0.0 {
+                    let w = resid / nrm2;
+                    for (a, r) in acc.iter_mut().zip(row) {
+                        *a -= w * r;
+                    }
+                }
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_sequential, LiveRunner};
+    use crate::linalg::generators::feasible_inequalities;
+    use std::sync::Arc;
+
+    fn problem(m: usize, n: usize) -> CimminoProblem {
+        CimminoProblem::new(feasible_inequalities(m, n, 0.1, 7), 1.5, 1e-20)
+    }
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        p.join("manifest.json").exists().then(|| p.to_path_buf())
+    }
+
+    #[test]
+    fn sequential_reaches_feasibility() {
+        let p = problem(200, 16);
+        let start_viol = p.violated(&p.initial_approx(), 1e-9);
+        assert!(start_viol > 0);
+        let r = run_sequential(&p, 20_000, None);
+        assert!(r.converged, "no convergence in {} iters", r.iterations);
+        assert_eq!(p.violated(&r.final_approx, 1e-6), 0, "still infeasible");
+    }
+
+    #[test]
+    fn live_matches_sequential() {
+        let seq = run_sequential(&problem(120, 8), 20_000, None);
+        for k in [1usize, 4] {
+            let p: Arc<dyn BsfProblem> = Arc::new(problem(120, 8));
+            let live = LiveRunner::new(k, 20_000).run(p).unwrap();
+            assert_eq!(live.iterations, seq.iterations, "k={k}");
+            let d: f64 = live
+                .final_approx
+                .iter()
+                .zip(&seq.final_approx)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(d < 1e-10, "k={k}: dev {d}");
+        }
+    }
+
+    #[test]
+    fn satisfied_system_stops_immediately() {
+        let mut sys = feasible_inequalities(50, 8, 0.1, 3);
+        sys.x0 = sys.interior.clone(); // start feasible
+        let p = CimminoProblem::new(sys, 1.0, 1e-20);
+        let r = run_sequential(&p, 10, None);
+        assert_eq!(r.iterations, 1);
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn promotion_over_ranges() {
+        let p = problem(100, 12);
+        let x = p.initial_approx();
+        let full = p.map_fold(0..100, &x, None);
+        let mut acc = p.fold_identity();
+        for r in [0..40usize, 40..77, 77..100] {
+            acc = p.combine(acc, p.map_fold(r, &x, None));
+        }
+        for (a, b) in acc.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "λ must be in (0,2)")]
+    fn lambda_range_checked() {
+        CimminoProblem::new(feasible_inequalities(10, 4, 0.1, 1), 2.5, 1e-12);
+    }
+
+    #[test]
+    fn nonstationary_tracks_drifting_feasible_region() {
+        // Slow drift: after an initial settling phase the iterate keeps the
+        // violation count low against the *moving* constraints.
+        let m = 150;
+        let base = problem(m, 12);
+        let drift = vec![1e-3; m]; // constraints loosen slowly
+        let ns = NonStationaryCimmino::new(base, drift, 400);
+        let r = crate::coordinator::run_sequential(&ns, 1_000, None);
+        assert!(r.converged, "must stop at the horizon");
+        assert_eq!(r.iterations, 400);
+        assert_eq!(r.final_approx.len(), 13); // [x | t]
+        assert_eq!(r.final_approx[12], 400.0);
+        let viol = ns.violated_now(&r.final_approx, 1e-6);
+        assert!(viol <= m / 20, "tracking lost: {viol} violations");
+    }
+
+    #[test]
+    fn nonstationary_live_matches_sequential() {
+        use std::sync::Arc;
+        let mk = || {
+            NonStationaryCimmino::new(problem(120, 8), vec![5e-4; 120], 100)
+        };
+        let seq = crate::coordinator::run_sequential(&mk(), 1_000, None);
+        let live = crate::coordinator::LiveRunner::new(4, 1_000)
+            .run(Arc::new(mk()) as Arc<dyn BsfProblem>)
+            .unwrap();
+        assert_eq!(live.iterations, seq.iterations);
+        let d: f64 = live
+            .final_approx
+            .iter()
+            .zip(&seq.final_approx)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(d < 1e-10, "dev {d}");
+    }
+
+    #[test]
+    fn nonstationary_b_shifts_linearly() {
+        let ns = NonStationaryCimmino::new(problem(10, 4), (0..10).map(|i| i as f64).collect(), 5);
+        let b0 = ns.b_at(0.0);
+        let b2 = ns.b_at(2.0);
+        for i in 0..10 {
+            assert!((b2[i] - b0[i] - 2.0 * i as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one drift rate per row")]
+    fn nonstationary_drift_len_checked() {
+        NonStationaryCimmino::new(problem(10, 4), vec![0.0; 3], 5);
+    }
+
+    #[test]
+    fn kernel_path_matches_native_when_artifacts_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = KernelRuntime::open(dir).unwrap();
+        // n must have a cimmino artifact (256); m exercises partial blocks.
+        let p = problem(300, 256);
+        let x = p.initial_approx();
+        for r in [0..300usize, 0..256, 100..300] {
+            let native = p.map_fold(r.clone(), &x, None);
+            let kernel = p.map_fold(r.clone(), &x, Some(&rt));
+            let d: f64 = native
+                .iter()
+                .zip(&kernel)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(d < 1e-9, "range {r:?}: dev {d}");
+        }
+    }
+}

@@ -1,0 +1,330 @@
+//! BSF-Gravity (paper §6, Algorithms 5–6): the simplified n-body problem.
+//!
+//! A probe of negligible mass moves among `n` motionless attractors. The
+//! list is the bodies `[(Y_i, m_i)]`; the Map is the per-body acceleration
+//! contribution (eq. 35, with G = 1):
+//!
+//! ```text
+//! f_X(Y_i, m_i) = m_i / ‖Y_i − X‖² · (Y_i − X)
+//! ```
+//!
+//! the fold is 3-vector addition, and the master integrates (eqs. 31–33)
+//! with the adaptive time slot `Δt = η / (‖V‖²·‖α‖⁴)`.
+//!
+//! Downlink encoding: `[X₀ X₁ X₂ | V₀ V₁ V₂ | t]` (7 words — the paper's
+//! analysis charges 3 down / 3 up, eq. `t_c = 6τ_tr + 2L`; the 4 extra
+//! words are ≪ L on any real network and are noted in DESIGN.md).
+//! Uplink: the partial `α` (3 words).
+//!
+//! Analytic costs (paper §6): `t_Map = 17·n·τ_op` (17 ops per body),
+//! `t_a = 3·τ_op`, `Δt` costs 13 ops.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{BsfProblem, CostSpec};
+use crate::linalg::generators::BodyWorkload;
+use crate::runtime::{KernelRuntime, Tensor};
+
+/// Guard matching the Pallas kernel's `_R2_FLOOR` (zero-mass padding makes
+/// it irrelevant numerically; present for bit-equivalence with the kernel).
+const R2_FLOOR: f64 = 1e-30;
+
+/// The BSF-Gravity problem.
+#[derive(Debug)]
+pub struct GravityProblem {
+    bodies: Vec<[f64; 3]>,
+    masses: Vec<f64>,
+    /// Time-slot constant η.
+    pub eta: f64,
+    /// Integration horizon T (Algorithm 5 stops when `t ≥ T`).
+    pub t_end: f64,
+    x0: [f64; 3],
+    v0: [f64; 3],
+    /// Packed `(B,3)` position + `(B,)` mass blocks for the kernel path,
+    /// keyed by `(i0, i1, B)` — iteration-invariant, packed once per
+    /// worker (see EXPERIMENTS.md §Perf).
+    block_cache: Mutex<HashMap<(usize, usize, usize), (Arc<Vec<f64>>, Arc<Vec<f64>>)>>,
+}
+
+impl GravityProblem {
+    /// Build from a generated workload.
+    pub fn new(w: BodyWorkload, eta: f64, t_end: f64) -> GravityProblem {
+        assert_eq!(w.bodies.len(), w.masses.len());
+        GravityProblem {
+            bodies: w.bodies,
+            masses: w.masses,
+            eta,
+            t_end,
+            x0: w.x0,
+            v0: w.v0,
+            block_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Packed `(y_blk, m_blk)` for bodies `i0..i1`, zero-padded to `b`
+    /// slots, cached (the body set never changes between iterations).
+    fn packed_block(&self, i0: usize, i1: usize, b: usize) -> (Arc<Vec<f64>>, Arc<Vec<f64>>) {
+        let mut cache = self.block_cache.lock().expect("block cache poisoned");
+        cache
+            .entry((i0, i1, b))
+            .or_insert_with(|| {
+                let mut y_blk = vec![0.0; b * 3];
+                let mut m_blk = vec![0.0; b];
+                for (slot, i) in (i0..i1).enumerate() {
+                    y_blk[slot * 3..slot * 3 + 3].copy_from_slice(&self.bodies[i]);
+                    m_blk[slot] = self.masses[i];
+                }
+                (Arc::new(y_blk), Arc::new(m_blk))
+            })
+            .clone()
+    }
+
+    /// Number of attractors n.
+    pub fn n(&self) -> usize {
+        self.bodies.len()
+    }
+
+    /// Decode `[X|V|t]` from the downlink payload.
+    fn decode(x: &[f64]) -> ([f64; 3], [f64; 3], f64) {
+        ([x[0], x[1], x[2]], [x[3], x[4], x[5]], x[6])
+    }
+
+    fn native_block(&self, range: Range<usize>, pos: &[f64; 3]) -> [f64; 3] {
+        let mut acc = [0.0f64; 3];
+        for i in range {
+            let y = &self.bodies[i];
+            let d = [y[0] - pos[0], y[1] - pos[1], y[2] - pos[2]];
+            let r2 = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).max(R2_FLOOR);
+            let w = self.masses[i] / r2;
+            acc[0] += w * d[0];
+            acc[1] += w * d[1];
+            acc[2] += w * d[2];
+        }
+        acc
+    }
+}
+
+impl BsfProblem for GravityProblem {
+    fn name(&self) -> &str {
+        "bsf-gravity"
+    }
+
+    fn list_len(&self) -> usize {
+        self.n()
+    }
+
+    fn initial_approx(&self) -> Vec<f64> {
+        vec![
+            self.x0[0], self.x0[1], self.x0[2], self.v0[0], self.v0[1], self.v0[2], 0.0,
+        ]
+    }
+
+    fn map_fold(&self, range: Range<usize>, x: &[f64], kernels: Option<&KernelRuntime>) -> Vec<f64> {
+        let (pos, _v, _t) = Self::decode(x);
+        if range.is_empty() {
+            return vec![0.0; 3];
+        }
+        if let Some(rt) = kernels {
+            if let Some(name) = rt.manifest().gravity_map() {
+                let b = rt.block();
+                let mut acc = [0.0f64; 3];
+                let mut i0 = range.start;
+                while i0 < range.end {
+                    let i1 = (i0 + b).min(range.end);
+                    let (y_blk, m_blk) = self.packed_block(i0, i1, b);
+                    match rt.execute(
+                        &name,
+                        &[
+                            Tensor::mat_shared(y_blk, b, 3),
+                            Tensor::vec_shared(m_blk),
+                            Tensor::vec(pos.to_vec()),
+                        ],
+                    ) {
+                        Ok(outs) => {
+                            acc[0] += outs[0][0];
+                            acc[1] += outs[0][1];
+                            acc[2] += outs[0][2];
+                        }
+                        Err(_) => {
+                            let a = self.native_block(i0..i1, &pos);
+                            acc[0] += a[0];
+                            acc[1] += a[1];
+                            acc[2] += a[2];
+                        }
+                    }
+                    i0 = i1;
+                }
+                return acc.to_vec();
+            }
+        }
+        self.native_block(range, &pos).to_vec()
+    }
+
+    fn fold_identity(&self) -> Vec<f64> {
+        vec![0.0; 3]
+    }
+
+    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
+        for (x, y) in a.iter_mut().zip(&b) {
+            *x += y;
+        }
+        a
+    }
+
+    fn post(&self, x: &[f64], s: &[f64], _iteration: usize) -> (Vec<f64>, bool) {
+        let (pos, v, t) = Self::decode(x);
+        let alpha = [s[0], s[1], s[2]];
+        let v2 = v[0] * v[0] + v[1] * v[1] + v[2] * v[2];
+        let a2 = alpha[0] * alpha[0] + alpha[1] * alpha[1] + alpha[2] * alpha[2];
+        // Δt = η / (‖V‖²·‖α‖⁴); guard the degenerate rest state.
+        let denom = (v2 * a2 * a2).max(R2_FLOOR);
+        let dt = self.eta / denom;
+        let v_new = [v[0] + alpha[0] * dt, v[1] + alpha[1] * dt, v[2] + alpha[2] * dt];
+        let x_new = [pos[0] + v_new[0] * dt, pos[1] + v_new[1] * dt, pos[2] + v_new[2] * dt];
+        let t_new = t + dt;
+        let stop = t_new >= self.t_end;
+        (
+            vec![x_new[0], x_new[1], x_new[2], v_new[0], v_new[1], v_new[2], t_new],
+            stop,
+        )
+    }
+
+    fn cost_spec(&self) -> CostSpec {
+        CostSpec {
+            l: self.n(),
+            // Actual payloads ([X|V|t] down, α up); the paper charges 3/3 —
+            // the 4-word delta is ≪ L (see module docs).
+            words_down: 7,
+            words_up: 3,
+            // paper §6: t_Map = 17·n·τ_op.
+            ops_map_per_elem: 17.0,
+            // t_a = 3·τ_op (3-vector add).
+            ops_combine: 3.0,
+            // Δt rule (13 ops) + V,X updates (12 ops) + compare.
+            ops_post: 26.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_sequential, LiveRunner};
+    use crate::linalg::generators::random_bodies;
+    use std::sync::Arc;
+
+    fn problem(n: usize) -> GravityProblem {
+        // With ~n/10 effective |α| the Δt rule gives steps of ~1e-7 s here;
+        // a 2e-6 horizon keeps the tests at tens of iterations.
+        GravityProblem::new(random_bodies(n, 5.0, 42), 1e-3, 2e-6)
+    }
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        p.join("manifest.json").exists().then(|| p.to_path_buf())
+    }
+
+    #[test]
+    fn sequential_advances_time_to_horizon() {
+        let p = problem(128);
+        let r = run_sequential(&p, 10_000, None);
+        assert!(r.converged, "did not reach T in {} iters", r.iterations);
+        let t = r.final_approx[6];
+        assert!(t >= 2e-6, "t={t}");
+    }
+
+    #[test]
+    fn live_matches_sequential() {
+        let seq = run_sequential(&problem(96), 10_000, None);
+        for k in [1usize, 2, 5] {
+            let p: Arc<dyn BsfProblem> = Arc::new(problem(96));
+            let live = LiveRunner::new(k, 10_000).run(p).unwrap();
+            assert_eq!(live.iterations, seq.iterations, "k={k}");
+            let d: f64 = live
+                .final_approx
+                .iter()
+                .zip(&seq.final_approx)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(d < 1e-9, "k={k}: dev {d}");
+        }
+    }
+
+    #[test]
+    fn acceleration_points_toward_single_attractor() {
+        let w = BodyWorkload {
+            bodies: vec![[10.0, 0.0, 0.0]],
+            masses: vec![2.0],
+            x0: [0.0; 3],
+            v0: [1.0, 0.0, 0.0],
+        };
+        let p = GravityProblem::new(w, 1e-2, 1.0);
+        let x = p.initial_approx();
+        let a = p.map_fold(0..1, &x, None);
+        // d = (10,0,0), r² = 100 → α = 2/100·(10,0,0) = (0.2, 0, 0)
+        assert!((a[0] - 0.2).abs() < 1e-15);
+        assert_eq!(&a[1..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn delta_t_rule() {
+        let w = BodyWorkload {
+            bodies: vec![[1.0, 0.0, 0.0]],
+            masses: vec![1.0],
+            x0: [0.0; 3],
+            v0: [3.0, 0.0, 0.0], // ‖V‖² = 9
+        };
+        let p = GravityProblem::new(w, 9.0, 100.0);
+        let x = p.initial_approx();
+        // α = (1,0,0) → ‖α‖⁴ = 1 → Δt = 9/(9·1) = 1
+        let (next, _stop) = p.post(&x, &[1.0, 0.0, 0.0], 0);
+        let t_new = next[6];
+        assert!((t_new - 1.0).abs() < 1e-12, "Δt={t_new}");
+        // V' = (4,0,0); X' = (4,0,0)
+        assert!((next[3] - 4.0).abs() < 1e-12);
+        assert!((next[0] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn promotion_over_ranges() {
+        let p = problem(100);
+        let x = p.initial_approx();
+        let full = p.map_fold(0..100, &x, None);
+        let mut acc = p.fold_identity();
+        for r in [0..29usize, 29..60, 60..100] {
+            acc = p.combine(acc, p.map_fold(r, &x, None));
+        }
+        for (a, b) in acc.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cost_spec_matches_paper() {
+        let cs = problem(300).cost_spec();
+        assert_eq!(cs.l, 300);
+        assert_eq!(cs.ops_map_per_elem, 17.0);
+        assert_eq!(cs.ops_combine, 3.0);
+        assert_eq!(cs.words_up, 3);
+    }
+
+    #[test]
+    fn kernel_path_matches_native_when_artifacts_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = KernelRuntime::open(dir).unwrap();
+        let p = problem(300); // forces a partial final block (300 = 256+44)
+        let x = p.initial_approx();
+        for r in [0..300usize, 0..256, 100..300, 10..50] {
+            let native = p.map_fold(r.clone(), &x, None);
+            let kernel = p.map_fold(r.clone(), &x, Some(&rt));
+            for (a, b) in native.iter().zip(&kernel) {
+                assert!((a - b).abs() < 1e-9, "range {r:?}");
+            }
+        }
+    }
+}

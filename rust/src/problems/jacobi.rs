@@ -1,0 +1,295 @@
+//! BSF-Jacobi (paper §5, Algorithms 3–4).
+//!
+//! The Jacobi iteration `x' = Cx + d` specified on lists: the list is
+//! `G = [1..n]`, the Map is `F_x(j) = x_j · c_j` (eq. 16), the fold is
+//! vector addition, and the master's Compute/StopCond are `x' = s + d`
+//! and `‖x' − x‖² < ε` (Algorithm 3 steps 5/7).
+//!
+//! A worker's sublist folding is the column-block matvec
+//! `C[:, range] @ x[range]`, executed through the AOT Pallas kernel
+//! (`jacobi_map_n{n}`, block width B) when an artifact for this `n`
+//! exists, and through [`Matrix::col_block_matvec_acc`] natively
+//! otherwise. Padding with zero columns is exact (tested in
+//! `python/tests` and here).
+//!
+//! Analytic cost parameters (eqs. 17–23): `c_c = 2n`, `c_Map = n²`
+//! (`n` ops per element), `c_a = n`.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::Mutex;
+
+use crate::coordinator::{BsfProblem, CostSpec};
+use crate::linalg::generators::LinearSystem;
+use crate::linalg::{sq_norm2, sub, Matrix};
+use crate::runtime::{KernelRuntime, Tensor};
+
+/// The BSF-Jacobi problem over a linear system.
+#[derive(Debug)]
+pub struct JacobiProblem {
+    sys: LinearSystem,
+    /// Termination threshold ε on `‖x' − x‖²`.
+    pub epsilon: f64,
+    /// Packed `(n, B)` column blocks for the kernel path, keyed by
+    /// `(j0, j1, B)`. The blocks are iteration-invariant, so each worker
+    /// packs its blocks once and replays them every iteration — without
+    /// this cache the hot path spends more time copying the matrix than
+    /// multiplying it (see EXPERIMENTS.md §Perf).
+    block_cache: Mutex<HashMap<(usize, usize, usize), std::sync::Arc<Vec<f64>>>>,
+}
+
+impl JacobiProblem {
+    /// Wrap a linear system (see [`crate::linalg::generators`]).
+    pub fn new(sys: LinearSystem, epsilon: f64) -> JacobiProblem {
+        JacobiProblem { sys, epsilon, block_cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Packed column block `C[:, j0..j1]` padded to `b` columns, cached.
+    fn packed_block(&self, j0: usize, j1: usize, b: usize) -> std::sync::Arc<Vec<f64>> {
+        let mut cache = self.block_cache.lock().expect("block cache poisoned");
+        cache
+            .entry((j0, j1, b))
+            .or_insert_with(|| std::sync::Arc::new(self.sys.c.col_block_padded(j0, j1, b)))
+            .clone()
+    }
+
+    /// Dimension n.
+    pub fn n(&self) -> usize {
+        self.sys.n()
+    }
+
+    /// The underlying system (residual checks in tests/examples).
+    pub fn system(&self) -> &LinearSystem {
+        &self.sys
+    }
+
+    /// Iteration matrix C (used by the fused sequential path).
+    pub fn c(&self) -> &Matrix {
+        &self.sys.c
+    }
+
+    /// Kernel-backed column-block matvec over `range`, in blocks of the
+    /// artifact's width B; falls back to native when no artifact matches n.
+    fn map_fold_impl(&self, range: Range<usize>, x: &[f64], kernels: Option<&KernelRuntime>) -> Vec<f64> {
+        let n = self.n();
+        let mut acc = vec![0.0; n];
+        if range.is_empty() {
+            return acc;
+        }
+        if let Some(rt) = kernels {
+            if let Some(name) = rt.manifest().jacobi_map(n) {
+                let b = rt.block();
+                let mut j0 = range.start;
+                while j0 < range.end {
+                    let j1 = (j0 + b).min(range.end);
+                    let c_blk = self.packed_block(j0, j1, b);
+                    let mut x_blk = vec![0.0; b];
+                    x_blk[..j1 - j0].copy_from_slice(&x[j0..j1]);
+                    match rt.execute(
+                        &name,
+                        &[Tensor::mat_shared(c_blk, n, b), Tensor::vec(x_blk)],
+                    ) {
+                        Ok(outs) => {
+                            for (a, v) in acc.iter_mut().zip(&outs[0]) {
+                                *a += v;
+                            }
+                        }
+                        Err(_) => {
+                            // Artifact mismatch mid-run: fall back natively
+                            // for this block (keeps the iteration correct).
+                            self.sys.c.col_block_matvec_acc(j0, j1, &x[j0..j1], &mut acc);
+                        }
+                    }
+                    j0 = j1;
+                }
+                return acc;
+            }
+        }
+        self.sys.c.col_block_matvec_acc(range.start, range.end, &x[range], &mut acc);
+        acc
+    }
+}
+
+impl BsfProblem for JacobiProblem {
+    fn name(&self) -> &str {
+        "bsf-jacobi"
+    }
+
+    fn list_len(&self) -> usize {
+        self.n()
+    }
+
+    fn initial_approx(&self) -> Vec<f64> {
+        // Algorithm 3 step 2: x⁽⁰⁾ := d.
+        self.sys.d.clone()
+    }
+
+    fn map_fold(&self, range: Range<usize>, x: &[f64], kernels: Option<&KernelRuntime>) -> Vec<f64> {
+        self.map_fold_impl(range, x, kernels)
+    }
+
+    fn fold_identity(&self) -> Vec<f64> {
+        vec![0.0; self.n()]
+    }
+
+    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
+        for (x, y) in a.iter_mut().zip(&b) {
+            *x += y;
+        }
+        a
+    }
+
+    fn post(&self, x: &[f64], s: &[f64], _iteration: usize) -> (Vec<f64>, bool) {
+        // x' = s + d; stop when ‖x' − x‖² < ε.
+        let next: Vec<f64> = s.iter().zip(&self.sys.d).map(|(si, di)| si + di).collect();
+        let stop = sq_norm2(&sub(&next, x)) < self.epsilon;
+        (next, stop)
+    }
+
+    fn cost_spec(&self) -> CostSpec {
+        let n = self.n();
+        CostSpec {
+            l: n,
+            words_down: n,
+            words_up: n,
+            // eq. (18): c_Map = n² ⇒ n ops per list element.
+            ops_map_per_elem: n as f64,
+            // eq. (19): c_a = n.
+            ops_combine: n as f64,
+            // x' = s + d (n adds) + ‖x'−x‖² (3n ops) + compare.
+            ops_post: 4.0 * n as f64 + 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_sequential, LiveRunner};
+    use crate::linalg::generators::{dominant_system, paper_system};
+    use std::sync::Arc;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        p.join("manifest.json").exists().then(|| p.to_path_buf())
+    }
+
+    #[test]
+    fn sequential_converges_on_dominant_system() {
+        let p = JacobiProblem::new(dominant_system(64), 1e-24);
+        let r = run_sequential(&p, 500, None);
+        assert!(r.converged);
+        let err: f64 = r.final_approx.iter().map(|v| (v - 1.0).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-10, "max err {err}");
+        assert!(p.system().residual(&r.final_approx) < 1e-8);
+    }
+
+    #[test]
+    fn live_matches_sequential_bitwise_shape() {
+        let seq = run_sequential(&JacobiProblem::new(dominant_system(96), 1e-24), 500, None);
+        for k in [1usize, 3, 8] {
+            let p: Arc<dyn BsfProblem> = Arc::new(JacobiProblem::new(dominant_system(96), 1e-24));
+            let live = LiveRunner::new(k, 500).run(p).unwrap();
+            assert!(live.converged, "k={k}");
+            assert_eq!(live.iterations, seq.iterations, "k={k}");
+            let d: f64 = live
+                .final_approx
+                .iter()
+                .zip(&seq.final_approx)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(d < 1e-12, "k={k}: dev {d}");
+        }
+    }
+
+    #[test]
+    fn map_fold_partials_satisfy_promotion() {
+        let p = JacobiProblem::new(paper_system(50), 1e-12);
+        let x: Vec<f64> = (0..50).map(|i| (i as f64 * 0.37).sin()).collect();
+        let full = p.map_fold(0..50, &x, None);
+        let mut acc = p.fold_identity();
+        for r in [0..13usize, 13..37, 37..50] {
+            acc = p.combine(acc, p.map_fold(r, &x, None));
+        }
+        for (a, b) in acc.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // full map-fold equals C x
+        let cx = p.c().matvec(&x);
+        for (a, b) in full.iter().zip(&cx) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_range_returns_identity() {
+        let p = JacobiProblem::new(paper_system(10), 1e-12);
+        let x = vec![1.0; 10];
+        assert_eq!(p.map_fold(5..5, &x, None), vec![0.0; 10]);
+    }
+
+    #[test]
+    fn cost_spec_matches_paper_eqs() {
+        let p = JacobiProblem::new(paper_system(100), 1e-12);
+        let cs = p.cost_spec();
+        assert_eq!(cs.l, 100);
+        assert_eq!(cs.words_down, 100); // c_c = 2n total
+        assert_eq!(cs.words_up, 100);
+        assert_eq!(cs.ops_map_per_elem, 100.0); // c_Map = n²
+        assert_eq!(cs.ops_combine, 100.0); // c_a = n
+    }
+
+    /// eq. (24) reproduced through the generic machinery: plugging the
+    /// Jacobi CostSpec into the closed form must equal the paper's
+    /// specialised K_BSF-Jacobi equation.
+    #[test]
+    fn k_bsf_jacobi_closed_form_eq24() {
+        let n = 10_000usize;
+        let tau_op = 1e-9;
+        let net = crate::net::NetworkParams { latency: 1.5e-5, tau_tr: 9.13e-8 };
+        let p = JacobiProblem::new(paper_system(64), 1e-12); // system size irrelevant here
+        let mut cs = p.cost_spec();
+        // rescale the spec to dimension n analytically
+        cs.l = n;
+        cs.words_down = n;
+        cs.words_up = n;
+        cs.ops_map_per_elem = n as f64;
+        cs.ops_combine = n as f64;
+        let params = cs.cost_params(tau_op, &net);
+        let k_generic = crate::model::BsfModel::new(params).k_bsf();
+        // Paper's specialised eq. (24) (exact-root form; see model::bsf):
+        // K = 1/2 sqrt(c² + 4(n + n)) − c/2 with c = (nτ_tr + L)·2/(n τ_op ln2)
+        let c = 2.0 * (n as f64 * net.tau_tr + net.latency)
+            / (n as f64 * tau_op * std::f64::consts::LN_2);
+        let k_eq24 = 0.5 * (c * c + 4.0 * (n as f64 + n as f64)).sqrt() - 0.5 * c;
+        assert!(
+            (k_generic - k_eq24).abs() < 1e-9,
+            "generic={k_generic} eq24={k_eq24}"
+        );
+        // and the asymptotic law: K ≈ O(√n)
+        assert!((k_eq24 / (n as f64).sqrt() - 1.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn kernel_path_matches_native_when_artifacts_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = KernelRuntime::open(dir).unwrap();
+        let n = 256;
+        let p = JacobiProblem::new(paper_system(n), 1e-12);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.11).cos()).collect();
+        // ranges that exercise partial blocks and multi-block spans
+        for r in [0..n, 0..100usize, 100..256, 17..250] {
+            let native = p.map_fold(r.clone(), &x, None);
+            let kernel = p.map_fold(r.clone(), &x, Some(&rt));
+            let d: f64 = native
+                .iter()
+                .zip(&kernel)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            assert!(d < 1e-9, "range {r:?}: dev {d}");
+        }
+    }
+}

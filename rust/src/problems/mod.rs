@@ -1,0 +1,31 @@
+//! The paper's BSF applications, each an implementation of
+//! [`crate::coordinator::BsfProblem`]:
+//!
+//! * [`JacobiProblem`] — §5's BSF-Jacobi: `x' = Cx + d` with the Map
+//!   `F_x(j) = x_j·c_j` over the column list, fold = vector addition
+//!   (eqs. 16–24).
+//! * [`GravityProblem`] — §6's BSF-Gravity: the simplified n-body problem,
+//!   Map = per-body gravitational acceleration (eq. 35), fold = 3-vector
+//!   addition (eq. 36).
+//! * [`CimminoProblem`] — the non-stationary linear-inequalities solver of
+//!   paper ref [31]: Map = per-row projection correction, fold = vector
+//!   addition.
+//! * [`MonteCarloPi`] — a Map-only algorithm (§7 Q2, ref [33]): `t_a ≈ 0`,
+//!   exercising the model outside the closed-form's `t_a > 0` assumption.
+//!
+//! Every problem provides: a kernel-backed `map_fold` (PJRT artifacts from
+//! the L1 Pallas kernels, with a bit-compatible native-Rust fallback for
+//! sizes without artifacts), the paper's analytic [`CostSpec`], and a
+//! sequential reference implementation used by the test suite.
+//!
+//! [`CostSpec`]: crate::coordinator::CostSpec
+
+mod cimmino;
+mod gravity;
+mod jacobi;
+mod montecarlo;
+
+pub use cimmino::{CimminoProblem, NonStationaryCimmino};
+pub use gravity::GravityProblem;
+pub use jacobi::JacobiProblem;
+pub use montecarlo::MonteCarloPi;

@@ -1,0 +1,162 @@
+//! Map-only Monte-Carlo π estimator (§7 Q2, paper ref [33]).
+//!
+//! Demonstrates the BSF model on an algorithm whose `⊕` is effectively
+//! free: the list is `l` sample *strata*, the Map of stratum `j` at
+//! iteration `i` draws `samples_per_item` quasi-random points and counts
+//! hits inside the unit quarter-circle; the fold is scalar addition
+//! (`t_a ≈ 0`, so the closed-form boundary does not apply and
+//! [`crate::model::BsfModel::k_bsf_numeric`] must be used — exactly the
+//! §7-Q2 discussion).
+//!
+//! The iteration refines a running estimate: `x' = (i·x + π̂_i)/(i+1)`
+//! (streaming mean of per-iteration estimates), stopping when the update
+//! changes the estimate by less than ε or at the iteration cap.
+//!
+//! Downlink encoding: `[estimate, iteration]`; uplink: `[hits]`.
+
+use std::ops::Range;
+
+use crate::coordinator::{BsfProblem, CostSpec};
+use crate::runtime::KernelRuntime;
+use crate::util::Rng;
+
+/// Map-only Monte-Carlo π estimation.
+#[derive(Debug)]
+pub struct MonteCarloPi {
+    /// Number of strata (the list length `l`).
+    pub strata: usize,
+    /// Points drawn per stratum per iteration.
+    pub samples_per_item: usize,
+    /// Stop when `|x' − x| < ε`.
+    pub epsilon: f64,
+    /// Base seed (per-stratum streams are derived deterministically).
+    pub seed: u64,
+}
+
+impl MonteCarloPi {
+    /// Construct with the given sampling plan.
+    pub fn new(strata: usize, samples_per_item: usize, epsilon: f64, seed: u64) -> MonteCarloPi {
+        MonteCarloPi { strata, samples_per_item, epsilon, seed }
+    }
+
+    fn hits_for(&self, stratum: usize, iteration: u64) -> u64 {
+        // Independent deterministic stream per (stratum, iteration).
+        let mut rng = Rng::new(
+            self.seed ^ (stratum as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ iteration.wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        let mut hits = 0u64;
+        for _ in 0..self.samples_per_item {
+            let x = rng.uniform();
+            let y = rng.uniform();
+            if x * x + y * y <= 1.0 {
+                hits += 1;
+            }
+        }
+        hits
+    }
+}
+
+impl BsfProblem for MonteCarloPi {
+    fn name(&self) -> &str {
+        "monte-carlo-pi"
+    }
+
+    fn list_len(&self) -> usize {
+        self.strata
+    }
+
+    fn initial_approx(&self) -> Vec<f64> {
+        vec![0.0, 0.0] // [estimate, iteration]
+    }
+
+    fn map_fold(&self, range: Range<usize>, x: &[f64], _kernels: Option<&KernelRuntime>) -> Vec<f64> {
+        let iteration = x[1] as u64;
+        let hits: u64 = range.map(|j| self.hits_for(j, iteration)).sum();
+        vec![hits as f64]
+    }
+
+    fn fold_identity(&self) -> Vec<f64> {
+        vec![0.0]
+    }
+
+    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
+        a[0] += b[0];
+        a
+    }
+
+    fn post(&self, x: &[f64], s: &[f64], iteration: usize) -> (Vec<f64>, bool) {
+        let total = (self.strata * self.samples_per_item) as f64;
+        let pi_i = 4.0 * s[0] / total;
+        let i = iteration as f64;
+        let next = (i * x[0] + pi_i) / (i + 1.0);
+        let stop = iteration > 0 && (next - x[0]).abs() < self.epsilon;
+        (vec![next, (iteration + 1) as f64], stop)
+    }
+
+    fn cost_spec(&self) -> CostSpec {
+        CostSpec {
+            l: self.strata,
+            words_down: 2,
+            words_up: 1,
+            // per stratum: samples × (2 draws + 3 mults + compare) ≈ 6 ops
+            ops_map_per_elem: 6.0 * self.samples_per_item as f64,
+            // scalar add — the t_a ≈ 0 regime.
+            ops_combine: 1.0,
+            ops_post: 6.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_sequential, LiveRunner};
+    use std::sync::Arc;
+
+    fn problem() -> MonteCarloPi {
+        MonteCarloPi::new(512, 64, 1e-5, 0xC0FFEE)
+    }
+
+    #[test]
+    fn estimates_pi() {
+        let p = problem();
+        let r = run_sequential(&p, 200, None);
+        let pi = r.final_approx[0];
+        assert!((pi - std::f64::consts::PI).abs() < 0.02, "π̂ = {pi}");
+    }
+
+    #[test]
+    fn live_matches_sequential_exactly() {
+        // Deterministic per-(stratum, iteration) streams ⇒ the parallel
+        // run must produce the *same* estimate bit-for-bit.
+        let seq = run_sequential(&problem(), 50, None);
+        for k in [2usize, 5] {
+            let p: Arc<dyn BsfProblem> = Arc::new(problem());
+            let live = LiveRunner::new(k, 50).run(p).unwrap();
+            assert_eq!(live.iterations, seq.iterations);
+            assert_eq!(live.final_approx[0].to_bits(), seq.final_approx[0].to_bits(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn map_only_cost_spec_has_tiny_combine() {
+        let cs = problem().cost_spec();
+        assert_eq!(cs.ops_combine, 1.0);
+        // the numeric boundary path must be used (closed form asserts t_a>0)
+        let params = cs.cost_params(1e-9, &crate::net::NetworkParams::tornado_susu());
+        let m = crate::model::BsfModel::new(params);
+        let k = m.k_bsf_numeric(4_096);
+        assert!(k >= 1);
+    }
+
+    #[test]
+    fn stratum_streams_differ() {
+        let p = problem();
+        let a = p.hits_for(0, 0);
+        let b = p.hits_for(1, 0);
+        let c = p.hits_for(0, 1);
+        // not all equal (independent streams)
+        assert!(!(a == b && b == c), "streams look identical");
+    }
+}

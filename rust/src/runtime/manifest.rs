@@ -1,0 +1,192 @@
+//! Artifact manifest (`artifacts/manifest.json`) parsing + validation.
+//!
+//! `python/compile/aot.py` records, per artifact, the file name and the
+//! input/output tensor specs of the lowered computation. The runtime
+//! validates every `execute` call against these specs, so a stale artifact
+//! directory fails loudly instead of feeding PJRT mis-shaped buffers.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+use crate::util::Json;
+
+/// Shape + dtype of one tensor parameter or result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimensions (empty = scalar).
+    pub shape: Vec<usize>,
+    /// Dtype string as recorded by JAX (the whole stack uses `float64`).
+    pub dtype: String,
+}
+
+/// One artifact's metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// HLO text file name, relative to the artifact directory.
+    pub file: String,
+    /// Input tensor specs, in parameter order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs (the lowering always returns a tuple).
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Worker block width `B` the kernels were compiled for.
+    pub block: usize,
+    /// Matrix sizes `n` with per-size artifacts.
+    pub sizes: Vec<usize>,
+    /// Artifact name → metadata.
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tensor spec missing 'shape'"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("tensor spec missing 'dtype'"))?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    /// Parse `manifest.json` source text.
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let root = Json::parse(src).context("parsing manifest.json")?;
+        let block = root
+            .get("block")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing 'block'"))?;
+        let sizes = root
+            .get("sizes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'sizes'"))?
+            .iter()
+            .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad size")))
+            .collect::<Result<Vec<_>>>()?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = HashMap::with_capacity(arts.len());
+        for (name, entry) in arts {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing 'file'"))?
+                .to_string();
+            let inputs = entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing 'inputs'"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing 'outputs'"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(name.clone(), ArtifactMeta { file, inputs, outputs });
+        }
+        Ok(Manifest { block, sizes, artifacts })
+    }
+
+    /// Name of the Jacobi map-block artifact for dimension `n`, if compiled.
+    pub fn jacobi_map(&self, n: usize) -> Option<String> {
+        let name = format!("jacobi_map_n{n}");
+        self.artifacts.contains_key(&name).then_some(name)
+    }
+
+    /// Name of the gravity map-block artifact (block width = `self.block`).
+    pub fn gravity_map(&self) -> Option<String> {
+        let name = format!("gravity_map_b{}", self.block);
+        self.artifacts.contains_key(&name).then_some(name)
+    }
+
+    /// Name of the Cimmino map-block artifact for dimension `n`.
+    pub fn cimmino_map(&self, n: usize) -> Option<String> {
+        let name = format!("cimmino_map_n{n}");
+        self.artifacts.contains_key(&name).then_some(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "block": 256,
+      "sizes": [256],
+      "artifacts": {
+        "jacobi_map_n256": {
+          "file": "jacobi_map_n256.hlo.txt",
+          "inputs": [
+            {"shape": [256, 256], "dtype": "float64"},
+            {"shape": [256], "dtype": "float64"}
+          ],
+          "outputs": [{"shape": [256], "dtype": "float64"}],
+          "sha256": "x"
+        },
+        "gravity_map_b256": {
+          "file": "gravity_map_b256.hlo.txt",
+          "inputs": [
+            {"shape": [256, 3], "dtype": "float64"},
+            {"shape": [256], "dtype": "float64"},
+            {"shape": [3], "dtype": "float64"}
+          ],
+          "outputs": [{"shape": [3], "dtype": "float64"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.block, 256);
+        assert_eq!(m.sizes, vec![256]);
+        let j = &m.artifacts["jacobi_map_n256"];
+        assert_eq!(j.inputs.len(), 2);
+        assert_eq!(j.inputs[0].shape, vec![256, 256]);
+        assert_eq!(j.outputs[0].dtype, "float64");
+    }
+
+    #[test]
+    fn name_helpers() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.jacobi_map(256), Some("jacobi_map_n256".into()));
+        assert_eq!(m.jacobi_map(512), None);
+        assert_eq!(m.gravity_map(), Some("gravity_map_b256".into()));
+        assert_eq!(m.cimmino_map(256), None);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"block": 1, "sizes": []}"#).is_err());
+        let bad = r#"{"block": 1, "sizes": [], "artifacts": {"a": {"file": "f"}}}"#;
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // When `make artifacts` has run, validate the real manifest too.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(src) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&src).unwrap();
+            assert!(m.jacobi_map(256).is_some());
+            assert!(m.gravity_map().is_some());
+            assert!(!m.artifacts.is_empty());
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`) built once
+//! by `make artifacts` and executes them from the Rust hot path.
+//!
+//! Python never runs here: the HLO text (lowered from the L2 JAX model and
+//! L1 Pallas kernels) is parsed by XLA's C++ HLO parser
+//! (`HloModuleProto::from_text_file`), compiled by the PJRT CPU client, and
+//! cached per artifact name. See `/opt/xla-example/README.md` for why text —
+//! not serialized protos — is the interchange format.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so each worker thread owns its
+//! own [`KernelRuntime`]; compilation happens once per thread per artifact
+//! and is excluded from calibration timings (the BSF model's "iterative
+//! algorithm" assumption: initialization cost is negligible against the
+//! iterative process).
+
+mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest, TensorSpec};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A tensor argument: f64 data plus dimensions (row-major).
+///
+/// The payload is `Arc`-shared so iteration-invariant inputs (a worker's
+/// packed matrix blocks) can be replayed every iteration without copying
+/// megabytes on the hot path.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    /// Row-major payload (shared).
+    pub data: std::sync::Arc<Vec<f64>>,
+    /// Dimensions (empty = scalar).
+    pub dims: Vec<usize>,
+}
+
+impl Tensor {
+    /// Vector tensor.
+    pub fn vec(data: Vec<f64>) -> Tensor {
+        let dims = vec![data.len()];
+        Tensor { data: std::sync::Arc::new(data), dims }
+    }
+
+    /// Matrix tensor (row-major `rows × cols`).
+    pub fn mat(data: Vec<f64>, rows: usize, cols: usize) -> Tensor {
+        assert_eq!(data.len(), rows * cols);
+        Tensor { data: std::sync::Arc::new(data), dims: vec![rows, cols] }
+    }
+
+    /// Matrix tensor over pre-shared data (zero-copy hot path).
+    pub fn mat_shared(data: std::sync::Arc<Vec<f64>>, rows: usize, cols: usize) -> Tensor {
+        assert_eq!(data.len(), rows * cols);
+        Tensor { data, dims: vec![rows, cols] }
+    }
+
+    /// Vector tensor over pre-shared data (zero-copy hot path).
+    pub fn vec_shared(data: std::sync::Arc<Vec<f64>>) -> Tensor {
+        let dims = vec![data.len()];
+        Tensor { data, dims }
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(x: f64) -> Tensor {
+        Tensor { data: std::sync::Arc::new(vec![x]), dims: vec![] }
+    }
+
+    /// Element count implied by dims.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    /// True when the tensor holds no data (zero-sized dims).
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Per-thread PJRT runtime: one CPU client + compiled-executable cache +
+/// device-buffer cache for iteration-invariant inputs.
+pub struct KernelRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Payloads pinned alive for the buffer cache (address-keyed).
+    pinned: RefCell<Vec<std::sync::Arc<Vec<f64>>>>,
+    /// Device buffers for shared tensors, keyed by the `Arc` payload's
+    /// address (stable for the tensor's lifetime). A worker's packed
+    /// matrix blocks are uploaded once and replayed every iteration —
+    /// without this the hot path re-uploads megabytes per call (see
+    /// EXPERIMENTS.md §Perf).
+    buffers: RefCell<HashMap<usize, Rc<xla::PjRtBuffer>>>,
+}
+
+impl std::fmt::Debug for KernelRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KernelRuntime")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.manifest.artifacts.len())
+            .field("compiled", &self.cache.borrow().len())
+            .finish()
+    }
+}
+
+impl KernelRuntime {
+    /// Open the artifact directory (reads + validates `manifest.json`,
+    /// creates the PJRT CPU client). Fails if the directory or manifest is
+    /// missing — run `make artifacts` first.
+    pub fn open(dir: impl AsRef<Path>) -> Result<KernelRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`?)"))?;
+        let manifest = Manifest::parse(&src)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(KernelRuntime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            pinned: RefCell::new(Vec::new()),
+            buffers: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Worker block width `B` the artifacts were compiled for.
+    pub fn block(&self) -> usize {
+        self.manifest.block
+    }
+
+    /// Whether an artifact exists for `name`.
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.artifacts.contains_key(name)
+    }
+
+    /// The compiled executable for `name`, compiling and caching on first
+    /// use.
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?;
+        let path = self.dir.join(&meta.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(wrap_xla)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).map_err(wrap_xla)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (so first-use cost is excluded from timed
+    /// sections).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Execute artifact `name` on the given inputs; returns the tuple of
+    /// outputs as flat f64 vectors. Input shapes are validated against the
+    /// manifest.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f64>>> {
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.dims != spec.shape {
+                bail!(
+                    "artifact '{name}' input {i}: shape {:?} != manifest {:?}",
+                    t.dims,
+                    spec.shape
+                );
+            }
+            if t.data.len() != t.len() {
+                bail!(
+                    "artifact '{name}' input {i}: data length {} != dims product {}",
+                    t.data.len(),
+                    t.len()
+                );
+            }
+        }
+        let exe = self.executable(name)?;
+        let buffers: Vec<Rc<xla::PjRtBuffer>> = inputs
+            .iter()
+            .map(|t| self.device_buffer(t))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = buffers.iter().map(|b| b.as_ref()).collect();
+        let result = exe.execute_b(&refs).map_err(wrap_xla)?;
+        let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+        // All artifacts are lowered with return_tuple=True.
+        let parts = tuple.to_tuple().map_err(wrap_xla)?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f64>().map_err(wrap_xla)?);
+        }
+        Ok(out)
+    }
+
+    /// Device buffer for a tensor. Shared tensors (anything also held by a
+    /// problem's block cache, detected by `Arc` refcount) are uploaded once
+    /// and cached by payload address — the cache co-owns the `Arc`, so the
+    /// address stays valid for the cache's lifetime. Ephemeral tensors
+    /// (per-iteration payloads) are uploaded per call.
+    fn device_buffer(&self, t: &Tensor) -> Result<Rc<xla::PjRtBuffer>> {
+        let shared = std::sync::Arc::strong_count(&t.data) > 1;
+        if shared {
+            let key = std::sync::Arc::as_ptr(&t.data) as usize;
+            if let Some(buf) = self.buffers.borrow().get(&key) {
+                return Ok(buf.clone());
+            }
+            let buf = Rc::new(
+                self.client
+                    .buffer_from_host_buffer::<f64>(&t.data, &t.dims, None)
+                    .map_err(wrap_xla)?,
+            );
+            // Keep the payload alive so its address cannot be recycled
+            // while the cached buffer exists.
+            self.pinned.borrow_mut().push(t.data.clone());
+            self.buffers.borrow_mut().insert(key, buf.clone());
+            Ok(buf)
+        } else {
+            Ok(Rc::new(
+                self.client
+                    .buffer_from_host_buffer::<f64>(&t.data, &t.dims, None)
+                    .map_err(wrap_xla)?,
+            ))
+        }
+    }
+
+    /// Number of compiled (cached) executables.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Number of cached device buffers.
+    pub fn buffer_count(&self) -> usize {
+        self.buffers.borrow().len()
+    }
+}
+
+/// Convert the xla crate's error (non-`Sync`) into an anyhow error.
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_constructors() {
+        let v = Tensor::vec(vec![1.0, 2.0]);
+        assert_eq!(v.dims, vec![2]);
+        let m = Tensor::mat(vec![0.0; 6], 2, 3);
+        assert_eq!(m.dims, vec![2, 3]);
+        assert_eq!(m.len(), 6);
+        let s = Tensor::scalar(5.0);
+        assert!(s.dims.is_empty());
+        assert_eq!(s.len(), 1);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mat_size_checked() {
+        Tensor::mat(vec![0.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn open_missing_dir_fails_helpfully() {
+        let err = KernelRuntime::open("/nonexistent/artifacts").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

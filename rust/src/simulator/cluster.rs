@@ -1,0 +1,634 @@
+//! Algorithm-2 timeline simulation on the task-graph engine.
+//!
+//! One simulated iteration reproduces the exact structure of the paper's
+//! Algorithm 2:
+//!
+//! 1. master broadcasts the current approximation (tree or linear);
+//! 2. every worker executes Map over its sublist and folds it locally
+//!    (`chunk` map applications + `chunk − 1` applications of `⊕`);
+//! 3. the partial foldings are reduced back to the master (in-tree folding,
+//!    like `MPI_Reduce`, or gather-then-fold, like the cost metric's
+//!    `(K−1)·t_a` term assumes — an explicit [`ReduceMode`]);
+//! 4. the master post-processes (`Compute` + `StopCond`, cost `t_p`) and
+//!    broadcasts the exit flag (latency-only payload).
+//!
+//! Node compute/communication steps occupy their node's serial resource, so
+//! e.g. a binomial-tree root that must send to `log K` children pays for
+//! each send — the engine captures pipelining and stragglers that the
+//! closed-form eq. (8) averages away.
+
+use crate::net::{CollectiveAlgo, CollectiveSchedule, NetworkParams};
+use crate::simulator::engine::{Engine, TaskId};
+use crate::util::Rng;
+
+/// How partial foldings travel back to the master.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceMode {
+    /// The configuration eq. (8) models and the BSF-skeleton implements:
+    /// partials relay to the master over a binomial tree (depth
+    /// `⌈log2(K+1)⌉`, constant message size — the paper's simplification),
+    /// then the master applies `⊕` K−1 times (the `(K−1)·t_a` term).
+    TreeMasterFold,
+    /// `MPI_Reduce`: tree schedule, each merge folds at the receiving node
+    /// — only ~log K fold applications on the critical path, so the
+    /// speedup peaks *later* than eq. (8) predicts (ablation ABL1).
+    InTree,
+    /// Flat `MPI_Gather` + master-side fold: K messages serialising at the
+    /// master NIC then K−1 folds — linear communication, the pessimistic
+    /// extreme (ablation ABL1).
+    GatherThenFold,
+}
+
+/// Simulation parameters for one cluster configuration.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    /// Interconnect cost model.
+    pub net: NetworkParams,
+    /// Collective schedule shape.
+    pub algo: CollectiveAlgo,
+    /// Reduce strategy.
+    pub reduce_mode: ReduceMode,
+    /// f64 words in the downlink broadcast payload (the approximation).
+    pub words_down: usize,
+    /// f64 words in each uplink partial folding.
+    pub words_up: usize,
+    /// Lognormal sigma for compute-time jitter (0 = deterministic).
+    pub jitter_comp: f64,
+    /// Lognormal sigma for per-message jitter (0 = deterministic).
+    pub jitter_comm: f64,
+    /// Number of master nodes (1 = the BSF model; ≥2 is the §7-Q5 ablation).
+    pub masters: usize,
+}
+
+impl SimParams {
+    /// Deterministic defaults on the paper's calibrated network.
+    pub fn new(words_down: usize, words_up: usize) -> SimParams {
+        SimParams {
+            net: NetworkParams::tornado_susu(),
+            algo: CollectiveAlgo::BinomialTree,
+            reduce_mode: ReduceMode::TreeMasterFold,
+            words_down,
+            words_up,
+            jitter_comp: 0.0,
+            jitter_comm: 0.0,
+            masters: 1,
+        }
+    }
+}
+
+/// Source of compute-step durations (the node "black box" of the model).
+pub trait CostProvider {
+    /// Time for one worker to Map a sublist of `chunk` elements
+    /// (excluding the local fold).
+    fn map_time(&mut self, worker: usize, chunk: usize) -> f64;
+    /// Time for one application of `⊕` (the model's `t_a`).
+    fn combine_time(&mut self) -> f64;
+    /// Master post-processing time (the model's `t_p`).
+    fn post_time(&mut self) -> f64;
+}
+
+/// Analytic provider: linear-in-chunk Map cost derived from the whole-list
+/// time `t_map_full` — exactly the BSF cost metric's assumption.
+#[derive(Debug, Clone)]
+pub struct AnalyticCost {
+    /// Time to Map the entire list on one node (the model's `t_Map`).
+    pub t_map_full: f64,
+    /// List length `l`.
+    pub l: usize,
+    /// One `⊕` application (the model's `t_a`).
+    pub t_a: f64,
+    /// Master post time (the model's `t_p`).
+    pub t_p: f64,
+}
+
+impl CostProvider for AnalyticCost {
+    fn map_time(&mut self, _worker: usize, chunk: usize) -> f64 {
+        self.t_map_full * chunk as f64 / self.l as f64
+    }
+    fn combine_time(&mut self) -> f64 {
+        self.t_a
+    }
+    fn post_time(&mut self) -> f64 {
+        self.t_p
+    }
+}
+
+/// Sampled provider: Map durations drawn from per-element samples measured
+/// on this machine (live PJRT kernel executions) — the "hybrid" empirical
+/// mode of DESIGN.md §4.
+#[derive(Debug, Clone)]
+pub struct SampledCost {
+    /// Measured per-element Map times (seconds/element).
+    pub per_elem: Vec<f64>,
+    /// Measured `t_a`.
+    pub t_a: f64,
+    /// Measured `t_p`.
+    pub t_p: f64,
+    /// Private sample-selection stream.
+    pub rng: Rng,
+}
+
+impl CostProvider for SampledCost {
+    fn map_time(&mut self, _worker: usize, chunk: usize) -> f64 {
+        let s = self.per_elem[self.rng.below(self.per_elem.len() as u64) as usize];
+        s * chunk as f64
+    }
+    fn combine_time(&mut self) -> f64 {
+        self.t_a
+    }
+    fn post_time(&mut self) -> f64 {
+        self.t_p
+    }
+}
+
+/// Timing breakdown of one simulated iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterationTiming {
+    /// When the last worker received the approximation.
+    pub broadcast_done: f64,
+    /// When the last worker finished Map + local fold.
+    pub map_done: f64,
+    /// When the master held the full folding.
+    pub reduce_done: f64,
+    /// When the master finished Compute + StopCond.
+    pub post_done: f64,
+    /// End of the exit-flag broadcast — the iteration period.
+    pub total: f64,
+}
+
+struct Jitter<'a> {
+    rng: &'a mut Rng,
+    comp: f64,
+    comm: f64,
+}
+
+impl<'a> Jitter<'a> {
+    fn comp(&mut self, t: f64) -> f64 {
+        t * self.rng.jitter(self.comp)
+    }
+    fn comm(&mut self, t: f64) -> f64 {
+        t * self.rng.jitter(self.comm)
+    }
+}
+
+/// Simulate one iteration of Algorithm 2 with `k` workers over a list of
+/// length `l`. Returns the timing breakdown.
+///
+/// With `params.masters > 1`, workers are split evenly among the masters,
+/// each group runs its own broadcast/reduce, the group masters tree-reduce
+/// among themselves to master 0, which post-processes and broadcasts the
+/// exit flag back through the masters (the §7-Q5 configuration the paper
+/// says admits no closed-form boundary).
+pub fn simulate_iteration(
+    k: usize,
+    l: usize,
+    params: &SimParams,
+    provider: &mut dyn CostProvider,
+    rng: &mut Rng,
+) -> IterationTiming {
+    simulate_iteration_full(k, l, params, provider, rng).0
+}
+
+/// Like [`simulate_iteration`], also returning the executed task graph and
+/// per-task finish times (for trace export — see [`crate::simulator::trace`]).
+pub fn simulate_iteration_full(
+    k: usize,
+    l: usize,
+    params: &SimParams,
+    provider: &mut dyn CostProvider,
+    rng: &mut Rng,
+) -> (IterationTiming, Engine, Vec<f64>) {
+    assert!(k >= 1, "need at least one worker");
+    assert!(params.masters >= 1);
+    let m = params.masters.min(k); // no point in masters without workers
+    let mut jit = Jitter { rng, comp: params.jitter_comp, comm: params.jitter_comm };
+    let mut eng = Engine::new();
+
+    // Resources: 0..m are masters, m..m+k are workers.
+    let worker_res = |j: usize| (m + j) as u32; // j in 0..k
+    let chunk_of = crate::lists::partition_even(l, k);
+
+    // Split workers among masters evenly.
+    let groups = crate::lists::partition_even(k, m);
+
+    // Phase 1: per-group broadcast (payload = words_down).
+    // anchor[g] = task that must precede group-g's broadcast root send.
+    let mut recv_x: Vec<Option<TaskId>> = vec![None; k];
+    let mut group_bcast_roots: Vec<TaskId> = Vec::with_capacity(m);
+    // Master-0 forwards the approximation to other masters first (tree).
+    let master_tree = CollectiveSchedule::broadcast(params.algo, m.saturating_sub(1));
+    let mut master_recv: Vec<Option<TaskId>> = vec![None; m];
+    if m > 1 {
+        // node ids in the schedule: 0 = master 0, i = master i.
+        let mut last_send_of: Vec<Option<TaskId>> = vec![None; m];
+        for round in &master_tree.rounds {
+            for &(from, to) in round {
+                let send = eng.task_labeled(from as u32, jit.comm(params.net.p2p(params.words_down)), "bcast-master");
+                if let Some(prev) = last_send_of[from] {
+                    eng.dep(prev, send);
+                }
+                if let Some(r) = master_recv[from] {
+                    eng.dep(r, send);
+                }
+                last_send_of[from] = Some(send);
+                master_recv[to] = Some(send);
+                last_send_of[to] = None;
+            }
+        }
+    }
+
+    for g in 0..m {
+        let members: Vec<usize> = groups.range(g).collect();
+        let sched = CollectiveSchedule::broadcast(params.algo, members.len());
+        // Schedule node 0 = master g; node i = worker members[i-1].
+        let res_of = |node: usize| -> u32 {
+            if node == 0 {
+                g as u32
+            } else {
+                worker_res(members[node - 1])
+            }
+        };
+        let mut node_recv: Vec<Option<TaskId>> = vec![None; sched.size];
+        let mut last_send_of: Vec<Option<TaskId>> = vec![None; sched.size];
+        // Master g cannot start before it has the approximation.
+        let anchor = master_recv[g];
+        for round in &sched.rounds {
+            for &(from, to) in round {
+                let send = eng.task_labeled(res_of(from), jit.comm(params.net.p2p(params.words_down)), "bcast");
+                if let Some(prev) = last_send_of[from] {
+                    eng.dep(prev, send);
+                }
+                if let Some(r) = node_recv[from] {
+                    eng.dep(r, send);
+                } else if from == 0 {
+                    if let Some(a) = anchor {
+                        eng.dep(a, send);
+                    }
+                }
+                last_send_of[from] = Some(send);
+                node_recv[to] = Some(send);
+                last_send_of[to] = None;
+            }
+        }
+        for (i, &w) in members.iter().enumerate() {
+            // MPI_Bcast semantics: a rank leaves the collective only after
+            // it has both received the payload *and* forwarded it to all of
+            // its tree children — its compute must not preempt forwarding.
+            recv_x[w] = last_send_of[i + 1].or(node_recv[i + 1]);
+        }
+        group_bcast_roots.push(0); // placeholder; not used further
+    }
+
+    // Phase 2: worker compute = Map(chunk) + (chunk-1) local folds.
+    let mut partial_ready: Vec<TaskId> = Vec::with_capacity(k);
+    for j in 0..k {
+        let chunk = chunk_of.size(j);
+        let map_t = provider.map_time(j, chunk);
+        let folds = chunk.saturating_sub(1) as f64 * provider.combine_time();
+        let dur = jit.comp(map_t + folds);
+        let t = eng.task_labeled(worker_res(j), dur, "map+fold");
+        if let Some(r) = recv_x[j] {
+            eng.dep(r, t);
+        }
+        partial_ready.push(t);
+    }
+    let map_done_tasks = partial_ready.clone();
+
+    // Phase 3: per-group reduce to the group master, then masters to 0.
+    let mut group_partial: Vec<TaskId> = Vec::with_capacity(m);
+    for g in 0..m {
+        let members: Vec<usize> = groups.range(g).collect();
+        let gp = reduce_group(
+            &mut eng,
+            &mut jit,
+            params,
+            provider,
+            g as u32,
+            &members.iter().map(|&w| (worker_res(w), partial_ready[w])).collect::<Vec<_>>(),
+        );
+        group_partial.push(gp);
+    }
+    // Masters fold to master 0 (tree over m nodes).
+    let final_fold = if m > 1 {
+        let peers: Vec<(u32, TaskId)> = (1..m).map(|g| (g as u32, group_partial[g])).collect();
+        reduce_masters(&mut eng, &mut jit, params, provider, group_partial[0], &peers)
+    } else {
+        group_partial[0]
+    };
+
+    // Phase 4: master post-processing. The exit flag of Algorithm 2
+    // (step 10) is piggybacked on the next iteration's broadcast (a tagged
+    // message), as real skeletons do — so the steady-state iteration
+    // period is exactly the master's cycle: broadcast → … → post.
+    let post = eng.task_labeled(0, jit.comp(provider.post_time()), "post");
+    eng.dep(final_fold, post);
+
+    let finish = eng.run();
+    let t_of = |id: TaskId| finish[id as usize];
+    let broadcast_done = recv_x
+        .iter()
+        .flatten()
+        .map(|&t| t_of(t))
+        .fold(0.0, f64::max);
+    let map_done = map_done_tasks.iter().map(|&t| t_of(t)).fold(0.0, f64::max);
+    let reduce_done = t_of(final_fold);
+    let post_done = t_of(post);
+    let total = Engine::makespan(&finish);
+    (
+        IterationTiming { broadcast_done, map_done, reduce_done, post_done, total },
+        eng,
+        finish,
+    )
+}
+
+/// Build the reduce of a worker group into its master; returns the task
+/// after which the group master holds the folded partial.
+fn reduce_group(
+    eng: &mut Engine,
+    jit: &mut Jitter<'_>,
+    params: &SimParams,
+    provider: &mut dyn CostProvider,
+    master_res: u32,
+    members: &[(u32, TaskId)], // (resource, partial-ready task) per worker
+) -> TaskId {
+    let kk = members.len();
+    if kk == 0 {
+        // Master with no workers: nothing to fold; synthesise a zero task.
+        return eng.task(master_res, 0.0);
+    }
+    match params.reduce_mode {
+        ReduceMode::TreeMasterFold => {
+            // Relay partials over the reduce tree (no intermediate folds —
+            // the paper charges all K−1 folds at the master), then a single
+            // master task of (kk−1)·t_a.
+            let sched = CollectiveSchedule::reduce(params.algo, kk);
+            let res_of = |node: usize| -> u32 {
+                if node == 0 {
+                    master_res
+                } else {
+                    members[node - 1].0
+                }
+            };
+            let mut holds: Vec<TaskId> = Vec::with_capacity(sched.size);
+            holds.push(eng.task(master_res, 0.0));
+            for &(_, ready) in members {
+                holds.push(ready);
+            }
+            for round in &sched.rounds {
+                for &(from, to) in round {
+                    let send = eng.task_labeled(res_of(from), jit.comm(params.net.p2p(params.words_up)), "reduce-send");
+                    eng.dep(holds[from], send);
+                    let relay = eng.task_labeled(res_of(to), 0.0, "relay");
+                    eng.dep(send, relay);
+                    eng.dep(holds[to], relay);
+                    holds[to] = relay;
+                }
+            }
+            let fold_total = (kk.saturating_sub(1)) as f64 * provider.combine_time();
+            let fold = eng.task_labeled(master_res, jit.comp(fold_total), "master-fold");
+            eng.dep(holds[0], fold);
+            fold
+        }
+        ReduceMode::GatherThenFold => {
+            // Each worker sends to the master (master NIC serialises
+            // receives); master then folds kk-1 times.
+            let mut recvs: Vec<TaskId> = Vec::with_capacity(kk);
+            for &(res, ready) in members {
+                let send = eng.task_labeled(res, jit.comm(params.net.p2p(params.words_up) / 2.0), "gather-send");
+                eng.dep(ready, send);
+                // receive occupies the master for the other half of the cost
+                let recv = eng.task_labeled(master_res, jit.comm(params.net.p2p(params.words_up) / 2.0), "gather-recv");
+                eng.dep(send, recv);
+                recvs.push(recv);
+            }
+            let mut acc = recvs[0];
+            for &r in &recvs[1..] {
+                let fold = eng.task_labeled(master_res, jit.comp(provider.combine_time()), "fold");
+                eng.dep(acc, fold);
+                eng.dep(r, fold);
+                acc = fold;
+            }
+            acc
+        }
+        ReduceMode::InTree => {
+            // Tree reduce: schedule node 0 = master, node i = members[i-1].
+            let sched = CollectiveSchedule::reduce(params.algo, kk);
+            let res_of = |node: usize| -> u32 {
+                if node == 0 {
+                    master_res
+                } else {
+                    members[node - 1].0
+                }
+            };
+            // holds[i] = task after which node i's (partially folded)
+            // value is ready.
+            let mut holds: Vec<TaskId> = Vec::with_capacity(sched.size);
+            holds.push(eng.task(master_res, 0.0)); // master starts empty fold
+            for &(_, ready) in members {
+                holds.push(ready);
+            }
+            for round in &sched.rounds {
+                for &(from, to) in round {
+                    let send = eng.task_labeled(res_of(from), jit.comm(params.net.p2p(params.words_up)), "reduce-send");
+                    eng.dep(holds[from], send);
+                    let fold = eng.task_labeled(res_of(to), jit.comp(provider.combine_time()), "fold");
+                    eng.dep(send, fold);
+                    eng.dep(holds[to], fold);
+                    holds[to] = fold;
+                }
+            }
+            holds[0]
+        }
+    }
+}
+
+/// Fold the per-group partials held by masters `1..m` into master 0.
+fn reduce_masters(
+    eng: &mut Engine,
+    jit: &mut Jitter<'_>,
+    params: &SimParams,
+    provider: &mut dyn CostProvider,
+    master0_ready: TaskId,
+    peers: &[(u32, TaskId)],
+) -> TaskId {
+    let sched = CollectiveSchedule::reduce(params.algo, peers.len());
+    let res_of = |node: usize| -> u32 { if node == 0 { 0 } else { peers[node - 1].0 } };
+    let mut holds: Vec<TaskId> = Vec::with_capacity(sched.size);
+    holds.push(master0_ready);
+    for &(_, t) in peers {
+        holds.push(t);
+    }
+    for round in &sched.rounds {
+        for &(from, to) in round {
+            let send = eng.task_labeled(res_of(from), jit.comm(params.net.p2p(params.words_up)), "reduce-send");
+            eng.dep(holds[from], send);
+            let fold = eng.task_labeled(res_of(to), jit.comp(provider.combine_time()), "fold");
+            eng.dep(send, fold);
+            eng.dep(holds[to], fold);
+            holds[to] = fold;
+        }
+    }
+    holds[0]
+}
+
+/// Simulate `iters` iterations; returns per-iteration timings.
+pub fn simulate_run(
+    k: usize,
+    l: usize,
+    iters: usize,
+    params: &SimParams,
+    provider: &mut dyn CostProvider,
+    rng: &mut Rng,
+) -> Vec<IterationTiming> {
+    (0..iters)
+        .map(|_| simulate_iteration(k, l, params, provider, rng))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn analytic(l: usize) -> AnalyticCost {
+        AnalyticCost { t_map_full: 1.0, l, t_a: 1e-4, t_p: 1e-3 }
+    }
+
+    fn params() -> SimParams {
+        SimParams::new(1000, 1000)
+    }
+
+    #[test]
+    fn single_worker_matches_eq7_shape() {
+        // T_1 = t_p + t_c + t_Map + t_Rdc (eq. 7), modulo the exit flag.
+        let l = 1000;
+        let mut prov = analytic(l);
+        let mut rng = Rng::new(1);
+        let t = simulate_iteration(1, l, &params(), &mut prov, &mut rng);
+        let p = params();
+        let t_c = p.net.t_c(p.words_down, p.words_up);
+        let t_rdc = (l - 1) as f64 * 1e-4;
+        let expect = 1e-3 + t_c + 1.0 + t_rdc;
+        // exit flag adds one latency; in-tree fold adds one t_a at master
+        assert!((t.total - expect).abs() / expect < 0.01, "sim={} expect~{}", t.total, expect);
+    }
+
+    #[test]
+    fn phases_are_ordered() {
+        let mut prov = analytic(1024);
+        let mut rng = Rng::new(2);
+        let t = simulate_iteration(8, 1024, &params(), &mut prov, &mut rng);
+        assert!(t.broadcast_done > 0.0);
+        assert!(t.map_done >= t.broadcast_done);
+        assert!(t.reduce_done >= t.map_done);
+        assert!(t.post_done >= t.reduce_done);
+        assert!(t.total >= t.post_done);
+    }
+
+    #[test]
+    fn more_workers_speed_up_compute_bound() {
+        let l = 4096;
+        let mut prov = analytic(l);
+        let mut rng = Rng::new(3);
+        let t1 = simulate_iteration(1, l, &params(), &mut prov, &mut rng).total;
+        let t8 = simulate_iteration(8, l, &params(), &mut prov, &mut rng).total;
+        let t64 = simulate_iteration(64, l, &params(), &mut prov, &mut rng).total;
+        assert!(t8 < t1 / 4.0, "t1={t1} t8={t8}");
+        assert!(t64 < t8, "t8={t8} t64={t64}");
+    }
+
+    #[test]
+    fn speedup_eventually_degrades() {
+        // tiny compute, big payload: communication dominates, so large K
+        // must be slower than small K.
+        let l = 256;
+        let mut prov = AnalyticCost { t_map_full: 1e-4, l, t_a: 1e-8, t_p: 1e-6 };
+        let mut rng = Rng::new(4);
+        let t2 = simulate_iteration(2, l, &params(), &mut prov, &mut rng).total;
+        let t128 = simulate_iteration(128, l, &params(), &mut prov, &mut rng).total;
+        assert!(t128 > t2, "t2={t2} t128={t128}");
+    }
+
+    #[test]
+    fn deterministic_without_jitter() {
+        let l = 512;
+        let mut prov = analytic(l);
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(99);
+        let a = simulate_iteration(16, l, &params(), &mut prov, &mut r1);
+        let b = simulate_iteration(16, l, &params(), &mut prov, &mut r2);
+        assert_eq!(a, b, "zero jitter must be rng-independent");
+    }
+
+    #[test]
+    fn jitter_perturbs_and_is_seed_deterministic() {
+        let l = 512;
+        let mut p = params();
+        p.jitter_comp = 0.1;
+        p.jitter_comm = 0.1;
+        let mut prov = analytic(l);
+        let a = simulate_iteration(16, l, &p, &mut prov, &mut Rng::new(5));
+        let b = simulate_iteration(16, l, &p, &mut prov, &mut Rng::new(5));
+        let c = simulate_iteration(16, l, &p, &mut prov, &mut Rng::new(6));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn gather_mode_slower_than_tree_at_scale() {
+        let l = 4096;
+        let mut tree = params();
+        tree.reduce_mode = ReduceMode::InTree;
+        let mut gather = params();
+        gather.reduce_mode = ReduceMode::GatherThenFold;
+        let mut prov = analytic(l);
+        let mut rng = Rng::new(8);
+        let t_tree = simulate_iteration(128, l, &tree, &mut prov, &mut rng).total;
+        let t_gather = simulate_iteration(128, l, &gather, &mut prov, &mut rng).total;
+        assert!(t_gather > t_tree, "tree={t_tree} gather={t_gather}");
+    }
+
+    #[test]
+    fn linear_collective_slower_than_tree_at_scale() {
+        let l = 4096;
+        let mut lin = params();
+        lin.algo = CollectiveAlgo::Linear;
+        let mut prov = analytic(l);
+        let mut rng = Rng::new(9);
+        let t_lin = simulate_iteration(128, l, &lin, &mut prov, &mut rng).total;
+        let t_tree = simulate_iteration(128, l, &params(), &mut prov, &mut rng).total;
+        assert!(t_lin > t_tree, "lin={t_lin} tree={t_tree}");
+    }
+
+    #[test]
+    fn two_masters_runs_and_orders_phases() {
+        let l = 2048;
+        let mut p = params();
+        p.masters = 2;
+        let mut prov = analytic(l);
+        let mut rng = Rng::new(10);
+        let t = simulate_iteration(16, l, &p, &mut prov, &mut rng);
+        assert!(t.total > 0.0);
+        assert!(t.reduce_done >= t.map_done);
+    }
+
+    #[test]
+    fn sampled_cost_draws_from_samples() {
+        let mut prov = SampledCost {
+            per_elem: vec![1e-6, 2e-6],
+            t_a: 1e-7,
+            t_p: 1e-6,
+            rng: Rng::new(11),
+        };
+        let t = prov.map_time(0, 1000);
+        assert!(t == 1e-3 || t == 2e-3, "t={t}");
+    }
+
+    #[test]
+    fn simulate_run_length() {
+        let l = 256;
+        let mut prov = analytic(l);
+        let mut rng = Rng::new(12);
+        let runs = simulate_run(4, l, 5, &params(), &mut prov, &mut rng);
+        assert_eq!(runs.len(), 5);
+    }
+}

@@ -1,0 +1,28 @@
+//! Discrete-event cluster simulator — the stand-in for the paper's 480-node
+//! "Tornado SUSU" cluster.
+//!
+//! The simulator executes the *actual* Algorithm-2 timeline (binomial-tree
+//! broadcast, per-worker Map + local Reduce, tree reduce with in-tree
+//! folding, master post-processing) as a resource-constrained task graph:
+//! every processor node is a serial resource, every message and compute
+//! step is a task with explicit dependencies. Eq. (8) of the paper is a
+//! closed-form *approximation* of this timeline, so predicted-vs-simulated
+//! error is a meaningful analogue of the paper's predicted-vs-measured
+//! error.
+//!
+//! Compute durations come from a pluggable [`CostProvider`] — analytic
+//! per-op costs for pure model studies, or samples measured on this machine
+//! (real PJRT kernel executions) for the hybrid "empirical" mode.
+//! Multiplicative lognormal jitter (calibrated from live-run variance)
+//! models OS/MPI noise.
+
+mod cluster;
+mod engine;
+pub mod trace;
+
+pub use cluster::{
+    simulate_iteration, simulate_iteration_full, simulate_run, AnalyticCost, CostProvider,
+    IterationTiming, ReduceMode, SampledCost, SimParams,
+};
+pub use trace::{trace_iteration, Trace, TraceEvent};
+pub use engine::{Engine, TaskId, TaskSpec};

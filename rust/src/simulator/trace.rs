@@ -1,0 +1,194 @@
+//! Trace export: per-node timelines of a simulated Algorithm-2 iteration.
+//!
+//! Produces [Chrome trace-event format](https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU)
+//! JSON (open in `chrome://tracing` or [Perfetto](https://ui.perfetto.dev))
+//! — every broadcast send, Map+fold, reduce hop and master fold appears as
+//! a duration event on its node's row, making stragglers, tree pipelining
+//! and the master bottleneck visible at a glance.
+
+use std::fmt::Write as _;
+
+use crate::simulator::cluster::{simulate_iteration_full, CostProvider, SimParams};
+use crate::simulator::engine::Engine;
+use crate::util::Rng;
+
+/// One executed task on a node's timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Phase label (`bcast`, `map+fold`, `reduce-send`, …).
+    pub label: &'static str,
+    /// Node id (0 = master; `masters..` = workers).
+    pub resource: u32,
+    /// Start time (seconds).
+    pub start: f64,
+    /// Duration (seconds).
+    pub duration: f64,
+}
+
+/// A full iteration trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Events sorted by (resource, start).
+    pub events: Vec<TraceEvent>,
+    /// Makespan (seconds).
+    pub total: f64,
+}
+
+impl Trace {
+    /// Extract the trace from an executed engine.
+    pub fn from_engine(eng: &Engine, finish: &[f64]) -> Trace {
+        let mut events: Vec<TraceEvent> = eng
+            .specs()
+            .iter()
+            .zip(eng.labels())
+            .zip(finish)
+            .filter(|((spec, label), _)| spec.duration > 0.0 || !label.is_empty())
+            .map(|((spec, label), &end)| TraceEvent {
+                label: if label.is_empty() { "task" } else { label },
+                resource: spec.resource,
+                start: end - spec.duration,
+                duration: spec.duration,
+            })
+            .collect();
+        events.sort_by(|a, b| {
+            (a.resource, a.start)
+                .partial_cmp(&(b.resource, b.start))
+                .expect("finite times")
+        });
+        Trace { events, total: Engine::makespan(finish) }
+    }
+
+    /// Busy fraction of a node (time occupied / makespan).
+    pub fn utilization(&self, resource: u32) -> f64 {
+        if self.total == 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self
+            .events
+            .iter()
+            .filter(|e| e.resource == resource)
+            .map(|e| e.duration)
+            .sum();
+        busy / self.total
+    }
+
+    /// Serialize as Chrome trace-event JSON (times in µs, as the format
+    /// expects).
+    pub fn to_chrome_json(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[\n");
+        for (i, e) in self.events.iter().enumerate() {
+            let name = if e.resource == 0 {
+                "master".to_string()
+            } else {
+                format!("worker {}", e.resource)
+            };
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"cat\":\"bsf\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+                 \"ts\":{:.3},\"dur\":{:.3},\"args\":{{\"node\":\"{}\"}}}}",
+                e.label,
+                e.resource,
+                e.start * 1e6,
+                e.duration * 1e6,
+                name
+            );
+            out.push_str(if i + 1 < self.events.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    /// Write the Chrome JSON to a file.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_chrome_json())
+    }
+}
+
+/// Simulate one iteration and capture its trace.
+pub fn trace_iteration(
+    k: usize,
+    l: usize,
+    params: &SimParams,
+    provider: &mut dyn CostProvider,
+    rng: &mut Rng,
+) -> (crate::simulator::IterationTiming, Trace) {
+    let (timing, eng, finish) = simulate_iteration_full(k, l, params, provider, rng);
+    let trace = Trace::from_engine(&eng, &finish);
+    (timing, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::AnalyticCost;
+
+    fn traced(k: usize) -> (crate::simulator::IterationTiming, Trace) {
+        let l = 1024;
+        let mut prov = AnalyticCost { t_map_full: 0.1, l, t_a: 1e-6, t_p: 1e-4 };
+        let params = SimParams::new(l, l);
+        trace_iteration(k, l, &params, &mut prov, &mut Rng::new(1))
+    }
+
+    #[test]
+    fn trace_covers_all_phases() {
+        let (_t, trace) = traced(8);
+        let labels: std::collections::HashSet<&str> =
+            trace.events.iter().map(|e| e.label).collect();
+        for want in ["bcast", "map+fold", "reduce-send", "master-fold", "post"] {
+            assert!(labels.contains(want), "missing {want}: {labels:?}");
+        }
+    }
+
+    #[test]
+    fn events_fit_in_makespan_and_dont_overlap_per_node() {
+        let (t, trace) = traced(16);
+        assert!(trace.total > 0.0);
+        assert!((trace.total - t.total).abs() < 1e-15);
+        let mut last_end: std::collections::HashMap<u32, f64> = Default::default();
+        for e in &trace.events {
+            assert!(e.start >= -1e-12, "negative start");
+            assert!(e.start + e.duration <= trace.total + 1e-12);
+            let prev = last_end.entry(e.resource).or_insert(0.0);
+            assert!(e.start >= *prev - 1e-12, "overlap on node {}", e.resource);
+            *prev = e.start + e.duration;
+        }
+    }
+
+    #[test]
+    fn worker_utilization_reasonable() {
+        let (_t, trace) = traced(4);
+        // Each of the 4 workers computes ~l/4 of a 0.1 s map: utilization
+        // should be dominated by compute and bounded by 1.
+        for w in 1..=4u32 {
+            let u = trace.utilization(w);
+            assert!(u > 0.5 && u <= 1.0, "worker {w}: {u}");
+        }
+        assert!(trace.utilization(99) == 0.0);
+    }
+
+    #[test]
+    fn chrome_json_is_parseable() {
+        let (_t, trace) = traced(3);
+        let json = trace.to_chrome_json();
+        let parsed = crate::util::Json::parse(&json).expect("valid json");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), trace.events.len());
+        let first = &events[0];
+        assert_eq!(first.get("ph").unwrap().as_str(), Some("X"));
+        assert!(first.get("ts").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn save_roundtrip() {
+        let dir = std::env::temp_dir().join("bsf_trace_test");
+        let path = dir.join("t.json");
+        let (_t, trace) = traced(2);
+        trace.save(&path).unwrap();
+        let src = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::Json::parse(&src).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,106 @@
+//! Micro-benchmark harness (offline build — no criterion): warmup +
+//! timed repetitions with summary statistics, and a criterion-like
+//! console report. Used by every target in `rust/benches/`.
+
+use crate::util::stats::Summary;
+use crate::util::timer::measure;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case name.
+    pub name: String,
+    /// Per-iteration seconds.
+    pub summary: Summary,
+    /// Optional throughput denominator (items per iteration).
+    pub items: Option<u64>,
+}
+
+impl BenchResult {
+    /// Render one report line.
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        let mut line = format!(
+            "{:<44} {:>12} ± {:>10}  (median {:>12}, n={})",
+            self.name,
+            human_time(s.mean),
+            human_time(s.sd),
+            human_time(s.median),
+            s.n
+        );
+        if let Some(items) = self.items {
+            let rate = items as f64 / s.mean;
+            line.push_str(&format!("  [{:.2e} items/s]", rate));
+        }
+        line
+    }
+}
+
+/// Human-readable seconds.
+pub fn human_time(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.3} s")
+    } else if t >= 1e-3 {
+        format!("{:.3} ms", t * 1e3)
+    } else if t >= 1e-6 {
+        format!("{:.3} µs", t * 1e6)
+    } else {
+        format!("{:.1} ns", t * 1e9)
+    }
+}
+
+/// Run one case: `warmup` unrecorded + `reps` timed calls of `f`.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, f: F) -> BenchResult {
+    let samples = measure(warmup, reps, f);
+    let r = BenchResult { name: name.to_string(), summary: Summary::of(&samples), items: None };
+    println!("{}", r.report());
+    r
+}
+
+/// Like [`bench`] but reports items/second throughput.
+pub fn bench_throughput<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    items: u64,
+    f: F,
+) -> BenchResult {
+    let samples = measure(warmup, reps, f);
+    let r = BenchResult {
+        name: name.to_string(),
+        summary: Summary::of(&samples),
+        items: Some(items),
+    };
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut calls = 0;
+        let r = bench("noop", 1, 5, || calls += 1);
+        assert_eq!(calls, 6);
+        assert_eq!(r.summary.n, 5);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn throughput_line_includes_rate() {
+        let r = bench_throughput("items", 0, 3, 1000, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.report().contains("items/s"));
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.0).ends_with(" s"));
+        assert!(human_time(2e-3).ends_with("ms"));
+        assert!(human_time(2e-6).ends_with("µs"));
+        assert!(human_time(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Small self-contained utilities: deterministic PRNG, descriptive
+//! statistics, wall-clock timing and table/CSV rendering.
+//!
+//! These are hand-rolled substrates (the build is fully offline; no external
+//! crates beyond `xla`/`anyhow`), each with its own unit tests.
+
+pub mod bench;
+pub mod svg;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use json::Json;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use table::Table;
+pub use timer::Timer;

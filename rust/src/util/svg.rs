@@ -1,0 +1,336 @@
+//! Minimal SVG line-chart renderer (offline build — no plotting crates).
+//!
+//! Renders the paper's figure style: speedup-vs-K curves with multiple
+//! series (empirical solid, analytic dashed), axis ticks, a legend and
+//! optional vertical marker lines (the red K_BSF boundary in Fig. 6/7).
+//! Output is standalone SVG viewable in any browser.
+
+use std::fmt::Write as _;
+
+/// One plotted series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Legend label.
+    pub label: String,
+    /// Data points (x, y).
+    pub points: Vec<(f64, f64)>,
+    /// Stroke colour (CSS).
+    pub color: String,
+    /// Dash pattern (`""` = solid, e.g. `"6,4"` = dashed).
+    pub dash: String,
+    /// Draw point markers.
+    pub markers: bool,
+}
+
+impl Series {
+    /// Solid line with markers.
+    pub fn solid(label: impl Into<String>, points: Vec<(f64, f64)>, color: &str) -> Series {
+        Series { label: label.into(), points, color: color.into(), dash: String::new(), markers: true }
+    }
+
+    /// Dashed line without markers.
+    pub fn dashed(label: impl Into<String>, points: Vec<(f64, f64)>, color: &str) -> Series {
+        Series { label: label.into(), points, color: color.into(), dash: "6,4".into(), markers: false }
+    }
+}
+
+/// A line chart.
+#[derive(Debug, Clone)]
+pub struct Chart {
+    /// Title (rendered at the top).
+    pub title: String,
+    /// X-axis label.
+    pub x_label: String,
+    /// Y-axis label.
+    pub y_label: String,
+    /// The series to draw.
+    pub series: Vec<Series>,
+    /// Vertical marker lines `(x, label)` (e.g. K_BSF).
+    pub vlines: Vec<(f64, String)>,
+    /// Canvas size in px.
+    pub width: u32,
+    /// Canvas height in px.
+    pub height: u32,
+}
+
+impl Chart {
+    /// New chart with default size (720×480).
+    pub fn new(
+        title: impl Into<String>,
+        x_label: impl Into<String>,
+        y_label: impl Into<String>,
+    ) -> Chart {
+        Chart {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+            vlines: Vec::new(),
+            width: 720,
+            height: 480,
+        }
+    }
+
+    /// Add a series.
+    pub fn push(&mut self, s: Series) -> &mut Self {
+        self.series.push(s);
+        self
+    }
+
+    /// Add a vertical marker (e.g. the analytic boundary).
+    pub fn vline(&mut self, x: f64, label: impl Into<String>) -> &mut Self {
+        self.vlines.push((x, label.into()));
+        self
+    }
+
+    fn bounds(&self) -> (f64, f64, f64, f64) {
+        let mut xs: Vec<f64> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                xs.push(x);
+                ys.push(y);
+            }
+        }
+        for &(x, _) in &self.vlines {
+            xs.push(x);
+        }
+        let xmin = xs.iter().copied().fold(f64::INFINITY, f64::min).min(0.0);
+        let xmax = xs.iter().copied().fold(0.0, f64::max).max(1.0);
+        let ymin = ys.iter().copied().fold(f64::INFINITY, f64::min).min(0.0);
+        let ymax = ys.iter().copied().fold(0.0, f64::max).max(1.0);
+        (xmin, xmax * 1.04, ymin, ymax * 1.08)
+    }
+
+    /// Render to SVG text.
+    pub fn render(&self) -> String {
+        let (w, h) = (self.width as f64, self.height as f64);
+        let (ml, mr, mt, mb) = (64.0, 16.0, 40.0, 52.0); // margins
+        let (pw, ph) = (w - ml - mr, h - mt - mb);
+        let (xmin, xmax, ymin, ymax) = self.bounds();
+        let sx = |x: f64| ml + (x - xmin) / (xmax - xmin) * pw;
+        let sy = |y: f64| mt + ph - (y - ymin) / (ymax - ymin) * ph;
+
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" viewBox="0 0 {w} {h}" font-family="sans-serif">"#
+        );
+        let _ = writeln!(out, r#"<rect width="{w}" height="{h}" fill="white"/>"#);
+        let esc = |s: &str| s.replace('&', "&amp;").replace('<', "&lt;");
+        let _ = writeln!(
+            out,
+            r#"<text x="{}" y="22" text-anchor="middle" font-size="15" font-weight="bold">{}</text>"#,
+            w / 2.0,
+            esc(&self.title)
+        );
+
+        // Axes + ticks.
+        let _ = writeln!(
+            out,
+            r#"<line x1="{ml}" y1="{}" x2="{}" y2="{}" stroke="black"/>"#,
+            mt + ph,
+            ml + pw,
+            mt + ph
+        );
+        let _ = writeln!(out, r#"<line x1="{ml}" y1="{mt}" x2="{ml}" y2="{}" stroke="black"/>"#, mt + ph);
+        for i in 0..=6 {
+            let fx = xmin + (xmax - xmin) * i as f64 / 6.0;
+            let fy = ymin + (ymax - ymin) * i as f64 / 6.0;
+            let _ = writeln!(
+                out,
+                r#"<text x="{:.1}" y="{:.1}" text-anchor="middle" font-size="11">{}</text>"#,
+                sx(fx),
+                mt + ph + 16.0,
+                fmt_tick(fx)
+            );
+            let _ = writeln!(
+                out,
+                r#"<text x="{:.1}" y="{:.1}" text-anchor="end" font-size="11">{}</text>"#,
+                ml - 6.0,
+                sy(fy) + 4.0,
+                fmt_tick(fy)
+            );
+            let _ = writeln!(
+                out,
+                r##"<line x1="{ml}" y1="{:.1}" x2="{:.1}" y2="{:.1}" stroke="#e0e0e0"/>"##,
+                sy(fy),
+                ml + pw,
+                sy(fy)
+            );
+        }
+        let _ = writeln!(
+            out,
+            r#"<text x="{}" y="{}" text-anchor="middle" font-size="12">{}</text>"#,
+            ml + pw / 2.0,
+            h - 12.0,
+            esc(&self.x_label)
+        );
+        let _ = writeln!(
+            out,
+            r#"<text x="16" y="{}" text-anchor="middle" font-size="12" transform="rotate(-90 16 {})">{}</text>"#,
+            mt + ph / 2.0,
+            mt + ph / 2.0,
+            esc(&self.y_label)
+        );
+
+        // Vertical markers.
+        for (x, label) in &self.vlines {
+            let px = sx(*x);
+            let _ = writeln!(
+                out,
+                r#"<line x1="{px:.1}" y1="{mt}" x2="{px:.1}" y2="{}" stroke="red" stroke-dasharray="3,3"/>"#,
+                mt + ph
+            );
+            let _ = writeln!(
+                out,
+                r#"<text x="{:.1}" y="{:.1}" font-size="11" fill="red">{}</text>"#,
+                px + 4.0,
+                mt + 14.0,
+                esc(label)
+            );
+        }
+
+        // Series.
+        for s in &self.series {
+            if s.points.is_empty() {
+                continue;
+            }
+            let path: String = s
+                .points
+                .iter()
+                .enumerate()
+                .map(|(i, &(x, y))| {
+                    format!("{}{:.1},{:.1}", if i == 0 { "M" } else { "L" }, sx(x), sy(y))
+                })
+                .collect();
+            let dash = if s.dash.is_empty() {
+                String::new()
+            } else {
+                format!(r#" stroke-dasharray="{}""#, s.dash)
+            };
+            let _ = writeln!(
+                out,
+                r#"<path d="{path}" fill="none" stroke="{}" stroke-width="1.8"{dash}/>"#,
+                s.color
+            );
+            if s.markers {
+                for &(x, y) in &s.points {
+                    let _ = writeln!(
+                        out,
+                        r#"<circle cx="{:.1}" cy="{:.1}" r="2.4" fill="{}"/>"#,
+                        sx(x),
+                        sy(y),
+                        s.color
+                    );
+                }
+            }
+        }
+
+        // Legend.
+        for (i, s) in self.series.iter().enumerate() {
+            let ly = mt + 16.0 + i as f64 * 18.0;
+            let lx = ml + pw - 170.0;
+            let dash = if s.dash.is_empty() {
+                String::new()
+            } else {
+                format!(r#" stroke-dasharray="{}""#, s.dash)
+            };
+            let _ = writeln!(
+                out,
+                r#"<line x1="{lx}" y1="{ly}" x2="{}" y2="{ly}" stroke="{}" stroke-width="1.8"{dash}/>"#,
+                lx + 28.0,
+                s.color
+            );
+            let _ = writeln!(
+                out,
+                r#"<text x="{}" y="{}" font-size="11">{}</text>"#,
+                lx + 34.0,
+                ly + 4.0,
+                esc(&s.label)
+            );
+        }
+        out.push_str("</svg>\n");
+        out
+    }
+
+    /// Write the SVG to a file (creating parent directories).
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+fn fmt_tick(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 {
+        format!("{:.0}", v)
+    } else if v.abs() >= 10.0 {
+        format!("{:.0}", v)
+    } else {
+        format!("{:.1}", v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chart() -> Chart {
+        let mut c = Chart::new("demo", "K", "speedup");
+        c.push(Series::solid("sim", vec![(1.0, 1.0), (10.0, 5.0), (20.0, 4.0)], "#1f77b4"));
+        c.push(Series::dashed("model", vec![(1.0, 1.0), (20.0, 4.5)], "#555"));
+        c.vline(12.0, "K_BSF");
+        c
+    }
+
+    #[test]
+    fn renders_valid_svg_shell() {
+        let svg = chart().render();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.trim_end().ends_with("</svg>"));
+        assert_eq!(svg.matches("<path").count(), 2);
+        assert!(svg.contains("stroke-dasharray=\"6,4\""));
+        assert!(svg.contains("K_BSF"));
+        // 3 markers for the solid series
+        assert_eq!(svg.matches("<circle").count(), 3);
+    }
+
+    #[test]
+    fn escapes_labels() {
+        let mut c = Chart::new("a < b & c", "x", "y");
+        c.push(Series::solid("s", vec![(0.0, 0.0)], "red"));
+        let svg = c.render();
+        assert!(svg.contains("a &lt; b &amp; c"));
+    }
+
+    #[test]
+    fn bounds_include_vlines_and_zero() {
+        let c = chart();
+        let (xmin, xmax, ymin, _ymax) = c.bounds();
+        assert_eq!(xmin, 0.0);
+        assert!(xmax >= 20.0);
+        assert_eq!(ymin, 0.0);
+    }
+
+    #[test]
+    fn save_writes_file() {
+        let dir = std::env::temp_dir().join("bsf_svg_test");
+        let path = dir.join("c.svg");
+        chart().save(&path).unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().contains("</svg>"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_series_ok() {
+        let mut c = Chart::new("t", "x", "y");
+        c.push(Series::solid("empty", vec![], "blue"));
+        let svg = c.render();
+        assert!(svg.contains("</svg>"));
+        assert_eq!(svg.matches("<path").count(), 0);
+    }
+}

@@ -1,0 +1,75 @@
+//! Wall-clock measurement helpers used by calibration and the bench harness.
+
+use std::time::Instant;
+
+/// A simple monotonic stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since start.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap(&mut self) -> f64 {
+        let t = self.elapsed();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Measure `f` repeatedly: `warmup` unrecorded runs, then `reps` timed runs.
+/// Returns per-run seconds.
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        out.push(t.elapsed());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed();
+        let b = t.elapsed();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let lap = t.lap();
+        assert!(lap >= 0.002);
+        assert!(t.elapsed() < lap + 0.1);
+    }
+
+    #[test]
+    fn measure_counts() {
+        let mut calls = 0usize;
+        let samples = measure(2, 5, || calls += 1);
+        assert_eq!(samples.len(), 5);
+        assert_eq!(calls, 7);
+        assert!(samples.iter().all(|&s| s >= 0.0));
+    }
+}

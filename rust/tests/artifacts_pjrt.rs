@@ -1,0 +1,180 @@
+//! Integration: the AOT artifacts through the PJRT runtime — the L1→L2→
+//! runtime path that the Python test suite cannot cover (it validates the
+//! kernels pre-lowering; this validates the compiled HLO the Rust workers
+//! actually execute).
+//!
+//! These tests are skipped (with a note) when `artifacts/` is absent; the
+//! Makefile orders `make artifacts` before `cargo test`.
+
+use bsf::linalg::generators::paper_system;
+use bsf::runtime::{KernelRuntime, Tensor};
+use bsf::util::Rng;
+
+fn runtime() -> Option<KernelRuntime> {
+    let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(KernelRuntime::open(dir).expect("open runtime"))
+}
+
+#[test]
+fn jacobi_map_artifact_matches_native_matvec() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    for n in [256usize, 512] {
+        let name = rt.manifest().jacobi_map(n).expect("artifact");
+        let b = rt.block();
+        let c: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..b).map(|_| rng.normal()).collect();
+        let out = rt
+            .execute(&name, &[Tensor::mat(c.clone(), n, b), Tensor::vec(x.clone())])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), n);
+        for i in 0..n {
+            let want: f64 = (0..b).map(|j| c[i * b + j] * x[j]).sum();
+            assert!((out[0][i] - want).abs() < 1e-9 * want.abs().max(1.0), "n={n} row {i}");
+        }
+    }
+}
+
+#[test]
+fn jacobi_post_artifact_matches_formula() {
+    let Some(rt) = runtime() else { return };
+    let n = 256;
+    let mut rng = Rng::new(2);
+    let s: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let d: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let out = rt
+        .execute(
+            "jacobi_post_n256",
+            &[Tensor::vec(s.clone()), Tensor::vec(d.clone()), Tensor::vec(x.clone())],
+        )
+        .unwrap();
+    // outputs: (x_new, sqnorm)
+    assert_eq!(out.len(), 2);
+    let mut sq = 0.0;
+    for i in 0..n {
+        let xn = s[i] + d[i];
+        assert!((out[0][i] - xn).abs() < 1e-12);
+        sq += (xn - x[i]) * (xn - x[i]);
+    }
+    assert!((out[1][0] - sq).abs() < 1e-9 * sq);
+}
+
+#[test]
+fn jacobi_step_artifact_matches_full_iteration() {
+    let Some(rt) = runtime() else { return };
+    let n = 256;
+    let sys = paper_system(n);
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).sin()).collect();
+    let out = rt
+        .execute(
+            "jacobi_step_n256",
+            &[
+                Tensor::mat(sys.c.as_slice().to_vec(), n, n),
+                Tensor::vec(sys.d.clone()),
+                Tensor::vec(x.clone()),
+            ],
+        )
+        .unwrap();
+    let want_s = sys.c.matvec(&x);
+    for i in 0..n {
+        let want = want_s[i] + sys.d[i];
+        assert!((out[0][i] - want).abs() < 1e-9, "row {i}");
+    }
+}
+
+#[test]
+fn gravity_artifacts_match_native() {
+    let Some(rt) = runtime() else { return };
+    let b = rt.block();
+    let name = rt.manifest().gravity_map().expect("artifact");
+    let mut rng = Rng::new(3);
+    let y: Vec<f64> = (0..b * 3).map(|_| rng.normal() * 5.0).collect();
+    let m: Vec<f64> = (0..b).map(|_| rng.uniform() + 0.5).collect();
+    let x = vec![20.0, 0.0, 0.0];
+    let out = rt
+        .execute(&name, &[Tensor::mat(y.clone(), b, 3), Tensor::vec(m.clone()), Tensor::vec(x.clone())])
+        .unwrap();
+    let mut want = [0.0f64; 3];
+    for i in 0..b {
+        let d = [y[i * 3] - x[0], y[i * 3 + 1] - x[1], y[i * 3 + 2] - x[2]];
+        let r2 = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).max(1e-30);
+        let w = m[i] / r2;
+        want[0] += w * d[0];
+        want[1] += w * d[1];
+        want[2] += w * d[2];
+    }
+    for c in 0..3 {
+        assert!((out[0][c] - want[c]).abs() < 1e-9 * want[c].abs().max(1.0));
+    }
+
+    // gravity_post: Δt rule.
+    let out = rt
+        .execute(
+            "gravity_post",
+            &[
+                Tensor::vec(vec![1.0, 2.0, 2.0]), // ‖V‖² = 9
+                Tensor::vec(vec![0.0, 1.0, 0.0]), // ‖α‖⁴ = 1
+                Tensor::vec(vec![0.0, 0.0, 0.0]),
+                Tensor::scalar(4.5),
+            ],
+        )
+        .unwrap();
+    // (v_new, x_new, delta_t); delta_t = 4.5/9 = 0.5
+    assert!((out[2][0] - 0.5).abs() < 1e-12);
+    assert!((out[0][1] - 2.5).abs() < 1e-12); // v_y + 1*0.5
+}
+
+#[test]
+fn cimmino_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let n = 256;
+    let b = rt.block();
+    let name = rt.manifest().cimmino_map(n).expect("artifact");
+    let mut rng = Rng::new(4);
+    let a: Vec<f64> = (0..b * n).map(|_| rng.normal()).collect();
+    let rhs: Vec<f64> = (0..b).map(|_| rng.normal()).collect();
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let out = rt
+        .execute(&name, &[Tensor::mat(a.clone(), b, n), Tensor::vec(rhs.clone()), Tensor::vec(x.clone())])
+        .unwrap();
+    let mut want = vec![0.0; n];
+    for i in 0..b {
+        let row = &a[i * n..(i + 1) * n];
+        let resid: f64 = row.iter().zip(&x).map(|(r, xi)| r * xi).sum::<f64>() - rhs[i];
+        if resid > 0.0 {
+            let nrm2: f64 = row.iter().map(|r| r * r).sum();
+            let w = resid / nrm2;
+            for (acc, r) in want.iter_mut().zip(row) {
+                *acc -= w * r;
+            }
+        }
+    }
+    for i in 0..n {
+        assert!((out[0][i] - want[i]).abs() < 1e-9 * want[i].abs().max(1.0), "col {i}");
+    }
+}
+
+#[test]
+fn execute_rejects_wrong_shapes() {
+    let Some(rt) = runtime() else { return };
+    let err = rt
+        .execute("jacobi_map_n256", &[Tensor::vec(vec![0.0; 10]), Tensor::vec(vec![0.0; 10])])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shape"));
+    assert!(rt.execute("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.compiled_count(), 0);
+    rt.warm("jacobi_post_n256").unwrap();
+    rt.warm("jacobi_post_n256").unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+}

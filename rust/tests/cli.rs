@@ -1,0 +1,80 @@
+//! Integration: the `bsf` binary end-to-end (argument parsing, experiment
+//! dispatch, CSV output).
+
+use std::process::Command;
+
+fn bsf() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_bsf"))
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = bsf().output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("usage"), "{err}");
+}
+
+#[test]
+fn predict_jacobi_published_params() {
+    let out = bsf()
+        .args(["predict", "--problem=jacobi", "--n=10000"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("111.7"), "{stdout}"); // K_BSF for n=10000
+}
+
+#[test]
+fn experiment_table3_quick_writes_csv() {
+    let tmp = std::env::temp_dir().join("bsf_cli_test_results");
+    let _ = std::fs::remove_dir_all(&tmp);
+    let out = bsf()
+        .args([
+            "experiment",
+            "table3",
+            "--quick=1",
+            &format!("--out={}", tmp.display()),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let csv = std::fs::read_to_string(tmp.join("table3.csv")).unwrap();
+    assert!(csv.lines().count() >= 5, "{csv}");
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn unknown_experiment_rejected() {
+    let out = bsf().args(["experiment", "fig99"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown experiment"));
+}
+
+#[test]
+fn cluster_overrides_accepted() {
+    let tmp = std::env::temp_dir().join("bsf_cli_test_results2");
+    let out = bsf()
+        .args([
+            "experiment",
+            "sqrt-law",
+            "--cluster.latency=1e-6",
+            "--cluster.collective=tree",
+            &format!("--out={}", tmp.display()),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn bad_cluster_value_reports_error() {
+    let out = bsf()
+        .args(["experiment", "table3", "--cluster.collective=ring"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("tree|linear"));
+}

@@ -1,0 +1,82 @@
+//! Integration: the live skeleton against sequential ground truth, through
+//! the public API only — every shipped problem, multiple worker counts,
+//! failure paths.
+
+use std::sync::Arc;
+
+use bsf::coordinator::{run_sequential, BsfProblem, LiveRunner};
+use bsf::linalg::generators;
+use bsf::problems::{CimminoProblem, GravityProblem, JacobiProblem, MonteCarloPi};
+
+fn max_dev(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn jacobi_live_equals_sequential_across_k() {
+    let seq = run_sequential(&JacobiProblem::new(generators::dominant_system(128), 1e-24), 500, None);
+    assert!(seq.converged);
+    for k in [1usize, 2, 4, 7, 16] {
+        let p: Arc<dyn BsfProblem> =
+            Arc::new(JacobiProblem::new(generators::dominant_system(128), 1e-24));
+        let live = LiveRunner::new(k, 500).run(p).unwrap();
+        assert_eq!(live.iterations, seq.iterations, "k={k}");
+        assert!(max_dev(&live.final_approx, &seq.final_approx) < 1e-12, "k={k}");
+    }
+}
+
+#[test]
+fn gravity_live_equals_sequential_across_k() {
+    let mk = || GravityProblem::new(generators::random_bodies(150, 5.0, 99), 1e-3, 1e-6);
+    let seq = run_sequential(&mk(), 10_000, None);
+    assert!(seq.converged);
+    for k in [2usize, 5, 9] {
+        let live = LiveRunner::new(k, 10_000).run(Arc::new(mk()) as Arc<dyn BsfProblem>).unwrap();
+        assert_eq!(live.iterations, seq.iterations, "k={k}");
+        assert!(max_dev(&live.final_approx, &seq.final_approx) < 1e-9, "k={k}");
+    }
+}
+
+#[test]
+fn cimmino_live_reaches_feasible_point() {
+    let sys = generators::feasible_inequalities(400, 24, 0.1, 5);
+    let p = CimminoProblem::new(sys, 1.5, 1e-20);
+    let checker = CimminoProblem::new(generators::feasible_inequalities(400, 24, 0.1, 5), 1.5, 1e-20);
+    let live = LiveRunner::new(6, 50_000).run(Arc::new(p) as Arc<dyn BsfProblem>).unwrap();
+    assert!(live.converged);
+    assert_eq!(checker.violated(&live.final_approx, 1e-6), 0);
+}
+
+#[test]
+fn montecarlo_parallel_deterministic() {
+    let mk = || MonteCarloPi::new(256, 32, 1e-6, 7);
+    let seq = run_sequential(&mk(), 80, None);
+    let live = LiveRunner::new(8, 80).run(Arc::new(mk()) as Arc<dyn BsfProblem>).unwrap();
+    assert_eq!(seq.final_approx[0].to_bits(), live.final_approx[0].to_bits());
+    assert!((seq.final_approx[0] - std::f64::consts::PI).abs() < 0.1);
+}
+
+#[test]
+fn metrics_are_complete_and_positive() {
+    let p: Arc<dyn BsfProblem> =
+        Arc::new(JacobiProblem::new(generators::dominant_system(96), 1e-24));
+    let r = LiveRunner::new(3, 20).run(p).unwrap();
+    assert_eq!(r.metrics.len(), r.iterations);
+    for it in &r.metrics.iterations {
+        assert_eq!(it.map_fold.len(), 3);
+        assert!(it.total > 0.0);
+        assert!(it.post >= 0.0);
+        assert!(it.comm >= 0.0);
+    }
+}
+
+#[test]
+fn many_workers_small_list() {
+    // K > l: the skeleton must still be correct with empty sublists.
+    let seq = run_sequential(&JacobiProblem::new(generators::dominant_system(5), 1e-24), 200, None);
+    let p: Arc<dyn BsfProblem> =
+        Arc::new(JacobiProblem::new(generators::dominant_system(5), 1e-24));
+    let live = LiveRunner::new(12, 200).run(p).unwrap();
+    assert_eq!(live.iterations, seq.iterations);
+    assert!(max_dev(&live.final_approx, &seq.final_approx) < 1e-12);
+}

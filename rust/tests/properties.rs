@@ -1,0 +1,197 @@
+//! Property-based tests (seeded randomized sweeps — the offline build has
+//! no proptest, so cases are generated with the crate's own deterministic
+//! RNG; failures print the case seed for replay).
+//!
+//! Invariants covered:
+//! * the promotion theorem (eq. 5) for random functions/partitions;
+//! * partition coverage/disjointness/balance (eq. 4);
+//! * speedup properties (10)–(12) and Proposition-1 unimodality on random
+//!   cost parameters;
+//! * the closed-form boundary vs numeric argmax;
+//! * simulator determinism and phase ordering on random configurations;
+//! * collective schedules: full coverage and log-depth for random K.
+
+use bsf::lists::{map_reduce, partition_even, reduce, Add, Monoid, VecAdd};
+use bsf::model::{BsfModel, CostParams};
+use bsf::net::{CollectiveAlgo, CollectiveSchedule};
+use bsf::simulator::{simulate_iteration, AnalyticCost, SimParams};
+use bsf::util::Rng;
+
+const CASES: usize = 200;
+
+#[test]
+fn prop_promotion_theorem_scalar() {
+    let mut rng = Rng::new(0xF00D);
+    for case in 0..CASES {
+        let l = 1 + rng.below(500) as usize;
+        let k = 1 + rng.below(40) as usize;
+        let xs: Vec<f64> = (0..l).map(|_| rng.normal()).collect();
+        let c = rng.range(-2.0, 2.0);
+        let f = |x: &f64| c * x + x * x;
+        let full = map_reduce(f, &Add, &xs);
+        let parts = partition_even(l, k);
+        let partials: Vec<f64> = parts.ranges().map(|r| map_reduce(f, &Add, &xs[r])).collect();
+        let folded = reduce(&Add, partials);
+        assert!(
+            (full - folded).abs() <= 1e-9 * full.abs().max(1.0),
+            "case {case}: l={l} k={k}"
+        );
+    }
+}
+
+#[test]
+fn prop_promotion_theorem_vector() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..50 {
+        let l = 1 + rng.below(200) as usize;
+        let k = 1 + rng.below(16) as usize;
+        let dim = 1 + rng.below(8) as usize;
+        let m = VecAdd { n: dim };
+        let xs: Vec<f64> = (0..l).map(|_| rng.normal()).collect();
+        let f = |x: &f64| -> Vec<f64> { (0..dim).map(|d| x * (d as f64 + 1.0)).collect() };
+        let full = map_reduce(f, &m, &xs);
+        let parts = partition_even(l, k);
+        let partials: Vec<Vec<f64>> = parts.ranges().map(|r| map_reduce(f, &m, &xs[r])).collect();
+        let folded = reduce(&m, partials);
+        for d in 0..dim {
+            assert!((full[d] - folded[d]).abs() < 1e-9, "case {case} dim {d}");
+        }
+    }
+}
+
+#[test]
+fn prop_partition_invariants() {
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..CASES {
+        let l = rng.below(10_000) as usize;
+        let k = 1 + rng.below(128) as usize;
+        let p = partition_even(l, k);
+        assert_eq!(p.k(), k, "case {case}");
+        assert_eq!(p.len(), l, "case {case}");
+        let mut at = 0;
+        let mut min = usize::MAX;
+        let mut max = 0usize;
+        for r in p.ranges() {
+            assert_eq!(r.start, at, "case {case}: gap/overlap");
+            at = r.end;
+            min = min.min(r.len());
+            max = max.max(r.len());
+        }
+        assert_eq!(at, l, "case {case}: coverage");
+        assert!(max - min <= 1, "case {case}: balance");
+    }
+}
+
+fn random_params(rng: &mut Rng) -> CostParams {
+    CostParams {
+        l: 100 + rng.below(50_000) as usize,
+        t_c: 10f64.powf(rng.range(-5.0, -2.0)),
+        t_p: 10f64.powf(rng.range(-7.0, -4.0)),
+        t_map: 10f64.powf(rng.range(-3.0, 0.0)),
+        t_a: 10f64.powf(rng.range(-9.0, -5.0)),
+    }
+}
+
+#[test]
+fn prop_speedup_properties_10_11() {
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..CASES {
+        let m = BsfModel::new(random_params(&mut rng));
+        assert!((m.speedup(1) - 1.0).abs() < 1e-12, "case {case}: property (10)");
+        for k in [2usize, 17, 333, 4_096] {
+            assert!(m.speedup(k) > 0.0, "case {case}: property (11) at K={k}");
+        }
+    }
+}
+
+#[test]
+fn prop_boundary_is_argmax() {
+    let mut rng = Rng::new(0xA11);
+    for case in 0..60 {
+        let m = BsfModel::new(random_params(&mut rng));
+        let k0 = m.k_bsf();
+        if !(2.0..5_000.0).contains(&k0) {
+            continue; // keep the numeric sweep bounded
+        }
+        let numeric = m.k_bsf_numeric(12_000) as f64;
+        assert!(
+            (k0 - numeric).abs() <= 1.0 + 0.01 * k0,
+            "case {case}: closed {k0:.2} vs numeric {numeric}"
+        );
+        // Unimodality (Proposition 1): strictly better than far-away Ks.
+        let peak = m.speedup(k0.round() as usize);
+        assert!(peak >= m.speedup((k0 * 3.0) as usize), "case {case}");
+        assert!(peak >= m.speedup(((k0 / 3.0) as usize).max(1)), "case {case}");
+    }
+}
+
+#[test]
+fn prop_simulator_deterministic_and_ordered() {
+    let mut rng = Rng::new(0xD15C);
+    for case in 0..60 {
+        let l = 64 + rng.below(8_000) as usize;
+        let k = 1 + rng.below(256) as usize;
+        let mut prov = AnalyticCost {
+            t_map_full: 10f64.powf(rng.range(-3.0, 0.0)),
+            l,
+            t_a: 10f64.powf(rng.range(-9.0, -5.0)),
+            t_p: 1e-5,
+        };
+        let params = SimParams::new(l.min(4096), l.min(4096));
+        let a = simulate_iteration(k, l, &params, &mut prov, &mut Rng::new(case));
+        let b = simulate_iteration(k, l, &params, &mut prov, &mut Rng::new(case + 999));
+        assert_eq!(a, b, "case {case}: zero-jitter must be rng-independent");
+        assert!(a.broadcast_done > 0.0, "case {case}");
+        assert!(a.map_done >= a.broadcast_done, "case {case}");
+        assert!(a.reduce_done >= a.map_done, "case {case}");
+        assert!(a.post_done >= a.reduce_done, "case {case}");
+        assert!(a.total >= a.post_done, "case {case}");
+    }
+}
+
+#[test]
+fn prop_collectives_cover_everyone_log_depth() {
+    let mut rng = Rng::new(0xC011);
+    for _ in 0..CASES {
+        let k = 1 + rng.below(1_000) as usize;
+        let s = CollectiveSchedule::broadcast(CollectiveAlgo::BinomialTree, k);
+        // depth = ceil(log2(k+1))
+        let want = (usize::BITS - k.leading_zeros()) as usize
+            + usize::from(!(k + 1).is_power_of_two() && k.count_ones() != 0 && false);
+        let depth = s.depth();
+        let lo = ((k + 1) as f64).log2().ceil() as usize;
+        assert_eq!(depth, lo.max(1).min(depth.max(lo)), "k={k} depth={depth} want~{want}");
+        // coverage
+        let mut has = vec![false; k + 1];
+        has[0] = true;
+        for round in &s.rounds {
+            for &(from, to) in round {
+                assert!(has[from], "k={k}: sender without message");
+                has[to] = true;
+            }
+        }
+        assert!(has.iter().all(|&h| h), "k={k}: incomplete broadcast");
+    }
+}
+
+#[test]
+fn prop_jitter_preserves_mean_scale() {
+    // With mean-one multiplicative jitter, the average simulated iteration
+    // should stay within a few percent of the deterministic one.
+    let l = 4_096;
+    let mut det = AnalyticCost { t_map_full: 0.1, l, t_a: 1e-6, t_p: 1e-5 };
+    let base = simulate_iteration(32, l, &SimParams::new(1024, 1024), &mut det, &mut Rng::new(1));
+    let mut params = SimParams::new(1024, 1024);
+    params.jitter_comp = 0.05;
+    params.jitter_comm = 0.05;
+    let mut rng = Rng::new(2);
+    let n = 300;
+    let mean: f64 = (0..n)
+        .map(|_| simulate_iteration(32, l, &params, &mut det, &mut rng).total)
+        .sum::<f64>()
+        / n as f64;
+    let rel = (mean - base.total).abs() / base.total;
+    // Jitter on the max of parallel workers biases slightly upward — that
+    // is real straggler physics — but must stay moderate at sigma=0.05.
+    assert!(rel < 0.10, "rel drift {rel}");
+}
