@@ -84,9 +84,9 @@ fn main() -> anyhow::Result<()> {
     let ks = k_sweep(k_bsf, false);
     let mut sim = ctx.sim_params(n, n);
     sim.net = effective_net_with_latency(params.t_c, n, n, ctx.cluster.net.latency);
-    let mut prov = sampled_provider(&cal, &params, ctx.seed);
+    let prov = sampled_provider(&cal, &params, ctx.seed);
     let mut rng = Rng::new(ctx.seed);
-    let curve = simulated_curve(&ctx, &sim, n, &mut prov, &ks, 7, &mut rng);
+    let curve = simulated_curve(&ctx, &sim, n, &prov, &ks, 7, &mut rng);
     let pk = peak_smoothed(&curve, 5).expect("curve");
     let err = prediction_error(pk.k as f64, k_bsf);
 

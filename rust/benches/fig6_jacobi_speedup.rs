@@ -18,14 +18,14 @@ fn main() {
     for n in [1_500usize, 5_000, 10_000, 16_000] {
         let params = paper_jacobi_params(n).expect("published");
         bench(&format!("fig6 curve n={n}"), 1, 5, || {
-            let mut prov = analytic_provider(&params);
+            let prov = analytic_provider(&params);
             let mut rng = Rng::new(1);
-            let row = boundary_row(&ctx, n, &params, n, n, &mut prov, &mut rng);
+            let row = boundary_row(&ctx, n, &params, n, n, &prov, &mut rng);
             std::hint::black_box(&row);
         });
-        let mut prov = analytic_provider(&params);
+        let prov = analytic_provider(&params);
         let mut rng = Rng::new(1);
-        rows.push(boundary_row(&ctx, n, &params, n, n, &mut prov, &mut rng));
+        rows.push(boundary_row(&ctx, n, &params, n, n, &prov, &mut rng));
     }
     println!("\nregenerated Table 3 (paper K_test: 40/60/120/160):");
     for r in rows {

@@ -18,14 +18,14 @@ fn main() {
     for n in [300usize, 600, 900, 1_200] {
         let params = paper_gravity_params(n).expect("published");
         bench(&format!("fig7 curve n={n}"), 1, 5, || {
-            let mut prov = analytic_provider(&params);
+            let prov = analytic_provider(&params);
             let mut rng = Rng::new(1);
-            let row = boundary_row(&ctx, n, &params, 7, 3, &mut prov, &mut rng);
+            let row = boundary_row(&ctx, n, &params, 7, 3, &prov, &mut rng);
             std::hint::black_box(&row);
         });
-        let mut prov = analytic_provider(&params);
+        let prov = analytic_provider(&params);
         let mut rng = Rng::new(1);
-        rows.push(boundary_row(&ctx, n, &params, 7, 3, &mut prov, &mut rng));
+        rows.push(boundary_row(&ctx, n, &params, 7, 3, &prov, &mut rng));
     }
     println!("\nregenerated Table 4 (paper K_test: 60/140/200/280):");
     for r in rows {

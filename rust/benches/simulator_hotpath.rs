@@ -4,20 +4,57 @@
 //! iteration at K workers is ~4K tasks, so the engine must sustain
 //! millions of tasks/second (DESIGN.md §9 target: ≥ 1 M events/s).
 //!
+//! Besides raw throughput this harness measures the three layers of the
+//! zero-allocation rework (see PERF.md):
+//!
+//! * rebuild-per-iteration (the old path, kept as the baseline) vs
+//!   template **replay** (graph built once, scratch reused);
+//! * `simulate_run`'s deterministic **replication** fast path;
+//! * the **parallel sweep** at 1 thread vs all cores;
+//! * steady-state heap **allocations per replay**, counted by a global
+//!   counting allocator (must be 0).
+//!
 //! ```text
 //! cargo bench --bench simulator_hotpath
 //! ```
 
-use bsf::simulator::{simulate_iteration, AnalyticCost, Engine, SimParams};
-use bsf::util::bench::bench_throughput;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use bsf::experiments::{analytic_provider, simulated_curve_threads, ExperimentCtx};
+use bsf::simulator::{simulate_iteration, AnalyticCost, Engine, IterationTemplate, SimParams};
+use bsf::util::bench::{bench_throughput, human_time};
 use bsf::util::Rng;
+
+/// Counts every allocation so the zero-allocation replay claim is
+/// measured, not assumed.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn main() {
     println!("== simulator_hotpath ==");
 
-    // Raw engine: chain + fan-out graphs.
+    // Raw engine: chain graphs, rebuild vs replay.
     for tasks in [1_000usize, 100_000] {
-        bench_throughput(&format!("engine chain, {tasks} tasks"), 2, 10, tasks as u64, || {
+        bench_throughput(&format!("engine chain rebuild, {tasks} tasks"), 2, 10, tasks as u64, || {
             let mut e = Engine::new();
             let mut prev = e.task(0, 1e-9);
             for i in 1..tasks {
@@ -27,17 +64,29 @@ fn main() {
             }
             std::hint::black_box(e.run());
         });
+        let mut e = Engine::new();
+        let mut prev = e.task(0, 1e-9);
+        for i in 1..tasks {
+            let t = e.task((i % 64) as u32, 1e-9);
+            e.dep(prev, t);
+            prev = t;
+        }
+        e.run_reuse(); // warm scratch + CSR
+        bench_throughput(&format!("engine chain replay,  {tasks} tasks"), 2, 10, tasks as u64, || {
+            std::hint::black_box(Engine::makespan(e.run_reuse()));
+        });
     }
 
-    // Full Algorithm-2 iterations at representative scales.
+    // Full Algorithm-2 iterations at representative scales:
+    // rebuild-per-iteration (old path) vs template replay (new path).
     let l = 16_000;
     for k in [16usize, 128, 512] {
-        let tasks_per_iter = 4 * k as u64; // bcast + compute + reduce + folds
         let mut prov = AnalyticCost { t_map_full: 0.77, l, t_a: 2.1e-5, t_p: 5.6e-5 };
         let params = SimParams::new(l, l);
+        let tasks_per_iter = IterationTemplate::new(k, l, &params).task_count() as u64;
         let mut rng = Rng::new(7);
         bench_throughput(
-            &format!("simulate_iteration K={k} (l={l})"),
+            &format!("iteration rebuild K={k} (l={l})"),
             5,
             30,
             tasks_per_iter,
@@ -45,17 +94,89 @@ fn main() {
                 std::hint::black_box(simulate_iteration(k, l, &params, &mut prov, &mut rng));
             },
         );
+        let mut tmpl = IterationTemplate::new(k, l, &params);
+        tmpl.replay(&mut prov, &mut rng); // warm scratch + CSR
+        bench_throughput(
+            &format!("iteration replay  K={k} (l={l})"),
+            5,
+            30,
+            tasks_per_iter,
+            || {
+                std::hint::black_box(tmpl.replay(&mut prov, &mut rng));
+            },
+        );
+        // Steady-state allocation count: must be zero per replay.
+        let reps = 100u64;
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..reps {
+            std::hint::black_box(tmpl.replay(&mut prov, &mut rng));
+        }
+        let allocs = ALLOCS.load(Ordering::Relaxed) - before;
+        println!("    -> allocations per replay at K={k}: {}", allocs as f64 / reps as f64);
     }
 
-    // A whole quick Fig-6-style sweep (one size).
-    let mut prov = AnalyticCost { t_map_full: 0.373, l: 10_000, t_a: 9.31e-6, t_p: 3.7e-5 };
-    let params = SimParams::new(10_000, 10_000);
-    let mut rng = Rng::new(8);
-    bench_throughput("sweep n=10000, K=1..270 x3 iters", 1, 5, 270 * 3, || {
-        for k in 1..=270usize {
-            for _ in 0..3 {
-                std::hint::black_box(simulate_iteration(k, 10_000, &params, &mut prov, &mut rng));
+    // A whole deterministic Fig-6-style sweep (one size): the old
+    // rebuild-everything loop vs simulate_run's replicate fast path vs the
+    // multi-core sweep. Iteration counts mirror a real Fig.-6 point (7
+    // averaged iterations per K).
+    let n = 10_000usize;
+    let prov = AnalyticCost { t_map_full: 0.373, l: n, t_a: 9.31e-6, t_p: 3.7e-5 };
+    let params = SimParams::new(n, n);
+    let iters = 7usize;
+    let ks: Vec<usize> = (1..=270).collect();
+    let sweep_iters = (ks.len() * iters) as u64;
+
+    bench_throughput(
+        &format!("sweep n={n} K=1..270 x{iters}: rebuild loop (old path)"),
+        1,
+        3,
+        sweep_iters,
+        || {
+            let mut p = prov.clone();
+            let mut rng = Rng::new(8);
+            for &k in &ks {
+                for _ in 0..iters {
+                    std::hint::black_box(simulate_iteration(k, n, &params, &mut p, &mut rng));
+                }
             }
-        }
+        },
+    );
+
+    let ctx = ExperimentCtx::default();
+    let factory = analytic_provider(&bsf::model::CostParams {
+        l: n,
+        t_c: params.net.t_c(n, n),
+        t_p: 3.7e-5,
+        t_map: 0.373,
+        t_a: 9.31e-6,
     });
+    bench_throughput(
+        &format!("sweep n={n} K=1..270 x{iters}: replicate, 1 thread"),
+        1,
+        3,
+        sweep_iters,
+        || {
+            let mut rng = Rng::new(8);
+            std::hint::black_box(simulated_curve_threads(
+                &ctx, &params, n, &factory, &ks, iters, &mut rng, 1,
+            ));
+        },
+    );
+    let threads = bsf::util::parallel::default_threads();
+    let r = bench_throughput(
+        &format!("sweep n={n} K=1..270 x{iters}: replicate, {threads} threads"),
+        1,
+        3,
+        sweep_iters,
+        || {
+            let mut rng = Rng::new(8);
+            std::hint::black_box(simulated_curve_threads(
+                &ctx, &params, n, &factory, &ks, iters, &mut rng, threads,
+            ));
+        },
+    );
+    println!(
+        "    -> full-sweep wall time (all cores): {}",
+        human_time(r.summary.median)
+    );
 }

@@ -49,10 +49,11 @@ pub fn ablation_collectives(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
             cluster.reduce_mode = mode;
             let sub = ExperimentCtx { cluster, ..ctx.clone() };
             let sim = sub.sim_params(n, n);
-            let mut prov = analytic_provider(&params);
+            let prov = analytic_provider(&params);
             let mut rng = Rng::new(ctx.seed ^ 0xAB1);
-            let curve = simulated_curve(&sub, &sim, n, &mut prov, &ks, iters, &mut rng);
-            let pk = crate::model::scalability::peak_knee(&curve, (ks.len() / 10).max(5), 0.99).expect("curve");
+            let curve = simulated_curve(&sub, &sim, n, &prov, &ks, iters, &mut rng);
+            let w = (ks.len() / 10).max(5);
+            let pk = crate::model::scalability::peak_knee(&curve, w, 0.99).expect("curve");
             t.row(&[
                 algo_name.into(),
                 mode_name.into(),
@@ -84,10 +85,11 @@ pub fn ablation_masters(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
         cluster.masters = masters;
         let sub = ExperimentCtx { cluster, ..ctx.clone() };
         let sim = sub.sim_params(n, n);
-        let mut prov = analytic_provider(&params);
+        let prov = analytic_provider(&params);
         let mut rng = Rng::new(ctx.seed ^ 0xAB2);
-        let curve = simulated_curve(&sub, &sim, n, &mut prov, &ks, iters, &mut rng);
-        let pk = crate::model::scalability::peak_knee(&curve, (ks.len() / 10).max(5), 0.99).expect("curve");
+        let curve = simulated_curve(&sub, &sim, n, &prov, &ks, iters, &mut rng);
+        let w = (ks.len() / 10).max(5);
+        let pk = crate::model::scalability::peak_knee(&curve, w, 0.99).expect("curve");
         t.row(&[
             masters.to_string(),
             pk.k.to_string(),

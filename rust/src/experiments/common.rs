@@ -10,9 +10,10 @@ use crate::config::ClusterConfig;
 use crate::coordinator::{calibrate_problem, BsfProblem};
 use crate::linalg::generators;
 use crate::model::scalability::SpeedupPoint;
-use crate::model::{speedup_curve, BsfModel, CostParams};
+use crate::model::{BsfModel, CostParams};
 use crate::problems::{CimminoProblem, GravityProblem, JacobiProblem};
-use crate::simulator::{simulate_run, AnalyticCost, CostProvider, SampledCost, SimParams};
+use crate::simulator::{simulate_run, AnalyticCost, CostFactory, SampledCost, SimParams};
+use crate::util::parallel::{default_threads, parallel_map};
 use crate::util::{Rng, Table};
 
 /// Which application an experiment drives.
@@ -180,23 +181,56 @@ pub fn k_sweep(k_hint: f64, quick: bool) -> Vec<usize> {
 }
 
 /// Simulate the "empirical" speedup curve: the discrete-event timeline of
-/// Algorithm 2 at each K, with compute times from `provider` and the
-/// context's network model. `iters` simulated iterations are averaged per
-/// point.
+/// Algorithm 2 at each K, with compute times from the provider `factory`
+/// and the context's network model. `iters` simulated iterations are
+/// averaged per point.
+///
+/// K points are evaluated in parallel across OS threads
+/// ([`default_threads`]; override with `BSF_SWEEP_THREADS`). Each K draws
+/// from its own provider instance and RNG stream — both keyed by K, split
+/// from the sweep root — so the curve is **bitwise identical** at any
+/// thread count (`rust/tests/determinism.rs`).
 pub fn simulated_curve(
     ctx: &ExperimentCtx,
     params: &SimParams,
     l: usize,
-    provider: &mut dyn CostProvider,
+    factory: &dyn CostFactory,
     ks: &[usize],
     iters: usize,
     rng: &mut Rng,
 ) -> Vec<SpeedupPoint> {
+    simulated_curve_threads(ctx, params, l, factory, ks, iters, rng, default_threads())
+}
+
+/// [`simulated_curve`] with an explicit worker-thread count (the
+/// determinism suite compares 1 vs N threads).
+#[allow(clippy::too_many_arguments)]
+pub fn simulated_curve_threads(
+    ctx: &ExperimentCtx,
+    params: &SimParams,
+    l: usize,
+    factory: &dyn CostFactory,
+    ks: &[usize],
+    iters: usize,
+    rng: &mut Rng,
+    threads: usize,
+) -> Vec<SpeedupPoint> {
     let _ = ctx;
-    speedup_curve(ks, |k| {
-        let runs = simulate_run(k, l, iters, params, provider, rng);
+    // Fork advances `rng` so successive sweeps off one rng differ; every
+    // per-K stream below splits off this root without further mutation.
+    let root = rng.fork(0x5EED);
+    let time_of = |k: usize| -> f64 {
+        let mut provider = factory.instance(k as u64);
+        let mut rng_k = root.split(k as u64);
+        let runs = simulate_run(k, l, iters, params, provider.as_mut(), &mut rng_k);
         runs.iter().map(|t| t.total).sum::<f64>() / runs.len() as f64
-    })
+    };
+    let times = parallel_map(ks.len(), threads, |i| time_of(ks[i]));
+    let t1 = if ks.first() == Some(&1) { times[0] } else { time_of(1) };
+    ks.iter()
+        .zip(times)
+        .map(|(&k, t_k)| SpeedupPoint { k, t_k, speedup: t1 / t_k })
+        .collect()
 }
 
 /// A provider built from published analytic parameters (paper-params mode).
@@ -207,7 +241,7 @@ pub fn analytic_provider(p: &CostParams) -> AnalyticCost {
 /// A provider built from live calibration samples (measured mode).
 pub fn sampled_provider(cal: &crate::model::Calibration, p: &CostParams, seed: u64) -> SampledCost {
     SampledCost {
-        per_elem: cal.map_samples.iter().map(|s| s / cal.l as f64).collect(),
+        per_elem: Arc::new(cal.map_samples.iter().map(|s| s / cal.l as f64).collect()),
         t_a: p.t_a,
         t_p: p.t_p,
         rng: Rng::new(seed),
@@ -269,7 +303,7 @@ pub fn boundary_row(
     params: &CostParams,
     words_down: usize,
     words_up: usize,
-    provider: &mut dyn CostProvider,
+    factory: &dyn CostFactory,
     rng: &mut Rng,
 ) -> BoundaryRow {
     let model = BsfModel::new(*params);
@@ -279,7 +313,7 @@ pub fn boundary_row(
     sim.net =
         effective_net_with_latency(params.t_c, words_down, words_up, ctx.cluster.net.latency);
     let iters = if ctx.quick { 3 } else { 7 };
-    let curve = simulated_curve(ctx, &sim, params.l, provider, &ks, iters, rng);
+    let curve = simulated_curve(ctx, &sim, params.l, factory, &ks, iters, rng);
     let w = (ks.len() / 10).max(5);
     let pk = crate::model::scalability::peak_knee(&curve, w, 0.99).expect("non-empty curve");
     let plateau =
@@ -339,9 +373,9 @@ mod tests {
     fn paper_params_boundary_within_band() {
         let ctx = ExperimentCtx { quick: true, ..Default::default() };
         let params = paper_jacobi_params(10_000).unwrap();
-        let mut prov = analytic_provider(&params);
+        let prov = analytic_provider(&params);
         let mut rng = Rng::new(1);
-        let row = boundary_row(&ctx, 10_000, &params, 10_000, 10_000, &mut prov, &mut rng);
+        let row = boundary_row(&ctx, 10_000, &params, 10_000, 10_000, &prov, &mut rng);
         assert!(
             row.error < 0.20,
             "K_BSF={:.1} K_test={} err={:.2}",

@@ -48,7 +48,7 @@ pub fn fig7(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
     }
 
     for n in sizes {
-        let (params, provider): (_, Box<dyn crate::simulator::CostProvider>) = if measured {
+        let (params, factory): (_, Box<dyn crate::simulator::CostFactory>) = if measured {
             let problem = ProblemKind::Gravity.build(n);
             let (params, cal) = calibrate(ctx, problem)?;
             let prov = sampled_provider(&cal, &params, ctx.seed ^ n as u64);
@@ -57,7 +57,6 @@ pub fn fig7(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
             let params = paper_gravity_params(n).expect("published size");
             (params, Box::new(analytic_provider(&params)))
         };
-        let mut provider = provider;
 
         let model = BsfModel::new(params);
         let k_bsf = model.k_bsf();
@@ -67,7 +66,7 @@ pub fn fig7(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
             params.t_c, WORDS_DOWN, WORDS_UP, ctx.cluster.net.latency);
         
         let iters = if ctx.quick { 3 } else { 7 };
-        let curve = simulated_curve(ctx, &sim_params, n, provider.as_mut(), &ks, iters, &mut rng);
+        let curve = simulated_curve(ctx, &sim_params, n, factory.as_ref(), &ks, iters, &mut rng);
 
         let mut t = Table::new(
             format!("Fig. 7, n = {n}: BSF-Gravity speedup (K_BSF = {k_bsf:.1})"),
@@ -92,7 +91,8 @@ pub fn fig7(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
             k_bsf,
         );
 
-        let pk = crate::model::scalability::peak_knee(&curve, (ks.len() / 10).max(5), 0.99).expect("curve");
+        let w = (ks.len() / 10).max(5);
+        let pk = crate::model::scalability::peak_knee(&curve, w, 0.99).expect("curve");
         summary.row(&[
             n.to_string(),
             format!("{k_bsf:.1}"),

@@ -28,8 +28,8 @@ pub use ablations::{ablation_collectives, ablation_masters, baselines};
 pub use common::{
     analytic_provider, boundary_row, calibrate, effective_net, effective_net_with_latency, k_sweep,
     paper_gravity_params,
-    paper_jacobi_params, sampled_provider, simulated_curve, BoundaryRow, ExperimentCtx,
-    ProblemKind,
+    paper_jacobi_params, sampled_provider, simulated_curve, simulated_curve_threads, BoundaryRow,
+    ExperimentCtx, ProblemKind,
 };
 pub use explorer::explorer;
 pub use fig6::fig6;

@@ -121,7 +121,7 @@ pub fn table3(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
         vec![1_500, 5_000, 10_000, 16_000]
     };
     for n in sizes {
-        let (params, mut provider): (_, Box<dyn crate::simulator::CostProvider>) = if measured {
+        let (params, factory): (_, Box<dyn crate::simulator::CostFactory>) = if measured {
             let (p, cal) = calibrate(ctx, ProblemKind::Jacobi.build(n))?;
             let prov = sampled_provider(&cal, &p, ctx.seed ^ n as u64);
             (p, Box::new(prov))
@@ -129,7 +129,7 @@ pub fn table3(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
             let p = paper_jacobi_params(n).expect("published size");
             (p, Box::new(analytic_provider(&p)))
         };
-        rows.push(boundary_row(ctx, n, &params, n, n, provider.as_mut(), &mut rng));
+        rows.push(boundary_row(ctx, n, &params, n, n, factory.as_ref(), &mut rng));
     }
     let t = boundary_table(
         ctx,
@@ -161,7 +161,7 @@ pub fn table4(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
         sizes.truncate(2);
     }
     for n in sizes {
-        let (params, mut provider): (_, Box<dyn crate::simulator::CostProvider>) = if measured {
+        let (params, factory): (_, Box<dyn crate::simulator::CostFactory>) = if measured {
             let (p, cal) = calibrate(ctx, ProblemKind::Gravity.build(n))?;
             let prov = sampled_provider(&cal, &p, ctx.seed ^ n as u64);
             (p, Box::new(prov))
@@ -169,7 +169,7 @@ pub fn table4(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
             let p = paper_gravity_params(n).expect("published size");
             (p, Box::new(analytic_provider(&p)))
         };
-        rows.push(boundary_row(ctx, n, &params, 7, 3, provider.as_mut(), &mut rng));
+        rows.push(boundary_row(ctx, n, &params, 7, 3, factory.as_ref(), &mut rng));
     }
     let t = boundary_table(
         ctx,

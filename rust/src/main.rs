@@ -264,15 +264,17 @@ fn cmd_sweep(ctx: &ExperimentCtx, settings: &Settings) -> Result<()> {
     let k_bsf = model.k_bsf();
     let kmax = settings.usize_or("kmax", (k_bsf * 2.4) as usize)?;
     let ks = bsf::experiments::k_sweep(kmax as f64 / 2.4, ctx.quick);
-    let mut prov = bsf::simulator::SampledCost {
-        per_elem: cal.map_samples.iter().map(|s| s / cal.l as f64).collect(),
+    let prov = bsf::simulator::SampledCost {
+        per_elem: std::sync::Arc::new(
+            cal.map_samples.iter().map(|s| s / cal.l as f64).collect(),
+        ),
         t_a: params.t_a,
         t_p: params.t_p,
         rng: Rng::new(ctx.seed),
     };
     let sim = ctx.sim_params(spec.words_down, spec.words_up);
     let mut rng = Rng::new(ctx.seed ^ 0x5);
-    let curve = bsf::experiments::simulated_curve(ctx, &sim, params.l, &mut prov, &ks, 5, &mut rng);
+    let curve = bsf::experiments::simulated_curve(ctx, &sim, params.l, &prov, &ks, 5, &mut rng);
     let mut t = Table::new(
         format!("sweep: {kind:?} n={n}, K_BSF={k_bsf:.1}"),
         &["K", "T_K sim", "a_sim", "a_BSF (eq.9)"],

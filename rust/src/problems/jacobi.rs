@@ -17,7 +17,7 @@
 
 use std::collections::HashMap;
 use std::ops::Range;
-use std::sync::Mutex;
+use std::sync::RwLock;
 
 use crate::coordinator::{BsfProblem, CostSpec};
 use crate::linalg::generators::LinearSystem;
@@ -34,22 +34,38 @@ pub struct JacobiProblem {
     /// `(j0, j1, B)`. The blocks are iteration-invariant, so each worker
     /// packs its blocks once and replays them every iteration — without
     /// this cache the hot path spends more time copying the matrix than
-    /// multiplying it (see EXPERIMENTS.md §Perf).
-    block_cache: Mutex<HashMap<(usize, usize, usize), std::sync::Arc<Vec<f64>>>>,
+    /// multiplying it (see EXPERIMENTS.md §Perf). `RwLock` so the
+    /// steady-state path (every iteration after the first) is a shared
+    /// read; packing happens *outside* any lock, so first-iteration
+    /// workers pack their disjoint blocks concurrently instead of
+    /// convoying on a global mutex.
+    block_cache: RwLock<HashMap<(usize, usize, usize), std::sync::Arc<Vec<f64>>>>,
 }
 
 impl JacobiProblem {
     /// Wrap a linear system (see [`crate::linalg::generators`]).
     pub fn new(sys: LinearSystem, epsilon: f64) -> JacobiProblem {
-        JacobiProblem { sys, epsilon, block_cache: Mutex::new(HashMap::new()) }
+        JacobiProblem { sys, epsilon, block_cache: RwLock::new(HashMap::new()) }
     }
 
     /// Packed column block `C[:, j0..j1]` padded to `b` columns, cached.
+    ///
+    /// Fast path: a shared read lock (concurrent across workers). On a
+    /// miss the block is packed with *no* lock held — two workers racing
+    /// on the same key pack it twice and the first insert wins, which is
+    /// cheaper than serialising every worker's distinct first-iteration
+    /// packing behind one global lock.
     fn packed_block(&self, j0: usize, j1: usize, b: usize) -> std::sync::Arc<Vec<f64>> {
-        let mut cache = self.block_cache.lock().expect("block cache poisoned");
-        cache
-            .entry((j0, j1, b))
-            .or_insert_with(|| std::sync::Arc::new(self.sys.c.col_block_padded(j0, j1, b)))
+        let key = (j0, j1, b);
+        if let Some(hit) = self.block_cache.read().expect("block cache poisoned").get(&key) {
+            return hit.clone();
+        }
+        let blk = std::sync::Arc::new(self.sys.c.col_block_padded(j0, j1, b));
+        self.block_cache
+            .write()
+            .expect("block cache poisoned")
+            .entry(key)
+            .or_insert(blk)
             .clone()
     }
 
@@ -70,7 +86,12 @@ impl JacobiProblem {
 
     /// Kernel-backed column-block matvec over `range`, in blocks of the
     /// artifact's width B; falls back to native when no artifact matches n.
-    fn map_fold_impl(&self, range: Range<usize>, x: &[f64], kernels: Option<&KernelRuntime>) -> Vec<f64> {
+    fn map_fold_impl(
+        &self,
+        range: Range<usize>,
+        x: &[f64],
+        kernels: Option<&KernelRuntime>,
+    ) -> Vec<f64> {
         let n = self.n();
         let mut acc = vec![0.0; n];
         if range.is_empty() {
@@ -124,7 +145,12 @@ impl BsfProblem for JacobiProblem {
         self.sys.d.clone()
     }
 
-    fn map_fold(&self, range: Range<usize>, x: &[f64], kernels: Option<&KernelRuntime>) -> Vec<f64> {
+    fn map_fold(
+        &self,
+        range: Range<usize>,
+        x: &[f64],
+        kernels: Option<&KernelRuntime>,
+    ) -> Vec<f64> {
         self.map_fold_impl(range, x, kernels)
     }
 

@@ -16,6 +16,18 @@
 //! e.g. a binomial-tree root that must send to `log K` children pays for
 //! each send — the engine captures pipelining and stragglers that the
 //! closed-form eq. (8) averages away.
+//!
+//! ## Hot-path structure
+//!
+//! For a fixed `(K, l, params)` the task *graph* is iteration-invariant;
+//! only durations change (provider samples × jitter). The sweep hot path
+//! therefore builds an [`IterationTemplate`] once and
+//! [`IterationTemplate::replay`]s it per iteration: the graph, CSR edges
+//! and engine scratch are all reused, so a replay performs zero heap
+//! allocations. When the configuration is fully deterministic (zero jitter
+//! and a [`CostProvider::is_deterministic`] provider) every iteration is
+//! identical, and [`simulate_run`] simulates one iteration and replicates
+//! the timing — a Fig.-6-style sweep then costs one engine run per K.
 
 use crate::net::{CollectiveAlgo, CollectiveSchedule, NetworkParams};
 use crate::simulator::engine::{Engine, TaskId};
@@ -85,6 +97,27 @@ pub trait CostProvider {
     fn combine_time(&mut self) -> f64;
     /// Master post-processing time (the model's `t_p`).
     fn post_time(&mut self) -> f64;
+    /// True when every call with the same arguments returns the same value
+    /// (no internal sampling). Enables [`simulate_run`]'s
+    /// simulate-once-replicate fast path for zero-jitter configurations.
+    /// Defaults to `false` — stochastic unless a provider opts in.
+    fn is_deterministic(&self) -> bool {
+        false
+    }
+}
+
+/// Instantiates per-stream [`CostProvider`]s for parallel sweeps.
+///
+/// A K-sweep evaluates many worker counts concurrently; threading one
+/// `&mut CostProvider` through them serially would make results depend on
+/// evaluation order. A factory instead derives an *independent* provider
+/// per stream id (we key streams by K), so every K consumes its own
+/// deterministic sample sequence and a parallel sweep is bitwise identical
+/// to the serial one at any thread count (see `rust/tests/determinism.rs`).
+pub trait CostFactory: Sync {
+    /// Create the provider for stream `stream` (deterministic in
+    /// `(self, stream)`).
+    fn instance(&self, stream: u64) -> Box<dyn CostProvider + Send>;
 }
 
 /// Analytic provider: linear-in-chunk Map cost derived from the whole-list
@@ -111,6 +144,15 @@ impl CostProvider for AnalyticCost {
     fn post_time(&mut self) -> f64 {
         self.t_p
     }
+    fn is_deterministic(&self) -> bool {
+        true
+    }
+}
+
+impl CostFactory for AnalyticCost {
+    fn instance(&self, _stream: u64) -> Box<dyn CostProvider + Send> {
+        Box::new(self.clone())
+    }
 }
 
 /// Sampled provider: Map durations drawn from per-element samples measured
@@ -118,8 +160,10 @@ impl CostProvider for AnalyticCost {
 /// mode of DESIGN.md §4.
 #[derive(Debug, Clone)]
 pub struct SampledCost {
-    /// Measured per-element Map times (seconds/element).
-    pub per_elem: Vec<f64>,
+    /// Measured per-element Map times (seconds/element). Shared, so
+    /// [`CostFactory::instance`] is O(1) per K-point instead of cloning
+    /// the whole sample set per stream.
+    pub per_elem: std::sync::Arc<Vec<f64>>,
     /// Measured `t_a`.
     pub t_a: f64,
     /// Measured `t_p`.
@@ -141,6 +185,14 @@ impl CostProvider for SampledCost {
     }
 }
 
+impl CostFactory for SampledCost {
+    fn instance(&self, stream: u64) -> Box<dyn CostProvider + Send> {
+        // Child stream derived from this provider's own rng state, without
+        // advancing it: instance(s) is a pure function of (self, s).
+        Box::new(SampledCost { rng: self.rng.split(stream), ..self.clone() })
+    }
+}
+
 /// Timing breakdown of one simulated iteration.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct IterationTiming {
@@ -156,29 +208,385 @@ pub struct IterationTiming {
     pub total: f64,
 }
 
-struct Jitter<'a> {
-    rng: &'a mut Rng,
-    comp: f64,
-    comm: f64,
+/// How a task's duration is (re)computed on each replay. Communication
+/// bases are fixed by the network model; compute durations defer to the
+/// per-replay [`CostProvider`] calls so sampled providers redraw every
+/// iteration exactly like the rebuild-per-iteration path did.
+#[derive(Debug, Clone, Copy)]
+enum DurKind {
+    /// Constant duration (relays, placeholder zero tasks).
+    Fixed(f64),
+    /// Message with the given base cost; × comm jitter per replay.
+    Comm(f64),
+    /// Worker Map + local fold: `map_time(worker, chunk) +
+    /// (chunk−1)·combine_time()`; × comp jitter.
+    MapFold { worker: u32, chunk: u32 },
+    /// `n` applications of `⊕` at one node; × comp jitter.
+    FoldN(u32),
+    /// Master post-processing (`post_time()`); × comp jitter.
+    Post,
 }
 
-impl<'a> Jitter<'a> {
-    fn comp(&mut self, t: f64) -> f64 {
-        t * self.rng.jitter(self.comp)
+/// A reusable Algorithm-2 iteration for fixed `(K, l, params)`: the task
+/// graph is built once, each [`IterationTemplate::replay`] refreshes the
+/// durations (provider samples × jitter, drawn in task-id order) and
+/// re-executes the graph in the engine's scratch buffers.
+pub struct IterationTemplate {
+    eng: Engine,
+    durs: Vec<DurKind>,
+    jitter_comp: f64,
+    jitter_comm: f64,
+    /// Last broadcast-completion task per worker (empty entries skipped).
+    bcast_tasks: Vec<TaskId>,
+    /// Map+fold task per worker.
+    map_tasks: Vec<TaskId>,
+    /// Task after which master 0 holds the full folding.
+    final_fold: TaskId,
+    /// Master post-processing task.
+    post: TaskId,
+}
+
+/// Graph-construction helper: adds tasks with a placeholder duration and
+/// records how to compute the real duration on replay.
+struct Build<'p> {
+    eng: Engine,
+    durs: Vec<DurKind>,
+    params: &'p SimParams,
+}
+
+impl<'p> Build<'p> {
+    fn push(&mut self, res: u32, kind: DurKind, label: &'static str) -> TaskId {
+        let id = self.eng.task_labeled(res, 0.0, label);
+        self.durs.push(kind);
+        id
     }
-    fn comm(&mut self, t: f64) -> f64 {
-        t * self.rng.jitter(self.comm)
+
+    /// Message task with a payload of `words` f64s.
+    fn comm(&mut self, res: u32, words: usize, label: &'static str) -> TaskId {
+        let base = self.params.net.p2p(words);
+        self.push(res, DurKind::Comm(base), label)
+    }
+
+    /// Message task with an explicit base cost (split send/recv halves).
+    fn comm_cost(&mut self, res: u32, base: f64, label: &'static str) -> TaskId {
+        self.push(res, DurKind::Comm(base), label)
+    }
+
+    fn zero(&mut self, res: u32, label: &'static str) -> TaskId {
+        self.push(res, DurKind::Fixed(0.0), label)
+    }
+
+    /// Build the reduce of a worker group into its master; returns the task
+    /// after which the group master holds the folded partial.
+    fn reduce_group(&mut self, master_res: u32, members: &[(u32, TaskId)]) -> TaskId {
+        let kk = members.len();
+        if kk == 0 {
+            // Master with no workers: nothing to fold; synthesise a zero task.
+            return self.zero(master_res, "");
+        }
+        let words_up = self.params.words_up;
+        match self.params.reduce_mode {
+            ReduceMode::TreeMasterFold => {
+                // Relay partials over the reduce tree (no intermediate folds —
+                // the paper charges all K−1 folds at the master), then a single
+                // master task of (kk−1)·t_a.
+                let sched = CollectiveSchedule::reduce(self.params.algo, kk);
+                let res_of = |node: usize| -> u32 {
+                    if node == 0 {
+                        master_res
+                    } else {
+                        members[node - 1].0
+                    }
+                };
+                let mut holds: Vec<TaskId> = Vec::with_capacity(sched.size);
+                holds.push(self.zero(master_res, ""));
+                for &(_, ready) in members {
+                    holds.push(ready);
+                }
+                for round in &sched.rounds {
+                    for &(from, to) in round {
+                        let send = self.comm(res_of(from), words_up, "reduce-send");
+                        self.eng.dep(holds[from], send);
+                        let relay = self.zero(res_of(to), "relay");
+                        self.eng.dep(send, relay);
+                        self.eng.dep(holds[to], relay);
+                        holds[to] = relay;
+                    }
+                }
+                let folds = kk.saturating_sub(1) as u32;
+                let fold = self.push(master_res, DurKind::FoldN(folds), "master-fold");
+                self.eng.dep(holds[0], fold);
+                fold
+            }
+            ReduceMode::GatherThenFold => {
+                // Each worker sends to the master (master NIC serialises
+                // receives); master then folds kk-1 times.
+                let half = self.params.net.p2p(words_up) / 2.0;
+                let mut recvs: Vec<TaskId> = Vec::with_capacity(kk);
+                for &(res, ready) in members {
+                    let send = self.comm_cost(res, half, "gather-send");
+                    self.eng.dep(ready, send);
+                    // receive occupies the master for the other half of the cost
+                    let recv = self.comm_cost(master_res, half, "gather-recv");
+                    self.eng.dep(send, recv);
+                    recvs.push(recv);
+                }
+                let mut acc = recvs[0];
+                for &r in &recvs[1..] {
+                    let fold = self.push(master_res, DurKind::FoldN(1), "fold");
+                    self.eng.dep(acc, fold);
+                    self.eng.dep(r, fold);
+                    acc = fold;
+                }
+                acc
+            }
+            ReduceMode::InTree => {
+                // Tree reduce: schedule node 0 = master, node i = members[i-1].
+                let sched = CollectiveSchedule::reduce(self.params.algo, kk);
+                let res_of = |node: usize| -> u32 {
+                    if node == 0 {
+                        master_res
+                    } else {
+                        members[node - 1].0
+                    }
+                };
+                // holds[i] = task after which node i's (partially folded)
+                // value is ready.
+                let mut holds: Vec<TaskId> = Vec::with_capacity(sched.size);
+                holds.push(self.zero(master_res, "")); // master starts empty fold
+                for &(_, ready) in members {
+                    holds.push(ready);
+                }
+                for round in &sched.rounds {
+                    for &(from, to) in round {
+                        let send = self.comm(res_of(from), words_up, "reduce-send");
+                        self.eng.dep(holds[from], send);
+                        let fold = self.push(res_of(to), DurKind::FoldN(1), "fold");
+                        self.eng.dep(send, fold);
+                        self.eng.dep(holds[to], fold);
+                        holds[to] = fold;
+                    }
+                }
+                holds[0]
+            }
+        }
+    }
+
+    /// Fold the per-group partials held by masters `1..m` into master 0.
+    fn reduce_masters(&mut self, master0_ready: TaskId, peers: &[(u32, TaskId)]) -> TaskId {
+        let sched = CollectiveSchedule::reduce(self.params.algo, peers.len());
+        let res_of = |node: usize| -> u32 { if node == 0 { 0 } else { peers[node - 1].0 } };
+        let words_up = self.params.words_up;
+        let mut holds: Vec<TaskId> = Vec::with_capacity(sched.size);
+        holds.push(master0_ready);
+        for &(_, t) in peers {
+            holds.push(t);
+        }
+        for round in &sched.rounds {
+            for &(from, to) in round {
+                let send = self.comm(res_of(from), words_up, "reduce-send");
+                self.eng.dep(holds[from], send);
+                let fold = self.push(res_of(to), DurKind::FoldN(1), "fold");
+                self.eng.dep(send, fold);
+                self.eng.dep(holds[to], fold);
+                holds[to] = fold;
+            }
+        }
+        holds[0]
+    }
+}
+
+impl IterationTemplate {
+    /// Build the Algorithm-2 task graph for `k` workers over a list of
+    /// length `l`. Pure structure — no provider or rng calls happen here.
+    ///
+    /// With `params.masters > 1`, workers are split evenly among the
+    /// masters, each group runs its own broadcast/reduce, the group masters
+    /// tree-reduce among themselves to master 0, which post-processes and
+    /// broadcasts the exit flag back through the masters (the §7-Q5
+    /// configuration the paper says admits no closed-form boundary).
+    pub fn new(k: usize, l: usize, params: &SimParams) -> IterationTemplate {
+        assert!(k >= 1, "need at least one worker");
+        assert!(params.masters >= 1);
+        let m = params.masters.min(k); // no point in masters without workers
+        let mut b = Build { eng: Engine::new(), durs: Vec::new(), params };
+
+        // Resources: 0..m are masters, m..m+k are workers.
+        let worker_res = |j: usize| (m + j) as u32; // j in 0..k
+        let chunk_of = crate::lists::partition_even(l, k);
+
+        // Split workers among masters evenly.
+        let groups = crate::lists::partition_even(k, m);
+
+        // Phase 1: per-group broadcast (payload = words_down).
+        let mut recv_x: Vec<Option<TaskId>> = vec![None; k];
+        // Master-0 forwards the approximation to other masters first (tree).
+        let master_tree = CollectiveSchedule::broadcast(params.algo, m.saturating_sub(1));
+        let mut master_recv: Vec<Option<TaskId>> = vec![None; m];
+        if m > 1 {
+            // node ids in the schedule: 0 = master 0, i = master i.
+            let mut last_send_of: Vec<Option<TaskId>> = vec![None; m];
+            for round in &master_tree.rounds {
+                for &(from, to) in round {
+                    let send = b.comm(from as u32, params.words_down, "bcast-master");
+                    if let Some(prev) = last_send_of[from] {
+                        b.eng.dep(prev, send);
+                    }
+                    if let Some(r) = master_recv[from] {
+                        b.eng.dep(r, send);
+                    }
+                    last_send_of[from] = Some(send);
+                    master_recv[to] = Some(send);
+                    last_send_of[to] = None;
+                }
+            }
+        }
+
+        for g in 0..m {
+            let members: Vec<usize> = groups.range(g).collect();
+            let sched = CollectiveSchedule::broadcast(params.algo, members.len());
+            // Schedule node 0 = master g; node i = worker members[i-1].
+            let res_of = |node: usize| -> u32 {
+                if node == 0 {
+                    g as u32
+                } else {
+                    worker_res(members[node - 1])
+                }
+            };
+            let mut node_recv: Vec<Option<TaskId>> = vec![None; sched.size];
+            let mut last_send_of: Vec<Option<TaskId>> = vec![None; sched.size];
+            // Master g cannot start before it has the approximation.
+            let anchor = master_recv[g];
+            for round in &sched.rounds {
+                for &(from, to) in round {
+                    let send = b.comm(res_of(from), params.words_down, "bcast");
+                    if let Some(prev) = last_send_of[from] {
+                        b.eng.dep(prev, send);
+                    }
+                    if let Some(r) = node_recv[from] {
+                        b.eng.dep(r, send);
+                    } else if from == 0 {
+                        if let Some(a) = anchor {
+                            b.eng.dep(a, send);
+                        }
+                    }
+                    last_send_of[from] = Some(send);
+                    node_recv[to] = Some(send);
+                    last_send_of[to] = None;
+                }
+            }
+            for (i, &w) in members.iter().enumerate() {
+                // MPI_Bcast semantics: a rank leaves the collective only after
+                // it has both received the payload *and* forwarded it to all of
+                // its tree children — its compute must not preempt forwarding.
+                recv_x[w] = last_send_of[i + 1].or(node_recv[i + 1]);
+            }
+        }
+
+        // Phase 2: worker compute = Map(chunk) + (chunk-1) local folds.
+        let mut partial_ready: Vec<TaskId> = Vec::with_capacity(k);
+        for j in 0..k {
+            let chunk = chunk_of.size(j);
+            let t = b.push(
+                worker_res(j),
+                DurKind::MapFold { worker: j as u32, chunk: chunk as u32 },
+                "map+fold",
+            );
+            if let Some(r) = recv_x[j] {
+                b.eng.dep(r, t);
+            }
+            partial_ready.push(t);
+        }
+        let map_tasks = partial_ready.clone();
+
+        // Phase 3: per-group reduce to the group master, then masters to 0.
+        let mut group_partial: Vec<TaskId> = Vec::with_capacity(m);
+        for g in 0..m {
+            let members: Vec<(u32, TaskId)> =
+                groups.range(g).map(|w| (worker_res(w), partial_ready[w])).collect();
+            let gp = b.reduce_group(g as u32, &members);
+            group_partial.push(gp);
+        }
+        // Masters fold to master 0 (tree over m nodes).
+        let final_fold = if m > 1 {
+            let peers: Vec<(u32, TaskId)> = (1..m).map(|g| (g as u32, group_partial[g])).collect();
+            b.reduce_masters(group_partial[0], &peers)
+        } else {
+            group_partial[0]
+        };
+
+        // Phase 4: master post-processing. The exit flag of Algorithm 2
+        // (step 10) is piggybacked on the next iteration's broadcast (a tagged
+        // message), as real skeletons do — so the steady-state iteration
+        // period is exactly the master's cycle: broadcast → … → post.
+        let post = b.push(0, DurKind::Post, "post");
+        b.eng.dep(final_fold, post);
+
+        let bcast_tasks: Vec<TaskId> = recv_x.iter().flatten().copied().collect();
+        IterationTemplate {
+            eng: b.eng,
+            durs: b.durs,
+            jitter_comp: params.jitter_comp,
+            jitter_comm: params.jitter_comm,
+            bcast_tasks,
+            map_tasks,
+            final_fold,
+            post,
+        }
+    }
+
+    /// Number of tasks in the iteration graph.
+    pub fn task_count(&self) -> usize {
+        self.eng.len()
+    }
+
+    /// Simulate one iteration: refresh every task's duration (provider
+    /// samples and jitter draws, in task-id order — deterministic for a
+    /// given provider/rng state) and re-execute the graph in place.
+    pub fn replay(&mut self, provider: &mut dyn CostProvider, rng: &mut Rng) -> IterationTiming {
+        for (id, kind) in self.durs.iter().enumerate() {
+            let d = match *kind {
+                DurKind::Fixed(v) => v,
+                DurKind::Comm(base) => base * rng.jitter(self.jitter_comm),
+                DurKind::MapFold { worker, chunk } => {
+                    let map_t = provider.map_time(worker as usize, chunk as usize);
+                    let folds =
+                        (chunk as usize).saturating_sub(1) as f64 * provider.combine_time();
+                    (map_t + folds) * rng.jitter(self.jitter_comp)
+                }
+                DurKind::FoldN(c) => {
+                    c as f64 * provider.combine_time() * rng.jitter(self.jitter_comp)
+                }
+                DurKind::Post => provider.post_time() * rng.jitter(self.jitter_comp),
+            };
+            self.eng.set_duration(id as TaskId, d);
+        }
+        let finish = self.eng.run_reuse();
+        let broadcast_done =
+            self.bcast_tasks.iter().map(|&t| finish[t as usize]).fold(0.0, f64::max);
+        let map_done = self.map_tasks.iter().map(|&t| finish[t as usize]).fold(0.0, f64::max);
+        IterationTiming {
+            broadcast_done,
+            map_done,
+            reduce_done: finish[self.final_fold as usize],
+            post_done: finish[self.post as usize],
+            total: Engine::makespan(finish),
+        }
+    }
+
+    /// Consume the template, returning the executed engine and the finish
+    /// times of the last replay (for trace export).
+    fn into_engine(self) -> (Engine, Vec<f64>) {
+        let finish = self.eng.last_finish().to_vec();
+        (self.eng, finish)
     }
 }
 
 /// Simulate one iteration of Algorithm 2 with `k` workers over a list of
 /// length `l`. Returns the timing breakdown.
 ///
-/// With `params.masters > 1`, workers are split evenly among the masters,
-/// each group runs its own broadcast/reduce, the group masters tree-reduce
-/// among themselves to master 0, which post-processes and broadcasts the
-/// exit flag back through the masters (the §7-Q5 configuration the paper
-/// says admits no closed-form boundary).
+/// One-shot convenience (builds a fresh [`IterationTemplate`]); sweep hot
+/// paths should build the template once and [`IterationTemplate::replay`].
 pub fn simulate_iteration(
     k: usize,
     l: usize,
@@ -186,7 +594,7 @@ pub fn simulate_iteration(
     provider: &mut dyn CostProvider,
     rng: &mut Rng,
 ) -> IterationTiming {
-    simulate_iteration_full(k, l, params, provider, rng).0
+    IterationTemplate::new(k, l, params).replay(provider, rng)
 }
 
 /// Like [`simulate_iteration`], also returning the executed task graph and
@@ -198,280 +606,19 @@ pub fn simulate_iteration_full(
     provider: &mut dyn CostProvider,
     rng: &mut Rng,
 ) -> (IterationTiming, Engine, Vec<f64>) {
-    assert!(k >= 1, "need at least one worker");
-    assert!(params.masters >= 1);
-    let m = params.masters.min(k); // no point in masters without workers
-    let mut jit = Jitter { rng, comp: params.jitter_comp, comm: params.jitter_comm };
-    let mut eng = Engine::new();
-
-    // Resources: 0..m are masters, m..m+k are workers.
-    let worker_res = |j: usize| (m + j) as u32; // j in 0..k
-    let chunk_of = crate::lists::partition_even(l, k);
-
-    // Split workers among masters evenly.
-    let groups = crate::lists::partition_even(k, m);
-
-    // Phase 1: per-group broadcast (payload = words_down).
-    // anchor[g] = task that must precede group-g's broadcast root send.
-    let mut recv_x: Vec<Option<TaskId>> = vec![None; k];
-    let mut group_bcast_roots: Vec<TaskId> = Vec::with_capacity(m);
-    // Master-0 forwards the approximation to other masters first (tree).
-    let master_tree = CollectiveSchedule::broadcast(params.algo, m.saturating_sub(1));
-    let mut master_recv: Vec<Option<TaskId>> = vec![None; m];
-    if m > 1 {
-        // node ids in the schedule: 0 = master 0, i = master i.
-        let mut last_send_of: Vec<Option<TaskId>> = vec![None; m];
-        for round in &master_tree.rounds {
-            for &(from, to) in round {
-                let send = eng.task_labeled(from as u32, jit.comm(params.net.p2p(params.words_down)), "bcast-master");
-                if let Some(prev) = last_send_of[from] {
-                    eng.dep(prev, send);
-                }
-                if let Some(r) = master_recv[from] {
-                    eng.dep(r, send);
-                }
-                last_send_of[from] = Some(send);
-                master_recv[to] = Some(send);
-                last_send_of[to] = None;
-            }
-        }
-    }
-
-    for g in 0..m {
-        let members: Vec<usize> = groups.range(g).collect();
-        let sched = CollectiveSchedule::broadcast(params.algo, members.len());
-        // Schedule node 0 = master g; node i = worker members[i-1].
-        let res_of = |node: usize| -> u32 {
-            if node == 0 {
-                g as u32
-            } else {
-                worker_res(members[node - 1])
-            }
-        };
-        let mut node_recv: Vec<Option<TaskId>> = vec![None; sched.size];
-        let mut last_send_of: Vec<Option<TaskId>> = vec![None; sched.size];
-        // Master g cannot start before it has the approximation.
-        let anchor = master_recv[g];
-        for round in &sched.rounds {
-            for &(from, to) in round {
-                let send = eng.task_labeled(res_of(from), jit.comm(params.net.p2p(params.words_down)), "bcast");
-                if let Some(prev) = last_send_of[from] {
-                    eng.dep(prev, send);
-                }
-                if let Some(r) = node_recv[from] {
-                    eng.dep(r, send);
-                } else if from == 0 {
-                    if let Some(a) = anchor {
-                        eng.dep(a, send);
-                    }
-                }
-                last_send_of[from] = Some(send);
-                node_recv[to] = Some(send);
-                last_send_of[to] = None;
-            }
-        }
-        for (i, &w) in members.iter().enumerate() {
-            // MPI_Bcast semantics: a rank leaves the collective only after
-            // it has both received the payload *and* forwarded it to all of
-            // its tree children — its compute must not preempt forwarding.
-            recv_x[w] = last_send_of[i + 1].or(node_recv[i + 1]);
-        }
-        group_bcast_roots.push(0); // placeholder; not used further
-    }
-
-    // Phase 2: worker compute = Map(chunk) + (chunk-1) local folds.
-    let mut partial_ready: Vec<TaskId> = Vec::with_capacity(k);
-    for j in 0..k {
-        let chunk = chunk_of.size(j);
-        let map_t = provider.map_time(j, chunk);
-        let folds = chunk.saturating_sub(1) as f64 * provider.combine_time();
-        let dur = jit.comp(map_t + folds);
-        let t = eng.task_labeled(worker_res(j), dur, "map+fold");
-        if let Some(r) = recv_x[j] {
-            eng.dep(r, t);
-        }
-        partial_ready.push(t);
-    }
-    let map_done_tasks = partial_ready.clone();
-
-    // Phase 3: per-group reduce to the group master, then masters to 0.
-    let mut group_partial: Vec<TaskId> = Vec::with_capacity(m);
-    for g in 0..m {
-        let members: Vec<usize> = groups.range(g).collect();
-        let gp = reduce_group(
-            &mut eng,
-            &mut jit,
-            params,
-            provider,
-            g as u32,
-            &members.iter().map(|&w| (worker_res(w), partial_ready[w])).collect::<Vec<_>>(),
-        );
-        group_partial.push(gp);
-    }
-    // Masters fold to master 0 (tree over m nodes).
-    let final_fold = if m > 1 {
-        let peers: Vec<(u32, TaskId)> = (1..m).map(|g| (g as u32, group_partial[g])).collect();
-        reduce_masters(&mut eng, &mut jit, params, provider, group_partial[0], &peers)
-    } else {
-        group_partial[0]
-    };
-
-    // Phase 4: master post-processing. The exit flag of Algorithm 2
-    // (step 10) is piggybacked on the next iteration's broadcast (a tagged
-    // message), as real skeletons do — so the steady-state iteration
-    // period is exactly the master's cycle: broadcast → … → post.
-    let post = eng.task_labeled(0, jit.comp(provider.post_time()), "post");
-    eng.dep(final_fold, post);
-
-    let finish = eng.run();
-    let t_of = |id: TaskId| finish[id as usize];
-    let broadcast_done = recv_x
-        .iter()
-        .flatten()
-        .map(|&t| t_of(t))
-        .fold(0.0, f64::max);
-    let map_done = map_done_tasks.iter().map(|&t| t_of(t)).fold(0.0, f64::max);
-    let reduce_done = t_of(final_fold);
-    let post_done = t_of(post);
-    let total = Engine::makespan(&finish);
-    (
-        IterationTiming { broadcast_done, map_done, reduce_done, post_done, total },
-        eng,
-        finish,
-    )
-}
-
-/// Build the reduce of a worker group into its master; returns the task
-/// after which the group master holds the folded partial.
-fn reduce_group(
-    eng: &mut Engine,
-    jit: &mut Jitter<'_>,
-    params: &SimParams,
-    provider: &mut dyn CostProvider,
-    master_res: u32,
-    members: &[(u32, TaskId)], // (resource, partial-ready task) per worker
-) -> TaskId {
-    let kk = members.len();
-    if kk == 0 {
-        // Master with no workers: nothing to fold; synthesise a zero task.
-        return eng.task(master_res, 0.0);
-    }
-    match params.reduce_mode {
-        ReduceMode::TreeMasterFold => {
-            // Relay partials over the reduce tree (no intermediate folds —
-            // the paper charges all K−1 folds at the master), then a single
-            // master task of (kk−1)·t_a.
-            let sched = CollectiveSchedule::reduce(params.algo, kk);
-            let res_of = |node: usize| -> u32 {
-                if node == 0 {
-                    master_res
-                } else {
-                    members[node - 1].0
-                }
-            };
-            let mut holds: Vec<TaskId> = Vec::with_capacity(sched.size);
-            holds.push(eng.task(master_res, 0.0));
-            for &(_, ready) in members {
-                holds.push(ready);
-            }
-            for round in &sched.rounds {
-                for &(from, to) in round {
-                    let send = eng.task_labeled(res_of(from), jit.comm(params.net.p2p(params.words_up)), "reduce-send");
-                    eng.dep(holds[from], send);
-                    let relay = eng.task_labeled(res_of(to), 0.0, "relay");
-                    eng.dep(send, relay);
-                    eng.dep(holds[to], relay);
-                    holds[to] = relay;
-                }
-            }
-            let fold_total = (kk.saturating_sub(1)) as f64 * provider.combine_time();
-            let fold = eng.task_labeled(master_res, jit.comp(fold_total), "master-fold");
-            eng.dep(holds[0], fold);
-            fold
-        }
-        ReduceMode::GatherThenFold => {
-            // Each worker sends to the master (master NIC serialises
-            // receives); master then folds kk-1 times.
-            let mut recvs: Vec<TaskId> = Vec::with_capacity(kk);
-            for &(res, ready) in members {
-                let send = eng.task_labeled(res, jit.comm(params.net.p2p(params.words_up) / 2.0), "gather-send");
-                eng.dep(ready, send);
-                // receive occupies the master for the other half of the cost
-                let recv = eng.task_labeled(master_res, jit.comm(params.net.p2p(params.words_up) / 2.0), "gather-recv");
-                eng.dep(send, recv);
-                recvs.push(recv);
-            }
-            let mut acc = recvs[0];
-            for &r in &recvs[1..] {
-                let fold = eng.task_labeled(master_res, jit.comp(provider.combine_time()), "fold");
-                eng.dep(acc, fold);
-                eng.dep(r, fold);
-                acc = fold;
-            }
-            acc
-        }
-        ReduceMode::InTree => {
-            // Tree reduce: schedule node 0 = master, node i = members[i-1].
-            let sched = CollectiveSchedule::reduce(params.algo, kk);
-            let res_of = |node: usize| -> u32 {
-                if node == 0 {
-                    master_res
-                } else {
-                    members[node - 1].0
-                }
-            };
-            // holds[i] = task after which node i's (partially folded)
-            // value is ready.
-            let mut holds: Vec<TaskId> = Vec::with_capacity(sched.size);
-            holds.push(eng.task(master_res, 0.0)); // master starts empty fold
-            for &(_, ready) in members {
-                holds.push(ready);
-            }
-            for round in &sched.rounds {
-                for &(from, to) in round {
-                    let send = eng.task_labeled(res_of(from), jit.comm(params.net.p2p(params.words_up)), "reduce-send");
-                    eng.dep(holds[from], send);
-                    let fold = eng.task_labeled(res_of(to), jit.comp(provider.combine_time()), "fold");
-                    eng.dep(send, fold);
-                    eng.dep(holds[to], fold);
-                    holds[to] = fold;
-                }
-            }
-            holds[0]
-        }
-    }
-}
-
-/// Fold the per-group partials held by masters `1..m` into master 0.
-fn reduce_masters(
-    eng: &mut Engine,
-    jit: &mut Jitter<'_>,
-    params: &SimParams,
-    provider: &mut dyn CostProvider,
-    master0_ready: TaskId,
-    peers: &[(u32, TaskId)],
-) -> TaskId {
-    let sched = CollectiveSchedule::reduce(params.algo, peers.len());
-    let res_of = |node: usize| -> u32 { if node == 0 { 0 } else { peers[node - 1].0 } };
-    let mut holds: Vec<TaskId> = Vec::with_capacity(sched.size);
-    holds.push(master0_ready);
-    for &(_, t) in peers {
-        holds.push(t);
-    }
-    for round in &sched.rounds {
-        for &(from, to) in round {
-            let send = eng.task_labeled(res_of(from), jit.comm(params.net.p2p(params.words_up)), "reduce-send");
-            eng.dep(holds[from], send);
-            let fold = eng.task_labeled(res_of(to), jit.comp(provider.combine_time()), "fold");
-            eng.dep(send, fold);
-            eng.dep(holds[to], fold);
-            holds[to] = fold;
-        }
-    }
-    holds[0]
+    let mut tmpl = IterationTemplate::new(k, l, params);
+    let timing = tmpl.replay(provider, rng);
+    let (eng, finish) = tmpl.into_engine();
+    (timing, eng, finish)
 }
 
 /// Simulate `iters` iterations; returns per-iteration timings.
+///
+/// Builds the task graph once and replays it per iteration. When the
+/// configuration is fully deterministic (zero jitter, deterministic
+/// provider) every iteration is identical, so one iteration is simulated
+/// and its timing replicated `iters` times — bitwise equal to the naive
+/// loop (asserted in `rust/tests/determinism.rs`).
 pub fn simulate_run(
     k: usize,
     l: usize,
@@ -480,9 +627,17 @@ pub fn simulate_run(
     provider: &mut dyn CostProvider,
     rng: &mut Rng,
 ) -> Vec<IterationTiming> {
-    (0..iters)
-        .map(|_| simulate_iteration(k, l, params, provider, rng))
-        .collect()
+    let mut tmpl = IterationTemplate::new(k, l, params);
+    if iters == 0 {
+        return Vec::new();
+    }
+    let deterministic =
+        params.jitter_comp == 0.0 && params.jitter_comm == 0.0 && provider.is_deterministic();
+    if deterministic {
+        let t = tmpl.replay(provider, rng);
+        return vec![t; iters];
+    }
+    (0..iters).map(|_| tmpl.replay(provider, rng)).collect()
 }
 
 #[cfg(test)]
@@ -614,13 +769,14 @@ mod tests {
     #[test]
     fn sampled_cost_draws_from_samples() {
         let mut prov = SampledCost {
-            per_elem: vec![1e-6, 2e-6],
+            per_elem: std::sync::Arc::new(vec![1e-6, 2e-6]),
             t_a: 1e-7,
             t_p: 1e-6,
             rng: Rng::new(11),
         };
         let t = prov.map_time(0, 1000);
         assert!(t == 1e-3 || t == 2e-3, "t={t}");
+        assert!(!prov.is_deterministic());
     }
 
     #[test]
@@ -630,5 +786,37 @@ mod tests {
         let mut rng = Rng::new(12);
         let runs = simulate_run(4, l, 5, &params(), &mut prov, &mut rng);
         assert_eq!(runs.len(), 5);
+    }
+
+    #[test]
+    fn template_replay_matches_fresh_build() {
+        // Replaying one template must be bitwise identical to rebuilding
+        // the graph per iteration, jittered or not.
+        let l = 1024;
+        let mut p = params();
+        p.jitter_comp = 0.08;
+        p.jitter_comm = 0.05;
+        let mut prov = analytic(l);
+        let mut tmpl = IterationTemplate::new(24, l, &p);
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        for _ in 0..4 {
+            let reused = tmpl.replay(&mut prov, &mut r1);
+            let fresh = simulate_iteration(24, l, &p, &mut prov, &mut r2);
+            assert_eq!(reused, fresh);
+        }
+    }
+
+    #[test]
+    fn deterministic_run_replicates_single_iteration() {
+        let l = 2048;
+        let mut prov = analytic(l);
+        let mut rng = Rng::new(13);
+        let runs = simulate_run(16, l, 7, &params(), &mut prov, &mut rng);
+        assert_eq!(runs.len(), 7);
+        let one = simulate_iteration(16, l, &params(), &mut prov, &mut Rng::new(99));
+        for t in &runs {
+            assert_eq!(*t, one);
+        }
     }
 }

@@ -7,8 +7,15 @@
 //! queue — `O((T + E) log T)` for `T` tasks and `E` dependency edges.
 //!
 //! This is the hot path of every speedup-curve experiment (a Fig.-6 sweep
-//! executes millions of tasks), so the representation is flat `Vec`s and
-//! the heap holds plain `(f64, u32)` pairs.
+//! executes millions of tasks), so the representation is allocation-free on
+//! replay: edges live in a CSR-style flat array (`csr_off`/`csr_dst`, built
+//! once per graph), every per-run working set (`pending`, `ready_at`,
+//! `finish`, `resource_free`, the heap) is a reusable scratch buffer, and
+//! [`Engine::set_duration`] + [`Engine::run_reuse`] replay the same graph
+//! with new durations without touching the allocator. After the first
+//! `run_reuse` call on a graph, subsequent replays perform **zero** heap
+//! allocations (asserted by `rust/benches/simulator_hotpath.rs` with a
+//! counting allocator).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -50,17 +57,35 @@ impl Ord for Ready {
 }
 
 /// Task-graph builder + executor.
+///
+/// The graph (tasks + dependencies) and the execution scratch are both
+/// owned by the engine, so a graph can be built once and replayed many
+/// times: mutate durations with [`Engine::set_duration`], execute with
+/// [`Engine::run_reuse`], and start a new graph without releasing buffer
+/// capacity with [`Engine::reset`].
 #[derive(Debug, Default)]
 pub struct Engine {
     specs: Vec<TaskSpec>,
-    /// Adjacency: edges[i] lists tasks that depend on task i.
-    edges: Vec<Vec<TaskId>>,
-    /// Number of unmet dependencies per task.
-    pending: Vec<u32>,
-    /// Earliest start implied by completed deps.
-    ready_at: Vec<f64>,
     /// Optional phase labels (static strings — no hot-path allocation).
     labels: Vec<&'static str>,
+    /// Edge list in insertion order; finalised into CSR before execution.
+    edge_from: Vec<TaskId>,
+    edge_to: Vec<TaskId>,
+    /// Number of dependencies per task (static; copied into `pending` per run).
+    indegree: Vec<u32>,
+    /// CSR adjacency: successors of task `i` are
+    /// `csr_dst[csr_off[i]..csr_off[i+1]]`, in `dep` insertion order.
+    csr_off: Vec<usize>,
+    csr_dst: Vec<TaskId>,
+    csr_valid: bool,
+    /// Number of distinct resources (max resource id + 1).
+    max_res: usize,
+    // --- per-run scratch, reused across run_reuse calls ---
+    pending: Vec<u32>,
+    ready_at: Vec<f64>,
+    finish: Vec<f64>,
+    resource_free: Vec<f64>,
+    heap: BinaryHeap<Ready>,
 }
 
 impl Engine {
@@ -79,10 +104,10 @@ impl Engine {
         debug_assert!(duration >= 0.0, "negative duration");
         let id = self.specs.len() as TaskId;
         self.specs.push(TaskSpec { resource, duration });
-        self.edges.push(Vec::new());
-        self.pending.push(0);
-        self.ready_at.push(0.0);
         self.labels.push(label);
+        self.indegree.push(0);
+        self.max_res = self.max_res.max(resource as usize + 1);
+        self.csr_valid = false;
         id
     }
 
@@ -98,8 +123,10 @@ impl Engine {
 
     /// Declare that `after` cannot start before `before` finishes.
     pub fn dep(&mut self, before: TaskId, after: TaskId) {
-        self.edges[before as usize].push(after);
-        self.pending[after as usize] += 1;
+        self.edge_from.push(before);
+        self.edge_to.push(after);
+        self.indegree[after as usize] += 1;
+        self.csr_valid = false;
     }
 
     /// Number of tasks.
@@ -107,54 +134,121 @@ impl Engine {
         self.specs.len()
     }
 
+    /// Number of dependency edges.
+    pub fn edge_count(&self) -> usize {
+        self.edge_from.len()
+    }
+
     /// True when no tasks have been added.
     pub fn is_empty(&self) -> bool {
         self.specs.is_empty()
     }
 
-    /// Execute the graph; returns per-task finish times.
+    /// Overwrite a task's duration (graph structure unchanged) — the replay
+    /// API: build the graph once, then per iteration set new durations and
+    /// call [`Engine::run_reuse`].
+    pub fn set_duration(&mut self, id: TaskId, duration: f64) {
+        debug_assert!(duration >= 0.0, "negative duration");
+        self.specs[id as usize].duration = duration;
+    }
+
+    /// Clear the graph (tasks, labels, edges) while keeping the capacity of
+    /// every internal buffer — start building the next graph without
+    /// releasing memory.
+    pub fn reset(&mut self) {
+        self.specs.clear();
+        self.labels.clear();
+        self.edge_from.clear();
+        self.edge_to.clear();
+        self.indegree.clear();
+        self.csr_valid = false;
+        self.max_res = 0;
+    }
+
+    /// Per-task finish times of the most recent run (empty before any run).
+    pub fn last_finish(&self) -> &[f64] {
+        &self.finish
+    }
+
+    /// Build the CSR adjacency from the edge list (counting sort by source;
+    /// stable, so per-source successor order equals `dep` insertion order —
+    /// this keeps heap insertion order, and therefore tie-breaking, bitwise
+    /// reproducible).
+    fn finalize(&mut self) {
+        let n = self.specs.len();
+        self.csr_off.clear();
+        self.csr_off.resize(n + 1, 0);
+        for &f in &self.edge_from {
+            self.csr_off[f as usize + 1] += 1;
+        }
+        for i in 0..n {
+            self.csr_off[i + 1] += self.csr_off[i];
+        }
+        self.csr_dst.clear();
+        self.csr_dst.resize(self.edge_from.len(), 0);
+        let mut cursor = self.csr_off.clone();
+        for (&f, &t) in self.edge_from.iter().zip(&self.edge_to) {
+            self.csr_dst[cursor[f as usize]] = t;
+            cursor[f as usize] += 1;
+        }
+        self.csr_valid = true;
+    }
+
+    /// Execute the graph; returns per-task finish times as a fresh vector.
     ///
     /// Panics if the dependency graph is cyclic (some task never becomes
-    /// ready).
+    /// ready). Convenience wrapper over [`Engine::run_reuse`] for one-shot
+    /// callers; hot loops should use `run_reuse` to avoid the copy.
     pub fn run(&mut self) -> Vec<f64> {
+        self.run_reuse().to_vec()
+    }
+
+    /// Execute the graph into the engine's reusable scratch buffers and
+    /// return the per-task finish times as a borrowed slice. Zero heap
+    /// allocations once the scratch has grown to the graph's size.
+    pub fn run_reuse(&mut self) -> &[f64] {
+        if !self.csr_valid {
+            self.finalize();
+        }
         let n = self.specs.len();
-        let max_resource = self
-            .specs
-            .iter()
-            .map(|s| s.resource)
-            .max()
-            .map(|r| r as usize + 1)
-            .unwrap_or(0);
-        let mut resource_free = vec![0.0f64; max_resource];
-        let mut finish = vec![f64::NAN; n];
-        let mut heap: BinaryHeap<Ready> = BinaryHeap::with_capacity(n);
+        self.pending.clear();
+        self.pending.extend_from_slice(&self.indegree);
+        self.ready_at.clear();
+        self.ready_at.resize(n, 0.0);
+        self.finish.clear();
+        self.finish.resize(n, f64::NAN);
+        self.resource_free.clear();
+        self.resource_free.resize(self.max_res, 0.0);
+        self.heap.clear();
         for (i, &p) in self.pending.iter().enumerate() {
             if p == 0 {
-                heap.push(Ready(self.ready_at[i], i as TaskId));
+                self.heap.push(Ready(0.0, i as TaskId));
             }
         }
         let mut done = 0usize;
-        while let Some(Ready(ready, id)) = heap.pop() {
+        while let Some(Ready(ready, id)) = self.heap.pop() {
             let spec = self.specs[id as usize];
-            let start = ready.max(resource_free[spec.resource as usize]);
+            let start = ready.max(self.resource_free[spec.resource as usize]);
             let end = start + spec.duration;
-            resource_free[spec.resource as usize] = end;
-            finish[id as usize] = end;
+            self.resource_free[spec.resource as usize] = end;
+            self.finish[id as usize] = end;
             done += 1;
-            // `edges` is only read here; split borrow via index loop.
-            for e in 0..self.edges[id as usize].len() {
-                let succ = self.edges[id as usize][e] as usize;
+            let lo = self.csr_off[id as usize];
+            let hi = self.csr_off[id as usize + 1];
+            for e in lo..hi {
+                let succ = self.csr_dst[e] as usize;
                 if self.ready_at[succ] < end {
                     self.ready_at[succ] = end;
                 }
                 self.pending[succ] -= 1;
                 if self.pending[succ] == 0 {
-                    heap.push(Ready(self.ready_at[succ], succ as TaskId));
+                    let at = self.ready_at[succ];
+                    self.heap.push(Ready(at, succ as TaskId));
                 }
             }
         }
         assert_eq!(done, n, "cyclic dependency graph: {} tasks never ran", n - done);
-        finish
+        &self.finish
     }
 
     /// Makespan of the last `run`'s schedule (max finish time).
@@ -265,5 +359,61 @@ mod tests {
         assert!(f.is_empty());
         assert!(e.is_empty());
         assert_eq!(Engine::makespan(&f), 0.0);
+    }
+
+    #[test]
+    fn replay_is_bitwise_stable() {
+        // Same graph, same durations: every replay must be bit-identical.
+        let mut e = Engine::new();
+        let src = e.task(0, 0.3);
+        let mid = e.task(1, 0.7);
+        let sink = e.task(0, 0.1);
+        e.dep(src, mid);
+        e.dep(mid, sink);
+        let first = e.run();
+        for _ in 0..3 {
+            assert_eq!(e.run_reuse(), &first[..]);
+        }
+    }
+
+    #[test]
+    fn set_duration_replays_new_schedule() {
+        let mut e = Engine::new();
+        let a = e.task(0, 1.0);
+        let b = e.task(0, 2.0);
+        e.dep(a, b);
+        assert_eq!(e.run(), vec![1.0, 3.0]);
+        e.set_duration(a, 10.0);
+        assert_eq!(e.run(), vec![10.0, 12.0]);
+    }
+
+    #[test]
+    fn reset_reuses_buffers_for_new_graph() {
+        let mut e = Engine::new();
+        let a = e.task(0, 1.0);
+        let b = e.task(1, 2.0);
+        e.dep(a, b);
+        assert_eq!(e.run(), vec![1.0, 3.0]);
+        e.reset();
+        assert!(e.is_empty());
+        assert_eq!(e.edge_count(), 0);
+        let a = e.task(0, 4.0);
+        let b = e.task(0, 5.0);
+        e.dep(a, b);
+        assert_eq!(e.run(), vec![4.0, 9.0]);
+    }
+
+    #[test]
+    fn dep_after_first_run_rebuilds_csr() {
+        let mut e = Engine::new();
+        let a = e.task(0, 1.0);
+        let b = e.task(0, 1.0);
+        let f = e.run();
+        assert_eq!(f, vec![1.0, 2.0]);
+        let c = e.task(1, 1.0);
+        e.dep(a, c);
+        e.dep(b, c);
+        let f = e.run();
+        assert_eq!(f[c as usize], 3.0);
     }
 }

@@ -21,8 +21,8 @@ mod engine;
 pub mod trace;
 
 pub use cluster::{
-    simulate_iteration, simulate_iteration_full, simulate_run, AnalyticCost, CostProvider,
-    IterationTiming, ReduceMode, SampledCost, SimParams,
+    simulate_iteration, simulate_iteration_full, simulate_run, AnalyticCost, CostFactory,
+    CostProvider, IterationTemplate, IterationTiming, ReduceMode, SampledCost, SimParams,
 };
 pub use trace::{trace_iteration, Trace, TraceEvent};
 pub use engine::{Engine, TaskId, TaskSpec};

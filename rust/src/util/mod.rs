@@ -7,6 +7,7 @@
 pub mod bench;
 pub mod svg;
 pub mod json;
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,89 @@
+//! Minimal deterministic fork–join helper for the sweep hot path.
+//!
+//! [`parallel_map`] evaluates `f(0..n)` across a fixed number of scoped OS
+//! threads (no external crates) and returns the results **in index order**,
+//! whatever order the workers finished in. Work is handed out through an
+//! atomic cursor, so long items (e.g. large-K simulations) don't serialise
+//! behind a static chunking. Determinism contract: `f` must be a pure
+//! function of its index (the simulator guarantees this by deriving one
+//! RNG stream per K — see [`crate::util::Rng::split`]), in which case the
+//! output is bitwise identical at any thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Worker-thread count for parallel sweeps: the `BSF_SWEEP_THREADS`
+/// environment variable when set (0/unparsable → fall through), else the
+/// machine's available parallelism.
+pub fn default_threads() -> usize {
+    if let Some(n) =
+        std::env::var("BSF_SWEEP_THREADS").ok().and_then(|s| s.parse::<usize>().ok())
+    {
+        if n >= 1 {
+            return n;
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Evaluate `f(i)` for `i in 0..n` on up to `threads` scoped threads and
+/// collect the results in index order. `threads <= 1` (or `n <= 1`) runs
+/// inline with no thread spawned.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let f = &f;
+    let next = &next;
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n || tx.send((i, f(i))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        while let Ok((i, v)) = rx.recv() {
+            out[i] = Some(v);
+        }
+    });
+    out.into_iter().map(|o| o.expect("every index produced")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order() {
+        for threads in [1usize, 2, 4, 9] {
+            let got = parallel_map(100, threads, |i| i * i);
+            let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn handles_more_threads_than_items() {
+        assert_eq!(parallel_map(3, 64, |i| i + 1), vec![1, 2, 3]);
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, 4, |i| i), vec![0]);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

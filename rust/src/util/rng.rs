@@ -34,8 +34,30 @@ impl Rng {
     }
 
     /// Derive an independent stream (for per-worker / per-experiment rngs).
+    /// Advances this generator, so successive forks differ.
     pub fn fork(&mut self, stream: u64) -> Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+
+    /// Derive an independent child stream *without* advancing this
+    /// generator: `split(s)` is a pure function of `(self, s)`, so any
+    /// number of callers — in any order, on any thread — obtain the same
+    /// child for the same stream id. This is the contract parallel K-sweeps
+    /// rely on for bitwise reproducibility: one root rng, one split stream
+    /// per K, identical results at any thread count.
+    pub fn split(&self, stream: u64) -> Rng {
+        let mut sm = self.s[0]
+            .wrapping_add(self.s[1].rotate_left(17))
+            .wrapping_add(self.s[2].rotate_left(31))
+            .wrapping_add(self.s[3].rotate_left(47))
+            ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
     }
 
     /// Next raw 64-bit value.
@@ -174,6 +196,31 @@ mod tests {
         for _ in 0..10_000 {
             assert!(r.jitter(0.5) > 0.0);
         }
+    }
+
+    #[test]
+    fn split_is_pure_and_keeps_parent_state() {
+        let root = Rng::new(42);
+        let mut a = root.split(7);
+        let mut b = root.split(7);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64(), "same (state, stream) must match");
+        }
+        // parent unchanged: a later split of the same root still agrees
+        let mut c = root.split(7);
+        let mut d = Rng::new(42).split(7);
+        for _ in 0..64 {
+            assert_eq!(c.next_u64(), d.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let root = Rng::new(1);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
     }
 
     #[test]

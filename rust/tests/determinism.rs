@@ -1,0 +1,158 @@
+//! Determinism suite for the zero-allocation sweep pipeline.
+//!
+//! Two contracts the perf work must never break:
+//!
+//! 1. **Parallel == serial, bitwise.** A K-sweep evaluated across N
+//!    threads must produce bit-identical `f64`s to the single-threaded
+//!    sweep, because every K draws from its own provider instance and RNG
+//!    stream (`Rng::split`, keyed by K) rather than sharing a serially
+//!    threaded generator.
+//! 2. **Replication == naive loop, bitwise.** With zero jitter and a
+//!    deterministic provider, `simulate_run` simulates one iteration and
+//!    replicates it; that must equal running the full `iters` loop.
+
+use bsf::experiments::{
+    analytic_provider, paper_jacobi_params, simulated_curve_threads, ExperimentCtx,
+};
+use bsf::simulator::{
+    simulate_iteration, simulate_run, AnalyticCost, IterationTemplate, IterationTiming, SimParams,
+};
+use bsf::util::Rng;
+
+fn assert_bitwise_eq(a: &IterationTiming, b: &IterationTiming, what: &str) {
+    for (x, y, field) in [
+        (a.broadcast_done, b.broadcast_done, "broadcast_done"),
+        (a.map_done, b.map_done, "map_done"),
+        (a.reduce_done, b.reduce_done, "reduce_done"),
+        (a.post_done, b.post_done, "post_done"),
+        (a.total, b.total, "total"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {field} differs ({x} vs {y})");
+    }
+}
+
+#[test]
+fn parallel_sweep_bitwise_equals_serial() {
+    let ctx = ExperimentCtx::default();
+    let params = paper_jacobi_params(5_000).unwrap();
+    let prov = analytic_provider(&params);
+    let sim = SimParams::new(5_000, 5_000);
+    let ks: Vec<usize> = (1..=48).collect();
+    let reference =
+        simulated_curve_threads(&ctx, &sim, 5_000, &prov, &ks, 3, &mut Rng::new(42), 1);
+    for threads in [1usize, 4, 8] {
+        let got =
+            simulated_curve_threads(&ctx, &sim, 5_000, &prov, &ks, 3, &mut Rng::new(42), threads);
+        assert_eq!(reference.len(), got.len());
+        for (a, b) in reference.iter().zip(&got) {
+            assert_eq!(a.k, b.k, "threads={threads}");
+            assert_eq!(
+                a.t_k.to_bits(),
+                b.t_k.to_bits(),
+                "threads={threads} K={}: t_k {} vs {}",
+                a.k,
+                a.t_k,
+                b.t_k
+            );
+            assert_eq!(
+                a.speedup.to_bits(),
+                b.speedup.to_bits(),
+                "threads={threads} K={}: speedup",
+                a.k
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_sweep_bitwise_equals_serial_with_jitter() {
+    // Jitter makes every K consume rng draws; per-K split streams keep the
+    // draws independent of evaluation order, so the bitwise guarantee must
+    // survive stochastic configurations too.
+    let ctx = ExperimentCtx::default();
+    let params = paper_jacobi_params(1_500).unwrap();
+    let prov = analytic_provider(&params);
+    let mut sim = SimParams::new(1_500, 1_500);
+    sim.jitter_comp = 0.15;
+    sim.jitter_comm = 0.10;
+    let ks: Vec<usize> = (1..=32).collect();
+    let reference =
+        simulated_curve_threads(&ctx, &sim, 1_500, &prov, &ks, 4, &mut Rng::new(7), 1);
+    for threads in [4usize, 8] {
+        let got =
+            simulated_curve_threads(&ctx, &sim, 1_500, &prov, &ks, 4, &mut Rng::new(7), threads);
+        for (a, b) in reference.iter().zip(&got) {
+            assert_eq!(a.t_k.to_bits(), b.t_k.to_bits(), "threads={threads} K={}", a.k);
+        }
+    }
+}
+
+#[test]
+fn sweep_stream_is_keyed_by_k_not_grid() {
+    // The per-K stream depends on K itself, so refining the sweep grid
+    // must not change the value simulated at a K that appears in both.
+    let ctx = ExperimentCtx::default();
+    let params = paper_jacobi_params(1_500).unwrap();
+    let prov = analytic_provider(&params);
+    let mut sim = SimParams::new(1_500, 1_500);
+    sim.jitter_comp = 0.1;
+    let coarse: Vec<usize> = vec![1, 8, 16, 32];
+    let fine: Vec<usize> = (1..=32).collect();
+    let a = simulated_curve_threads(&ctx, &sim, 1_500, &prov, &coarse, 3, &mut Rng::new(5), 2);
+    let b = simulated_curve_threads(&ctx, &sim, 1_500, &prov, &fine, 3, &mut Rng::new(5), 2);
+    for pa in &a {
+        let pb = b.iter().find(|p| p.k == pa.k).expect("shared K");
+        assert_eq!(pa.t_k.to_bits(), pb.t_k.to_bits(), "K={}", pa.k);
+    }
+}
+
+#[test]
+fn deterministic_replication_matches_naive_loop() {
+    let l = 2_048;
+    let params = SimParams::new(l, l);
+    let mut prov = AnalyticCost { t_map_full: 0.3, l, t_a: 1e-6, t_p: 1e-5 };
+    for k in [1usize, 7, 16, 64] {
+        let fast = simulate_run(k, l, 9, &params, &mut prov, &mut Rng::new(1));
+        assert_eq!(fast.len(), 9);
+        // Naive loop: one fresh graph build + run per iteration.
+        let naive: Vec<IterationTiming> = (0..9)
+            .map(|_| simulate_iteration(k, l, &params, &mut prov, &mut Rng::new(1)))
+            .collect();
+        for (i, (a, b)) in fast.iter().zip(&naive).enumerate() {
+            assert_bitwise_eq(a, b, &format!("K={k} iter={i}"));
+        }
+    }
+}
+
+#[test]
+fn jittered_run_matches_per_iteration_rebuild() {
+    // The replay path (graph built once) must be bitwise equal to
+    // rebuilding the graph every iteration with the same rng stream.
+    let l = 1_024;
+    let mut params = SimParams::new(l, l);
+    params.jitter_comp = 0.1;
+    params.jitter_comm = 0.05;
+    let mut prov = AnalyticCost { t_map_full: 0.2, l, t_a: 1e-6, t_p: 1e-5 };
+    let mut r1 = Rng::new(33);
+    let mut r2 = Rng::new(33);
+    let reused = simulate_run(12, l, 6, &params, &mut prov, &mut r1);
+    let rebuilt: Vec<IterationTiming> =
+        (0..6).map(|_| simulate_iteration(12, l, &params, &mut prov, &mut r2)).collect();
+    for (i, (a, b)) in reused.iter().zip(&rebuilt).enumerate() {
+        assert_bitwise_eq(a, b, &format!("iter={i}"));
+    }
+}
+
+#[test]
+fn template_task_count_is_iteration_invariant() {
+    let l = 4_096;
+    let params = SimParams::new(l, l);
+    let mut prov = AnalyticCost { t_map_full: 0.5, l, t_a: 1e-6, t_p: 1e-5 };
+    let mut rng = Rng::new(3);
+    let mut tmpl = IterationTemplate::new(32, l, &params);
+    let before = tmpl.task_count();
+    for _ in 0..5 {
+        tmpl.replay(&mut prov, &mut rng);
+    }
+    assert_eq!(tmpl.task_count(), before, "replay must not grow the graph");
+}
