@@ -1,4 +1,5 @@
-//! Bench: the live skeleton's per-iteration overhead.
+//! Bench: the live skeleton's per-iteration overhead, plus the
+//! zero-allocation contract of the workspace-threaded problem API.
 //!
 //! The coordinator must not be the bottleneck (DESIGN.md §9): its per-
 //! iteration cost (broadcast + gather + fold + bookkeeping) is measured
@@ -6,16 +7,48 @@
 //! skeleton overhead. Compare against the per-iteration `t_Map` of real
 //! problems (milliseconds) — overhead should be ≪ that.
 //!
+//! The second section drives `BsfProblem::map_fold_into` (native path) for
+//! all four shipped problems under a counting allocator and **asserts**
+//! zero steady-state allocations per call — the kernel-side analogue of
+//! the engine's zero-allocation replay.
+//!
 //! ```text
 //! cargo bench --bench coordinator_hotpath
 //! ```
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use bsf::coordinator::{BsfProblem, CostSpec, LiveRunner};
+use bsf::coordinator::{BsfProblem, CostSpec, LiveRunner, Workspace};
+use bsf::linalg::generators;
+use bsf::problems::{CimminoProblem, GravityProblem, JacobiProblem, MonteCarloPi};
 use bsf::runtime::KernelRuntime;
 use bsf::util::bench::{bench, human_time};
+
+/// Counts every allocation so the zero-allocation `map_fold_into` claim is
+/// measured, not assumed.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 /// A problem whose compute is a single multiply — pure skeleton overhead.
 #[derive(Debug)]
@@ -34,17 +67,22 @@ impl BsfProblem for Noop {
     fn initial_approx(&self) -> Vec<f64> {
         vec![1.0; self.payload]
     }
-    fn map_fold(&self, _r: Range<usize>, x: &[f64], _k: Option<&KernelRuntime>) -> Vec<f64> {
-        let mut out = vec![0.0; self.payload];
+    fn map_fold_into(
+        &self,
+        _r: Range<usize>,
+        x: &[f64],
+        out: &mut [f64],
+        _ws: &mut Workspace,
+        _k: Option<&KernelRuntime>,
+    ) {
+        out.fill(0.0);
         out[0] = x[0] * 2.0;
-        out
     }
     fn fold_identity(&self) -> Vec<f64> {
         vec![0.0; self.payload]
     }
-    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
-        a[0] += b[0];
-        a
+    fn combine_into(&self, acc: &mut [f64], b: &[f64]) {
+        acc[0] += b[0];
     }
     fn post(&self, _x: &[f64], s: &[f64], _i: usize) -> (Vec<f64>, bool) {
         let mut next = vec![1.0; self.payload];
@@ -61,6 +99,49 @@ impl BsfProblem for Noop {
             ops_post: 1.0,
         }
     }
+}
+
+/// Steady-state allocations per `map_fold_into` call over the whole list,
+/// native path. Warm call first (grows buffers), then `reps` measured
+/// calls: the count must be exactly zero.
+fn assert_zero_alloc_map_fold(name: &str, p: &dyn BsfProblem) {
+    let x = p.initial_approx();
+    let l = p.list_len();
+    let mut out = p.fold_identity();
+    let mut ws = Workspace::new();
+    p.map_fold_into(0..l, &x, &mut out, &mut ws, None); // warm buffers
+    let reps = 64u64;
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..reps {
+        p.map_fold_into(0..l, &x, &mut out, &mut ws, None);
+        std::hint::black_box(&out);
+    }
+    let per_call = (ALLOCS.load(Ordering::Relaxed) - before) as f64 / reps as f64;
+    println!("    -> allocations per map_fold_into [{name}]: {per_call}");
+    assert_eq!(per_call, 0.0, "{name}: map_fold_into allocates in steady state");
+    // combine_into is in-place by construction; pin it too.
+    let b = out.clone();
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..reps {
+        p.combine_into(&mut out, &b);
+    }
+    assert_eq!(
+        ALLOCS.load(Ordering::Relaxed),
+        before,
+        "{name}: combine_into allocates in steady state"
+    );
+    // Workspace scratch reuse: once grown, `zeroed` must hand back
+    // capacity without touching the allocator.
+    std::hint::black_box(ws.zeroed(l.min(1_024)));
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..reps {
+        std::hint::black_box(ws.zeroed(l.min(1_024)));
+    }
+    assert_eq!(
+        ALLOCS.load(Ordering::Relaxed),
+        before,
+        "{name}: Workspace::zeroed allocates in steady state"
+    );
 }
 
 fn main() {
@@ -84,4 +165,16 @@ fn main() {
             );
         }
     }
+
+    println!("== coordinator_hotpath: map_fold_into allocation audit (native path) ==");
+    let jacobi = JacobiProblem::new(generators::paper_system(512), 1e-12);
+    assert_zero_alloc_map_fold("bsf-jacobi n=512", &jacobi);
+    let gravity = GravityProblem::new(generators::random_bodies(2_048, 5.0, 7), 1e-3, f64::MAX);
+    assert_zero_alloc_map_fold("bsf-gravity n=2048", &gravity);
+    let cimmino =
+        CimminoProblem::new(generators::feasible_inequalities(1_024, 64, 0.1, 7), 1.5, 1e-20);
+    assert_zero_alloc_map_fold("bsf-cimmino m=1024", &cimmino);
+    let pi = MonteCarloPi::new(1_024, 16, 1e-6, 0xC0FFEE);
+    assert_zero_alloc_map_fold("monte-carlo-pi l=1024", &pi);
+    println!("all four problems: 0 steady-state allocations per map_fold_into call");
 }

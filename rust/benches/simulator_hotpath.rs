@@ -4,15 +4,18 @@
 //! iteration at K workers is ~4K tasks, so the engine must sustain
 //! millions of tasks/second (DESIGN.md §9 target: ≥ 1 M events/s).
 //!
-//! Besides raw throughput this harness measures the three layers of the
-//! zero-allocation rework (see PERF.md):
+//! Besides raw throughput this harness measures every layer of the
+//! allocation-free rework (see PERF.md):
 //!
 //! * rebuild-per-iteration (the old path, kept as the baseline) vs
 //!   template **replay** (graph built once, scratch reused);
 //! * `simulate_run`'s deterministic **replication** fast path;
 //! * the **parallel sweep** at 1 thread vs all cores;
 //! * steady-state heap **allocations per replay**, counted by a global
-//!   counting allocator (must be 0).
+//!   counting allocator (must be 0);
+//! * the **calendar event queue vs the retired binary heap** on the
+//!   identical K=270 iteration graph (schedules asserted bitwise equal;
+//!   calendar must be no slower).
 //!
 //! ```text
 //! cargo bench --bench simulator_hotpath
@@ -22,7 +25,10 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use bsf::experiments::{analytic_provider, simulated_curve_threads, ExperimentCtx};
-use bsf::simulator::{simulate_iteration, AnalyticCost, Engine, IterationTemplate, SimParams};
+use bsf::simulator::{
+    simulate_iteration, simulate_iteration_full, AnalyticCost, Engine, IterationTemplate,
+    ReferenceScheduler, SimParams,
+};
 use bsf::util::bench::{bench_throughput, human_time};
 use bsf::util::Rng;
 
@@ -179,4 +185,25 @@ fn main() {
         "    -> full-sweep wall time (all cores): {}",
         human_time(r.summary.median)
     );
+
+    // Calendar queue vs the retired binary-heap event loop, same graph:
+    // the Fig.-6 iteration at K=270 (the paper's largest Jacobi sweep
+    // point). The acceptance bar is "calendar no slower than heap".
+    let mut prov_cmp = AnalyticCost { t_map_full: 0.373, l: n, t_a: 9.31e-6, t_p: 3.7e-5 };
+    let (_, mut eng, _) =
+        simulate_iteration_full(270, n, &params, &mut prov_cmp, &mut Rng::new(14));
+    let mut heap_ref = ReferenceScheduler::from_engine(&eng);
+    let want = heap_ref.run().to_vec();
+    let got = eng.run_reuse();
+    assert_eq!(want.len(), got.len());
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.to_bits(), g.to_bits(), "heap vs calendar diverge at task {i}");
+    }
+    let tasks = eng.len() as u64;
+    bench_throughput("event loop: heap reference, K=270 graph", 3, 20, tasks, || {
+        std::hint::black_box(ReferenceScheduler::run(&mut heap_ref));
+    });
+    bench_throughput("event loop: calendar queue,  K=270 graph", 3, 20, tasks, || {
+        std::hint::black_box(Engine::makespan(eng.run_reuse()));
+    });
 }

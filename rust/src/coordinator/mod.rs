@@ -65,11 +65,46 @@ impl CostSpec {
     }
 }
 
+/// Reusable per-caller scratch threaded through
+/// [`BsfProblem::map_fold_into`]. Runners own one workspace per worker
+/// thread and hand it to every call, so a plugged-in problem that needs
+/// per-call temporary storage can borrow capacity instead of allocating
+/// per iteration. The four shipped problems' native paths fold straight
+/// into `out` and leave it untouched — their zero-allocation steady state
+/// (asserted by `rust/benches/coordinator_hotpath.rs` with a counting
+/// allocator) does not depend on it; the parameter is part of the trait
+/// contract so scratch-hungry problems (and the planned borrowed-tensor
+/// PJRT staging — see ROADMAP) don't have to re-thread it later.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    buf: Vec<f64>,
+}
+
+impl Workspace {
+    /// Empty workspace; buffers grow on first use and are then reused.
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// A zeroed f64 scratch slice of exactly `len` elements (capacity
+    /// reused across calls).
+    pub fn zeroed(&mut self, len: usize) -> &mut [f64] {
+        self.buf.clear();
+        self.buf.resize(len, 0.0);
+        &mut self.buf
+    }
+}
+
 /// A BSF algorithm: the problem-specific plugs of Algorithms 1/2.
 ///
 /// The approximation and the partial foldings are opaque f64 payloads
 /// (problems define their own encoding; e.g. BSF-Gravity packs
 /// `[X, V, t]` downlink and a 3-vector uplink).
+///
+/// The worker hot path is the allocation-free pair
+/// [`BsfProblem::map_fold_into`] / [`BsfProblem::combine_into`]; the
+/// owning-`Vec` wrappers [`BsfProblem::map_fold`] / [`BsfProblem::combine`]
+/// are provided for one-shot callers (tests, calibration sampling).
 pub trait BsfProblem: Send + Sync {
     /// Human-readable name (reports, traces).
     fn name(&self) -> &str;
@@ -81,17 +116,28 @@ pub trait BsfProblem: Send + Sync {
     fn initial_approx(&self) -> Vec<f64>;
 
     /// Worker step (Algorithm 2 steps 3–4): Map over `range` of the list
-    /// and locally fold with `⊕`. `kernels` is this worker's PJRT runtime
-    /// when artifacts are available; implementations fall back to native
-    /// Rust when `None` or when no artifact matches the problem size.
-    fn map_fold(&self, range: Range<usize>, x: &[f64], kernels: Option<&KernelRuntime>)
-        -> Vec<f64>;
+    /// and locally fold with `⊕`, **overwriting** `out` with the partial
+    /// folding (`out.len()` equals the fold payload length, i.e.
+    /// `fold_identity().len()`). `ws` is caller-owned scratch reused across
+    /// calls; the native path must not allocate in steady state. `kernels`
+    /// is this worker's PJRT runtime when artifacts are available;
+    /// implementations fall back to native Rust when `None` or when no
+    /// artifact matches the problem size.
+    fn map_fold_into(
+        &self,
+        range: Range<usize>,
+        x: &[f64],
+        out: &mut [f64],
+        ws: &mut Workspace,
+        kernels: Option<&KernelRuntime>,
+    );
 
     /// The fold identity (empty-range result).
     fn fold_identity(&self) -> Vec<f64>;
 
-    /// The associative `⊕` (Algorithm 2 step 6's master fold).
-    fn combine(&self, a: Vec<f64>, b: Vec<f64>) -> Vec<f64>;
+    /// The associative `⊕` in place: `acc ← acc ⊕ b` (Algorithm 2 step 6's
+    /// master fold).
+    fn combine_into(&self, acc: &mut [f64], b: &[f64]);
 
     /// Master step (Algorithm 1 steps 5–7): `Compute` the next
     /// approximation from the current one and the full folding `s`, and
@@ -100,6 +146,25 @@ pub trait BsfProblem: Send + Sync {
 
     /// Payload/op-count description for analytic cost modelling.
     fn cost_spec(&self) -> CostSpec;
+
+    /// Owning convenience wrapper over [`BsfProblem::map_fold_into`].
+    fn map_fold(
+        &self,
+        range: Range<usize>,
+        x: &[f64],
+        kernels: Option<&KernelRuntime>,
+    ) -> Vec<f64> {
+        let mut out = self.fold_identity();
+        let mut ws = Workspace::new();
+        self.map_fold_into(range, x, &mut out, &mut ws, kernels);
+        out
+    }
+
+    /// Owning convenience wrapper over [`BsfProblem::combine_into`].
+    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
+        self.combine_into(&mut a, &b);
+        a
+    }
 }
 
 #[cfg(test)]
@@ -130,21 +195,21 @@ pub(crate) mod test_problems {
         fn initial_approx(&self) -> Vec<f64> {
             vec![0.0]
         }
-        fn map_fold(
+        fn map_fold_into(
             &self,
             range: Range<usize>,
             x: &[f64],
+            out: &mut [f64],
+            _ws: &mut Workspace,
             _kernels: Option<&KernelRuntime>,
-        ) -> Vec<f64> {
-            let s: f64 = self.weights[range].iter().map(|w| w * x[0]).sum();
-            vec![s]
+        ) {
+            out[0] = self.weights[range].iter().map(|w| w * x[0]).sum();
         }
         fn fold_identity(&self) -> Vec<f64> {
             vec![0.0]
         }
-        fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
-            a[0] += b[0];
-            a
+        fn combine_into(&self, acc: &mut [f64], b: &[f64]) {
+            acc[0] += b[0];
         }
         fn post(&self, x: &[f64], s: &[f64], _iteration: usize) -> (Vec<f64>, bool) {
             let next = s[0] / 2.0 + 1.0;

@@ -6,7 +6,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{BsfProblem, IterationMetrics, Metrics};
+use crate::coordinator::{BsfProblem, IterationMetrics, Metrics, Workspace};
 use crate::lists::partition_even;
 use crate::model::Calibration;
 use crate::net::transport::{fabric, Downlink};
@@ -40,12 +40,16 @@ pub fn run_sequential(
     let timer = Timer::start();
     let l = problem.list_len();
     let mut x = problem.initial_approx();
+    // Reused across iterations: the fold buffer and the problem workspace
+    // keep the whole loop allocation-free on the map side.
+    let mut s = problem.fold_identity();
+    let mut ws = Workspace::new();
     let mut iterations = 0;
     let mut converged = false;
     let mut metrics = Metrics::default();
     while iterations < max_iters {
         let mut it_timer = Timer::start();
-        let s = problem.map_fold(0..l, &x, kernels);
+        problem.map_fold_into(0..l, &x, &mut s, &mut ws, kernels);
         let map_time = it_timer.lap();
         let (next, stop) = problem.post(&x, &s, iterations);
         let post_time = it_timer.lap();
@@ -125,13 +129,24 @@ impl LiveRunner {
                 // Each worker owns its PJRT runtime (the client is not
                 // Send); a failed open degrades to native compute.
                 let kernels = artifact_dir.and_then(|d| KernelRuntime::open(d).ok());
+                // Per-worker fold buffer + workspace, reused every
+                // iteration: the map+fold step itself allocates nothing —
+                // the only per-iteration allocation is the uplink clone.
+                let mut partial = problem.fold_identity();
+                let mut ws = Workspace::new();
                 loop {
                     match w.recv() {
                         Ok(Downlink::Approximation { x, epoch }) => {
                             let t = Timer::start();
-                            let partial = problem.map_fold(range.clone(), &x, kernels.as_ref());
+                            problem.map_fold_into(
+                                range.clone(),
+                                &x,
+                                &mut partial,
+                                &mut ws,
+                                kernels.as_ref(),
+                            );
                             let dt = t.elapsed();
-                            if w.send(epoch, partial, dt).is_err() {
+                            if w.send(epoch, partial.clone(), dt).is_err() {
                                 break; // master gone; nothing to report to
                             }
                         }
@@ -169,6 +184,13 @@ impl LiveRunner {
         // Lazily-opened master-side runtime for recovered sublists.
         let mut master_kernels: Option<Option<KernelRuntime>> = None;
         let mut x = problem.initial_approx();
+        // Master-side fold state, reused across iterations: the identity
+        // payload, the running accumulator, and (fault-tolerant mode) a
+        // buffer + workspace for recomputed dead-worker sublists.
+        let identity = problem.fold_identity();
+        let mut acc = identity.clone();
+        let mut dead_partial = identity.clone();
+        let mut ws = Workspace::new();
         let mut iterations = 0;
         let mut converged = false;
         let mut metrics = Metrics::default();
@@ -198,9 +220,9 @@ impl LiveRunner {
             };
             let roundtrip = it_timer.lap();
             let map_fold: Vec<f64> = ups.iter().map(|u| u.map_seconds).collect();
-            let mut acc = problem.fold_identity();
+            acc.copy_from_slice(&identity);
             for u in &ups {
-                acc = problem.combine(acc, u.partial.clone());
+                problem.combine_into(&mut acc, &u.partial);
             }
             // Degraded mode: the master computes dead workers' sublists.
             for w in dead {
@@ -209,8 +231,8 @@ impl LiveRunner {
                         self.artifact_dir.clone().and_then(|d| KernelRuntime::open(d).ok())
                     })
                     .as_ref();
-                let partial = problem.map_fold(parts.range(w - 1), &x, kern);
-                acc = problem.combine(acc, partial);
+                problem.map_fold_into(parts.range(w - 1), &x, &mut dead_partial, &mut ws, kern);
+                problem.combine_into(&mut acc, &dead_partial);
             }
             let master_fold = it_timer.lap();
             let (next, stop) = problem.post(&x, &acc, iterations);

@@ -13,13 +13,14 @@
 use anyhow::Result;
 
 use crate::experiments::common::{
-    analytic_provider, k_sweep, paper_jacobi_params, simulated_curve, ExperimentCtx,
+    analytic_provider, k_sweep, paper_jacobi_params, simulated_curves, ExperimentCtx, SweepJob,
 };
 use crate::model::bsp::{BspModel, BspParams};
 use crate::model::logp::{LogGpModel, LogGpParams};
 use crate::model::BsfModel;
 use crate::net::CollectiveAlgo;
 use crate::simulator::ReduceMode;
+use crate::util::parallel::default_threads;
 use crate::util::{Rng, Table};
 
 /// ABL1: binomial-tree vs linear collectives (and in-tree vs gather
@@ -36,6 +37,11 @@ pub fn ablation_collectives(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
         format!("Ablation ABL1 (Jacobi n={n}): collective algorithm vs boundary"),
         &["collective", "reduce", "K_test (sim)", "peak speedup", "K_BSF (eq.14)"],
     );
+    // All six configurations feed one pooled (config × K) work queue;
+    // every config keeps its own fresh RNG root, as the serial loop did.
+    let prov = analytic_provider(&params);
+    let mut labels = Vec::new();
+    let mut jobs = Vec::new();
     for (algo, algo_name) in
         [(CollectiveAlgo::BinomialTree, "tree"), (CollectiveAlgo::Linear, "linear")]
     {
@@ -49,19 +55,22 @@ pub fn ablation_collectives(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
             cluster.reduce_mode = mode;
             let sub = ExperimentCtx { cluster, ..ctx.clone() };
             let sim = sub.sim_params(n, n);
-            let prov = analytic_provider(&params);
             let mut rng = Rng::new(ctx.seed ^ 0xAB1);
-            let curve = simulated_curve(&sub, &sim, n, &prov, &ks, iters, &mut rng);
-            let w = (ks.len() / 10).max(5);
-            let pk = crate::model::scalability::peak_knee(&curve, w, 0.99).expect("curve");
-            t.row(&[
-                algo_name.into(),
-                mode_name.into(),
-                pk.k.to_string(),
-                format!("{:.1}", pk.speedup),
-                format!("{k_bsf:.0}"),
-            ]);
+            jobs.push(SweepJob::new(sim, n, &prov, ks.clone(), iters, &mut rng));
+            labels.push((algo_name, mode_name));
         }
+    }
+    let curves = simulated_curves(&jobs, default_threads());
+    for ((algo_name, mode_name), curve) in labels.iter().zip(&curves) {
+        let w = (ks.len() / 10).max(5);
+        let pk = crate::model::scalability::peak_knee(curve, w, 0.99).expect("curve");
+        t.row(&[
+            (*algo_name).into(),
+            (*mode_name).into(),
+            pk.k.to_string(),
+            format!("{:.1}", pk.speedup),
+            format!("{k_bsf:.0}"),
+        ]);
     }
     ctx.save("ablation_collectives", &t);
     Ok(vec![t])
@@ -80,16 +89,21 @@ pub fn ablation_masters(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
         format!("Ablation ABL2 (Jacobi n={n}): master count (§7 Q5)"),
         &["masters", "K_test (sim)", "peak speedup", "closed form?"],
     );
-    for masters in [1usize, 2, 4] {
+    let prov = analytic_provider(&params);
+    let master_counts = [1usize, 2, 4];
+    let mut jobs = Vec::new();
+    for &masters in &master_counts {
         let mut cluster = ctx.cluster;
         cluster.masters = masters;
         let sub = ExperimentCtx { cluster, ..ctx.clone() };
         let sim = sub.sim_params(n, n);
-        let prov = analytic_provider(&params);
         let mut rng = Rng::new(ctx.seed ^ 0xAB2);
-        let curve = simulated_curve(&sub, &sim, n, &prov, &ks, iters, &mut rng);
+        jobs.push(SweepJob::new(sim, n, &prov, ks.clone(), iters, &mut rng));
+    }
+    let curves = simulated_curves(&jobs, default_threads());
+    for (&masters, curve) in master_counts.iter().zip(&curves) {
         let w = (ks.len() / 10).max(5);
-        let pk = crate::model::scalability::peak_knee(&curve, w, 0.99).expect("curve");
+        let pk = crate::model::scalability::peak_knee(curve, w, 0.99).expect("curve");
         t.row(&[
             masters.to_string(),
             pk.k.to_string(),

@@ -12,8 +12,10 @@ use crate::linalg::generators;
 use crate::model::scalability::SpeedupPoint;
 use crate::model::{BsfModel, CostParams};
 use crate::problems::{CimminoProblem, GravityProblem, JacobiProblem};
-use crate::simulator::{simulate_run, AnalyticCost, CostFactory, SampledCost, SimParams};
-use crate::util::parallel::{default_threads, parallel_map};
+use crate::simulator::{
+    AnalyticCost, CostFactory, IterationTemplate, IterationTiming, SampledCost, SimParams,
+};
+use crate::util::parallel::{default_threads, parallel_map_with};
 use crate::util::{Rng, Table};
 
 /// Which application an experiment drives.
@@ -180,6 +182,98 @@ pub fn k_sweep(k_hint: f64, quick: bool) -> Vec<usize> {
     ks
 }
 
+/// One sweep in a pooled (experiment × size × K) run: everything
+/// [`simulated_curve`] needs for one curve, with the RNG root pre-forked
+/// so that *job construction order* — not execution order — fixes the
+/// per-K streams.
+pub struct SweepJob<'a> {
+    /// Cluster/timing configuration for this sweep.
+    pub params: SimParams,
+    /// List length `l`.
+    pub l: usize,
+    /// Per-K provider factory (`CostFactory::instance(k)` keyed by K).
+    pub factory: &'a dyn CostFactory,
+    /// Worker counts to evaluate.
+    pub ks: Vec<usize>,
+    /// Simulated iterations averaged per K-point.
+    pub iters: usize,
+    /// Sweep-root RNG; the per-K stream is `root.split(k)`.
+    pub root: Rng,
+}
+
+impl<'a> SweepJob<'a> {
+    /// Build a job, forking the sweep root off `rng` exactly like the
+    /// serial [`simulated_curve`] does. Constructing jobs in the same
+    /// order as the serial per-sweep calls keeps every result bitwise
+    /// identical to the serial pipeline.
+    pub fn new(
+        params: SimParams,
+        l: usize,
+        factory: &'a dyn CostFactory,
+        ks: Vec<usize>,
+        iters: usize,
+        rng: &mut Rng,
+    ) -> SweepJob<'a> {
+        SweepJob { params, l, factory, ks, iters, root: rng.fork(0x5EED) }
+    }
+}
+
+/// Per-worker scratch for pooled sweeps: one engine/template (rebuilt in
+/// place per K-point via [`IterationTemplate::reset_to`]) and one timing
+/// buffer, reused for every job the worker pulls off the queue.
+#[derive(Default)]
+struct SweepWorker {
+    tmpl: Option<IterationTemplate>,
+    runs: Vec<IterationTiming>,
+}
+
+/// Mean iteration time of `job` at worker count `k` — a pure function of
+/// `(job, k)`; the worker scratch only caches buffer capacity.
+fn sweep_point(w: &mut SweepWorker, job: &SweepJob, k: usize) -> f64 {
+    let mut provider = job.factory.instance(k as u64);
+    let mut rng_k = job.root.split(k as u64);
+    if let Some(tmpl) = w.tmpl.as_mut() {
+        tmpl.reset_to(k, job.l, &job.params);
+    }
+    let tmpl = w.tmpl.get_or_insert_with(|| IterationTemplate::new(k, job.l, &job.params));
+    tmpl.run_into(job.iters, provider.as_mut(), &mut rng_k, &mut w.runs);
+    w.runs.iter().map(|t| t.total).sum::<f64>() / w.runs.len() as f64
+}
+
+/// Evaluate many sweeps through **one** work queue over every
+/// (sweep × K-point) pair: a slow size no longer serialises behind the
+/// previous one, and each worker thread reuses a single engine for its
+/// whole share of the queue. Results are bitwise identical to running the
+/// sweeps one [`simulated_curve`] call at a time, at any thread count.
+pub fn simulated_curves(jobs: &[SweepJob], threads: usize) -> Vec<Vec<SpeedupPoint>> {
+    let flat: Vec<(usize, usize)> = jobs
+        .iter()
+        .enumerate()
+        .flat_map(|(s, job)| (0..job.ks.len()).map(move |i| (s, i)))
+        .collect();
+    let times = parallel_map_with(flat.len(), threads, SweepWorker::default, |w, idx| {
+        let (s, i) = flat[idx];
+        sweep_point(w, &jobs[s], jobs[s].ks[i])
+    });
+    let mut fallback = SweepWorker::default();
+    let mut out = Vec::with_capacity(jobs.len());
+    let mut off = 0;
+    for job in jobs {
+        let tks = &times[off..off + job.ks.len()];
+        off += job.ks.len();
+        let t1 =
+            if job.ks.first() == Some(&1) { tks[0] } else { sweep_point(&mut fallback, job, 1) };
+        out.push(
+            job.ks
+                .iter()
+                .zip(tks)
+                .map(|(&k, &t_k)| SpeedupPoint { k, t_k, speedup: t1 / t_k })
+                .collect(),
+        );
+    }
+    out
+}
+
 /// Simulate the "empirical" speedup curve: the discrete-event timeline of
 /// Algorithm 2 at each K, with compute times from the provider `factory`
 /// and the context's network model. `iters` simulated iterations are
@@ -189,7 +283,9 @@ pub fn k_sweep(k_hint: f64, quick: bool) -> Vec<usize> {
 /// ([`default_threads`]; override with `BSF_SWEEP_THREADS`). Each K draws
 /// from its own provider instance and RNG stream — both keyed by K, split
 /// from the sweep root — so the curve is **bitwise identical** at any
-/// thread count (`rust/tests/determinism.rs`).
+/// thread count (`rust/tests/determinism.rs`). Multi-sweep experiments
+/// should batch their sizes through [`simulated_curves`] instead, which
+/// shares one work queue across every (size × K) pair.
 pub fn simulated_curve(
     ctx: &ExperimentCtx,
     params: &SimParams,
@@ -216,21 +312,10 @@ pub fn simulated_curve_threads(
     threads: usize,
 ) -> Vec<SpeedupPoint> {
     let _ = ctx;
-    // Fork advances `rng` so successive sweeps off one rng differ; every
-    // per-K stream below splits off this root without further mutation.
-    let root = rng.fork(0x5EED);
-    let time_of = |k: usize| -> f64 {
-        let mut provider = factory.instance(k as u64);
-        let mut rng_k = root.split(k as u64);
-        let runs = simulate_run(k, l, iters, params, provider.as_mut(), &mut rng_k);
-        runs.iter().map(|t| t.total).sum::<f64>() / runs.len() as f64
-    };
-    let times = parallel_map(ks.len(), threads, |i| time_of(ks[i]));
-    let t1 = if ks.first() == Some(&1) { times[0] } else { time_of(1) };
-    ks.iter()
-        .zip(times)
-        .map(|(&k, t_k)| SpeedupPoint { k, t_k, speedup: t1 / t_k })
-        .collect()
+    let job = SweepJob::new(params.clone(), l, factory, ks.to_vec(), iters, rng);
+    simulated_curves(std::slice::from_ref(&job), threads)
+        .pop()
+        .expect("one sweep in, one curve out")
 }
 
 /// A provider built from published analytic parameters (paper-params mode).
@@ -294,6 +379,69 @@ pub fn measured_cluster(ctx: &ExperimentCtx) -> ExperimentCtx {
     c
 }
 
+/// Inputs for one row of a batched boundary comparison (see
+/// [`boundary_rows`]).
+pub struct BoundarySpec<'a> {
+    /// Problem size (display only; the sweep uses `params.l`).
+    pub n: usize,
+    /// Cost parameters of this size.
+    pub params: CostParams,
+    /// Downlink payload (f64 words).
+    pub words_down: usize,
+    /// Uplink payload (f64 words).
+    pub words_up: usize,
+    /// Per-K provider factory.
+    pub factory: &'a dyn CostFactory,
+}
+
+/// Compute boundary comparisons for many parameter sets through one
+/// (size × K) work queue — all sizes' K-points interleave across the
+/// sweep threads instead of each size waiting for the previous one.
+/// Bitwise identical to calling [`boundary_row`] per spec in order.
+pub fn boundary_rows(
+    ctx: &ExperimentCtx,
+    specs: &[BoundarySpec],
+    rng: &mut Rng,
+) -> Vec<BoundaryRow> {
+    let iters = if ctx.quick { 3 } else { 7 };
+    let mut jobs = Vec::with_capacity(specs.len());
+    let mut bounds = Vec::with_capacity(specs.len());
+    for s in specs {
+        let k_bsf = BsfModel::new(s.params).k_bsf();
+        let ks = k_sweep(k_bsf, ctx.quick);
+        let mut sim = ctx.sim_params(s.words_down, s.words_up);
+        sim.net = effective_net_with_latency(
+            s.params.t_c,
+            s.words_down,
+            s.words_up,
+            ctx.cluster.net.latency,
+        );
+        jobs.push(SweepJob::new(sim, s.params.l, s.factory, ks, iters, rng));
+        bounds.push(k_bsf);
+    }
+    let curves = simulated_curves(&jobs, default_threads());
+    specs
+        .iter()
+        .zip(bounds)
+        .zip(&curves)
+        .map(|((s, k_bsf), curve)| {
+            let w = (curve.len() / 10).max(5);
+            let pk =
+                crate::model::scalability::peak_knee(curve, w, 0.99).expect("non-empty curve");
+            let plateau =
+                crate::model::scalability::peak_plateau(curve, w, 0.99).expect("non-empty curve");
+            BoundaryRow {
+                n: s.n,
+                k_bsf,
+                k_test: pk.k as f64,
+                error: crate::model::prediction_error(pk.k as f64, k_bsf),
+                peak_speedup: pk.speedup,
+                plateau,
+            }
+        })
+        .collect()
+}
+
 /// Compute a boundary comparison for one parameter set. The simulator is
 /// always charged a network consistent with `params.t_c` (see
 /// [`effective_net`]).
@@ -306,26 +454,10 @@ pub fn boundary_row(
     factory: &dyn CostFactory,
     rng: &mut Rng,
 ) -> BoundaryRow {
-    let model = BsfModel::new(*params);
-    let k_bsf = model.k_bsf();
-    let ks = k_sweep(k_bsf, ctx.quick);
-    let mut sim = ctx.sim_params(words_down, words_up);
-    sim.net =
-        effective_net_with_latency(params.t_c, words_down, words_up, ctx.cluster.net.latency);
-    let iters = if ctx.quick { 3 } else { 7 };
-    let curve = simulated_curve(ctx, &sim, params.l, factory, &ks, iters, rng);
-    let w = (ks.len() / 10).max(5);
-    let pk = crate::model::scalability::peak_knee(&curve, w, 0.99).expect("non-empty curve");
-    let plateau =
-        crate::model::scalability::peak_plateau(&curve, w, 0.99).expect("non-empty curve");
-    BoundaryRow {
-        n,
-        k_bsf,
-        k_test: pk.k as f64,
-        error: crate::model::prediction_error(pk.k as f64, k_bsf),
-        peak_speedup: pk.speedup,
-        plateau,
-    }
+    let spec = BoundarySpec { n, params: *params, words_down, words_up, factory };
+    boundary_rows(ctx, std::slice::from_ref(&spec), rng)
+        .pop()
+        .expect("one spec in, one row out")
 }
 
 #[cfg(test)]

@@ -10,10 +10,11 @@
 use anyhow::Result;
 
 use crate::experiments::common::{
-    analytic_provider, calibrate, k_sweep, paper_jacobi_params, sampled_provider, simulated_curve,
-    ExperimentCtx, ProblemKind,
+    analytic_provider, calibrate, k_sweep, paper_jacobi_params, sampled_provider,
+    simulated_curves, ExperimentCtx, ProblemKind, SweepJob,
 };
 use crate::model::BsfModel;
+use crate::util::parallel::default_threads;
 use crate::util::{table::sci, Rng, Table};
 
 /// Write the Fig.-6/7-style SVG: simulated (solid) vs analytic (dashed)
@@ -75,8 +76,12 @@ pub fn fig6(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
         vec![1_500, 5_000, 10_000, 16_000]
     };
 
+    // Phase 1 (serial): per-size cost parameters. Calibration spawns live
+    // master/worker threads, so it stays serial; paper mode is table
+    // lookups. Order matters for the RNG fork sequence below.
+    let mut preps: Vec<(usize, crate::model::CostParams, Box<dyn crate::simulator::CostFactory>)> =
+        Vec::with_capacity(sizes.len());
     for n in sizes {
-        // --- cost parameters for this size ---
         let (params, factory): (_, Box<dyn crate::simulator::CostFactory>) = if measured {
             let problem = ProblemKind::Jacobi.build(n);
             let (params, cal) = calibrate(ctx, problem)?;
@@ -86,22 +91,38 @@ pub fn fig6(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
             let params = paper_jacobi_params(n).expect("published size");
             (params, Box::new(analytic_provider(&params)))
         };
+        preps.push((n, params, factory));
+    }
 
-        let model = BsfModel::new(params);
+    // Phase 2: all sizes' K-points through one pooled work queue.
+    let iters = if ctx.quick { 3 } else { 7 };
+    let mut jobs = Vec::with_capacity(preps.len());
+    for (n, params, factory) in &preps {
+        let model = BsfModel::new(*params);
+        let ks = k_sweep(model.k_bsf(), ctx.quick);
+        let mut sim_params = ctx.sim_params(*n, *n);
+        sim_params.net = crate::experiments::common::effective_net_with_latency(
+            params.t_c,
+            *n,
+            *n,
+            ctx.cluster.net.latency,
+        );
+        jobs.push(SweepJob::new(sim_params, *n, factory.as_ref(), ks, iters, &mut rng));
+    }
+    let curves = simulated_curves(&jobs, default_threads());
+
+    // Phase 3 (serial): render tables/plots per size.
+    for ((n, params, _factory), curve) in preps.iter().zip(&curves) {
+        let n = *n;
+        let model = BsfModel::new(*params);
         let k_bsf = model.k_bsf();
         let ks = k_sweep(k_bsf, ctx.quick);
-        let mut sim_params = ctx.sim_params(n, n);
-        sim_params.net = crate::experiments::common::effective_net_with_latency(
-            params.t_c, n, n, ctx.cluster.net.latency);
-        
-        let iters = if ctx.quick { 3 } else { 7 };
-        let curve = simulated_curve(ctx, &sim_params, n, factory.as_ref(), &ks, iters, &mut rng);
 
         let mut t = Table::new(
             format!("Fig. 6, n = {n}: BSF-Jacobi speedup (K_BSF = {k_bsf:.1})"),
             &["K", "a_sim (empirical)", "a_BSF (eq.9)", "T_K sim", "T_K eq.8"],
         );
-        for p in &curve {
+        for p in curve {
             t.row(&[
                 p.k.to_string(),
                 format!("{:.2}", p.speedup),
@@ -115,13 +136,13 @@ pub fn fig6(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
             ctx,
             &format!("fig6_n{n}{}", if measured { "_measured" } else { "" }),
             &format!("BSF-Jacobi speedup, n = {n}"),
-            &curve,
+            curve,
             &model,
             k_bsf,
         );
 
         let w = (ks.len() / 10).max(5);
-        let pk = crate::model::scalability::peak_knee(&curve, w, 0.99).expect("curve");
+        let pk = crate::model::scalability::peak_knee(curve, w, 0.99).expect("curve");
         summary.row(&[
             n.to_string(),
             format!("{k_bsf:.1}"),

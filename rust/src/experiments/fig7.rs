@@ -9,9 +9,10 @@ use anyhow::Result;
 
 use crate::experiments::common::{
     analytic_provider, calibrate, k_sweep, paper_gravity_params, sampled_provider,
-    simulated_curve, ExperimentCtx, ProblemKind,
+    simulated_curves, ExperimentCtx, ProblemKind, SweepJob,
 };
 use crate::model::BsfModel;
+use crate::util::parallel::default_threads;
 use crate::util::{table::sci, Rng, Table};
 
 /// Payload sizes for BSF-Gravity (downlink `[X|V|t]`, uplink α).
@@ -47,6 +48,10 @@ pub fn fig7(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
         sizes.truncate(2);
     }
 
+    // Serial per-size prep (calibration runs live), then one pooled
+    // (size × K) work queue, then serial rendering — see fig6.
+    let mut preps: Vec<(usize, crate::model::CostParams, Box<dyn crate::simulator::CostFactory>)> =
+        Vec::with_capacity(sizes.len());
     for n in sizes {
         let (params, factory): (_, Box<dyn crate::simulator::CostFactory>) = if measured {
             let problem = ProblemKind::Gravity.build(n);
@@ -57,22 +62,35 @@ pub fn fig7(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
             let params = paper_gravity_params(n).expect("published size");
             (params, Box::new(analytic_provider(&params)))
         };
+        preps.push((n, params, factory));
+    }
 
-        let model = BsfModel::new(params);
-        let k_bsf = model.k_bsf();
-        let ks = k_sweep(k_bsf, ctx.quick);
+    let iters = if ctx.quick { 3 } else { 7 };
+    let mut jobs = Vec::with_capacity(preps.len());
+    for (n, params, factory) in &preps {
+        let ks = k_sweep(BsfModel::new(*params).k_bsf(), ctx.quick);
         let mut sim_params = ctx.sim_params(WORDS_DOWN, WORDS_UP);
         sim_params.net = crate::experiments::common::effective_net_with_latency(
-            params.t_c, WORDS_DOWN, WORDS_UP, ctx.cluster.net.latency);
-        
-        let iters = if ctx.quick { 3 } else { 7 };
-        let curve = simulated_curve(ctx, &sim_params, n, factory.as_ref(), &ks, iters, &mut rng);
+            params.t_c,
+            WORDS_DOWN,
+            WORDS_UP,
+            ctx.cluster.net.latency,
+        );
+        jobs.push(SweepJob::new(sim_params, *n, factory.as_ref(), ks, iters, &mut rng));
+    }
+    let curves = simulated_curves(&jobs, default_threads());
+
+    for ((n, params, _factory), curve) in preps.iter().zip(&curves) {
+        let n = *n;
+        let model = BsfModel::new(*params);
+        let k_bsf = model.k_bsf();
+        let ks = k_sweep(k_bsf, ctx.quick);
 
         let mut t = Table::new(
             format!("Fig. 7, n = {n}: BSF-Gravity speedup (K_BSF = {k_bsf:.1})"),
             &["K", "a_sim (empirical)", "a_BSF (eq.9)", "T_K sim", "T_K eq.8"],
         );
-        for p in &curve {
+        for p in curve {
             t.row(&[
                 p.k.to_string(),
                 format!("{:.2}", p.speedup),
@@ -86,13 +104,13 @@ pub fn fig7(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
             ctx,
             &format!("fig7_n{n}{}", if measured { "_measured" } else { "" }),
             &format!("BSF-Gravity speedup, n = {n}"),
-            &curve,
+            curve,
             &model,
             k_bsf,
         );
 
         let w = (ks.len() / 10).max(5);
-        let pk = crate::model::scalability::peak_knee(&curve, w, 0.99).expect("curve");
+        let pk = crate::model::scalability::peak_knee(curve, w, 0.99).expect("curve");
         summary.row(&[
             n.to_string(),
             format!("{k_bsf:.1}"),

@@ -26,10 +26,10 @@ mod tables;
 
 pub use ablations::{ablation_collectives, ablation_masters, baselines};
 pub use common::{
-    analytic_provider, boundary_row, calibrate, effective_net, effective_net_with_latency, k_sweep,
-    paper_gravity_params,
-    paper_jacobi_params, sampled_provider, simulated_curve, simulated_curve_threads, BoundaryRow,
-    ExperimentCtx, ProblemKind,
+    analytic_provider, boundary_row, boundary_rows, calibrate, effective_net,
+    effective_net_with_latency, k_sweep, paper_gravity_params, paper_jacobi_params,
+    sampled_provider, simulated_curve, simulated_curve_threads, simulated_curves, BoundaryRow,
+    BoundarySpec, ExperimentCtx, ProblemKind, SweepJob,
 };
 pub use explorer::explorer;
 pub use fig6::fig6;

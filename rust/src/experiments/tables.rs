@@ -11,8 +11,8 @@
 use anyhow::Result;
 
 use crate::experiments::common::{
-    analytic_provider, boundary_row, calibrate, paper_gravity_params, paper_jacobi_params,
-    sampled_provider, ExperimentCtx, ProblemKind,
+    analytic_provider, boundary_rows, calibrate, paper_gravity_params, paper_jacobi_params,
+    sampled_provider, BoundarySpec, ExperimentCtx, ProblemKind,
 };
 use crate::model::CostParams;
 use crate::util::{table::sci, Rng, Table};
@@ -114,12 +114,15 @@ pub fn table3(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
     let measured_ctx = crate::experiments::common::measured_cluster(ctx);
     let ctx = if measured { &measured_ctx } else { ctx };
     let mut rng = Rng::new(ctx.seed ^ 0x3);
-    let mut rows = Vec::new();
     let sizes: Vec<usize> = if measured {
         if ctx.quick { vec![512, 1_024] } else { vec![512, 1_024, 2_048] }
     } else {
         vec![1_500, 5_000, 10_000, 16_000]
     };
+    // Serial prep (calibration), then every (size × K) point through one
+    // pooled work queue.
+    let mut preps: Vec<(usize, CostParams, Box<dyn crate::simulator::CostFactory>)> =
+        Vec::with_capacity(sizes.len());
     for n in sizes {
         let (params, factory): (_, Box<dyn crate::simulator::CostFactory>) = if measured {
             let (p, cal) = calibrate(ctx, ProblemKind::Jacobi.build(n))?;
@@ -129,8 +132,19 @@ pub fn table3(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
             let p = paper_jacobi_params(n).expect("published size");
             (p, Box::new(analytic_provider(&p)))
         };
-        rows.push(boundary_row(ctx, n, &params, n, n, factory.as_ref(), &mut rng));
+        preps.push((n, params, factory));
     }
+    let specs: Vec<BoundarySpec> = preps
+        .iter()
+        .map(|(n, params, factory)| BoundarySpec {
+            n: *n,
+            params: *params,
+            words_down: *n,
+            words_up: *n,
+            factory: factory.as_ref(),
+        })
+        .collect();
+    let rows = boundary_rows(ctx, &specs, &mut rng);
     let t = boundary_table(
         ctx,
         if measured {
@@ -150,7 +164,6 @@ pub fn table4(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
     let measured_ctx = crate::experiments::common::measured_cluster(ctx);
     let ctx = if measured { &measured_ctx } else { ctx };
     let mut rng = Rng::new(ctx.seed ^ 0x4);
-    let mut rows = Vec::new();
     let mut sizes = if measured {
         // block-multiple sizes: see fig7.rs on the per-call-overhead regime
         vec![4_096usize, 16_384, 65_536]
@@ -160,6 +173,8 @@ pub fn table4(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
     if ctx.quick {
         sizes.truncate(2);
     }
+    let mut preps: Vec<(usize, CostParams, Box<dyn crate::simulator::CostFactory>)> =
+        Vec::with_capacity(sizes.len());
     for n in sizes {
         let (params, factory): (_, Box<dyn crate::simulator::CostFactory>) = if measured {
             let (p, cal) = calibrate(ctx, ProblemKind::Gravity.build(n))?;
@@ -169,8 +184,19 @@ pub fn table4(ctx: &ExperimentCtx, measured: bool) -> Result<Vec<Table>> {
             let p = paper_gravity_params(n).expect("published size");
             (p, Box::new(analytic_provider(&p)))
         };
-        rows.push(boundary_row(ctx, n, &params, 7, 3, factory.as_ref(), &mut rng));
+        preps.push((n, params, factory));
     }
+    let specs: Vec<BoundarySpec> = preps
+        .iter()
+        .map(|(n, params, factory)| BoundarySpec {
+            n: *n,
+            params: *params,
+            words_down: 7,
+            words_up: 3,
+            factory: factory.as_ref(),
+        })
+        .collect();
+    let rows = boundary_rows(ctx, &specs, &mut rng);
     let t = boundary_table(
         ctx,
         if measured {

@@ -19,7 +19,7 @@ use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::{BsfProblem, CostSpec};
+use crate::coordinator::{BsfProblem, CostSpec, Workspace};
 use crate::linalg::generators::InequalitySystem;
 use crate::linalg::{dot, sq_norm2, sub};
 use crate::runtime::{KernelRuntime, Tensor};
@@ -85,9 +85,9 @@ impl CimminoProblem {
             .count()
     }
 
-    fn native_block(&self, range: Range<usize>, x: &[f64]) -> Vec<f64> {
-        let n = self.n();
-        let mut acc = vec![0.0; n];
+    /// Accumulate the projection corrections for `range` into `acc`
+    /// (caller zeroes; allocation-free).
+    fn native_block_acc(&self, range: Range<usize>, x: &[f64], acc: &mut [f64]) {
         for i in range {
             let row = self.sys.a.row(i);
             let resid = dot(row, x) - self.sys.b[i];
@@ -101,7 +101,6 @@ impl CimminoProblem {
                 }
             }
         }
-        acc
     }
 }
 
@@ -118,15 +117,23 @@ impl BsfProblem for CimminoProblem {
         self.sys.x0.clone()
     }
 
-    fn map_fold(&self, range: Range<usize>, x: &[f64], kernels: Option<&KernelRuntime>) -> Vec<f64> {
+    fn map_fold_into(
+        &self,
+        range: Range<usize>,
+        x: &[f64],
+        out: &mut [f64],
+        _ws: &mut Workspace,
+        kernels: Option<&KernelRuntime>,
+    ) {
         let n = self.n();
+        debug_assert_eq!(out.len(), n, "fold buffer sized to n");
+        out.fill(0.0);
         if range.is_empty() {
-            return vec![0.0; n];
+            return;
         }
         if let Some(rt) = kernels {
             if let Some(name) = rt.manifest().cimmino_map(n) {
                 let b = rt.block();
-                let mut acc = vec![0.0; n];
                 let mut i0 = range.start;
                 while i0 < range.end {
                     let i1 = (i0 + b).min(range.end);
@@ -140,34 +147,30 @@ impl BsfProblem for CimminoProblem {
                         ],
                     ) {
                         Ok(outs) => {
-                            for (a, v) in acc.iter_mut().zip(&outs[0]) {
+                            for (a, v) in out.iter_mut().zip(&outs[0]) {
                                 *a += v;
                             }
                         }
                         Err(_) => {
-                            let nat = self.native_block(i0..i1, x);
-                            for (a, v) in acc.iter_mut().zip(&nat) {
-                                *a += v;
-                            }
+                            self.native_block_acc(i0..i1, x, out);
                         }
                     }
                     i0 = i1;
                 }
-                return acc;
+                return;
             }
         }
-        self.native_block(range, x)
+        self.native_block_acc(range, x, out);
     }
 
     fn fold_identity(&self) -> Vec<f64> {
         vec![0.0; self.n()]
     }
 
-    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
-        for (x, y) in a.iter_mut().zip(&b) {
+    fn combine_into(&self, acc: &mut [f64], b: &[f64]) {
+        for (x, y) in acc.iter_mut().zip(b) {
             *x += y;
         }
-        a
     }
 
     fn post(&self, x: &[f64], s: &[f64], _iteration: usize) -> (Vec<f64>, bool) {
@@ -249,21 +252,31 @@ impl BsfProblem for NonStationaryCimmino {
         x
     }
 
-    fn map_fold(&self, range: Range<usize>, approx: &[f64], kernels: Option<&KernelRuntime>) -> Vec<f64> {
+    fn map_fold_into(
+        &self,
+        range: Range<usize>,
+        approx: &[f64],
+        out: &mut [f64],
+        _ws: &mut Workspace,
+        kernels: Option<&KernelRuntime>,
+    ) {
         let n = self.inner.n();
+        debug_assert_eq!(out.len(), n, "fold buffer sized to n");
         let (x, t) = (&approx[..n], approx[n]);
+        out.fill(0.0);
         if range.is_empty() {
-            return vec![0.0; n];
+            return;
         }
         if let Some(rt) = kernels {
             if let Some(name) = rt.manifest().cimmino_map(n) {
                 let bw = rt.block();
-                let mut acc = vec![0.0; n];
                 let mut i0 = range.start;
                 while i0 < range.end {
                     let i1 = (i0 + bw).min(range.end);
                     let (a_blk, _) = self.inner.packed_block(i0, i1, bw);
-                    // Ephemeral shifted b-block (changes every iteration).
+                    // Ephemeral shifted b-block (changes every iteration;
+                    // owned by the runtime tensor, like the other staged
+                    // kernel inputs).
                     let mut b_blk = vec![0.0; bw];
                     for (slot, i) in (i0..i1).enumerate() {
                         b_blk[slot] = self.inner.sys.b[i] + t * self.drift[i];
@@ -276,32 +289,28 @@ impl BsfProblem for NonStationaryCimmino {
                             Tensor::vec(x.to_vec()),
                         ],
                     ) {
-                        for (a, v) in acc.iter_mut().zip(&outs[0]) {
+                        for (a, v) in out.iter_mut().zip(&outs[0]) {
                             *a += v;
                         }
                     } else {
-                        let nat = self.native_shifted(i0..i1, x, t);
-                        for (a, v) in acc.iter_mut().zip(&nat) {
-                            *a += v;
-                        }
+                        self.native_shifted_acc(i0..i1, x, t, out);
                     }
                     i0 = i1;
                 }
-                return acc;
+                return;
             }
         }
-        self.native_shifted(range, x, t)
+        self.native_shifted_acc(range, x, t, out);
     }
 
     fn fold_identity(&self) -> Vec<f64> {
         vec![0.0; self.inner.n()]
     }
 
-    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
-        for (x, y) in a.iter_mut().zip(&b) {
+    fn combine_into(&self, acc: &mut [f64], b: &[f64]) {
+        for (x, y) in acc.iter_mut().zip(b) {
             *x += y;
         }
-        a
     }
 
     fn post(&self, approx: &[f64], s: &[f64], iteration: usize) -> (Vec<f64>, bool) {
@@ -320,9 +329,9 @@ impl BsfProblem for NonStationaryCimmino {
 }
 
 impl NonStationaryCimmino {
-    fn native_shifted(&self, range: Range<usize>, x: &[f64], t: f64) -> Vec<f64> {
-        let n = self.inner.n();
-        let mut acc = vec![0.0; n];
+    /// Accumulate the drift-shifted projection corrections for `range`
+    /// into `acc` (caller zeroes; allocation-free).
+    fn native_shifted_acc(&self, range: Range<usize>, x: &[f64], t: f64, acc: &mut [f64]) {
         for i in range {
             let row = self.inner.sys.a.row(i);
             let resid = dot(row, x) - (self.inner.sys.b[i] + t * self.drift[i]);
@@ -336,7 +345,6 @@ impl NonStationaryCimmino {
                 }
             }
         }
-        acc
     }
 }
 

@@ -23,7 +23,7 @@ use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::{BsfProblem, CostSpec};
+use crate::coordinator::{BsfProblem, CostSpec, Workspace};
 use crate::linalg::generators::BodyWorkload;
 use crate::runtime::{KernelRuntime, Tensor};
 
@@ -121,15 +121,23 @@ impl BsfProblem for GravityProblem {
         ]
     }
 
-    fn map_fold(&self, range: Range<usize>, x: &[f64], kernels: Option<&KernelRuntime>) -> Vec<f64> {
+    fn map_fold_into(
+        &self,
+        range: Range<usize>,
+        x: &[f64],
+        out: &mut [f64],
+        _ws: &mut Workspace,
+        kernels: Option<&KernelRuntime>,
+    ) {
+        debug_assert_eq!(out.len(), 3, "fold buffer is the 3-vector α");
         let (pos, _v, _t) = Self::decode(x);
+        out.fill(0.0);
         if range.is_empty() {
-            return vec![0.0; 3];
+            return;
         }
         if let Some(rt) = kernels {
             if let Some(name) = rt.manifest().gravity_map() {
                 let b = rt.block();
-                let mut acc = [0.0f64; 3];
                 let mut i0 = range.start;
                 while i0 < range.end {
                     let i1 = (i0 + b).min(range.end);
@@ -143,34 +151,34 @@ impl BsfProblem for GravityProblem {
                         ],
                     ) {
                         Ok(outs) => {
-                            acc[0] += outs[0][0];
-                            acc[1] += outs[0][1];
-                            acc[2] += outs[0][2];
+                            out[0] += outs[0][0];
+                            out[1] += outs[0][1];
+                            out[2] += outs[0][2];
                         }
                         Err(_) => {
                             let a = self.native_block(i0..i1, &pos);
-                            acc[0] += a[0];
-                            acc[1] += a[1];
-                            acc[2] += a[2];
+                            out[0] += a[0];
+                            out[1] += a[1];
+                            out[2] += a[2];
                         }
                     }
                     i0 = i1;
                 }
-                return acc.to_vec();
+                return;
             }
         }
-        self.native_block(range, &pos).to_vec()
+        let a = self.native_block(range, &pos);
+        out.copy_from_slice(&a);
     }
 
     fn fold_identity(&self) -> Vec<f64> {
         vec![0.0; 3]
     }
 
-    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
-        for (x, y) in a.iter_mut().zip(&b) {
+    fn combine_into(&self, acc: &mut [f64], b: &[f64]) {
+        for (x, y) in acc.iter_mut().zip(b) {
             *x += y;
         }
-        a
     }
 
     fn post(&self, x: &[f64], s: &[f64], _iteration: usize) -> (Vec<f64>, bool) {

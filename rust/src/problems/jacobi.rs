@@ -19,7 +19,7 @@ use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::RwLock;
 
-use crate::coordinator::{BsfProblem, CostSpec};
+use crate::coordinator::{BsfProblem, CostSpec, Workspace};
 use crate::linalg::generators::LinearSystem;
 use crate::linalg::{sq_norm2, sub, Matrix};
 use crate::runtime::{KernelRuntime, Tensor};
@@ -83,52 +83,6 @@ impl JacobiProblem {
     pub fn c(&self) -> &Matrix {
         &self.sys.c
     }
-
-    /// Kernel-backed column-block matvec over `range`, in blocks of the
-    /// artifact's width B; falls back to native when no artifact matches n.
-    fn map_fold_impl(
-        &self,
-        range: Range<usize>,
-        x: &[f64],
-        kernels: Option<&KernelRuntime>,
-    ) -> Vec<f64> {
-        let n = self.n();
-        let mut acc = vec![0.0; n];
-        if range.is_empty() {
-            return acc;
-        }
-        if let Some(rt) = kernels {
-            if let Some(name) = rt.manifest().jacobi_map(n) {
-                let b = rt.block();
-                let mut j0 = range.start;
-                while j0 < range.end {
-                    let j1 = (j0 + b).min(range.end);
-                    let c_blk = self.packed_block(j0, j1, b);
-                    let mut x_blk = vec![0.0; b];
-                    x_blk[..j1 - j0].copy_from_slice(&x[j0..j1]);
-                    match rt.execute(
-                        &name,
-                        &[Tensor::mat_shared(c_blk, n, b), Tensor::vec(x_blk)],
-                    ) {
-                        Ok(outs) => {
-                            for (a, v) in acc.iter_mut().zip(&outs[0]) {
-                                *a += v;
-                            }
-                        }
-                        Err(_) => {
-                            // Artifact mismatch mid-run: fall back natively
-                            // for this block (keeps the iteration correct).
-                            self.sys.c.col_block_matvec_acc(j0, j1, &x[j0..j1], &mut acc);
-                        }
-                    }
-                    j0 = j1;
-                }
-                return acc;
-            }
-        }
-        self.sys.c.col_block_matvec_acc(range.start, range.end, &x[range], &mut acc);
-        acc
-    }
 }
 
 impl BsfProblem for JacobiProblem {
@@ -145,24 +99,64 @@ impl BsfProblem for JacobiProblem {
         self.sys.d.clone()
     }
 
-    fn map_fold(
+    /// Kernel-backed column-block matvec over `range`, in blocks of the
+    /// artifact's width B; falls back to native when no artifact matches n.
+    /// The native path writes straight into `out` — zero allocations per
+    /// call (the PJRT path still allocates its block-staging tensors).
+    fn map_fold_into(
         &self,
         range: Range<usize>,
         x: &[f64],
+        out: &mut [f64],
+        _ws: &mut Workspace,
         kernels: Option<&KernelRuntime>,
-    ) -> Vec<f64> {
-        self.map_fold_impl(range, x, kernels)
+    ) {
+        let n = self.n();
+        debug_assert_eq!(out.len(), n, "fold buffer sized to n");
+        out.fill(0.0);
+        if range.is_empty() {
+            return;
+        }
+        if let Some(rt) = kernels {
+            if let Some(name) = rt.manifest().jacobi_map(n) {
+                let b = rt.block();
+                let mut j0 = range.start;
+                while j0 < range.end {
+                    let j1 = (j0 + b).min(range.end);
+                    let c_blk = self.packed_block(j0, j1, b);
+                    let mut x_blk = vec![0.0; b];
+                    x_blk[..j1 - j0].copy_from_slice(&x[j0..j1]);
+                    match rt.execute(
+                        &name,
+                        &[Tensor::mat_shared(c_blk, n, b), Tensor::vec(x_blk)],
+                    ) {
+                        Ok(outs) => {
+                            for (a, v) in out.iter_mut().zip(&outs[0]) {
+                                *a += v;
+                            }
+                        }
+                        Err(_) => {
+                            // Artifact mismatch mid-run: fall back natively
+                            // for this block (keeps the iteration correct).
+                            self.sys.c.col_block_matvec_acc(j0, j1, &x[j0..j1], out);
+                        }
+                    }
+                    j0 = j1;
+                }
+                return;
+            }
+        }
+        self.sys.c.col_block_matvec_acc(range.start, range.end, &x[range], out);
     }
 
     fn fold_identity(&self) -> Vec<f64> {
         vec![0.0; self.n()]
     }
 
-    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
-        for (x, y) in a.iter_mut().zip(&b) {
+    fn combine_into(&self, acc: &mut [f64], b: &[f64]) {
+        for (x, y) in acc.iter_mut().zip(b) {
             *x += y;
         }
-        a
     }
 
     fn post(&self, x: &[f64], s: &[f64], _iteration: usize) -> (Vec<f64>, bool) {

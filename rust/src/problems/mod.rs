@@ -13,10 +13,12 @@
 //! * [`MonteCarloPi`] — a Map-only algorithm (§7 Q2, ref [33]): `t_a ≈ 0`,
 //!   exercising the model outside the closed-form's `t_a > 0` assumption.
 //!
-//! Every problem provides: a kernel-backed `map_fold` (PJRT artifacts from
-//! the L1 Pallas kernels, with a bit-compatible native-Rust fallback for
-//! sizes without artifacts), the paper's analytic [`CostSpec`], and a
-//! sequential reference implementation used by the test suite.
+//! Every problem provides: a kernel-backed `map_fold_into` (PJRT artifacts
+//! from the L1 Pallas kernels, with a bit-compatible native-Rust fallback
+//! for sizes without artifacts) whose native path writes into the caller's
+//! buffer with zero steady-state allocations, the paper's analytic
+//! [`CostSpec`], and a sequential reference implementation used by the
+//! test suite.
 //!
 //! [`CostSpec`]: crate::coordinator::CostSpec
 

@@ -16,7 +16,7 @@
 
 use std::ops::Range;
 
-use crate::coordinator::{BsfProblem, CostSpec};
+use crate::coordinator::{BsfProblem, CostSpec, Workspace};
 use crate::runtime::KernelRuntime;
 use crate::util::Rng;
 
@@ -70,19 +70,26 @@ impl BsfProblem for MonteCarloPi {
         vec![0.0, 0.0] // [estimate, iteration]
     }
 
-    fn map_fold(&self, range: Range<usize>, x: &[f64], _kernels: Option<&KernelRuntime>) -> Vec<f64> {
+    fn map_fold_into(
+        &self,
+        range: Range<usize>,
+        x: &[f64],
+        out: &mut [f64],
+        _ws: &mut Workspace,
+        _kernels: Option<&KernelRuntime>,
+    ) {
+        debug_assert_eq!(out.len(), 1, "fold buffer is the scalar hit count");
         let iteration = x[1] as u64;
         let hits: u64 = range.map(|j| self.hits_for(j, iteration)).sum();
-        vec![hits as f64]
+        out[0] = hits as f64;
     }
 
     fn fold_identity(&self) -> Vec<f64> {
         vec![0.0]
     }
 
-    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
-        a[0] += b[0];
-        a
+    fn combine_into(&self, acc: &mut [f64], b: &[f64]) {
+        acc[0] += b[0];
     }
 
     fn post(&self, x: &[f64], s: &[f64], iteration: usize) -> (Vec<f64>, bool) {

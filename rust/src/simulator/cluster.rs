@@ -230,7 +230,10 @@ enum DurKind {
 /// A reusable Algorithm-2 iteration for fixed `(K, l, params)`: the task
 /// graph is built once, each [`IterationTemplate::replay`] refreshes the
 /// durations (provider samples × jitter, drawn in task-id order) and
-/// re-executes the graph in the engine's scratch buffers.
+/// re-executes the graph in the engine's scratch buffers. For sweeps over
+/// many `(K, l)` points, [`IterationTemplate::reset_to`] rebuilds the graph
+/// in place — one engine (and its grown scratch) serves a whole worker
+/// thread's share of the (experiment × size × K) work queue.
 pub struct IterationTemplate {
     eng: Engine,
     durs: Vec<DurKind>,
@@ -247,10 +250,11 @@ pub struct IterationTemplate {
 }
 
 /// Graph-construction helper: adds tasks with a placeholder duration and
-/// records how to compute the real duration on replay.
+/// records how to compute the real duration on replay. Borrows the
+/// template's engine and duration table so rebuilds reuse their capacity.
 struct Build<'p> {
-    eng: Engine,
-    durs: Vec<DurKind>,
+    eng: &'p mut Engine,
+    durs: &'p mut Vec<DurKind>,
     params: &'p SimParams,
 }
 
@@ -406,10 +410,36 @@ impl IterationTemplate {
     /// broadcasts the exit flag back through the masters (the §7-Q5
     /// configuration the paper says admits no closed-form boundary).
     pub fn new(k: usize, l: usize, params: &SimParams) -> IterationTemplate {
+        let mut tmpl = IterationTemplate {
+            eng: Engine::new(),
+            durs: Vec::new(),
+            jitter_comp: 0.0,
+            jitter_comm: 0.0,
+            bcast_tasks: Vec::new(),
+            map_tasks: Vec::new(),
+            final_fold: 0,
+            post: 0,
+        };
+        tmpl.reset_to(k, l, params);
+        tmpl
+    }
+
+    /// Rebuild the template for a new `(k, l, params)` point **in place**,
+    /// reusing the engine (graph + scratch capacity, via [`Engine::reset`])
+    /// and every template buffer. Produces a graph bitwise identical to a
+    /// fresh [`IterationTemplate::new`] — pinned by the module tests — so
+    /// pooled sweep workers can hold one template for their whole queue.
+    pub fn reset_to(&mut self, k: usize, l: usize, params: &SimParams) {
         assert!(k >= 1, "need at least one worker");
         assert!(params.masters >= 1);
+        self.eng.reset();
+        self.durs.clear();
+        self.bcast_tasks.clear();
+        self.map_tasks.clear();
+        self.jitter_comp = params.jitter_comp;
+        self.jitter_comm = params.jitter_comm;
         let m = params.masters.min(k); // no point in masters without workers
-        let mut b = Build { eng: Engine::new(), durs: Vec::new(), params };
+        let mut b = Build { eng: &mut self.eng, durs: &mut self.durs, params };
 
         // Resources: 0..m are masters, m..m+k are workers.
         let worker_res = |j: usize| (m + j) as u32; // j in 0..k
@@ -497,7 +527,6 @@ impl IterationTemplate {
             }
             partial_ready.push(t);
         }
-        let map_tasks = partial_ready.clone();
 
         // Phase 3: per-group reduce to the group master, then masters to 0.
         let mut group_partial: Vec<TaskId> = Vec::with_capacity(m);
@@ -522,17 +551,10 @@ impl IterationTemplate {
         let post = b.push(0, DurKind::Post, "post");
         b.eng.dep(final_fold, post);
 
-        let bcast_tasks: Vec<TaskId> = recv_x.iter().flatten().copied().collect();
-        IterationTemplate {
-            eng: b.eng,
-            durs: b.durs,
-            jitter_comp: params.jitter_comp,
-            jitter_comm: params.jitter_comm,
-            bcast_tasks,
-            map_tasks,
-            final_fold,
-            post,
-        }
+        self.bcast_tasks.extend(recv_x.iter().flatten().copied());
+        self.map_tasks.extend_from_slice(&partial_ready);
+        self.final_fold = final_fold;
+        self.post = post;
     }
 
     /// Number of tasks in the iteration graph.
@@ -571,6 +593,34 @@ impl IterationTemplate {
             reduce_done: finish[self.final_fold as usize],
             post_done: finish[self.post as usize],
             total: Engine::makespan(finish),
+        }
+    }
+
+    /// Simulate `iters` iterations into `out` (cleared first). With zero
+    /// jitter and a deterministic provider every iteration is identical, so
+    /// one replay is simulated and its timing replicated — bitwise equal to
+    /// the naive loop (and to [`simulate_run`] on a fresh template).
+    pub fn run_into(
+        &mut self,
+        iters: usize,
+        provider: &mut dyn CostProvider,
+        rng: &mut Rng,
+        out: &mut Vec<IterationTiming>,
+    ) {
+        out.clear();
+        if iters == 0 {
+            return;
+        }
+        let deterministic =
+            self.jitter_comp == 0.0 && self.jitter_comm == 0.0 && provider.is_deterministic();
+        if deterministic {
+            let t = self.replay(provider, rng);
+            out.resize(iters, t);
+        } else {
+            for _ in 0..iters {
+                let t = self.replay(provider, rng);
+                out.push(t);
+            }
         }
     }
 
@@ -628,16 +678,9 @@ pub fn simulate_run(
     rng: &mut Rng,
 ) -> Vec<IterationTiming> {
     let mut tmpl = IterationTemplate::new(k, l, params);
-    if iters == 0 {
-        return Vec::new();
-    }
-    let deterministic =
-        params.jitter_comp == 0.0 && params.jitter_comm == 0.0 && provider.is_deterministic();
-    if deterministic {
-        let t = tmpl.replay(provider, rng);
-        return vec![t; iters];
-    }
-    (0..iters).map(|_| tmpl.replay(provider, rng)).collect()
+    let mut out = Vec::new();
+    tmpl.run_into(iters, provider, rng, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -805,6 +848,41 @@ mod tests {
             let fresh = simulate_iteration(24, l, &p, &mut prov, &mut r2);
             assert_eq!(reused, fresh);
         }
+    }
+
+    #[test]
+    fn reset_to_matches_fresh_template() {
+        // Rebuilding a template in place for a new (K, l, params) must be
+        // bitwise identical to constructing it from scratch — the pooled
+        // sweep's one-engine-per-worker reuse depends on it.
+        let mut p = params();
+        p.jitter_comp = 0.07;
+        let mut prov = analytic(2048);
+        let mut tmpl = IterationTemplate::new(8, 512, &params());
+        tmpl.replay(&mut prov, &mut Rng::new(1));
+        for (k, l) in [(24usize, 2048usize), (3, 100), (24, 2048)] {
+            tmpl.reset_to(k, l, &p);
+            let mut fresh = IterationTemplate::new(k, l, &p);
+            assert_eq!(tmpl.task_count(), fresh.task_count(), "K={k} l={l}");
+            let mut prov_a = analytic(l);
+            let mut prov_b = analytic(l);
+            let a = tmpl.replay(&mut prov_a, &mut Rng::new(42));
+            let b = fresh.replay(&mut prov_b, &mut Rng::new(42));
+            assert_eq!(a, b, "K={k} l={l}");
+        }
+    }
+
+    #[test]
+    fn run_into_matches_simulate_run() {
+        let l = 1024;
+        let mut p = params();
+        p.jitter_comp = 0.05;
+        let mut prov = analytic(l);
+        let expect = simulate_run(12, l, 5, &p, &mut prov, &mut Rng::new(9));
+        let mut tmpl = IterationTemplate::new(12, l, &p);
+        let mut got = Vec::new();
+        tmpl.run_into(5, &mut prov, &mut Rng::new(9), &mut got);
+        assert_eq!(expect, got);
     }
 
     #[test]

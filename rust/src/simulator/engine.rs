@@ -3,27 +3,37 @@
 //! A simulation is a DAG of tasks; each task has a duration and runs on one
 //! *resource* (a processor node's CPU or NIC), and resources execute one
 //! task at a time in the order they become ready (list scheduling). The
-//! engine computes every task's start/finish time with a binary-heap event
-//! queue — `O((T + E) log T)` for `T` tasks and `E` dependency edges.
+//! engine computes every task's start/finish time with a calendar (bucket)
+//! event queue — amortised `O(T + E)` for `T` tasks and `E` dependency
+//! edges on the event distributions real iteration graphs produce.
 //!
 //! This is the hot path of every speedup-curve experiment (a Fig.-6 sweep
 //! executes millions of tasks), so the representation is allocation-free on
-//! replay: edges live in a CSR-style flat array (`csr_off`/`csr_dst`, built
-//! once per graph), every per-run working set (`pending`, `ready_at`,
-//! `finish`, `resource_free`, the heap) is a reusable scratch buffer, and
-//! [`Engine::set_duration`] + [`Engine::run_reuse`] replay the same graph
-//! with new durations without touching the allocator. After the first
-//! `run_reuse` call on a graph, subsequent replays perform **zero** heap
-//! allocations (asserted by `rust/benches/simulator_hotpath.rs` with a
-//! counting allocator).
-
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+//! replay: the task table is SoA (`resources`/`durations` parallel
+//! columns), edges live in a CSR-style flat array (`csr_off`/`csr_dst`,
+//! built once per graph), every per-run working set (`pending`, `ready_at`,
+//! `finish`, `resource_free`, the calendar's bucket lists) is a reusable
+//! scratch buffer, and [`Engine::set_duration`] + [`Engine::run_reuse`]
+//! replay the same graph with new durations without touching the
+//! allocator. After the first `run_reuse` call on a graph, subsequent
+//! replays perform **zero** heap allocations (asserted by
+//! `rust/benches/simulator_hotpath.rs` with a counting allocator).
+//!
+//! ## Event-queue schedule contract
+//!
+//! The calendar queue pops events in ascending `(ready_time, task id)`
+//! order — exactly the order the previous `BinaryHeap` implementation
+//! produced (min time, ties broken by the smaller id). This keeps every
+//! schedule bitwise identical across the queue swap; the equivalence is
+//! pinned by `rust/tests/determinism.rs` and the random-DAG property test
+//! in `rust/tests/properties.rs`, which compares against a reference heap
+//! implementation including time ties.
 
 /// Identifier of a task within one [`Engine`] run.
 pub type TaskId = u32;
 
-/// Specification of one task.
+/// One task's `(resource, duration)` pair — an assembled view over the
+/// engine's SoA columns (see [`Engine::spec`]).
 #[derive(Debug, Clone, Copy)]
 pub struct TaskSpec {
     /// Resource (e.g. node id) the task occupies; tasks on one resource
@@ -33,26 +43,150 @@ pub struct TaskSpec {
     pub duration: f64,
 }
 
-/// Min-heap entry ordered by time (total order; times are finite).
-#[derive(Debug, PartialEq)]
-struct Ready(f64, TaskId);
+/// Sentinel for "no entry" in the calendar's intrusive linked lists.
+const NONE: u32 = u32::MAX;
 
-impl Eq for Ready {}
-
-impl PartialOrd for Ready {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
+/// Calendar (bucket) event queue over task ids.
+///
+/// Events are bucketed by ready time into a sliding window of
+/// equal-width buckets; events beyond the window park on an overflow list
+/// and are redistributed when the window advances ([`Calendar::rebase`]).
+/// Every list is intrusive over a preallocated `next` array (each task
+/// enters the queue exactly once), so the queue allocates nothing after
+/// [`Calendar::prime`] has grown its two arrays to the graph size.
+///
+/// Pops return the minimum `(time, id)` event. Correctness relies on the
+/// engine's monotonicity: an event inserted while processing a pop at time
+/// `t` is never earlier than `t`, so insertions always land in the current
+/// bucket or later and a linear min-scan of the current bucket yields the
+/// global minimum. Worst case (all events tied in one bucket) degrades to
+/// `O(queue²)`; iteration graphs keep bucket occupancy near the
+/// [`Calendar::prime`] sizing target.
+#[derive(Debug, Default)]
+struct Calendar {
+    /// Head of each bucket's list (`NONE` = empty).
+    heads: Vec<u32>,
+    /// Intrusive next pointer per task id.
+    next: Vec<u32>,
+    /// Absolute time at the start of bucket 0 of the current window.
+    base: f64,
+    /// Width of one bucket (seconds).
+    width: f64,
+    /// Cursor: buckets before `cur` are empty for the rest of the run.
+    cur: usize,
+    /// Head of the beyond-the-window overflow list.
+    overflow: u32,
+    /// Queued events (buckets + overflow).
+    len: usize,
 }
 
-impl Ord for Ready {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for min-heap; tie-break on id for determinism.
-        other
-            .0
-            .partial_cmp(&self.0)
-            .expect("non-finite task time")
-            .then_with(|| other.1.cmp(&self.1))
+impl Calendar {
+    /// Prepare for a run of `n` tasks whose durations sum to `total` over
+    /// `max_res` resources: clears all lists and sizes the bucket width to
+    /// the geometric mean of the two makespan extremes (`total` when fully
+    /// serial, `total / max_res` when perfectly parallel) divided by `n`.
+    /// Serial schedules then cross O(√R) windows of cheap empty-bucket
+    /// hops, while parallel schedules keep bucket occupancy at O(√R)
+    /// events instead of piling the whole makespan into a few buckets.
+    fn prime(&mut self, n: usize, total: f64, max_res: usize) {
+        let nb = n / 4 + 1;
+        self.heads.clear();
+        self.heads.resize(nb, NONE);
+        self.next.clear();
+        self.next.resize(n, NONE);
+        let w = total / (n.max(1) as f64 * (max_res.max(1) as f64).sqrt());
+        self.width = if w.is_finite() && w > 0.0 { w } else { 1.0 };
+        self.base = 0.0;
+        self.cur = 0;
+        self.overflow = NONE;
+        self.len = 0;
+    }
+
+    /// Insert task `id` ready at time `t` (`t` must be ≥ the time of the
+    /// most recent pop — guaranteed because successor ready times are
+    /// finish times of already-popped tasks).
+    fn push(&mut self, t: f64, id: TaskId) {
+        assert!(t.is_finite(), "non-finite task time");
+        let d = (t - self.base) / self.width;
+        if d < self.heads.len() as f64 {
+            let b = d as usize;
+            self.next[id as usize] = self.heads[b];
+            self.heads[b] = id;
+        } else {
+            self.next[id as usize] = self.overflow;
+            self.overflow = id;
+        }
+        self.len += 1;
+    }
+
+    /// Remove and return the event minimising `(time_of[id], id)`.
+    fn pop(&mut self, time_of: &[f64]) -> Option<TaskId> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            if self.cur == self.heads.len() {
+                self.rebase(time_of);
+            }
+            let head = self.heads[self.cur];
+            if head == NONE {
+                self.cur += 1;
+                continue;
+            }
+            // Linear min-scan of the bucket; ties break on the smaller id,
+            // matching the retired heap's ordering bit for bit.
+            let mut best = head;
+            let mut best_prev = NONE;
+            let mut prev = head;
+            let mut at = self.next[head as usize];
+            while at != NONE {
+                let (t, bt) = (time_of[at as usize], time_of[best as usize]);
+                if t < bt || (t == bt && at < best) {
+                    best = at;
+                    best_prev = prev;
+                }
+                prev = at;
+                at = self.next[at as usize];
+            }
+            if best == head {
+                self.heads[self.cur] = self.next[best as usize];
+            } else {
+                self.next[best_prev as usize] = self.next[best as usize];
+            }
+            self.len -= 1;
+            return Some(best);
+        }
+    }
+
+    /// Advance the window to the earliest overflow event and redistribute
+    /// the overflow list. Only reached when every bucket is empty, so all
+    /// queued events live on the overflow list.
+    fn rebase(&mut self, time_of: &[f64]) {
+        debug_assert!(self.overflow != NONE, "rebase with events still queued");
+        let mut t_min = f64::INFINITY;
+        let mut at = self.overflow;
+        while at != NONE {
+            t_min = t_min.min(time_of[at as usize]);
+            at = self.next[at as usize];
+        }
+        self.base = t_min;
+        self.cur = 0;
+        let nb = self.heads.len() as f64;
+        let mut at = self.overflow;
+        self.overflow = NONE;
+        while at != NONE {
+            let nx = self.next[at as usize];
+            let d = (time_of[at as usize] - self.base) / self.width;
+            if d < nb {
+                let b = d as usize;
+                self.next[at as usize] = self.heads[b];
+                self.heads[b] = at;
+            } else {
+                self.next[at as usize] = self.overflow;
+                self.overflow = at;
+            }
+            at = nx;
+        }
     }
 }
 
@@ -65,7 +199,10 @@ impl Ord for Ready {
 /// capacity with [`Engine::reset`].
 #[derive(Debug, Default)]
 pub struct Engine {
-    specs: Vec<TaskSpec>,
+    /// SoA task table: resource column.
+    resources: Vec<u32>,
+    /// SoA task table: duration column.
+    durations: Vec<f64>,
     /// Optional phase labels (static strings — no hot-path allocation).
     labels: Vec<&'static str>,
     /// Edge list in insertion order; finalised into CSR before execution.
@@ -85,7 +222,7 @@ pub struct Engine {
     ready_at: Vec<f64>,
     finish: Vec<f64>,
     resource_free: Vec<f64>,
-    heap: BinaryHeap<Ready>,
+    queue: Calendar,
 }
 
 impl Engine {
@@ -102,8 +239,9 @@ impl Engine {
     /// Add a labelled task (label shows up in exported traces).
     pub fn task_labeled(&mut self, resource: u32, duration: f64, label: &'static str) -> TaskId {
         debug_assert!(duration >= 0.0, "negative duration");
-        let id = self.specs.len() as TaskId;
-        self.specs.push(TaskSpec { resource, duration });
+        let id = self.resources.len() as TaskId;
+        self.resources.push(resource);
+        self.durations.push(duration);
         self.labels.push(label);
         self.indegree.push(0);
         self.max_res = self.max_res.max(resource as usize + 1);
@@ -111,9 +249,14 @@ impl Engine {
         id
     }
 
-    /// Per-task specs (read-only; used by trace export).
-    pub fn specs(&self) -> &[TaskSpec] {
-        &self.specs
+    /// Task `id`'s `(resource, duration)`, assembled from the SoA columns.
+    pub fn spec(&self, id: TaskId) -> TaskSpec {
+        TaskSpec { resource: self.resources[id as usize], duration: self.durations[id as usize] }
+    }
+
+    /// Per-task durations (read-only column view).
+    pub fn durations(&self) -> &[f64] {
+        &self.durations
     }
 
     /// Per-task labels.
@@ -131,7 +274,7 @@ impl Engine {
 
     /// Number of tasks.
     pub fn len(&self) -> usize {
-        self.specs.len()
+        self.resources.len()
     }
 
     /// Number of dependency edges.
@@ -139,9 +282,14 @@ impl Engine {
         self.edge_from.len()
     }
 
+    /// Dependency edge `i` as `(before, after)`, in insertion order.
+    pub fn edge(&self, i: usize) -> (TaskId, TaskId) {
+        (self.edge_from[i], self.edge_to[i])
+    }
+
     /// True when no tasks have been added.
     pub fn is_empty(&self) -> bool {
-        self.specs.is_empty()
+        self.resources.is_empty()
     }
 
     /// Overwrite a task's duration (graph structure unchanged) — the replay
@@ -149,14 +297,15 @@ impl Engine {
     /// call [`Engine::run_reuse`].
     pub fn set_duration(&mut self, id: TaskId, duration: f64) {
         debug_assert!(duration >= 0.0, "negative duration");
-        self.specs[id as usize].duration = duration;
+        self.durations[id as usize] = duration;
     }
 
     /// Clear the graph (tasks, labels, edges) while keeping the capacity of
     /// every internal buffer — start building the next graph without
     /// releasing memory.
     pub fn reset(&mut self) {
-        self.specs.clear();
+        self.resources.clear();
+        self.durations.clear();
         self.labels.clear();
         self.edge_from.clear();
         self.edge_to.clear();
@@ -172,10 +321,10 @@ impl Engine {
 
     /// Build the CSR adjacency from the edge list (counting sort by source;
     /// stable, so per-source successor order equals `dep` insertion order —
-    /// this keeps heap insertion order, and therefore tie-breaking, bitwise
+    /// this keeps event insertion order, and therefore tie-breaking, bitwise
     /// reproducible).
     fn finalize(&mut self) {
-        let n = self.specs.len();
+        let n = self.resources.len();
         self.csr_off.clear();
         self.csr_off.resize(n + 1, 0);
         for &f in &self.edge_from {
@@ -210,7 +359,7 @@ impl Engine {
         if !self.csr_valid {
             self.finalize();
         }
-        let n = self.specs.len();
+        let n = self.resources.len();
         self.pending.clear();
         self.pending.extend_from_slice(&self.indegree);
         self.ready_at.clear();
@@ -219,22 +368,26 @@ impl Engine {
         self.finish.resize(n, f64::NAN);
         self.resource_free.clear();
         self.resource_free.resize(self.max_res, 0.0);
-        self.heap.clear();
+        // Total work bounds every event time (each finish is a sum of a
+        // chain of distinct task durations), so it sizes the calendar.
+        let total: f64 = self.durations.iter().sum();
+        self.queue.prime(n, total, self.max_res);
         for (i, &p) in self.pending.iter().enumerate() {
             if p == 0 {
-                self.heap.push(Ready(0.0, i as TaskId));
+                self.queue.push(0.0, i as TaskId);
             }
         }
         let mut done = 0usize;
-        while let Some(Ready(ready, id)) = self.heap.pop() {
-            let spec = self.specs[id as usize];
-            let start = ready.max(self.resource_free[spec.resource as usize]);
-            let end = start + spec.duration;
-            self.resource_free[spec.resource as usize] = end;
-            self.finish[id as usize] = end;
+        while let Some(id) = self.queue.pop(&self.ready_at) {
+            let i = id as usize;
+            let res = self.resources[i] as usize;
+            let start = self.ready_at[i].max(self.resource_free[res]);
+            let end = start + self.durations[i];
+            self.resource_free[res] = end;
+            self.finish[i] = end;
             done += 1;
-            let lo = self.csr_off[id as usize];
-            let hi = self.csr_off[id as usize + 1];
+            let lo = self.csr_off[i];
+            let hi = self.csr_off[i + 1];
             for e in lo..hi {
                 let succ = self.csr_dst[e] as usize;
                 if self.ready_at[succ] < end {
@@ -242,8 +395,7 @@ impl Engine {
                 }
                 self.pending[succ] -= 1;
                 if self.pending[succ] == 0 {
-                    let at = self.ready_at[succ];
-                    self.heap.push(Ready(at, succ as TaskId));
+                    self.queue.push(self.ready_at[succ], succ as TaskId);
                 }
             }
         }
@@ -254,6 +406,155 @@ impl Engine {
     /// Makespan of the last `run`'s schedule (max finish time).
     pub fn makespan(finish: &[f64]) -> f64 {
         finish.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Min-heap entry ordered by `(time, id)` for [`ReferenceScheduler`].
+#[derive(Debug, PartialEq)]
+struct Ready(f64, TaskId);
+
+impl Eq for Ready {}
+
+impl PartialOrd for Ready {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ready {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse for min-heap; tie-break on id for determinism.
+        other
+            .0
+            .partial_cmp(&self.0)
+            .expect("non-finite task time")
+            .then_with(|| other.1.cmp(&self.1))
+    }
+}
+
+/// The engine's scheduling contract as an executable specification: the
+/// retired `BinaryHeap` event loop, kept as the single ground truth the
+/// calendar queue is checked against. `rust/tests/properties.rs` pins
+/// bitwise schedule equality on random tie-heavy DAGs, and
+/// `rust/benches/simulator_hotpath.rs` races it against
+/// [`Engine::run_reuse`] on the K=270 iteration graph. Not a hot path —
+/// do not use it for simulation.
+#[derive(Debug, Default)]
+pub struct ReferenceScheduler {
+    resources: Vec<u32>,
+    durations: Vec<f64>,
+    succs: Vec<Vec<TaskId>>,
+    indegree: Vec<u32>,
+    max_res: usize,
+    /// Record per-resource pop order during runs. Off by default so the
+    /// benchmark's timed replays measure only the heap event loop, exactly
+    /// like [`Engine::run_reuse`] measures only the calendar.
+    record_order: bool,
+    // per-run scratch (reused so benchmark replays match run_reuse's
+    // steady state)
+    pending: Vec<u32>,
+    ready_at: Vec<f64>,
+    finish: Vec<f64>,
+    free: Vec<f64>,
+    order: Vec<Vec<TaskId>>,
+    heap: std::collections::BinaryHeap<Ready>,
+}
+
+impl ReferenceScheduler {
+    /// Build from raw SoA columns + an edge list.
+    pub fn new(
+        resources: Vec<u32>,
+        durations: Vec<f64>,
+        edges: &[(TaskId, TaskId)],
+    ) -> ReferenceScheduler {
+        assert_eq!(resources.len(), durations.len());
+        let n = resources.len();
+        let mut succs: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        let mut indegree = vec![0u32; n];
+        for &(from, to) in edges {
+            succs[from as usize].push(to);
+            indegree[to as usize] += 1;
+        }
+        let max_res = resources.iter().map(|&r| r as usize + 1).max().unwrap_or(0);
+        ReferenceScheduler {
+            resources,
+            durations,
+            succs,
+            indegree,
+            max_res,
+            ..ReferenceScheduler::default()
+        }
+    }
+
+    /// Copy an engine's graph (tasks + edges) into a reference scheduler.
+    pub fn from_engine(eng: &Engine) -> ReferenceScheduler {
+        let edges: Vec<(TaskId, TaskId)> = (0..eng.edge_count()).map(|i| eng.edge(i)).collect();
+        let (resources, durations): (Vec<u32>, Vec<f64>) =
+            (0..eng.len()).map(|i| eng.spec(i as TaskId)).map(|s| (s.resource, s.duration)).unzip();
+        ReferenceScheduler::new(resources, durations, &edges)
+    }
+
+    /// Record per-resource pop order on subsequent [`Self::run`]s (see
+    /// [`Self::resource_order`]).
+    pub fn record_order(&mut self, on: bool) {
+        self.record_order = on;
+    }
+
+    /// Execute the graph with the heap event loop; returns per-task finish
+    /// times. Panics on cyclic graphs, like [`Engine::run_reuse`].
+    pub fn run(&mut self) -> &[f64] {
+        let n = self.resources.len();
+        self.pending.clear();
+        self.pending.extend_from_slice(&self.indegree);
+        self.ready_at.clear();
+        self.ready_at.resize(n, 0.0);
+        self.finish.clear();
+        self.finish.resize(n, f64::NAN);
+        self.free.clear();
+        self.free.resize(self.max_res, 0.0);
+        // Truncate (not drop) the inner order buffers so repeated runs
+        // reuse their capacity.
+        self.order.resize(self.max_res, Vec::new());
+        for o in &mut self.order {
+            o.clear();
+        }
+        self.heap.clear();
+        for (i, &p) in self.pending.iter().enumerate() {
+            if p == 0 {
+                self.heap.push(Ready(0.0, i as TaskId));
+            }
+        }
+        let mut done = 0usize;
+        while let Some(Ready(ready, id)) = self.heap.pop() {
+            let i = id as usize;
+            let res = self.resources[i] as usize;
+            let start = ready.max(self.free[res]);
+            let end = start + self.durations[i];
+            self.free[res] = end;
+            self.finish[i] = end;
+            if self.record_order {
+                self.order[res].push(id);
+            }
+            done += 1;
+            for &succ_id in &self.succs[i] {
+                let succ = succ_id as usize;
+                if self.ready_at[succ] < end {
+                    self.ready_at[succ] = end;
+                }
+                self.pending[succ] -= 1;
+                if self.pending[succ] == 0 {
+                    self.heap.push(Ready(self.ready_at[succ], succ_id));
+                }
+            }
+        }
+        assert_eq!(done, n, "cyclic dependency graph: {} tasks never ran", n - done);
+        &self.finish
+    }
+
+    /// Execution order per resource of the most recent [`Self::run`]
+    /// (empty unless [`Self::record_order`] was enabled).
+    pub fn resource_order(&self) -> &[Vec<TaskId>] {
+        &self.order
     }
 }
 
@@ -332,6 +633,18 @@ mod tests {
     }
 
     #[test]
+    fn tied_ready_times_pop_in_id_order_across_many_tasks() {
+        // Many tasks tied at t=0 on one resource: the calendar's bucket
+        // min-scan must reproduce the heap's ascending-id order exactly.
+        let mut e = Engine::new();
+        let ids: Vec<TaskId> = (0..17).map(|_| e.task(0, 1.0)).collect();
+        let f = e.run();
+        for (i, &id) in ids.iter().enumerate() {
+            assert_eq!(f[id as usize], (i + 1) as f64, "task {id}");
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "cyclic")]
     fn cycle_detected() {
         let mut e = Engine::new();
@@ -359,6 +672,26 @@ mod tests {
         assert!(f.is_empty());
         assert!(e.is_empty());
         assert_eq!(Engine::makespan(&f), 0.0);
+    }
+
+    #[test]
+    fn long_chain_crosses_calendar_windows() {
+        // A serial chain's makespan equals the total work, so its events
+        // sweep through every calendar window (~4 rebases) — exercises the
+        // overflow/rebase path end to end.
+        let n = 512;
+        let mut e = Engine::new();
+        let mut prev = e.task(0, 1.0);
+        for _ in 1..n {
+            let t = e.task(0, 1.0);
+            e.dep(prev, t);
+            prev = t;
+        }
+        let f = e.run();
+        assert_eq!(f[prev as usize], n as f64);
+        for (i, &v) in f.iter().enumerate() {
+            assert_eq!(v, (i + 1) as f64);
+        }
     }
 
     #[test]
@@ -415,5 +748,18 @@ mod tests {
         e.dep(b, c);
         let f = e.run();
         assert_eq!(f[c as usize], 3.0);
+    }
+
+    #[test]
+    fn spec_and_edge_accessors() {
+        let mut e = Engine::new();
+        let a = e.task(3, 1.5);
+        let b = e.task(1, 2.5);
+        e.dep(a, b);
+        let s = e.spec(a);
+        assert_eq!(s.resource, 3);
+        assert_eq!(s.duration, 1.5);
+        assert_eq!(e.edge(0), (a, b));
+        assert_eq!(e.durations(), &[1.5, 2.5]);
     }
 }

@@ -25,4 +25,4 @@ pub use cluster::{
     CostProvider, IterationTemplate, IterationTiming, ReduceMode, SampledCost, SimParams,
 };
 pub use trace::{trace_iteration, Trace, TraceEvent};
-pub use engine::{Engine, TaskId, TaskSpec};
+pub use engine::{Engine, ReferenceScheduler, TaskId, TaskSpec};

@@ -38,12 +38,13 @@ impl Trace {
     /// Extract the trace from an executed engine.
     pub fn from_engine(eng: &Engine, finish: &[f64]) -> Trace {
         let mut events: Vec<TraceEvent> = eng
-            .specs()
+            .labels()
             .iter()
-            .zip(eng.labels())
             .zip(finish)
-            .filter(|((spec, label), _)| spec.duration > 0.0 || !label.is_empty())
-            .map(|((spec, label), &end)| TraceEvent {
+            .enumerate()
+            .map(|(id, (&label, &end))| (eng.spec(id as crate::simulator::TaskId), label, end))
+            .filter(|(spec, label, _)| spec.duration > 0.0 || !label.is_empty())
+            .map(|(spec, label, end)| TraceEvent {
                 label: if label.is_empty() { "task" } else { label },
                 resource: spec.resource,
                 start: end - spec.duration,

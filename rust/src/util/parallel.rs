@@ -34,23 +34,46 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    parallel_map_with(n, threads, || (), |_, i| f(i))
+}
+
+/// [`parallel_map`] with per-worker scratch: `init()` runs once on each
+/// worker thread (and once for the inline path) and its value is handed to
+/// every `f` call that worker makes. The sweep hot path uses this to keep
+/// one `simulator::Engine`/`IterationTemplate` per worker across the whole
+/// (experiment × size × K) work queue.
+///
+/// Determinism contract: the scratch must only cache *capacity* — each
+/// `f(&mut state, i)` result must stay a pure function of `i`, or the
+/// output would depend on which worker pulled which index.
+pub fn parallel_map_with<S, T, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     let threads = threads.clamp(1, n.max(1));
     if threads <= 1 {
-        return (0..n).map(f).collect();
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
     }
     let next = AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<(usize, T)>();
     let f = &f;
+    let init = &init;
     let next = &next;
     let mut out: Vec<Option<T>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
     std::thread::scope(|s| {
         for _ in 0..threads {
             let tx = tx.clone();
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n || tx.send((i, f(i))).is_err() {
-                    break;
+            s.spawn(move || {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n || tx.send((i, f(&mut state, i))).is_err() {
+                        break;
+                    }
                 }
             });
         }
@@ -85,5 +108,36 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn with_state_matches_stateless_at_any_thread_count() {
+        // State that only caches capacity must not change results.
+        let want: Vec<usize> = (0..64).map(|i| i * 3).collect();
+        for threads in [1usize, 2, 8] {
+            let got = parallel_map_with(
+                64,
+                threads,
+                Vec::<usize>::new,
+                |scratch, i| {
+                    scratch.clear();
+                    scratch.extend(0..i);
+                    scratch.len() * 3
+                },
+            );
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn init_runs_once_per_worker_inline() {
+        let inits = std::sync::atomic::AtomicUsize::new(0);
+        let _ = parallel_map_with(
+            10,
+            1,
+            || inits.fetch_add(1, Ordering::Relaxed),
+            |_, i| i,
+        );
+        assert_eq!(inits.load(Ordering::Relaxed), 1);
     }
 }

@@ -12,7 +12,8 @@
 //!    replicates it; that must equal running the full `iters` loop.
 
 use bsf::experiments::{
-    analytic_provider, paper_jacobi_params, simulated_curve_threads, ExperimentCtx,
+    analytic_provider, paper_jacobi_params, simulated_curve_threads, simulated_curves,
+    ExperimentCtx, SweepJob,
 };
 use bsf::simulator::{
     simulate_iteration, simulate_run, AnalyticCost, IterationTemplate, IterationTiming, SimParams,
@@ -103,6 +104,54 @@ fn sweep_stream_is_keyed_by_k_not_grid() {
     for pa in &a {
         let pb = b.iter().find(|p| p.k == pa.k).expect("shared K");
         assert_eq!(pa.t_k.to_bits(), pb.t_k.to_bits(), "K={}", pa.k);
+    }
+}
+
+#[test]
+fn pooled_multi_sweep_bitwise_equals_sequential_sweeps() {
+    // The (experiment × size × K) work queue must reproduce the serial
+    // size-by-size pipeline bit for bit, at any thread count, jittered
+    // included: jobs pre-fork their RNG roots in construction order, so
+    // execution order (and worker engine reuse) cannot leak into results.
+    let ctx = ExperimentCtx::default();
+    let p1 = paper_jacobi_params(1_500).unwrap();
+    let p2 = paper_jacobi_params(5_000).unwrap();
+    let prov1 = analytic_provider(&p1);
+    let prov2 = analytic_provider(&p2);
+    let mut sim1 = SimParams::new(1_500, 1_500);
+    sim1.jitter_comp = 0.12;
+    let mut sim2 = SimParams::new(5_000, 5_000);
+    sim2.jitter_comm = 0.08;
+    let ks: Vec<usize> = (1..=24).collect();
+
+    // Serial reference: two sweeps in sequence off one rng.
+    let mut rng = Rng::new(2027);
+    let a1 = simulated_curve_threads(&ctx, &sim1, 1_500, &prov1, &ks, 3, &mut rng, 1);
+    let a2 = simulated_curve_threads(&ctx, &sim2, 5_000, &prov2, &ks, 3, &mut rng, 1);
+
+    for threads in [1usize, 4, 8] {
+        let mut rng = Rng::new(2027);
+        let jobs = vec![
+            SweepJob::new(sim1.clone(), 1_500, &prov1, ks.clone(), 3, &mut rng),
+            SweepJob::new(sim2.clone(), 5_000, &prov2, ks.clone(), 3, &mut rng),
+        ];
+        let got = simulated_curves(&jobs, threads);
+        assert_eq!(got.len(), 2);
+        for (want, have) in [(&a1, &got[0]), (&a2, &got[1])] {
+            assert_eq!(want.len(), have.len());
+            for (a, b) in want.iter().zip(have.iter()) {
+                assert_eq!(a.k, b.k, "threads={threads}");
+                assert_eq!(
+                    a.t_k.to_bits(),
+                    b.t_k.to_bits(),
+                    "threads={threads} K={}: t_k {} vs {}",
+                    a.k,
+                    a.t_k,
+                    b.t_k
+                );
+                assert_eq!(a.speedup.to_bits(), b.speedup.to_bits(), "threads={threads} K={}", a.k);
+            }
+        }
     }
 }
 

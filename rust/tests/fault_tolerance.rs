@@ -6,7 +6,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use bsf::coordinator::{run_sequential, BsfProblem, CostSpec, LiveRunner};
+use bsf::coordinator::{run_sequential, BsfProblem, CostSpec, LiveRunner, Workspace};
 use bsf::runtime::KernelRuntime;
 
 /// Sums `weight * x` over its list; a chosen list index panics (or hangs)
@@ -39,7 +39,14 @@ impl BsfProblem for Sabotaged {
     fn initial_approx(&self) -> Vec<f64> {
         vec![0.0]
     }
-    fn map_fold(&self, range: Range<usize>, x: &[f64], _k: Option<&KernelRuntime>) -> Vec<f64> {
+    fn map_fold_into(
+        &self,
+        range: Range<usize>,
+        x: &[f64],
+        out: &mut [f64],
+        _ws: &mut Workspace,
+        _k: Option<&KernelRuntime>,
+    ) {
         let iter = x[0] as usize; // iteration is encoded in the approximation
         // The injected fault models a *node* failure: it fires only on
         // worker threads (spawned unnamed), never on the master/test
@@ -52,14 +59,13 @@ impl BsfProblem for Sabotaged {
                 panic!("injected worker failure at iteration {iter}");
             }
         }
-        vec![range.map(|j| (j + 1) as f64).sum::<f64>() * (x[0] + 1.0)]
+        out[0] = range.map(|j| (j + 1) as f64).sum::<f64>() * (x[0] + 1.0);
     }
     fn fold_identity(&self) -> Vec<f64> {
         vec![0.0]
     }
-    fn combine(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
-        a[0] += b[0];
-        a
+    fn combine_into(&self, acc: &mut [f64], b: &[f64]) {
+        acc[0] += b[0];
     }
     fn post(&self, x: &[f64], s: &[f64], iteration: usize) -> (Vec<f64>, bool) {
         self.iteration_counter.fetch_max(iteration + 1, Ordering::Relaxed);
