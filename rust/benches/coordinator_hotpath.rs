@@ -1,5 +1,5 @@
 //! Bench: the live skeleton's per-iteration overhead, plus the
-//! zero-allocation contract of the workspace-threaded problem API.
+//! zero-allocation contract of the whole live data plane.
 //!
 //! The coordinator must not be the bottleneck (DESIGN.md §9): its per-
 //! iteration cost (broadcast + gather + fold + bookkeeping) is measured
@@ -7,10 +7,20 @@
 //! skeleton overhead. Compare against the per-iteration `t_Map` of real
 //! problems (milliseconds) — overhead should be ≪ that.
 //!
-//! The second section drives `BsfProblem::map_fold_into` (native path) for
-//! all four shipped problems under a counting allocator and **asserts**
-//! zero steady-state allocations per call — the kernel-side analogue of
-//! the engine's zero-allocation replay.
+//! Three allocation audits run under a counting allocator and **assert**
+//! zero steady-state allocations per call/iteration:
+//!
+//! 1. `BsfProblem::map_fold_into` + `combine_into`, native path, all four
+//!    shipped problems;
+//! 2. the PJRT **staging layer** (workspace staging buffers, borrowed
+//!    `TensorView`s, the `Arc`-cached packed blocks) that the kernel path
+//!    threads per block;
+//! 3. the live-runner **uplink**: the worker's steady-state iteration
+//!    (downlink receive → map_fold_into → slot send) and the master's
+//!    gather + fold + buffer recycle, driven through the real transport
+//!    with the double-buffer swap protocol.
+//!
+//! Headline figures land in `BENCH_ci.json` (see `bsf::util::bench::CiReport`).
 //!
 //! ```text
 //! cargo bench --bench coordinator_hotpath
@@ -20,15 +30,17 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use bsf::coordinator::{BsfProblem, CostSpec, LiveRunner, Workspace};
 use bsf::linalg::generators;
+use bsf::net::transport::{fabric, Downlink, Uplink};
 use bsf::problems::{CimminoProblem, GravityProblem, JacobiProblem, MonteCarloPi};
-use bsf::runtime::KernelRuntime;
-use bsf::util::bench::{bench, human_time};
+use bsf::runtime::{KernelRuntime, TensorView};
+use bsf::util::bench::{bench, human_time, CiReport};
 
-/// Counts every allocation so the zero-allocation `map_fold_into` claim is
-/// measured, not assumed.
+/// Counts every allocation so the zero-allocation claims are measured,
+/// not assumed.
 struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
@@ -104,7 +116,7 @@ impl BsfProblem for Noop {
 /// Steady-state allocations per `map_fold_into` call over the whole list,
 /// native path. Warm call first (grows buffers), then `reps` measured
 /// calls: the count must be exactly zero.
-fn assert_zero_alloc_map_fold(name: &str, p: &dyn BsfProblem) {
+fn assert_zero_alloc_map_fold(name: &str, p: &dyn BsfProblem, ci: &mut CiReport) {
     let x = p.initial_approx();
     let l = p.list_len();
     let mut out = p.fold_identity();
@@ -118,6 +130,7 @@ fn assert_zero_alloc_map_fold(name: &str, p: &dyn BsfProblem) {
     }
     let per_call = (ALLOCS.load(Ordering::Relaxed) - before) as f64 / reps as f64;
     println!("    -> allocations per map_fold_into [{name}]: {per_call}");
+    ci.metric(format!("allocs_per_map_fold [{name}]"), per_call);
     assert_eq!(per_call, 0.0, "{name}: map_fold_into allocates in steady state");
     // combine_into is in-place by construction; pin it too.
     let b = out.clone();
@@ -144,7 +157,110 @@ fn assert_zero_alloc_map_fold(name: &str, p: &dyn BsfProblem) {
     );
 }
 
+/// The PJRT staging layer in steady state: per "block" the kernel path
+/// packs the padded x-block into the workspace's staging buffer, pulls
+/// the `Arc`-cached packed matrix block, and wraps everything in borrowed
+/// `TensorView`s. All of it must be allocation-free once warm (the actual
+/// device execution is exercised on hosts with `--features pjrt` +
+/// artifacts; the staging contract holds regardless).
+fn assert_zero_alloc_pjrt_staging(ci: &mut CiReport) {
+    let n = 512usize;
+    let b = 256usize;
+    let jacobi = JacobiProblem::new(generators::paper_system(n), 1e-12);
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.13).sin()).collect();
+    let mut ws = Workspace::new();
+    // Warm: grows the staging buffers and packs both blocks into the cache.
+    {
+        let (x_stage, out_stage) = ws.staging(b, n);
+        let blk = jacobi.packed_block(0, b, b);
+        x_stage[..b].copy_from_slice(&x[..b]);
+        std::hint::black_box((TensorView::mat_cached(&blk, n, b), &out_stage));
+        let blk2 = jacobi.packed_block(b, n, b);
+        std::hint::black_box(TensorView::mat_cached(&blk2, n, b));
+    }
+    let reps = 64u64;
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..reps {
+        // One map_fold_into's worth of staging: workspace buffers + both
+        // cached blocks + borrowed views over x-block and output.
+        let (x_stage, out_stage) = ws.staging(b, n);
+        let mut j0 = 0usize;
+        while j0 < n {
+            let j1 = (j0 + b).min(n);
+            let c_blk = jacobi.packed_block(j0, j1, b);
+            x_stage[..j1 - j0].copy_from_slice(&x[j0..j1]);
+            x_stage[j1 - j0..].fill(0.0);
+            let views =
+                [TensorView::mat_cached(&c_blk, n, b), TensorView::vec_view(x_stage)];
+            std::hint::black_box(&views);
+            std::hint::black_box(&out_stage);
+            j0 = j1;
+        }
+    }
+    let per_call = (ALLOCS.load(Ordering::Relaxed) - before) as f64 / reps as f64;
+    println!("    -> allocations per kernel-path staging pass (n=512, B=256): {per_call}");
+    ci.metric("allocs_per_pjrt_staging_pass", per_call);
+    assert_eq!(per_call, 0.0, "PJRT staging layer allocates in steady state");
+}
+
+/// The live uplink in steady state, through the real transport: the
+/// worker side (downlink receive → map_fold_into → slot send) and the
+/// master side (gather into the reused inbox → in-place fold → buffer
+/// recycle) must allocate nothing once the double-buffer rotation is
+/// primed. Driven single-threaded so master-side setup (Arc wrap + mpsc
+/// downlink node) stays outside the measured region deterministically.
+fn assert_zero_alloc_live_uplink(ci: &mut CiReport) {
+    let problem = Noop { l: 64, payload: 256 };
+    let (master, mut workers) = fabric(1);
+    let w = workers.pop().expect("one worker");
+    let mut ws = Workspace::new();
+    let mut spare = Some(problem.fold_identity());
+    let mut recycle: Option<Vec<f64>> = None;
+    let identity = problem.fold_identity();
+    let mut acc = problem.fold_identity();
+    let mut got: Vec<Option<Uplink>> = Vec::new();
+    let x = Arc::new(problem.initial_approx());
+    let warm = 2u64;
+    let reps = 64u64;
+    let mut measured = 0u64;
+    for epoch in 0..(warm + reps) {
+        // Master downlink (allocations allowed here: the mpsc node).
+        master
+            .send_to(1, Downlink::Approximation { x: x.clone(), epoch, reuse: recycle.take() })
+            .expect("worker alive");
+        let before = ALLOCS.load(Ordering::Relaxed);
+        // Worker iteration: receive, compute into the rotated buffer, send
+        // by move through the uplink slot.
+        match w.recv().expect("master alive") {
+            Downlink::Approximation { x, epoch, reuse } => {
+                let mut partial =
+                    reuse.or_else(|| spare.take()).expect("rotation primed");
+                problem.map_fold_into(0..64, &x, &mut partial, &mut ws, None);
+                w.send(epoch, partial, 0.0).expect("master alive");
+            }
+            Downlink::Stop { .. } => unreachable!("no stop sent"),
+        }
+        // Master gather + fold + recycle.
+        let received =
+            master.gather_into(&[true], epoch, Duration::from_secs(5), &mut got);
+        assert_eq!(received, 1);
+        acc.copy_from_slice(&identity);
+        let u = got[0].take().expect("gathered");
+        problem.combine_into(&mut acc, &u.partial);
+        recycle = Some(u.partial);
+        if epoch >= warm {
+            measured += ALLOCS.load(Ordering::Relaxed) - before;
+        }
+    }
+    let per_iter = measured as f64 / reps as f64;
+    println!("    -> allocations per live-uplink iteration (worker + gather + fold): {per_iter}");
+    ci.metric("allocs_per_uplink_iteration", per_iter);
+    assert_eq!(per_iter, 0.0, "live uplink allocates in steady state");
+    master.broadcast_best_effort(&Downlink::Stop { iterations: (warm + reps) as usize });
+}
+
 fn main() {
+    let mut ci = CiReport::new("coordinator_hotpath");
     println!("== coordinator_hotpath: skeleton overhead per iteration ==");
     let iters = 400;
     for k in [1usize, 2, 4, 8] {
@@ -159,22 +275,36 @@ fn main() {
                     std::hint::black_box(report.iterations);
                 },
             );
-            println!(
-                "    -> per-iteration overhead: {}",
-                human_time(r.summary.median / iters as f64)
+            let per_iter = r.summary.median / iters as f64;
+            println!("    -> per-iteration overhead: {}", human_time(per_iter));
+            ci.metric(
+                format!("live_overhead_sec [K={k} payload={payload}]"),
+                per_iter,
             );
         }
     }
 
     println!("== coordinator_hotpath: map_fold_into allocation audit (native path) ==");
     let jacobi = JacobiProblem::new(generators::paper_system(512), 1e-12);
-    assert_zero_alloc_map_fold("bsf-jacobi n=512", &jacobi);
+    assert_zero_alloc_map_fold("bsf-jacobi n=512", &jacobi, &mut ci);
     let gravity = GravityProblem::new(generators::random_bodies(2_048, 5.0, 7), 1e-3, f64::MAX);
-    assert_zero_alloc_map_fold("bsf-gravity n=2048", &gravity);
+    assert_zero_alloc_map_fold("bsf-gravity n=2048", &gravity, &mut ci);
     let cimmino =
         CimminoProblem::new(generators::feasible_inequalities(1_024, 64, 0.1, 7), 1.5, 1e-20);
-    assert_zero_alloc_map_fold("bsf-cimmino m=1024", &cimmino);
+    assert_zero_alloc_map_fold("bsf-cimmino m=1024", &cimmino, &mut ci);
     let pi = MonteCarloPi::new(1_024, 16, 1e-6, 0xC0FFEE);
-    assert_zero_alloc_map_fold("monte-carlo-pi l=1024", &pi);
+    assert_zero_alloc_map_fold("monte-carlo-pi l=1024", &pi, &mut ci);
     println!("all four problems: 0 steady-state allocations per map_fold_into call");
+
+    println!("== coordinator_hotpath: PJRT staging-layer allocation audit ==");
+    assert_zero_alloc_pjrt_staging(&mut ci);
+
+    println!("== coordinator_hotpath: live-uplink allocation audit ==");
+    assert_zero_alloc_live_uplink(&mut ci);
+
+    if let Err(e) = ci.save("BENCH_ci.json") {
+        eprintln!("warning: could not write BENCH_ci.json: {e}");
+    } else {
+        println!("machine-readable figures merged into BENCH_ci.json");
+    }
 }

@@ -29,7 +29,7 @@ use bsf::simulator::{
     simulate_iteration, simulate_iteration_full, AnalyticCost, Engine, IterationTemplate,
     ReferenceScheduler, SimParams,
 };
-use bsf::util::bench::{bench_throughput, human_time};
+use bsf::util::bench::{bench_throughput, human_time, CiReport};
 use bsf::util::Rng;
 
 /// Counts every allocation so the zero-allocation replay claim is
@@ -56,6 +56,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn main() {
+    let mut ci = CiReport::new("simulator_hotpath");
     println!("== simulator_hotpath ==");
 
     // Raw engine: chain graphs, rebuild vs replay.
@@ -78,9 +79,16 @@ fn main() {
             prev = t;
         }
         e.run_reuse(); // warm scratch + CSR
-        bench_throughput(&format!("engine chain replay,  {tasks} tasks"), 2, 10, tasks as u64, || {
-            std::hint::black_box(Engine::makespan(e.run_reuse()));
-        });
+        let r = bench_throughput(
+            &format!("engine chain replay,  {tasks} tasks"),
+            2,
+            10,
+            tasks as u64,
+            || {
+                std::hint::black_box(Engine::makespan(e.run_reuse()));
+            },
+        );
+        ci.rate(&r);
     }
 
     // Full Algorithm-2 iterations at representative scales:
@@ -102,7 +110,7 @@ fn main() {
         );
         let mut tmpl = IterationTemplate::new(k, l, &params);
         tmpl.replay(&mut prov, &mut rng); // warm scratch + CSR
-        bench_throughput(
+        let r = bench_throughput(
             &format!("iteration replay  K={k} (l={l})"),
             5,
             30,
@@ -111,6 +119,7 @@ fn main() {
                 std::hint::black_box(tmpl.replay(&mut prov, &mut rng));
             },
         );
+        ci.rate(&r);
         // Steady-state allocation count: must be zero per replay.
         let reps = 100u64;
         let before = ALLOCS.load(Ordering::Relaxed);
@@ -119,6 +128,7 @@ fn main() {
         }
         let allocs = ALLOCS.load(Ordering::Relaxed) - before;
         println!("    -> allocations per replay at K={k}: {}", allocs as f64 / reps as f64);
+        ci.metric(format!("allocs_per_replay [K={k}]"), allocs as f64 / reps as f64);
     }
 
     // A whole deterministic Fig-6-style sweep (one size): the old
@@ -185,6 +195,8 @@ fn main() {
         "    -> full-sweep wall time (all cores): {}",
         human_time(r.summary.median)
     );
+    ci.rate(&r);
+    ci.metric("sweep_wall_sec_all_cores", r.summary.median);
 
     // Calendar queue vs the retired binary-heap event loop, same graph:
     // the Fig.-6 iteration at K=270 (the paper's largest Jacobi sweep
@@ -200,10 +212,18 @@ fn main() {
         assert_eq!(w.to_bits(), g.to_bits(), "heap vs calendar diverge at task {i}");
     }
     let tasks = eng.len() as u64;
-    bench_throughput("event loop: heap reference, K=270 graph", 3, 20, tasks, || {
+    let r = bench_throughput("event loop: heap reference, K=270 graph", 3, 20, tasks, || {
         std::hint::black_box(ReferenceScheduler::run(&mut heap_ref));
     });
-    bench_throughput("event loop: calendar queue,  K=270 graph", 3, 20, tasks, || {
+    ci.rate(&r);
+    let r = bench_throughput("event loop: calendar queue,  K=270 graph", 3, 20, tasks, || {
         std::hint::black_box(Engine::makespan(eng.run_reuse()));
     });
+    ci.rate(&r);
+
+    if let Err(e) = ci.save("BENCH_ci.json") {
+        eprintln!("warning: could not write BENCH_ci.json: {e}");
+    } else {
+        println!("machine-readable figures merged into BENCH_ci.json");
+    }
 }

@@ -69,15 +69,21 @@ impl CostSpec {
 /// [`BsfProblem::map_fold_into`]. Runners own one workspace per worker
 /// thread and hand it to every call, so a plugged-in problem that needs
 /// per-call temporary storage can borrow capacity instead of allocating
-/// per iteration. The four shipped problems' native paths fold straight
-/// into `out` and leave it untouched — their zero-allocation steady state
-/// (asserted by `rust/benches/coordinator_hotpath.rs` with a counting
-/// allocator) does not depend on it; the parameter is part of the trait
-/// contract so scratch-hungry problems (and the planned borrowed-tensor
-/// PJRT staging — see ROADMAP) don't have to re-thread it later.
+/// per iteration.
+///
+/// Besides the generic [`Workspace::zeroed`] scratch, the workspace owns
+/// the **PJRT staging buffers** of the kernel path: one input-staging
+/// buffer (padded x-blocks, drift-shifted b-blocks) and one
+/// output-staging buffer (the block result accumulated into the caller's
+/// fold buffer). Both only grow, so in steady state the kernel path
+/// reuses caller capacity exactly like the native path — zero heap
+/// allocations per call, asserted (staging layer included) by
+/// `rust/benches/coordinator_hotpath.rs`'s counting allocator.
 #[derive(Debug, Default)]
 pub struct Workspace {
     buf: Vec<f64>,
+    stage_in: Vec<f64>,
+    stage_out: Vec<f64>,
 }
 
 impl Workspace {
@@ -92,6 +98,24 @@ impl Workspace {
         self.buf.clear();
         self.buf.resize(len, 0.0);
         &mut self.buf
+    }
+
+    /// The kernel staging pair: an input-staging slice of `in_len`
+    /// elements and an output-staging slice of `out_len` elements,
+    /// borrowed simultaneously. Grow-only (allocation-free once warm) and
+    /// **not** cleared between calls — contents are whatever the previous
+    /// call left, so callers must fully write every element the kernel
+    /// reads (the problems pad explicitly; `execute_into` overwrites the
+    /// output stage in full). Skipping the memset matters: this sits on
+    /// the per-block kernel hot path.
+    pub fn staging(&mut self, in_len: usize, out_len: usize) -> (&mut [f64], &mut [f64]) {
+        if self.stage_in.len() < in_len {
+            self.stage_in.resize(in_len, 0.0);
+        }
+        if self.stage_out.len() < out_len {
+            self.stage_out.resize(out_len, 0.0);
+        }
+        (&mut self.stage_in[..in_len], &mut self.stage_out[..out_len])
     }
 }
 
@@ -226,6 +250,21 @@ pub(crate) mod test_problems {
                 ops_post: 3.0,
             }
         }
+    }
+
+    #[test]
+    fn workspace_staging_grow_only_and_exact_len() {
+        let mut ws = Workspace::new();
+        {
+            let (i1, o1) = ws.staging(8, 4);
+            assert_eq!((i1.len(), o1.len()), (8, 4));
+            i1[7] = 9.0;
+        }
+        let (i2, o2) = ws.staging(4, 2);
+        assert_eq!((i2.len(), o2.len()), (4, 2));
+        let _ = o2;
+        let (i3, _) = ws.staging(8, 4);
+        assert_eq!(i3[7], 9.0, "staging must not clear between calls (hot path)");
     }
 
     #[test]

@@ -9,7 +9,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::{BsfProblem, IterationMetrics, Metrics, Workspace};
 use crate::lists::partition_even;
 use crate::model::Calibration;
-use crate::net::transport::{fabric, Downlink};
+use crate::net::transport::{fabric, Downlink, TransportError, Uplink};
 use crate::runtime::KernelRuntime;
 use crate::util::Timer;
 
@@ -111,6 +111,12 @@ impl LiveRunner {
 
     /// Execute Algorithm 2. Spawns K worker threads, runs the master loop
     /// on the calling thread, joins everything before returning.
+    ///
+    /// Worker steady state is **allocation-free**: the fold buffer
+    /// double-buffers through the uplink (sent by move, returned via the
+    /// next downlink's `reuse`), the map+fold writes into it in place, and
+    /// the uplink slot send performs no allocation (see
+    /// [`crate::net::transport`]).
     pub fn run(&self, problem: Arc<dyn BsfProblem>) -> Result<RunReport> {
         if self.k == 0 {
             bail!("LiveRunner needs at least one worker");
@@ -129,14 +135,18 @@ impl LiveRunner {
                 // Each worker owns its PJRT runtime (the client is not
                 // Send); a failed open degrades to native compute.
                 let kernels = artifact_dir.and_then(|d| KernelRuntime::open(d).ok());
-                // Per-worker fold buffer + workspace, reused every
-                // iteration: the map+fold step itself allocates nothing —
-                // the only per-iteration allocation is the uplink clone.
-                let mut partial = problem.fold_identity();
+                // Double-buffer swap: `spare` seeds the first iteration;
+                // afterwards each downlink returns the previously sent
+                // buffer in `reuse`, so two owned buffers rotate and the
+                // loop allocates nothing in steady state.
+                let mut spare = Some(problem.fold_identity());
                 let mut ws = Workspace::new();
                 loop {
                     match w.recv() {
-                        Ok(Downlink::Approximation { x, epoch }) => {
+                        Ok(Downlink::Approximation { x, epoch, reuse }) => {
+                            let mut partial = reuse
+                                .or_else(|| spare.take())
+                                .unwrap_or_else(|| problem.fold_identity());
                             let t = Timer::start();
                             problem.map_fold_into(
                                 range.clone(),
@@ -146,7 +156,7 @@ impl LiveRunner {
                                 kernels.as_ref(),
                             );
                             let dt = t.elapsed();
-                            if w.send(epoch, partial.clone(), dt).is_err() {
+                            if w.send(epoch, partial, dt).is_err() {
                                 break; // master gone; nothing to report to
                             }
                         }
@@ -183,55 +193,88 @@ impl LiveRunner {
         let mut alive = vec![true; self.k];
         // Lazily-opened master-side runtime for recovered sublists.
         let mut master_kernels: Option<Option<KernelRuntime>> = None;
-        let mut x = problem.initial_approx();
+        let mut x = Arc::new(problem.initial_approx());
         // Master-side fold state, reused across iterations: the identity
-        // payload, the running accumulator, and (fault-tolerant mode) a
-        // buffer + workspace for recomputed dead-worker sublists.
+        // payload, the running accumulator, per-worker recycled uplink
+        // buffers, the gather inbox, and (fault-tolerant mode) a buffer +
+        // workspace for recomputed dead-worker sublists.
         let identity = problem.fold_identity();
         let mut acc = identity.clone();
         let mut dead_partial = identity.clone();
         let mut ws = Workspace::new();
+        let mut recycle: Vec<Option<Vec<f64>>> = (0..self.k).map(|_| None).collect();
+        let mut got: Vec<Option<Uplink>> = Vec::with_capacity(self.k);
         let mut iterations = 0;
         let mut converged = false;
         let mut metrics = Metrics::default();
         while iterations < self.max_iters {
             let mut it_timer = Timer::start();
             let epoch = iterations as u64;
-            let (ups, dead) = if self.fault_tolerant {
-                let newly_dead = master.broadcast_alive(
-                    &Downlink::Approximation { x: x.clone(), epoch },
-                    &mut alive,
-                );
-                for w in newly_dead {
-                    log::warn!("worker {w} died before broadcast; master takes over its sublist");
+            // Downlink: per-worker sends so each worker gets its own
+            // recycled buffer back alongside the shared approximation.
+            for wid in 1..=self.k {
+                if !alive[wid - 1] {
+                    continue;
                 }
-                let (got, missing) = master.gather_partial(&alive, epoch, self.gather_timeout);
-                for &w in &missing {
-                    log::warn!("worker {w} missed the gather deadline; marked dead");
-                    alive[w - 1] = false;
+                let msg = Downlink::Approximation {
+                    x: x.clone(),
+                    epoch,
+                    reuse: recycle[wid - 1].take(),
+                };
+                if let Err(e) = master.send_to(wid, msg) {
+                    if self.fault_tolerant {
+                        alive[wid - 1] = false;
+                        eprintln!(
+                            "bsf: worker {wid} died before downlink; master takes over its sublist"
+                        );
+                    } else {
+                        return Err(e.into());
+                    }
                 }
-                let ups: Vec<crate::net::transport::Uplink> = got.into_iter().flatten().collect();
-                let dead: Vec<usize> =
-                    (1..=self.k).filter(|w| !alive[w - 1]).collect();
-                (ups, dead)
-            } else {
-                master.broadcast(&Downlink::Approximation { x: x.clone(), epoch })?;
-                (master.gather(epoch, self.gather_timeout)?, Vec::new())
-            };
+            }
+            let received = master.gather_into(&alive, epoch, self.gather_timeout, &mut got);
+            let expected = alive.iter().filter(|&&a| a).count();
+            if received < expected {
+                if self.fault_tolerant {
+                    for wid in 1..=self.k {
+                        if alive[wid - 1] && got[wid - 1].is_none() {
+                            alive[wid - 1] = false;
+                            eprintln!(
+                                "bsf: worker {wid} missed the gather deadline; marked dead"
+                            );
+                        }
+                    }
+                } else {
+                    return Err(TransportError::Timeout {
+                        missing: expected - received,
+                        expected: self.k,
+                    }
+                    .into());
+                }
+            }
             let roundtrip = it_timer.lap();
-            let map_fold: Vec<f64> = ups.iter().map(|u| u.map_seconds).collect();
+            let map_fold: Vec<f64> =
+                got.iter().flatten().map(|u| u.map_seconds).collect();
+            // Fold in worker-id order (identical to the sequential fold
+            // order), recycling each buffer for the next downlink.
             acc.copy_from_slice(&identity);
-            for u in &ups {
-                problem.combine_into(&mut acc, &u.partial);
+            for slot in got.iter_mut() {
+                if let Some(u) = slot.take() {
+                    problem.combine_into(&mut acc, &u.partial);
+                    recycle[u.worker - 1] = Some(u.partial);
+                }
             }
             // Degraded mode: the master computes dead workers' sublists.
-            for w in dead {
+            for wid in 1..=self.k {
+                if alive[wid - 1] {
+                    continue;
+                }
                 let kern = master_kernels
                     .get_or_insert_with(|| {
                         self.artifact_dir.clone().and_then(|d| KernelRuntime::open(d).ok())
                     })
                     .as_ref();
-                problem.map_fold_into(parts.range(w - 1), &x, &mut dead_partial, &mut ws, kern);
+                problem.map_fold_into(parts.range(wid - 1), &x, &mut dead_partial, &mut ws, kern);
                 problem.combine_into(&mut acc, &dead_partial);
             }
             let master_fold = it_timer.lap();
@@ -245,14 +288,15 @@ impl LiveRunner {
                 post,
                 total: roundtrip + master_fold + post,
             });
-            x = next;
+            x = Arc::new(next);
             iterations += 1;
             if stop {
                 converged = true;
                 break;
             }
         }
-        Ok((iterations, x, converged, metrics))
+        let final_approx = Arc::try_unwrap(x).unwrap_or_else(|a| (*a).clone());
+        Ok((iterations, final_approx, converged, metrics))
     }
 }
 
@@ -261,7 +305,9 @@ impl LiveRunner {
 /// `t_a`, `t_p` on real payloads, and return the samples.
 ///
 /// `t_a` is measured directly by timing `⊕` over representative partials
-/// (`combine_reps` applications); the whole-list Reduce sample is then
+/// (`combine_reps` in-place `combine_into` applications over two
+/// preallocated partials — the exact operation the hot path performs, with
+/// no per-sample clones); the whole-list Reduce sample is then
 /// `(l − 1) · t_a` per eq. (6), and the Map sample is the measured
 /// map+fold time minus the fold share.
 pub fn calibrate_problem(
@@ -284,19 +330,22 @@ pub fn calibrate_problem(
         bail!("calibration run produced no measurable iterations");
     }
 
-    // Direct t_a measurement on real partials.
+    // Direct t_a measurement on real partials: `acc` is reset from the
+    // representative partial before every timed `combine_into`, so the
+    // timed section is purely the in-place `⊕` — no allocator traffic in
+    // or around it.
     let l = problem.list_len();
     let kernels = artifact_dir.and_then(|d| KernelRuntime::open(d).ok());
     let x = problem.initial_approx();
     let sample_partial = problem.map_fold(0..l, &x, kernels.as_ref());
+    let mut acc = sample_partial.clone();
     let mut t_a_samples = Vec::with_capacity(combine_reps);
     for _ in 0..combine_reps {
-        let a = sample_partial.clone();
-        let b = sample_partial.clone();
+        acc.copy_from_slice(&sample_partial);
         let t = Timer::start();
-        let c = problem.combine(a, b);
+        problem.combine_into(&mut acc, &sample_partial);
         t_a_samples.push(t.elapsed());
-        std::hint::black_box(&c);
+        std::hint::black_box(&acc);
     }
     t_a_samples.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
     let t_a = t_a_samples[t_a_samples.len() / 2];

@@ -442,6 +442,57 @@ pub fn boundary_rows(
         .collect()
 }
 
+/// One cell/size of a planning harness's pooled DES validation: the
+/// closed-form parameters plus the payload words the simulator charges.
+pub(crate) struct ValidationItem {
+    /// Display size.
+    pub n: usize,
+    /// Closed-form cost parameters of this cell.
+    pub params: CostParams,
+    /// Downlink payload (f64 words).
+    pub words_down: usize,
+    /// Uplink payload (f64 words).
+    pub words_up: usize,
+}
+
+/// Largest closed-form boundary a planning cell may have and still be
+/// DES-validated (the K sweep reaches ~2.4×K_BSF; past this the
+/// validation costs minutes for cells the analytic table already answers).
+pub(crate) const SIM_K_MAX: f64 = 512.0;
+
+/// True when a boundary is worth simulating: at least the model's useful
+/// floor, at most [`SIM_K_MAX`].
+pub(crate) fn des_tractable(k_bsf: f64) -> bool {
+    (1.5..=SIM_K_MAX).contains(&k_bsf)
+}
+
+/// Pooled DES validation for the planning harnesses (`explorer`,
+/// `sqrt_law`): every item's K-sweep feeds the single
+/// `simulated_curves`/[`boundary_rows`] work queue. Policy lives here,
+/// once: sweeps always run at **quick** resolution (the validation is a
+/// sanity column, not a headline figure — the harnesses must stay
+/// interactive at full experiment settings), seeded from `ctx.seed`.
+pub(crate) fn validate_boundaries(
+    ctx: &ExperimentCtx,
+    items: &[ValidationItem],
+) -> Vec<BoundaryRow> {
+    let provs: Vec<AnalyticCost> =
+        items.iter().map(|it| analytic_provider(&it.params)).collect();
+    let specs: Vec<BoundarySpec> = items
+        .iter()
+        .zip(&provs)
+        .map(|(it, p)| BoundarySpec {
+            n: it.n,
+            params: it.params,
+            words_down: it.words_down,
+            words_up: it.words_up,
+            factory: p,
+        })
+        .collect();
+    let sim_ctx = ExperimentCtx { quick: true, ..ctx.clone() };
+    boundary_rows(&sim_ctx, &specs, &mut Rng::new(ctx.seed))
+}
+
 /// Compute a boundary comparison for one parameter set. The simulator is
 /// always charged a network consistent with `params.t_c` (see
 /// [`effective_net`]).

@@ -4,10 +4,21 @@
 //! Sweeps n over a wide range, computes the closed-form boundary from the
 //! analytic cost specs (eqs. 20–23 for Jacobi, §6's counts for Gravity),
 //! and fits the growth exponent in log-log space — the paper predicts 0.5.
+//!
+//! Sizes whose boundary is small enough to simulate (within
+//! `common::SIM_K_MAX` — gravity's pre-asymptotic sizes past ~1200 run
+//! into the hundreds of thousands of workers) are additionally validated
+//! against the discrete-event simulator: **both** applications' tractable
+//! sizes feed one pooled `simulated_curves`/`boundary_rows` work queue
+//! (no serial sweeps remain in the harness; pooled-vs-serial bitwise
+//! equality is pinned in `rust/tests/determinism.rs`), and each table
+//! gains a "K_test (sim)" column.
 
 use anyhow::Result;
 
-use crate::experiments::common::ExperimentCtx;
+use crate::experiments::common::{
+    des_tractable, validate_boundaries, ExperimentCtx, ValidationItem,
+};
 use crate::model::scalability::growth_exponent;
 use crate::model::BsfModel;
 use crate::net::NetworkParams;
@@ -52,27 +63,79 @@ pub fn sqrt_law(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
         [300usize, 1_200, 10_000, 100_000, 1_000_000, 10_000_000, 100_000_000, 1_000_000_000]
             .to_vec();
 
+    // Closed-form pass for every size of both apps; (app, words) metadata
+    // rides along so the tractable subset can be simulated in one pool.
+    struct Entry {
+        app: usize,
+        n: usize,
+        k_bsf: f64,
+        params: crate::model::CostParams,
+        words: (usize, usize),
+        k_test: Option<f64>,
+    }
+    let apps: [(&str, &[usize], fn(usize, &NetworkParams) -> crate::model::CostParams); 2] = [
+        ("jacobi", &jacobi_ns, jacobi_params),
+        ("gravity", &gravity_ns, gravity_params),
+    ];
+    let mut entries: Vec<Entry> = Vec::new();
+    for (app, (_, ns, f)) in apps.iter().enumerate() {
+        for &n in ns.iter() {
+            let params = f(n, &net);
+            let k = BsfModel::new(params).k_bsf();
+            // Jacobi's payload is the n-vector both ways; gravity's is the
+            // paper's 3/3 charge (consistent with its t_c formula above).
+            let words = if app == 0 { (n, n) } else { (3, 3) };
+            entries.push(Entry { app, n, k_bsf: k, params, words, k_test: None });
+        }
+    }
+
+    // Pooled DES validation of the tractable sizes — both applications'
+    // (size × K) points interleave through the one sweep work queue
+    // (policy — quick resolution, seeding — lives in
+    // common::validate_boundaries).
+    let sim_idx: Vec<usize> =
+        (0..entries.len()).filter(|&i| des_tractable(entries[i].k_bsf)).collect();
+    let items: Vec<ValidationItem> = sim_idx
+        .iter()
+        .map(|&i| ValidationItem {
+            n: entries[i].n,
+            params: entries[i].params,
+            words_down: entries[i].words.0,
+            words_up: entries[i].words.1,
+        })
+        .collect();
+    let rows = validate_boundaries(ctx, &items);
+    for (&i, row) in sim_idx.iter().zip(&rows) {
+        entries[i].k_test = Some(row.k_test);
+    }
+
     let mut out = Vec::new();
-    for (name, ns, f) in [
-        ("jacobi", jacobi_ns, jacobi_params as fn(usize, &NetworkParams) -> _),
-        ("gravity", gravity_ns, gravity_params as fn(usize, &NetworkParams) -> _),
-    ] {
+    for (app, (name, _, _)) in apps.iter().enumerate() {
         let mut t = Table::new(
-            format!("√n law ({name}): K_BSF vs n (eqs. 24–25 / 36–37)"),
-            &["n", "K_BSF", "K_BSF/√n"],
+            format!("√n law ({name}): K_BSF vs n (eqs. 24–25 / 36–37), DES-validated"),
+            &["n", "K_BSF", "K_BSF/√n", "K_test (sim)"],
         );
         let mut points = Vec::new();
-        for &n in &ns {
-            let k = BsfModel::new(f(n, &net)).k_bsf();
-            points.push((n as f64, k));
-            t.row(&[n.to_string(), format!("{k:.1}"), format!("{:.3}", k / (n as f64).sqrt())]);
+        for e in entries.iter().filter(|e| e.app == app) {
+            points.push((e.n as f64, e.k_bsf));
+            t.row(&[
+                e.n.to_string(),
+                format!("{:.1}", e.k_bsf),
+                format!("{:.3}", e.k_bsf / (e.n as f64).sqrt()),
+                e.k_test.map_or("—".into(), |k| format!("{k:.0}")),
+            ]);
         }
         // Fit the asymptotic tail (largest half of the sweep): the paper's
         // O(√n) claim is asymptotic; gravity is still pre-asymptotic at its
         // published sizes.
         let tail = &points[points.len() / 2..];
         let p = growth_exponent(tail);
-        t.row(&["fit exponent (tail)".into(), format!("{p:.3}"), "(paper: 0.5)".into()]);
+        t.row(&[
+            "fit exponent (tail)".into(),
+            format!("{p:.3}"),
+            "(paper: 0.5)".into(),
+            "".into(),
+        ]);
         ctx.save(&format!("sqrt_law_{name}"), &t);
         out.push(t);
     }
@@ -116,10 +179,16 @@ mod tests {
     }
 
     #[test]
-    fn tables_render() {
+    fn tables_render_with_simulated_column() {
         let ctx = ExperimentCtx { quick: true, ..Default::default() };
         let ts = sqrt_law(&ctx).unwrap();
         assert_eq!(ts.len(), 2);
         assert!(ts[0].to_csv().contains("fit exponent"));
+        // Tractable sizes carry a simulated boundary, intractable ones a
+        // dash (gravity's giant pre-asymptotic boundaries).
+        let jacobi_csv = ts[0].to_csv();
+        assert!(jacobi_csv.lines().skip(1).any(|l| !l.contains('—')), "{jacobi_csv}");
+        let gravity_csv = ts[1].to_csv();
+        assert!(gravity_csv.contains('—'), "{gravity_csv}");
     }
 }

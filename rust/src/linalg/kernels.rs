@@ -1,0 +1,393 @@
+//! Runtime-dispatched inner-loop kernels for the dense hot path.
+//!
+//! The `dot`/`dot4` inner loops dominate live-calibration runs (they are
+//! the whole of `Matrix::col_block_matvec_acc`, which is BSF-Jacobi's
+//! worker folding). This module selects, **once per process**, between:
+//!
+//! * `scalar` — portable Rust, written with four independent per-lane
+//!   accumulator chains per row (the exact association AVX2 uses), and
+//! * `avx2` — `std::arch` intrinsics on x86_64 when the CPU supports
+//!   AVX2 (`_mm256_mul_pd`/`_mm256_add_pd`; deliberately **no FMA**, which
+//!   would contract the multiply-add and change rounding).
+//!
+//! **Bitwise-equality contract.** Both implementations perform the *same*
+//! sequence of IEEE-754 operations: per row, lane `m ∈ {0,1,2,3}`
+//! accumulates `Σ_chunks r[4c+m]·x[4c+m]` in chunk order, the four lanes
+//! reduce as `((s0 + s1) + s2) + s3`, and the `len % 4` tail is folded in
+//! scalarly. Every operation is exactly rounded and order-identical, so
+//! the two kernels agree bit for bit on every input — pinned by
+//! `rust/tests/properties.rs::prop_kernel_dispatch_bitwise_identical`
+//! over random shapes (remainder rows and columns included) and exercised
+//! end to end by CI running the whole test suite under both
+//! `BSF_KERNEL=scalar` and `BSF_KERNEL=avx2`.
+//!
+//! Dispatch: `BSF_KERNEL=scalar|avx2` overrides; unset auto-detects via
+//! `is_x86_feature_detected!("avx2")` (scalar elsewhere). Requesting
+//! `avx2` on hardware without it panics loudly rather than silently
+//! falling back — an override that does nothing would invalidate any
+//! benchmark run on top of it.
+
+use std::sync::OnceLock;
+
+/// Which inner-loop implementation is active.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable Rust (4-lane accumulator chains, autovectorizable).
+    Scalar,
+    /// x86_64 AVX2 intrinsics (no FMA contraction).
+    Avx2,
+}
+
+impl KernelKind {
+    /// Human-readable name (reports, BENCH_ci.json).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+        }
+    }
+}
+
+/// True when `kind` can execute on this CPU.
+pub fn available(kind: KernelKind) -> bool {
+    match kind {
+        KernelKind::Scalar => true,
+        KernelKind::Avx2 => avx2_supported(),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_supported() -> bool {
+    false
+}
+
+static ACTIVE: OnceLock<KernelKind> = OnceLock::new();
+
+/// The kernel selected for this process (reads `BSF_KERNEL` once).
+pub fn active() -> KernelKind {
+    *ACTIVE.get_or_init(|| select(std::env::var("BSF_KERNEL").ok().as_deref()))
+}
+
+/// Pure selection logic (unit-tested separately from process env state).
+fn select(request: Option<&str>) -> KernelKind {
+    match request {
+        Some("scalar") => KernelKind::Scalar,
+        Some("avx2") => {
+            assert!(
+                avx2_supported(),
+                "BSF_KERNEL=avx2 requested but this CPU/arch has no AVX2"
+            );
+            KernelKind::Avx2
+        }
+        Some(other) => panic!("BSF_KERNEL must be 'scalar' or 'avx2', got '{other}'"),
+        None => {
+            if avx2_supported() {
+                KernelKind::Avx2
+            } else {
+                KernelKind::Scalar
+            }
+        }
+    }
+}
+
+/// Dot product `x · y` through the active kernel.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    dot_with(active(), x, y)
+}
+
+/// Four simultaneous dot products against one shared `x` through the
+/// active kernel (`r0..r3` must all have `x.len()` elements).
+#[inline]
+pub fn dot4(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], x: &[f64]) -> (f64, f64, f64, f64) {
+    dot4_with(active(), r0, r1, r2, r3, x)
+}
+
+/// [`dot`] with an explicit kernel (the property suite compares
+/// implementations directly). Panics if `kind` is unavailable here or the
+/// slices differ in length (a hard assert — the AVX2 path reads `y` with
+/// raw loads and must never see a short slice).
+#[inline]
+pub fn dot_with(kind: KernelKind, x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dot operand length mismatch");
+    match kind {
+        KernelKind::Scalar => dot_scalar(x, y),
+        KernelKind::Avx2 => dot_avx2_checked(x, y),
+    }
+}
+
+/// [`dot4`] with an explicit kernel. Panics if `kind` is unavailable here
+/// or any row is shorter than `x` (hard assert — the AVX2 path reads the
+/// rows with raw loads).
+#[inline]
+pub fn dot4_with(
+    kind: KernelKind,
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+    x: &[f64],
+) -> (f64, f64, f64, f64) {
+    let n = x.len();
+    assert!(
+        r0.len() >= n && r1.len() >= n && r2.len() >= n && r3.len() >= n,
+        "dot4 row shorter than x"
+    );
+    match kind {
+        KernelKind::Scalar => dot4_scalar(r0, r1, r2, r3, x),
+        KernelKind::Avx2 => dot4_avx2_checked(r0, r1, r2, r3, x),
+    }
+}
+
+// ---------------------------------------------------------------- scalar
+
+/// Portable dot: four independent lane accumulators over 4-column chunks,
+/// ordered lane reduce, scalar tail — the association the AVX2 kernel
+/// reproduces exactly.
+fn dot_scalar(x: &[f64], y: &[f64]) -> f64 {
+    let n = x.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut j = 0;
+    while j + 4 <= n {
+        s0 += x[j] * y[j];
+        s1 += x[j + 1] * y[j + 1];
+        s2 += x[j + 2] * y[j + 2];
+        s3 += x[j + 3] * y[j + 3];
+        j += 4;
+    }
+    let mut s = ((s0 + s1) + s2) + s3;
+    while j < n {
+        s += x[j] * y[j];
+        j += 1;
+    }
+    s
+}
+
+/// Portable dot4: 16 accumulators (4 rows × 4 lanes) in one shared pass
+/// over `x` — per row the operation sequence is identical to
+/// [`dot_scalar`], so `dot4(..)[i] == dot(r_i, x)` bitwise.
+fn dot4_scalar(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], x: &[f64]) -> (f64, f64, f64, f64) {
+    let n = x.len();
+    let mut a = [0.0f64; 4];
+    let mut b = [0.0f64; 4];
+    let mut c = [0.0f64; 4];
+    let mut d = [0.0f64; 4];
+    let mut j = 0;
+    while j + 4 <= n {
+        for m in 0..4 {
+            a[m] += r0[j + m] * x[j + m];
+            b[m] += r1[j + m] * x[j + m];
+            c[m] += r2[j + m] * x[j + m];
+            d[m] += r3[j + m] * x[j + m];
+        }
+        j += 4;
+    }
+    let mut s0 = ((a[0] + a[1]) + a[2]) + a[3];
+    let mut s1 = ((b[0] + b[1]) + b[2]) + b[3];
+    let mut s2 = ((c[0] + c[1]) + c[2]) + c[3];
+    let mut s3 = ((d[0] + d[1]) + d[2]) + d[3];
+    while j < n {
+        let xj = x[j];
+        s0 += r0[j] * xj;
+        s1 += r1[j] * xj;
+        s2 += r2[j] * xj;
+        s3 += r3[j] * xj;
+        j += 1;
+    }
+    (s0, s1, s2, s3)
+}
+
+// ----------------------------------------------------------------- avx2
+
+#[cfg(target_arch = "x86_64")]
+fn dot_avx2_checked(x: &[f64], y: &[f64]) -> f64 {
+    assert!(avx2_supported(), "AVX2 kernel invoked without CPU support");
+    // SAFETY: AVX2 support verified above; slice bounds respected inside.
+    unsafe { dot_avx2(x, y) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot4_avx2_checked(
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+    x: &[f64],
+) -> (f64, f64, f64, f64) {
+    assert!(avx2_supported(), "AVX2 kernel invoked without CPU support");
+    // SAFETY: AVX2 support verified above; slice bounds respected inside.
+    unsafe { dot4_avx2(r0, r1, r2, r3, x) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn dot_avx2_checked(_x: &[f64], _y: &[f64]) -> f64 {
+    unreachable!("AVX2 kernel selected on a non-x86_64 target")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn dot4_avx2_checked(
+    _r0: &[f64],
+    _r1: &[f64],
+    _r2: &[f64],
+    _r3: &[f64],
+    _x: &[f64],
+) -> (f64, f64, f64, f64) {
+    unreachable!("AVX2 kernel selected on a non-x86_64 target")
+}
+
+/// Ordered horizontal sum `((lane0 + lane1) + lane2) + lane3` — matches
+/// the scalar kernels' lane-reduce association exactly.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_ordered(v: std::arch::x86_64::__m256d) -> f64 {
+    use std::arch::x86_64::*;
+    let lo = _mm256_castpd256_pd128(v); // lanes 0, 1
+    let hi = _mm256_extractf128_pd::<1>(v); // lanes 2, 3
+    let e0 = _mm_cvtsd_f64(lo);
+    let e1 = _mm_cvtsd_f64(_mm_unpackhi_pd(lo, lo));
+    let e2 = _mm_cvtsd_f64(hi);
+    let e3 = _mm_cvtsd_f64(_mm_unpackhi_pd(hi, hi));
+    ((e0 + e1) + e2) + e3
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(x: &[f64], y: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let mut acc = _mm256_setzero_pd();
+    let mut j = 0;
+    while j + 4 <= n {
+        let xv = _mm256_loadu_pd(x.as_ptr().add(j));
+        let yv = _mm256_loadu_pd(y.as_ptr().add(j));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(xv, yv));
+        j += 4;
+    }
+    let mut s = hsum_ordered(acc);
+    while j < n {
+        s += x[j] * y[j];
+        j += 1;
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot4_avx2(
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+    x: &[f64],
+) -> (f64, f64, f64, f64) {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let mut a0 = _mm256_setzero_pd();
+    let mut a1 = _mm256_setzero_pd();
+    let mut a2 = _mm256_setzero_pd();
+    let mut a3 = _mm256_setzero_pd();
+    let mut j = 0;
+    while j + 4 <= n {
+        let xv = _mm256_loadu_pd(x.as_ptr().add(j));
+        a0 = _mm256_add_pd(a0, _mm256_mul_pd(_mm256_loadu_pd(r0.as_ptr().add(j)), xv));
+        a1 = _mm256_add_pd(a1, _mm256_mul_pd(_mm256_loadu_pd(r1.as_ptr().add(j)), xv));
+        a2 = _mm256_add_pd(a2, _mm256_mul_pd(_mm256_loadu_pd(r2.as_ptr().add(j)), xv));
+        a3 = _mm256_add_pd(a3, _mm256_mul_pd(_mm256_loadu_pd(r3.as_ptr().add(j)), xv));
+        j += 4;
+    }
+    let mut s0 = hsum_ordered(a0);
+    let mut s1 = hsum_ordered(a1);
+    let mut s2 = hsum_ordered(a2);
+    let mut s3 = hsum_ordered(a3);
+    while j < n {
+        let xj = x[j];
+        s0 += r0[j] * xj;
+        s1 += r1[j] * xj;
+        s2 += r2[j] * xj;
+        s3 += r3[j] * xj;
+        j += 1;
+    }
+    (s0, s1, s2, s3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_parses_overrides() {
+        assert_eq!(select(Some("scalar")), KernelKind::Scalar);
+        if avx2_supported() {
+            assert_eq!(select(Some("avx2")), KernelKind::Avx2);
+            assert_eq!(select(None), KernelKind::Avx2);
+        } else {
+            assert_eq!(select(None), KernelKind::Scalar);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "BSF_KERNEL must be")]
+    fn select_rejects_unknown_kernel() {
+        select(Some("sse9"));
+    }
+
+    #[test]
+    fn scalar_dot_matches_naive_within_roundoff() {
+        let x: Vec<f64> = (0..19).map(|i| (i as f64 * 0.7).sin()).collect();
+        let y: Vec<f64> = (0..19).map(|i| (i as f64 * 0.3).cos()).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot_scalar(&x, &y) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot4_rows_equal_single_dots_bitwise() {
+        // The per-row association of dot4 is identical to dot, tails
+        // included — for every length class mod 4.
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 16, 31] {
+            let mk = |s: usize| -> Vec<f64> {
+                (0..n).map(|j| ((s * 31 + j * 7) % 13) as f64 * 0.37 - 1.9).collect()
+            };
+            let (r0, r1, r2, r3, x) = (mk(1), mk(2), mk(3), mk(4), mk(5));
+            let (s0, s1, s2, s3) = dot4_scalar(&r0, &r1, &r2, &r3, &x);
+            assert_eq!(s0.to_bits(), dot_scalar(&r0, &x).to_bits(), "n={n}");
+            assert_eq!(s1.to_bits(), dot_scalar(&r1, &x).to_bits(), "n={n}");
+            assert_eq!(s2.to_bits(), dot_scalar(&r2, &x).to_bits(), "n={n}");
+            assert_eq!(s3.to_bits(), dot_scalar(&r3, &x).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn avx2_matches_scalar_bitwise_when_supported() {
+        if !available(KernelKind::Avx2) {
+            eprintln!("skipping: no AVX2 on this host");
+            return;
+        }
+        for n in [0usize, 1, 3, 4, 5, 8, 11, 16, 29, 64, 127] {
+            let mk = |s: usize| -> Vec<f64> {
+                (0..n).map(|j| ((s * 17 + j * 29) % 101) as f64 * 1e-2 - 0.5).collect()
+            };
+            let (r0, r1, r2, r3, x) = (mk(1), mk(2), mk(3), mk(4), mk(9));
+            assert_eq!(
+                dot_with(KernelKind::Scalar, &r0, &x).to_bits(),
+                dot_with(KernelKind::Avx2, &r0, &x).to_bits(),
+                "dot n={n}"
+            );
+            let a = dot4_with(KernelKind::Scalar, &r0, &r1, &r2, &r3, &x);
+            let b = dot4_with(KernelKind::Avx2, &r0, &r1, &r2, &r3, &x);
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "dot4 n={n}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "dot4 n={n}");
+            assert_eq!(a.2.to_bits(), b.2.to_bits(), "dot4 n={n}");
+            assert_eq!(a.3.to_bits(), b.3.to_bits(), "dot4 n={n}");
+        }
+    }
+
+    #[test]
+    fn active_kernel_is_available() {
+        assert!(available(active()));
+    }
+}

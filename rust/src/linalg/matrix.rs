@@ -3,7 +3,7 @@
 //! `F_x(j) = x_j c_j`), matvec, and a column-block extractor matching the
 //! AOT kernel layout `(n, B)`.
 
-use crate::linalg::vector::dot;
+use crate::linalg::kernels;
 
 /// Dense row-major `rows × cols` matrix of f64.
 #[derive(Debug, Clone, PartialEq)]
@@ -92,7 +92,11 @@ impl Matrix {
     /// This dominates live-calibration runs, so it is register-blocked:
     /// rows are processed four at a time against one shared pass over
     /// `x_blk` (each load of `x` feeds four independent accumulator
-    /// chains), with the column loop unrolled 4-wide inside [`dot4`].
+    /// chains), with the inner loops dispatched once per call to the
+    /// process-selected [`kernels`] implementation (AVX2 on capable
+    /// x86_64, scalar elsewhere; `BSF_KERNEL` overrides). Both kernels
+    /// are bitwise identical by construction, so the choice never changes
+    /// results.
     pub fn col_block_matvec_acc(&self, j0: usize, j1: usize, x_blk: &[f64], y: &mut [f64]) {
         assert!(j1 <= self.cols && j0 <= j1, "column range out of bounds");
         assert_eq!(x_blk.len(), j1 - j0, "x block length mismatch");
@@ -101,11 +105,13 @@ impl Matrix {
         if w == 0 {
             return;
         }
+        let kind = kernels::active();
         let cols = self.cols;
         let mut i = 0;
         while i + 4 <= self.rows {
             let b0 = i * cols + j0;
-            let (s0, s1, s2, s3) = dot4(
+            let (s0, s1, s2, s3) = kernels::dot4_with(
+                kind,
                 &self.data[b0..b0 + w],
                 &self.data[b0 + cols..b0 + cols + w],
                 &self.data[b0 + 2 * cols..b0 + 2 * cols + w],
@@ -120,7 +126,7 @@ impl Matrix {
         }
         while i < self.rows {
             let b = i * cols + j0;
-            y[i] += dot(&self.data[b..b + w], x_blk);
+            y[i] += kernels::dot_with(kind, &self.data[b..b + w], x_blk);
             i += 1;
         }
     }
@@ -142,33 +148,6 @@ impl Matrix {
     pub fn transpose(&self) -> Matrix {
         Matrix::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
     }
-}
-
-/// Four simultaneous dot products against one shared `x`: four independent
-/// accumulator chains hide FP-add latency, and the 4-wide column unroll
-/// amortises loop overhead. `r0..r3` must all have `x.len()` elements.
-#[inline(always)]
-fn dot4(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], x: &[f64]) -> (f64, f64, f64, f64) {
-    let n = x.len();
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    let mut j = 0;
-    while j + 4 <= n {
-        let (x0, x1, x2, x3) = (x[j], x[j + 1], x[j + 2], x[j + 3]);
-        s0 += r0[j] * x0 + r0[j + 1] * x1 + r0[j + 2] * x2 + r0[j + 3] * x3;
-        s1 += r1[j] * x0 + r1[j + 1] * x1 + r1[j + 2] * x2 + r1[j + 3] * x3;
-        s2 += r2[j] * x0 + r2[j + 1] * x1 + r2[j + 2] * x2 + r2[j + 3] * x3;
-        s3 += r3[j] * x0 + r3[j + 1] * x1 + r3[j + 2] * x2 + r3[j + 3] * x3;
-        j += 4;
-    }
-    while j < n {
-        let xj = x[j];
-        s0 += r0[j] * xj;
-        s1 += r1[j] * xj;
-        s2 += r2[j] * xj;
-        s3 += r3[j] * xj;
-        j += 1;
-    }
-    (s0, s1, s2, s3)
 }
 
 #[cfg(test)]

@@ -10,6 +10,7 @@ mod matrix;
 mod vector;
 
 pub mod generators;
+pub mod kernels;
 
 pub use matrix::Matrix;
 pub use vector::{axpy, dot, norm2, scale, sq_norm2, sub};

@@ -4,10 +4,12 @@
 //! can pass slices around without conversions; the hot paths (`dot`,
 //! `axpy`) are written to autovectorize.
 
-/// Dot product `x · y`.
+/// Dot product `x · y`, dispatched through the process-selected
+/// [`crate::linalg::kernels`] implementation (AVX2 / scalar — bitwise
+/// identical by construction).
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
-    x.iter().zip(y).map(|(a, b)| a * b).sum()
+    crate::linalg::kernels::dot(x, y)
 }
 
 /// Squared Euclidean norm `‖x‖²` (the paper's termination quantity).

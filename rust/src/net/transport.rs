@@ -1,17 +1,34 @@
-//! Live in-process transport: master ↔ K worker threads over std channels.
+//! Live in-process transport: master ↔ K worker threads.
 //!
 //! This is the fabric of the **live runner** — real parallel execution on
 //! this machine, used for correctness checks and for calibrating the BSF
 //! cost parameters exactly the way the paper prescribes (§7, Q6: run on one
 //! node, measure, divide).
 //!
-//! The message vocabulary mirrors Algorithm 2: the master broadcasts the
-//! current approximation (Step 2/3), each worker returns its partial folding
-//! (Step 5/6), and the master broadcasts the exit flag (Step 10/13). Both
-//! broadcast phases are *implicit global synchronisations*, exactly as the
-//! paper notes.
+//! The message vocabulary mirrors Algorithm 2: the master sends each worker
+//! the current approximation (Step 2/3), each worker returns its partial
+//! folding (Step 5/6), and the master broadcasts the exit flag (Step
+//! 10/13). Both phases are *implicit global synchronisations*, exactly as
+//! the paper notes.
+//!
+//! ## Zero-allocation uplink
+//!
+//! The uplink is an **inbox bus**: one pre-sized slot per worker under a
+//! shared mutex + condvar, instead of an `mpsc` channel (whose every send
+//! heap-allocates a queue node on the *worker* thread). A worker's send is
+//! lock → move the [`Uplink`] into its slot → notify: zero heap
+//! allocations. Combined with the downlink's buffer recycling
+//! ([`Downlink::Approximation::reuse`] returns each worker's partial
+//! buffer on the next iteration — the double-buffer swap protocol), the
+//! worker steady state allocates nothing per iteration (asserted by
+//! `rust/benches/coordinator_hotpath.rs`).
+//!
+//! The approximation payload is `Arc`-shared: one allocation per
+//! iteration on the master (wrapping `post()`'s output), K pointer clones
+//! instead of K payload clones on the downlink.
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 /// One iteration's downlink payload: the current approximation (opaque f64
@@ -22,13 +39,20 @@ pub enum Downlink {
     /// (the *epoch*) so late uplinks from recovered/hung workers can be
     /// identified and discarded.
     Approximation {
-        /// The approximation payload.
-        x: Vec<f64>,
+        /// The approximation payload (shared across the K downlinks).
+        x: Arc<Vec<f64>>,
         /// Iteration number.
         epoch: u64,
+        /// This worker's partial buffer from the previous iteration,
+        /// handed back for reuse (the uplink double-buffer swap). `None`
+        /// on the first iteration.
+        reuse: Option<Vec<f64>>,
     },
     /// Terminate: the StopCond fired (carries the final iteration count).
-    Stop { iterations: usize },
+    Stop {
+        /// Iterations executed.
+        iterations: usize,
+    },
 }
 
 /// One worker's uplink payload: its partial folding.
@@ -38,7 +62,8 @@ pub struct Uplink {
     pub worker: usize,
     /// Epoch echoed from the downlink (stale-partial detection).
     pub epoch: u64,
-    /// Partial folding `s_j` (encoding defined by the problem).
+    /// Partial folding `s_j` (encoding defined by the problem). Owned, so
+    /// the master can fold it and recycle the buffer downlink.
     pub partial: Vec<f64>,
     /// Seconds the worker spent in Map + local fold this iteration
     /// (calibration metadata; a real MPI skeleton would piggyback this the
@@ -46,11 +71,48 @@ pub struct Uplink {
     pub map_seconds: f64,
 }
 
-/// Master-side endpoint: one sender per worker, one shared return channel.
+/// The shared uplink inbox state: one slot per worker, plus liveness.
+#[derive(Debug)]
+struct Inbox {
+    /// Slot per worker (index = id − 1); `Some` = undelivered partial.
+    slots: Vec<Option<Uplink>>,
+    /// Set when a worker endpoint drops (normal exit *or* panic unwind),
+    /// so a gather stops waiting for a peer that can never answer —
+    /// the fail-fast disconnect detection the old mpsc uplink had.
+    gone: Vec<bool>,
+}
+
+/// The shared uplink bus.
+#[derive(Debug)]
+struct UplinkBus {
+    inbox: Mutex<Inbox>,
+    /// Signals the master after a slot fill or a worker departure.
+    ready: Condvar,
+    /// Set when the master endpoint drops (workers detect a dead master).
+    closed: std::sync::atomic::AtomicBool,
+}
+
+impl UplinkBus {
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inbox> {
+        // A worker panicking inside `send` cannot leave the inbox in a
+        // broken state (it only moves an Option / flips a bool), so
+        // poisoning is safe to clear — required for fault-tolerant runs
+        // to survive panics.
+        self.inbox.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Master-side endpoint: one sender per worker, one shared uplink inbox.
 #[derive(Debug)]
 pub struct MasterEndpoint {
     downlinks: Vec<Sender<Downlink>>,
-    uplink: Receiver<Uplink>,
+    bus: Arc<UplinkBus>,
+}
+
+impl Drop for MasterEndpoint {
+    fn drop(&mut self) {
+        self.bus.closed.store(true, std::sync::atomic::Ordering::Release);
+    }
 }
 
 /// Worker-side endpoint.
@@ -59,33 +121,51 @@ pub struct WorkerEndpoint {
     /// This worker's id (`1..=K`).
     pub id: usize,
     downlink: Receiver<Downlink>,
-    uplink: Sender<Uplink>,
+    bus: Arc<UplinkBus>,
+}
+
+impl Drop for WorkerEndpoint {
+    fn drop(&mut self) {
+        // Runs on normal exit *and* on panic unwind: flag this worker
+        // gone and wake the master so an in-flight gather fails fast
+        // instead of sleeping out its deadline.
+        {
+            let mut inbox = self.bus.lock();
+            inbox.gone[self.id - 1] = true;
+        }
+        self.bus.ready.notify_one();
+    }
 }
 
 /// Create a master endpoint and `k` worker endpoints.
 pub fn fabric(k: usize) -> (MasterEndpoint, Vec<WorkerEndpoint>) {
-    let (up_tx, up_rx) = channel::<Uplink>();
+    let bus = Arc::new(UplinkBus {
+        inbox: Mutex::new(Inbox {
+            slots: (0..k).map(|_| None).collect(),
+            gone: vec![false; k],
+        }),
+        ready: Condvar::new(),
+        closed: std::sync::atomic::AtomicBool::new(false),
+    });
     let mut downlinks = Vec::with_capacity(k);
     let mut workers = Vec::with_capacity(k);
     for id in 1..=k {
         let (d_tx, d_rx) = channel::<Downlink>();
         downlinks.push(d_tx);
-        workers.push(WorkerEndpoint { id, downlink: d_rx, uplink: up_tx.clone() });
+        workers.push(WorkerEndpoint { id, downlink: d_rx, bus: bus.clone() });
     }
-    (MasterEndpoint { downlinks, uplink: up_rx }, workers)
+    (MasterEndpoint { downlinks, bus }, workers)
 }
 
-/// Error surfaced when a peer disappears (worker panic / master drop).
-#[derive(Debug, thiserror::Error)]
+/// Error surfaced when a peer disappears (worker panic / master drop) or a
+/// gather deadline expires.
+#[derive(Debug)]
 pub enum TransportError {
     /// A worker's channel closed before the protocol finished.
-    #[error("worker {0} disconnected")]
     WorkerGone(usize),
-    /// The master's channel closed.
-    #[error("master disconnected")]
+    /// The master's endpoint dropped.
     MasterGone,
     /// Timed out waiting for worker partials.
-    #[error("timed out waiting for {missing} of {expected} partials")]
     Timeout {
         /// How many partials never arrived.
         missing: usize,
@@ -94,13 +174,37 @@ pub enum TransportError {
     },
 }
 
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::WorkerGone(id) => write!(f, "worker {id} disconnected"),
+            TransportError::MasterGone => write!(f, "master disconnected"),
+            TransportError::Timeout { missing, expected } => {
+                write!(f, "timed out waiting for {missing} of {expected} partials")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
 impl MasterEndpoint {
     /// Number of attached workers.
     pub fn k(&self) -> usize {
         self.downlinks.len()
     }
 
-    /// `SendToAllWorkers(x)` — Algorithm 2 Step 2.
+    /// Send one downlink to worker `id` (1-based) — the per-worker form of
+    /// Algorithm 2 Step 2, which the approximation path must use so each
+    /// worker receives its own recycled buffer.
+    pub fn send_to(&self, id: usize, msg: Downlink) -> Result<(), TransportError> {
+        self.downlinks[id - 1].send(msg).map_err(|_| TransportError::WorkerGone(id))
+    }
+
+    /// `SendToAllWorkers(x)` — clone-broadcast (Stop, tests). The
+    /// approximation hot path sends per worker via
+    /// [`MasterEndpoint::send_to`] instead, threading each worker's
+    /// recycled buffer.
     pub fn broadcast(&self, msg: &Downlink) -> Result<(), TransportError> {
         for (i, tx) in self.downlinks.iter().enumerate() {
             tx.send(msg.clone()).map_err(|_| TransportError::WorkerGone(i + 1))?;
@@ -111,54 +215,75 @@ impl MasterEndpoint {
     /// `RecvFromWorkers(s_1..s_K)` — Algorithm 2 Step 5. Returns partials
     /// ordered by worker id. `timeout` bounds the whole gather.
     pub fn gather(&self, epoch: u64, timeout: Duration) -> Result<Vec<Uplink>, TransportError> {
-        let (got, missing) = self.gather_partial(&vec![true; self.k()], epoch, timeout);
-        if missing.is_empty() {
+        let mut got = Vec::new();
+        let received = self.gather_into(&vec![true; self.k()], epoch, timeout, &mut got);
+        if received == self.k() {
             Ok(got.into_iter().map(|o| o.expect("no missing")).collect())
         } else {
-            Err(TransportError::Timeout { missing: missing.len(), expected: self.k() })
+            Err(TransportError::Timeout { missing: self.k() - received, expected: self.k() })
         }
     }
 
-    /// Fault-tolerant gather: wait (up to `timeout`) for partials from the
-    /// workers marked alive in `expect`; returns whatever arrived plus the
-    /// ids (1-based) that never answered. Never errors — the caller decides
-    /// how to recover (see `LiveRunner::fault_tolerant`).
-    pub fn gather_partial(
+    /// Gather partials from the workers marked in `expect` into `got`
+    /// (resized to K; index = worker id − 1), waiting up to `timeout` for
+    /// the whole gather. Stale-epoch slots are discarded, and a worker
+    /// whose endpoint dropped (panic or exit) with its slot empty stops
+    /// being waited for — the gather returns as soon as every still-
+    /// reachable expected partial is in, rather than sleeping out the
+    /// deadline on a dead peer. Returns how many expected partials
+    /// arrived; the caller decides how to treat the rest (see
+    /// `LiveRunner::fault_tolerant`). Never errors, never allocates
+    /// beyond growing `got` to K once.
+    pub fn gather_into(
         &self,
         expect: &[bool],
         epoch: u64,
         timeout: Duration,
-    ) -> (Vec<Option<Uplink>>, Vec<usize>) {
+        got: &mut Vec<Option<Uplink>>,
+    ) -> usize {
         let k = self.k();
         debug_assert_eq!(expect.len(), k);
+        got.clear();
+        got.resize_with(k, || None);
         let want = expect.iter().filter(|&&e| e).count();
-        let mut got: Vec<Option<Uplink>> = (0..k).map(|_| None).collect();
         let mut received = 0usize;
         let deadline = std::time::Instant::now() + timeout;
-        while received < want {
-            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
-            match self.uplink.recv_timeout(remaining) {
-                Ok(up) => {
-                    if up.epoch != epoch {
-                        // Stale partial from a worker that missed an
-                        // earlier deadline: discard (its range was already
-                        // recovered by the master that iteration).
+        let mut inbox = self.bus.lock();
+        loop {
+            let mut unreachable = 0usize;
+            for i in 0..k {
+                if !expect[i] || got[i].is_some() {
+                    continue;
+                }
+                if let Some(u) = inbox.slots[i].take() {
+                    if u.epoch == epoch {
+                        got[i] = Some(u);
+                        received += 1;
                         continue;
                     }
-                    let idx = up.worker - 1;
-                    if got[idx].is_none() && expect[idx] {
-                        received += 1;
-                    }
-                    got[idx] = Some(up);
+                    // Stale partial from a worker that missed an earlier
+                    // deadline: dropped (its range was already recovered
+                    // by the master that iteration).
                 }
-                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                if inbox.gone[i] {
+                    unreachable += 1;
+                }
             }
+            if received + unreachable >= want {
+                break;
+            }
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            let (guard, _timed_out) = self
+                .bus
+                .ready
+                .wait_timeout(inbox, remaining)
+                .unwrap_or_else(|e| e.into_inner());
+            inbox = guard;
         }
-        let missing = (0..k)
-            .filter(|&i| expect[i] && got[i].is_none())
-            .map(|i| i + 1)
-            .collect();
-        (got, missing)
+        received
     }
 
     /// Best-effort broadcast: deliver to every worker whose channel is
@@ -170,19 +295,6 @@ impl MasterEndpoint {
             let _ = tx.send(msg.clone());
         }
     }
-
-    /// Broadcast to the workers marked alive only (dead peers are skipped
-    /// instead of erroring). Returns ids (1-based) newly found dead.
-    pub fn broadcast_alive(&self, msg: &Downlink, alive: &mut [bool]) -> Vec<usize> {
-        let mut newly_dead = Vec::new();
-        for (i, tx) in self.downlinks.iter().enumerate() {
-            if alive[i] && tx.send(msg.clone()).is_err() {
-                alive[i] = false;
-                newly_dead.push(i + 1);
-            }
-        }
-        newly_dead
-    }
 }
 
 impl WorkerEndpoint {
@@ -191,11 +303,25 @@ impl WorkerEndpoint {
         self.downlink.recv().map_err(|_| TransportError::MasterGone)
     }
 
-    /// `SendToMaster(s_j)`.
-    pub fn send(&self, epoch: u64, partial: Vec<f64>, map_seconds: f64) -> Result<(), TransportError> {
-        self.uplink
-            .send(Uplink { worker: self.id, epoch, partial, map_seconds })
-            .map_err(|_| TransportError::MasterGone)
+    /// `SendToMaster(s_j)` — moves the partial into this worker's inbox
+    /// slot. Zero heap allocations: the buffer travels by move and comes
+    /// back through the next downlink's `reuse`.
+    pub fn send(
+        &self,
+        epoch: u64,
+        partial: Vec<f64>,
+        map_seconds: f64,
+    ) -> Result<(), TransportError> {
+        if self.bus.closed.load(std::sync::atomic::Ordering::Acquire) {
+            return Err(TransportError::MasterGone);
+        }
+        {
+            let mut inbox = self.bus.lock();
+            inbox.slots[self.id - 1] =
+                Some(Uplink { worker: self.id, epoch, partial, map_seconds });
+        }
+        self.bus.ready.notify_one();
+        Ok(())
     }
 }
 
@@ -203,6 +329,10 @@ impl WorkerEndpoint {
 mod tests {
     use super::*;
     use std::time::Duration;
+
+    fn approx(x: Vec<f64>, epoch: u64) -> Downlink {
+        Downlink::Approximation { x: Arc::new(x), epoch, reuse: None }
+    }
 
     #[test]
     fn roundtrip_one_iteration() {
@@ -212,7 +342,7 @@ mod tests {
             .map(|w| {
                 std::thread::spawn(move || loop {
                     match w.recv().unwrap() {
-                        Downlink::Approximation { x, epoch } => {
+                        Downlink::Approximation { x, epoch, .. } => {
                             let s: f64 = x.iter().sum::<f64>() * w.id as f64;
                             w.send(epoch, vec![s], 0.0).unwrap();
                         }
@@ -222,7 +352,7 @@ mod tests {
             })
             .collect();
 
-        master.broadcast(&Downlink::Approximation { x: vec![1.0, 2.0], epoch: 0 }).unwrap();
+        master.broadcast(&approx(vec![1.0, 2.0], 0)).unwrap();
         let partials = master.gather(0, Duration::from_secs(5)).unwrap();
         assert_eq!(partials.len(), 4);
         // ordered by worker id; worker j returns 3*j
@@ -266,6 +396,11 @@ mod tests {
         drop(master);
         let w = &workers[0];
         assert!(matches!(w.recv().unwrap_err(), TransportError::MasterGone));
+        // The uplink side notices too (the bus is flagged closed).
+        assert!(matches!(
+            w.send(0, vec![1.0], 0.0).unwrap_err(),
+            TransportError::MasterGone
+        ));
     }
 
     #[test]
@@ -280,5 +415,61 @@ mod tests {
         workers[0].send(1, vec![2.0], 0.0).unwrap();
         let got2 = master.gather(1, Duration::from_millis(50)).unwrap();
         assert_eq!(got2[0].partial, vec![2.0]);
+    }
+
+    #[test]
+    fn gather_fails_fast_when_worker_drops() {
+        // A dead worker (endpoint dropped — what a panic unwind does)
+        // must not make the gather sleep out its deadline: worker 1's
+        // partial arrives, worker 2 is gone, and the gather returns
+        // immediately despite the long timeout.
+        let (master, mut workers) = fabric(2);
+        let w2 = workers.pop().unwrap();
+        workers[0].send(0, vec![1.0], 0.0).unwrap();
+        drop(w2);
+        let start = std::time::Instant::now();
+        let mut got = Vec::new();
+        let received =
+            master.gather_into(&[true, true], 0, Duration::from_secs(30), &mut got);
+        assert_eq!(received, 1);
+        assert!(got[1].is_none());
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "gather slept on a dead worker"
+        );
+    }
+
+    #[test]
+    fn stale_epochs_are_discarded() {
+        let (master, workers) = fabric(2);
+        workers[0].send(3, vec![9.0], 0.0).unwrap(); // stale (epoch 3 ≠ 4)
+        workers[1].send(4, vec![2.0], 0.0).unwrap();
+        let mut got = Vec::new();
+        let received =
+            master.gather_into(&[true, true], 4, Duration::from_millis(40), &mut got);
+        assert_eq!(received, 1);
+        assert!(got[0].is_none());
+        assert_eq!(got[1].as_ref().unwrap().partial, vec![2.0]);
+    }
+
+    #[test]
+    fn send_to_targets_one_worker() {
+        let (master, workers) = fabric(2);
+        master
+            .send_to(2, Downlink::Approximation {
+                x: Arc::new(vec![7.0]),
+                epoch: 0,
+                reuse: Some(vec![0.0; 3]),
+            })
+            .unwrap();
+        // worker 1 has nothing pending; worker 2 got the message + buffer.
+        match workers[1].recv().unwrap() {
+            Downlink::Approximation { x, epoch, reuse } => {
+                assert_eq!(*x, vec![7.0]);
+                assert_eq!(epoch, 0);
+                assert_eq!(reuse.unwrap().len(), 3);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
     }
 }

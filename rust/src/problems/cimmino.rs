@@ -22,7 +22,7 @@ use std::sync::{Arc, Mutex};
 use crate::coordinator::{BsfProblem, CostSpec, Workspace};
 use crate::linalg::generators::InequalitySystem;
 use crate::linalg::{dot, sq_norm2, sub};
-use crate::runtime::{KernelRuntime, Tensor};
+use crate::runtime::{KernelRuntime, TensorView};
 
 /// The BSF-Cimmino problem.
 #[derive(Debug)]
@@ -122,7 +122,7 @@ impl BsfProblem for CimminoProblem {
         range: Range<usize>,
         x: &[f64],
         out: &mut [f64],
-        _ws: &mut Workspace,
+        ws: &mut Workspace,
         kernels: Option<&KernelRuntime>,
     ) {
         let n = self.n();
@@ -134,20 +134,27 @@ impl BsfProblem for CimminoProblem {
         if let Some(rt) = kernels {
             if let Some(name) = rt.manifest().cimmino_map(n) {
                 let b = rt.block();
+                // x is already the exact kernel input — borrowed directly;
+                // only the block result needs a staging buffer.
+                let (_, out_stage) = ws.staging(0, n);
                 let mut i0 = range.start;
                 while i0 < range.end {
                     let i1 = (i0 + b).min(range.end);
                     let (a_blk, b_blk) = self.packed_block(i0, i1, b);
-                    match rt.execute(
+                    // Bound before the match: a scrutinee temporary would
+                    // hold the staging borrow across the arms.
+                    let res = rt.execute_into(
                         &name,
                         &[
-                            Tensor::mat_shared(a_blk, b, n),
-                            Tensor::vec_shared(b_blk),
-                            Tensor::vec(x.to_vec()),
+                            TensorView::mat_cached(&a_blk, b, n),
+                            TensorView::vec_cached(&b_blk),
+                            TensorView::vec_view(x),
                         ],
-                    ) {
-                        Ok(outs) => {
-                            for (a, v) in out.iter_mut().zip(&outs[0]) {
+                        &mut [&mut *out_stage],
+                    );
+                    match res {
+                        Ok(()) => {
+                            for (a, v) in out.iter_mut().zip(out_stage.iter()) {
                                 *a += v;
                             }
                         }
@@ -257,7 +264,7 @@ impl BsfProblem for NonStationaryCimmino {
         range: Range<usize>,
         approx: &[f64],
         out: &mut [f64],
-        _ws: &mut Workspace,
+        ws: &mut Workspace,
         kernels: Option<&KernelRuntime>,
     ) {
         let n = self.inner.n();
@@ -270,26 +277,31 @@ impl BsfProblem for NonStationaryCimmino {
         if let Some(rt) = kernels {
             if let Some(name) = rt.manifest().cimmino_map(n) {
                 let bw = rt.block();
+                // The drift-shifted b-block changes every iteration: it is
+                // staged in the workspace and borrowed by the runtime (the
+                // cached `A` blocks stay shared) — no per-block buffers.
+                let (b_stage, out_stage) = ws.staging(bw, n);
                 let mut i0 = range.start;
                 while i0 < range.end {
                     let i1 = (i0 + bw).min(range.end);
                     let (a_blk, _) = self.inner.packed_block(i0, i1, bw);
-                    // Ephemeral shifted b-block (changes every iteration;
-                    // owned by the runtime tensor, like the other staged
-                    // kernel inputs).
-                    let mut b_blk = vec![0.0; bw];
                     for (slot, i) in (i0..i1).enumerate() {
-                        b_blk[slot] = self.inner.sys.b[i] + t * self.drift[i];
+                        b_stage[slot] = self.inner.sys.b[i] + t * self.drift[i];
                     }
-                    if let Ok(outs) = rt.execute(
+                    b_stage[i1 - i0..].fill(0.0);
+                    // Bound before the match: a scrutinee temporary would
+                    // hold the staging borrow across the arms.
+                    let res = rt.execute_into(
                         &name,
                         &[
-                            Tensor::mat_shared(a_blk, bw, n),
-                            Tensor::vec(b_blk),
-                            Tensor::vec(x.to_vec()),
+                            TensorView::mat_cached(&a_blk, bw, n),
+                            TensorView::vec_view(b_stage),
+                            TensorView::vec_view(x),
                         ],
-                    ) {
-                        for (a, v) in out.iter_mut().zip(&outs[0]) {
+                        &mut [&mut *out_stage],
+                    );
+                    if res.is_ok() {
+                        for (a, v) in out.iter_mut().zip(out_stage.iter()) {
                             *a += v;
                         }
                     } else {

@@ -25,7 +25,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{BsfProblem, CostSpec, Workspace};
 use crate::linalg::generators::BodyWorkload;
-use crate::runtime::{KernelRuntime, Tensor};
+use crate::runtime::{KernelRuntime, TensorView};
 
 /// Guard matching the Pallas kernel's `_R2_FLOOR` (zero-mass padding makes
 /// it irrelevant numerically; present for bit-equivalence with the kernel).
@@ -126,7 +126,7 @@ impl BsfProblem for GravityProblem {
         range: Range<usize>,
         x: &[f64],
         out: &mut [f64],
-        _ws: &mut Workspace,
+        ws: &mut Workspace,
         kernels: Option<&KernelRuntime>,
     ) {
         debug_assert_eq!(out.len(), 3, "fold buffer is the 3-vector α");
@@ -138,22 +138,29 @@ impl BsfProblem for GravityProblem {
         if let Some(rt) = kernels {
             if let Some(name) = rt.manifest().gravity_map() {
                 let b = rt.block();
+                // The probe position is a stack array borrowed directly;
+                // only the 3-vector block result is workspace-staged.
+                let (_, out_stage) = ws.staging(0, 3);
                 let mut i0 = range.start;
                 while i0 < range.end {
                     let i1 = (i0 + b).min(range.end);
                     let (y_blk, m_blk) = self.packed_block(i0, i1, b);
-                    match rt.execute(
+                    // Bound before the match: a scrutinee temporary would
+                    // hold the staging borrow across the arms.
+                    let res = rt.execute_into(
                         &name,
                         &[
-                            Tensor::mat_shared(y_blk, b, 3),
-                            Tensor::vec_shared(m_blk),
-                            Tensor::vec(pos.to_vec()),
+                            TensorView::mat_cached(&y_blk, b, 3),
+                            TensorView::vec_cached(&m_blk),
+                            TensorView::vec_view(&pos),
                         ],
-                    ) {
-                        Ok(outs) => {
-                            out[0] += outs[0][0];
-                            out[1] += outs[0][1];
-                            out[2] += outs[0][2];
+                        &mut [&mut *out_stage],
+                    );
+                    match res {
+                        Ok(()) => {
+                            out[0] += out_stage[0];
+                            out[1] += out_stage[1];
+                            out[2] += out_stage[2];
                         }
                         Err(_) => {
                             let a = self.native_block(i0..i1, &pos);

@@ -22,7 +22,7 @@ use std::sync::RwLock;
 use crate::coordinator::{BsfProblem, CostSpec, Workspace};
 use crate::linalg::generators::LinearSystem;
 use crate::linalg::{sq_norm2, sub, Matrix};
-use crate::runtime::{KernelRuntime, Tensor};
+use crate::runtime::{KernelRuntime, TensorView};
 
 /// The BSF-Jacobi problem over a linear system.
 #[derive(Debug)]
@@ -55,7 +55,11 @@ impl JacobiProblem {
     /// on the same key pack it twice and the first insert wins, which is
     /// cheaper than serialising every worker's distinct first-iteration
     /// packing behind one global lock.
-    fn packed_block(&self, j0: usize, j1: usize, b: usize) -> std::sync::Arc<Vec<f64>> {
+    ///
+    /// Public so the allocation audit (`benches/coordinator_hotpath.rs`)
+    /// can pin the cache-hit path: a warm call must be a read-lock +
+    /// `Arc` clone, never a pack.
+    pub fn packed_block(&self, j0: usize, j1: usize, b: usize) -> std::sync::Arc<Vec<f64>> {
         let key = (j0, j1, b);
         if let Some(hit) = self.block_cache.read().expect("block cache poisoned").get(&key) {
             return hit.clone();
@@ -101,14 +105,17 @@ impl BsfProblem for JacobiProblem {
 
     /// Kernel-backed column-block matvec over `range`, in blocks of the
     /// artifact's width B; falls back to native when no artifact matches n.
-    /// The native path writes straight into `out` — zero allocations per
-    /// call (the PJRT path still allocates its block-staging tensors).
+    /// Both paths write straight into `out` with zero steady-state
+    /// allocations: the kernel path stages its padded x-blocks and block
+    /// results in the caller's [`Workspace`] and hands the runtime
+    /// borrowed [`TensorView`]s (the packed matrix blocks stay `Arc`-
+    /// cached and device-buffer cacheable).
     fn map_fold_into(
         &self,
         range: Range<usize>,
         x: &[f64],
         out: &mut [f64],
-        _ws: &mut Workspace,
+        ws: &mut Workspace,
         kernels: Option<&KernelRuntime>,
     ) {
         let n = self.n();
@@ -120,18 +127,26 @@ impl BsfProblem for JacobiProblem {
         if let Some(rt) = kernels {
             if let Some(name) = rt.manifest().jacobi_map(n) {
                 let b = rt.block();
+                let (x_stage, out_stage) = ws.staging(b, n);
                 let mut j0 = range.start;
                 while j0 < range.end {
                     let j1 = (j0 + b).min(range.end);
                     let c_blk = self.packed_block(j0, j1, b);
-                    let mut x_blk = vec![0.0; b];
-                    x_blk[..j1 - j0].copy_from_slice(&x[j0..j1]);
-                    match rt.execute(
+                    x_stage[..j1 - j0].copy_from_slice(&x[j0..j1]);
+                    x_stage[j1 - j0..].fill(0.0);
+                    // Bound before the match: a scrutinee temporary would
+                    // hold the staging borrow across the arms.
+                    let res = rt.execute_into(
                         &name,
-                        &[Tensor::mat_shared(c_blk, n, b), Tensor::vec(x_blk)],
-                    ) {
-                        Ok(outs) => {
-                            for (a, v) in out.iter_mut().zip(&outs[0]) {
+                        &[
+                            TensorView::mat_cached(&c_blk, n, b),
+                            TensorView::vec_view(x_stage),
+                        ],
+                        &mut [&mut *out_stage],
+                    );
+                    match res {
+                        Ok(()) => {
+                            for (a, v) in out.iter_mut().zip(out_stage.iter()) {
                                 *a += v;
                             }
                         }

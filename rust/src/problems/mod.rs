@@ -15,9 +15,12 @@
 //!
 //! Every problem provides: a kernel-backed `map_fold_into` (PJRT artifacts
 //! from the L1 Pallas kernels, with a bit-compatible native-Rust fallback
-//! for sizes without artifacts) whose native path writes into the caller's
-//! buffer with zero steady-state allocations, the paper's analytic
-//! [`CostSpec`], and a sequential reference implementation used by the
+//! for sizes without artifacts) that writes into the caller's buffer with
+//! zero steady-state allocations on **both** paths — the kernel path
+//! stages its per-iteration blocks in the caller's
+//! [`crate::coordinator::Workspace`] and hands the runtime borrowed
+//! [`crate::runtime::TensorView`]s — plus the paper's analytic
+//! [`CostSpec`] and a sequential reference implementation used by the
 //! test suite.
 //!
 //! [`CostSpec`]: crate::coordinator::CostSpec

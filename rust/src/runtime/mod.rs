@@ -7,28 +7,106 @@
 //! cached per artifact name. See `/opt/xla-example/README.md` for why text —
 //! not serialized protos — is the interchange format.
 //!
+//! The XLA client lives behind the **`pjrt` cargo feature**. The build
+//! must stay fully offline, so the feature resolves against
+//! `rust/vendor/xla` — an API **stub** of the real vendored FFI crate
+//! whose client fails at startup (CI compile-checks the whole gated path
+//! against it); hosts provisioned with the XLA toolchain swap that path
+//! dependency for the real crate. Without the feature every type and API
+//! below still compiles — manifest parsing, shape validation, tensor
+//! views — but [`KernelRuntime::open`] fails with a clear message, which
+//! every caller already treats as "run the native path". That keeps the
+//! whole-crate tier-1 build green on plain containers while the kernel
+//! path stays exercised wherever artifacts + the toolchain exist.
+//!
 //! `PjRtClient` is `Rc`-based (not `Send`), so each worker thread owns its
 //! own [`KernelRuntime`]; compilation happens once per thread per artifact
 //! and is excluded from calibration timings (the BSF model's "iterative
 //! algorithm" assumption: initialization cost is negligible against the
 //! iterative process).
+//!
+//! ## Zero-copy data plane
+//!
+//! Two input paths feed an executable:
+//!
+//! * **Owned/shared tensors** ([`Tensor`]) — `Arc`-shared payloads;
+//!   iteration-invariant inputs (a worker's packed matrix blocks) are
+//!   uploaded to the device once and cached by payload address.
+//! * **Borrowed views** ([`TensorView`]) — zero-copy slices over caller
+//!   buffers, used with [`KernelRuntime::execute_into`] so the per-
+//!   iteration staging of `map_fold_into`'s kernel path (x-blocks, shifted
+//!   b-blocks, result accumulation) runs entirely through reused
+//!   [`crate::coordinator::Workspace`] buffers: **zero steady-state heap
+//!   allocations on the staging layer**, matching the native path's bar
+//!   (asserted by `rust/benches/coordinator_hotpath.rs`).
 
 mod manifest;
 
 pub use manifest::{ArtifactMeta, Manifest, TensorSpec};
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Context, Result};
+
+#[cfg(feature = "pjrt")]
+use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
+use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
+use std::rc::Rc;
+
+/// Tensor dimensions, allocation-free (rank ≤ 2 covers every artifact:
+/// scalars, vectors, row-major matrices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dims {
+    d: [usize; 2],
+    rank: u8,
+}
+
+impl Dims {
+    /// Scalar (rank 0).
+    pub fn scalar() -> Dims {
+        Dims { d: [0, 0], rank: 0 }
+    }
+
+    /// Vector of length `n`.
+    pub fn vector(n: usize) -> Dims {
+        Dims { d: [n, 0], rank: 1 }
+    }
+
+    /// Row-major `rows × cols` matrix.
+    pub fn matrix(rows: usize, cols: usize) -> Dims {
+        Dims { d: [rows, cols], rank: 2 }
+    }
+
+    /// The dimensions as a slice (empty = scalar).
+    pub fn as_slice(&self) -> &[usize] {
+        &self.d[..self.rank as usize]
+    }
+
+    /// Element count implied by the dims.
+    pub fn len(&self) -> usize {
+        self.as_slice().iter().product::<usize>().max(1)
+    }
+
+    /// True for zero-sized shapes.
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().iter().any(|&d| d == 0)
+    }
+
+    /// Shape equality against a manifest spec, without allocating.
+    pub fn matches(&self, shape: &[usize]) -> bool {
+        self.as_slice() == shape
+    }
+}
 
 /// A tensor argument: f64 data plus dimensions (row-major).
 ///
 /// The payload is `Arc`-shared so iteration-invariant inputs (a worker's
 /// packed matrix blocks) can be replayed every iteration without copying
-/// megabytes on the hot path.
+/// megabytes on the hot path. Per-iteration payloads should prefer the
+/// borrowed [`TensorView`] + [`KernelRuntime::execute_into`] path, which
+/// does not allocate at all.
 #[derive(Debug, Clone)]
 pub struct Tensor {
     /// Row-major payload (shared).
@@ -76,22 +154,99 @@ impl Tensor {
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
+
+    /// A borrowed view of this tensor (shared payloads stay device-buffer
+    /// cacheable through the view).
+    pub fn view(&self) -> TensorView<'_> {
+        let dims = match self.dims.len() {
+            0 => Dims::scalar(),
+            1 => Dims::vector(self.dims[0]),
+            2 => Dims::matrix(self.dims[0], self.dims[1]),
+            r => panic!("rank-{r} tensors are not supported"),
+        };
+        let shared =
+            (std::sync::Arc::strong_count(&self.data) > 1).then_some(&self.data);
+        TensorView { data: self.data.as_slice(), dims, shared }
+    }
+}
+
+/// A borrowed tensor argument — the zero-copy input path of
+/// [`KernelRuntime::execute_into`]. Constructing one performs no heap
+/// allocation, so per-iteration kernel inputs can be staged in reusable
+/// [`crate::coordinator::Workspace`] buffers and passed straight through.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    /// Row-major payload (borrowed).
+    pub data: &'a [f64],
+    /// Dimensions.
+    pub dims: Dims,
+    /// When `Some`, the payload is also owned by a long-lived `Arc` (a
+    /// problem's packed-block cache): the runtime may upload it once and
+    /// cache the device buffer by payload address, pinning the `Arc` so
+    /// the address stays valid. `None` marks an ephemeral per-iteration
+    /// payload, uploaded per call.
+    shared: Option<&'a std::sync::Arc<Vec<f64>>>,
+}
+
+impl<'a> TensorView<'a> {
+    /// Borrowed vector view (ephemeral payload).
+    pub fn vec_view(data: &'a [f64]) -> TensorView<'a> {
+        TensorView { data, dims: Dims::vector(data.len()), shared: None }
+    }
+
+    /// Borrowed row-major matrix view (ephemeral payload).
+    pub fn mat_view(data: &'a [f64], rows: usize, cols: usize) -> TensorView<'a> {
+        assert_eq!(data.len(), rows * cols);
+        TensorView { data, dims: Dims::matrix(rows, cols), shared: None }
+    }
+
+    /// Borrowed scalar view (ephemeral payload).
+    pub fn scalar_view(x: &'a f64) -> TensorView<'a> {
+        TensorView { data: std::slice::from_ref(x), dims: Dims::scalar(), shared: None }
+    }
+
+    /// Vector view of a long-lived shared payload (device-buffer
+    /// cacheable, like [`Tensor::vec_shared`] but allocation-free).
+    pub fn vec_cached(data: &'a std::sync::Arc<Vec<f64>>) -> TensorView<'a> {
+        TensorView { data: data.as_slice(), dims: Dims::vector(data.len()), shared: Some(data) }
+    }
+
+    /// Matrix view of a long-lived shared payload (device-buffer
+    /// cacheable, like [`Tensor::mat_shared`] but allocation-free).
+    pub fn mat_cached(
+        data: &'a std::sync::Arc<Vec<f64>>,
+        rows: usize,
+        cols: usize,
+    ) -> TensorView<'a> {
+        assert_eq!(data.len(), rows * cols);
+        TensorView { data: data.as_slice(), dims: Dims::matrix(rows, cols), shared: Some(data) }
+    }
+
+    /// True when the view's payload is device-buffer cacheable (backed by
+    /// a long-lived shared `Arc`).
+    pub fn is_shared(&self) -> bool {
+        self.shared.is_some()
+    }
 }
 
 /// Per-thread PJRT runtime: one CPU client + compiled-executable cache +
 /// device-buffer cache for iteration-invariant inputs.
 pub struct KernelRuntime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
+    #[cfg(feature = "pjrt")]
+    client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     /// Payloads pinned alive for the buffer cache (address-keyed).
+    #[cfg(feature = "pjrt")]
     pinned: RefCell<Vec<std::sync::Arc<Vec<f64>>>>,
     /// Device buffers for shared tensors, keyed by the `Arc` payload's
     /// address (stable for the tensor's lifetime). A worker's packed
     /// matrix blocks are uploaded once and replayed every iteration —
     /// without this the hot path re-uploads megabytes per call (see
     /// EXPERIMENTS.md §Perf).
+    #[cfg(feature = "pjrt")]
     buffers: RefCell<HashMap<usize, Rc<xla::PjRtBuffer>>>,
 }
 
@@ -100,7 +255,7 @@ impl std::fmt::Debug for KernelRuntime {
         f.debug_struct("KernelRuntime")
             .field("dir", &self.dir)
             .field("artifacts", &self.manifest.artifacts.len())
-            .field("compiled", &self.cache.borrow().len())
+            .field("compiled", &self.compiled_count())
             .finish()
     }
 }
@@ -108,22 +263,36 @@ impl std::fmt::Debug for KernelRuntime {
 impl KernelRuntime {
     /// Open the artifact directory (reads + validates `manifest.json`,
     /// creates the PJRT CPU client). Fails if the directory or manifest is
-    /// missing — run `make artifacts` first.
+    /// missing — run `make artifacts` first — or when the crate was built
+    /// without the `pjrt` feature.
     pub fn open(dir: impl AsRef<Path>) -> Result<KernelRuntime> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
         let src = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`?)"))?;
         let manifest = Manifest::parse(&src)?;
-        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
-        Ok(KernelRuntime {
-            client,
-            dir,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            pinned: RefCell::new(Vec::new()),
-            buffers: RefCell::new(HashMap::new()),
-        })
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = &manifest;
+            bail!(
+                "artifacts found at {dir:?} but this build has no PJRT client: \
+                 rebuild with `--features pjrt` against the real vendored xla \
+                 crate (rust/vendor/xla is an offline API stub; callers \
+                 degrade to the native compute path)"
+            );
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+            return Ok(KernelRuntime {
+                client,
+                dir,
+                manifest,
+                cache: RefCell::new(HashMap::new()),
+                pinned: RefCell::new(Vec::new()),
+                buffers: RefCell::new(HashMap::new()),
+            });
+        }
     }
 
     /// The artifact manifest.
@@ -141,8 +310,171 @@ impl KernelRuntime {
         self.manifest.artifacts.contains_key(name)
     }
 
+    /// Validate borrowed views against the manifest entry for `name`
+    /// (allocation-free on success).
+    fn validate(&self, name: &str, inputs: &[TensorView<'_>]) -> Result<&ArtifactMeta> {
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if !t.dims.matches(&spec.shape) {
+                bail!(
+                    "artifact '{name}' input {i}: shape {:?} != manifest {:?}",
+                    t.dims.as_slice(),
+                    spec.shape
+                );
+            }
+            if t.data.len() != t.dims.len() {
+                bail!(
+                    "artifact '{name}' input {i}: data length {} != dims product {}",
+                    t.data.len(),
+                    t.dims.len()
+                );
+            }
+        }
+        Ok(meta)
+    }
+
+    /// Pre-compile an artifact (so first-use cost is excluded from timed
+    /// sections).
+    #[cfg(feature = "pjrt")]
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Pre-compile an artifact (placeholder without the `pjrt` feature —
+    /// the runtime cannot be constructed in that configuration).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let _ = name;
+        bail!("PJRT disabled (built without the `pjrt` feature)")
+    }
+
+    /// Execute artifact `name` on the given inputs; returns the tuple of
+    /// outputs as flat f64 vectors. Input shapes are validated against the
+    /// manifest.
+    ///
+    /// One-shot convenience path; the hot path should prefer
+    /// [`KernelRuntime::execute_into`], which neither copies inputs nor
+    /// allocates result vectors on the caller's side.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f64>>> {
+        // Rank-check before building views: `Tensor`'s fields are public,
+        // so a rank-3 shape must surface as the usual validation error
+        // (every call site treats Err as "fall back to native"), not as
+        // `Tensor::view`'s panic.
+        for (i, t) in inputs.iter().enumerate() {
+            if t.dims.len() > 2 {
+                bail!(
+                    "artifact '{name}' input {i}: unsupported rank-{} shape {:?}",
+                    t.dims.len(),
+                    t.dims
+                );
+            }
+        }
+        let views: Vec<TensorView<'_>> = inputs.iter().map(Tensor::view).collect();
+        self.validate(name, &views)?;
+        #[cfg(feature = "pjrt")]
+        {
+            let exe = self.executable(name)?;
+            // The views carry the shared/ephemeral classification
+            // (`Tensor::view` checks the Arc refcount), so the device
+            // upload path is the same one `execute_into` uses.
+            let buffers: Vec<Rc<xla::PjRtBuffer>> = views
+                .iter()
+                .map(|v| self.device_buffer_view(v))
+                .collect::<Result<_>>()?;
+            let refs: Vec<&xla::PjRtBuffer> = buffers.iter().map(|b| b.as_ref()).collect();
+            let result = exe.execute_b(&refs).map_err(wrap_xla)?;
+            let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+            // All artifacts are lowered with return_tuple=True.
+            let parts = tuple.to_tuple().map_err(wrap_xla)?;
+            let mut out = Vec::with_capacity(parts.len());
+            for p in parts {
+                out.push(p.to_vec::<f64>().map_err(wrap_xla)?);
+            }
+            return Ok(out);
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = views;
+            bail!("PJRT disabled (built without the `pjrt` feature)")
+        }
+    }
+
+    /// Execute artifact `name` on borrowed inputs, copying each output
+    /// into the caller's buffers — the zero-copy live data plane.
+    ///
+    /// * `inputs` are [`TensorView`]s: ephemeral views are uploaded per
+    ///   call straight from the borrowed slice (no host-side staging
+    ///   copy); `*_cached` views of long-lived shared payloads hit the
+    ///   device-buffer cache exactly like shared [`Tensor`]s.
+    /// * `outs` must hold one `&mut [f64]` per manifest output, each
+    ///   exactly the output's element count.
+    ///
+    /// The caller-side staging layer performs zero heap allocations; the
+    /// result copy-out still routes through the XLA literal API (one
+    /// transitional vector per output inside the gated client — tracked
+    /// as the remaining PJRT copy in PERF.md).
+    pub fn execute_into(
+        &self,
+        name: &str,
+        inputs: &[TensorView<'_>],
+        outs: &mut [&mut [f64]],
+    ) -> Result<()> {
+        let meta = self.validate(name, inputs)?;
+        if outs.len() != meta.outputs.len() {
+            bail!(
+                "artifact '{name}' produces {} outputs, caller supplied {}",
+                meta.outputs.len(),
+                outs.len()
+            );
+        }
+        for (i, (o, spec)) in outs.iter().zip(&meta.outputs).enumerate() {
+            let want = spec.shape.iter().product::<usize>().max(1);
+            if o.len() != want {
+                bail!(
+                    "artifact '{name}' output {i}: buffer length {} != manifest {}",
+                    o.len(),
+                    want
+                );
+            }
+        }
+        #[cfg(feature = "pjrt")]
+        {
+            let exe = self.executable(name)?;
+            let buffers: Vec<Rc<xla::PjRtBuffer>> = inputs
+                .iter()
+                .map(|v| self.device_buffer_view(v))
+                .collect::<Result<_>>()?;
+            let refs: Vec<&xla::PjRtBuffer> = buffers.iter().map(|b| b.as_ref()).collect();
+            let result = exe.execute_b(&refs).map_err(wrap_xla)?;
+            let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+            let parts = tuple.to_tuple().map_err(wrap_xla)?;
+            if parts.len() != outs.len() {
+                bail!("artifact '{name}': runtime returned {} outputs", parts.len());
+            }
+            for (p, o) in parts.iter().zip(outs.iter_mut()) {
+                let v = p.to_vec::<f64>().map_err(wrap_xla)?;
+                o.copy_from_slice(&v);
+            }
+            return Ok(());
+        }
+        #[cfg(not(feature = "pjrt"))]
+        bail!("PJRT disabled (built without the `pjrt` feature)")
+    }
+
     /// The compiled executable for `name`, compiling and caching on first
     /// use.
+    #[cfg(feature = "pjrt")]
     fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.cache.borrow().get(name) {
             return Ok(exe.clone());
@@ -163,104 +495,67 @@ impl KernelRuntime {
         Ok(exe)
     }
 
-    /// Pre-compile an artifact (so first-use cost is excluded from timed
-    /// sections).
-    pub fn warm(&self, name: &str) -> Result<()> {
-        self.executable(name).map(|_| ())
-    }
-
-    /// Execute artifact `name` on the given inputs; returns the tuple of
-    /// outputs as flat f64 vectors. Input shapes are validated against the
-    /// manifest.
-    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f64>>> {
-        let meta = self
-            .manifest
-            .artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?;
-        if inputs.len() != meta.inputs.len() {
-            bail!(
-                "artifact '{name}' expects {} inputs, got {}",
-                meta.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
-            if t.dims != spec.shape {
-                bail!(
-                    "artifact '{name}' input {i}: shape {:?} != manifest {:?}",
-                    t.dims,
-                    spec.shape
-                );
-            }
-            if t.data.len() != t.len() {
-                bail!(
-                    "artifact '{name}' input {i}: data length {} != dims product {}",
-                    t.data.len(),
-                    t.len()
-                );
-            }
-        }
-        let exe = self.executable(name)?;
-        let buffers: Vec<Rc<xla::PjRtBuffer>> = inputs
-            .iter()
-            .map(|t| self.device_buffer(t))
-            .collect::<Result<_>>()?;
-        let refs: Vec<&xla::PjRtBuffer> = buffers.iter().map(|b| b.as_ref()).collect();
-        let result = exe.execute_b(&refs).map_err(wrap_xla)?;
-        let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
-        // All artifacts are lowered with return_tuple=True.
-        let parts = tuple.to_tuple().map_err(wrap_xla)?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f64>().map_err(wrap_xla)?);
-        }
-        Ok(out)
-    }
-
-    /// Device buffer for a tensor. Shared tensors (anything also held by a
-    /// problem's block cache, detected by `Arc` refcount) are uploaded once
-    /// and cached by payload address — the cache co-owns the `Arc`, so the
-    /// address stays valid for the cache's lifetime. Ephemeral tensors
-    /// (per-iteration payloads) are uploaded per call.
-    fn device_buffer(&self, t: &Tensor) -> Result<Rc<xla::PjRtBuffer>> {
-        let shared = std::sync::Arc::strong_count(&t.data) > 1;
-        if shared {
-            let key = std::sync::Arc::as_ptr(&t.data) as usize;
-            if let Some(buf) = self.buffers.borrow().get(&key) {
-                return Ok(buf.clone());
-            }
-            let buf = Rc::new(
-                self.client
-                    .buffer_from_host_buffer::<f64>(&t.data, &t.dims, None)
-                    .map_err(wrap_xla)?,
-            );
-            // Keep the payload alive so its address cannot be recycled
-            // while the cached buffer exists.
-            self.pinned.borrow_mut().push(t.data.clone());
-            self.buffers.borrow_mut().insert(key, buf.clone());
-            Ok(buf)
+    /// Device buffer for a borrowed view — the single upload path of both
+    /// `execute` and `execute_into`. Shared payloads (`*_cached` views,
+    /// or shared [`Tensor`]s via `Tensor::view`'s refcount check — e.g. a
+    /// problem's packed block cache) are uploaded once and cached by
+    /// payload address; the cache co-owns the `Arc`, so the address stays
+    /// valid for the cache's lifetime. Ephemeral views are uploaded per
+    /// call.
+    #[cfg(feature = "pjrt")]
+    fn device_buffer_view(&self, v: &TensorView<'_>) -> Result<Rc<xla::PjRtBuffer>> {
+        if let Some(arc) = v.shared {
+            self.cached_upload(arc, v.dims.as_slice())
         } else {
             Ok(Rc::new(
                 self.client
-                    .buffer_from_host_buffer::<f64>(&t.data, &t.dims, None)
+                    .buffer_from_host_buffer::<f64>(v.data, v.dims.as_slice(), None)
                     .map_err(wrap_xla)?,
             ))
         }
     }
 
+    #[cfg(feature = "pjrt")]
+    fn cached_upload(
+        &self,
+        data: &std::sync::Arc<Vec<f64>>,
+        dims: &[usize],
+    ) -> Result<Rc<xla::PjRtBuffer>> {
+        let key = std::sync::Arc::as_ptr(data) as usize;
+        if let Some(buf) = self.buffers.borrow().get(&key) {
+            return Ok(buf.clone());
+        }
+        let buf = Rc::new(
+            self.client
+                .buffer_from_host_buffer::<f64>(data, dims, None)
+                .map_err(wrap_xla)?,
+        );
+        // Keep the payload alive so its address cannot be recycled while
+        // the cached buffer exists.
+        self.pinned.borrow_mut().push(data.clone());
+        self.buffers.borrow_mut().insert(key, buf.clone());
+        Ok(buf)
+    }
+
     /// Number of compiled (cached) executables.
     pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        #[cfg(feature = "pjrt")]
+        return self.cache.borrow().len();
+        #[cfg(not(feature = "pjrt"))]
+        0
     }
 
     /// Number of cached device buffers.
     pub fn buffer_count(&self) -> usize {
-        self.buffers.borrow().len()
+        #[cfg(feature = "pjrt")]
+        return self.buffers.borrow().len();
+        #[cfg(not(feature = "pjrt"))]
+        0
     }
 }
 
 /// Convert the xla crate's error (non-`Sync`) into an anyhow error.
+#[cfg(feature = "pjrt")]
 fn wrap_xla(e: xla::Error) -> anyhow::Error {
     anyhow!("xla: {e}")
 }
@@ -292,5 +587,55 @@ mod tests {
     fn open_missing_dir_fails_helpfully() {
         let err = KernelRuntime::open("/nonexistent/artifacts").unwrap_err();
         assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn dims_shapes_and_matching() {
+        assert_eq!(Dims::scalar().as_slice(), &[] as &[usize]);
+        assert_eq!(Dims::vector(5).as_slice(), &[5]);
+        assert_eq!(Dims::matrix(2, 3).as_slice(), &[2, 3]);
+        assert_eq!(Dims::matrix(2, 3).len(), 6);
+        assert_eq!(Dims::scalar().len(), 1);
+        assert!(Dims::vector(4).matches(&[4]));
+        assert!(!Dims::vector(4).matches(&[4, 1]));
+        assert!(Dims::matrix(0, 3).is_empty());
+        assert!(!Dims::vector(1).is_empty());
+    }
+
+    #[test]
+    fn views_borrow_without_copying() {
+        let buf = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let v = TensorView::vec_view(&buf);
+        assert_eq!(v.dims.as_slice(), &[6]);
+        assert!(std::ptr::eq(v.data.as_ptr(), buf.as_ptr()));
+        let m = TensorView::mat_view(&buf, 2, 3);
+        assert_eq!(m.dims.as_slice(), &[2, 3]);
+        let x = 7.0;
+        let s = TensorView::scalar_view(&x);
+        assert_eq!(s.dims.len(), 1);
+        assert!(s.dims.as_slice().is_empty());
+    }
+
+    #[test]
+    fn cached_views_carry_shared_payload() {
+        let arc = std::sync::Arc::new(vec![0.0; 12]);
+        let m = TensorView::mat_cached(&arc, 3, 4);
+        assert!(m.is_shared());
+        let v = TensorView::vec_cached(&arc);
+        assert_eq!(v.dims.as_slice(), &[12]);
+        assert!(!TensorView::vec_view(&arc[..]).is_shared());
+        // Tensor::view marks shared payloads only when another owner
+        // exists (the block-cache pattern).
+        let lone = Tensor::vec(vec![1.0]);
+        assert!(!lone.view().is_shared());
+        let t = Tensor::vec_shared(arc.clone());
+        assert!(t.view().is_shared());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mat_view_size_checked() {
+        let buf = [0.0; 5];
+        TensorView::mat_view(&buf, 2, 3);
     }
 }

@@ -1,9 +1,13 @@
 //! Micro-benchmark harness (offline build — no criterion): warmup +
-//! timed repetitions with summary statistics, and a criterion-like
-//! console report. Used by every target in `rust/benches/`.
+//! timed repetitions with summary statistics, a criterion-like console
+//! report, and a machine-readable [`CiReport`] that merges each bench
+//! target's headline figures (tasks/sec, allocation counts) into one
+//! `BENCH_ci.json` artifact per run — CI uploads it so the perf
+//! trajectory is tracked per commit instead of scraped from logs.
 
 use crate::util::stats::Summary;
 use crate::util::timer::measure;
+use crate::util::Json;
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -75,6 +79,95 @@ pub fn bench_throughput<F: FnMut()>(
     r
 }
 
+/// Machine-readable benchmark figures for one bench target, merged into a
+/// shared JSON artifact. Each bench owns one *section* (keyed by target
+/// name); saving re-reads the file and replaces only its own section, so
+/// `simulator_hotpath` and `coordinator_hotpath` can both contribute to
+/// one `BENCH_ci.json`.
+#[derive(Debug)]
+pub struct CiReport {
+    section: String,
+    metrics: Vec<(String, f64)>,
+}
+
+impl CiReport {
+    /// A report contributing to the section `section`.
+    pub fn new(section: impl Into<String>) -> CiReport {
+        CiReport { section: section.into(), metrics: Vec::new() }
+    }
+
+    /// Record a raw metric (allocation counts, medians in seconds, …).
+    pub fn metric(&mut self, name: impl Into<String>, value: f64) {
+        self.metrics.push((name.into(), value));
+    }
+
+    /// Record a throughput benchmark's items/second (requires the result
+    /// to have been produced by [`bench_throughput`]).
+    pub fn rate(&mut self, r: &BenchResult) {
+        if let Some(items) = r.items {
+            self.metric(format!("{} [items/s]", r.name), items as f64 / r.summary.mean);
+        }
+    }
+
+    /// Merge this section into the JSON artifact at `path` (other
+    /// sections are preserved; a missing or unparsable file is
+    /// recreated).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        let mut sections: Vec<(String, Vec<(String, f64)>)> = Vec::new();
+        if let Ok(src) = std::fs::read_to_string(path) {
+            if let Ok(Json::Obj(obj)) = Json::parse(&src) {
+                for (k, v) in &obj {
+                    if k == &self.section {
+                        continue;
+                    }
+                    if let Json::Obj(metrics) = v {
+                        let ms: Vec<(String, f64)> = metrics
+                            .iter()
+                            .filter_map(|(n, j)| j.as_f64().map(|x| (n.clone(), x)))
+                            .collect();
+                        sections.push((k.clone(), ms));
+                    }
+                }
+            }
+        }
+        sections.push((self.section.clone(), self.metrics.clone()));
+        sections.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut out = String::from("{\n");
+        for (si, (name, metrics)) in sections.iter().enumerate() {
+            let _ = writeln!(out, "  {}: {{", json_str(name));
+            for (mi, (k, v)) in metrics.iter().enumerate() {
+                let sep = if mi + 1 == metrics.len() { "" } else { "," };
+                let _ = writeln!(out, "    {}: {v:e}{sep}", json_str(k));
+            }
+            let sep = if si + 1 == sections.len() { "" } else { "," };
+            let _ = writeln!(out, "  }}{sep}");
+        }
+        out.push_str("}\n");
+        std::fs::write(path, out)
+    }
+}
+
+use std::fmt::Write as _;
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +195,39 @@ mod tests {
         assert!(human_time(2e-3).ends_with("ms"));
         assert!(human_time(2e-6).ends_with("µs"));
         assert!(human_time(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn ci_report_merges_sections() {
+        let path = std::env::temp_dir().join(format!(
+            "bsf_bench_ci_test_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let mut a = CiReport::new("alpha");
+        a.metric("tasks_per_sec", 1.5e6);
+        a.metric("allocs_per_replay", 0.0);
+        a.save(&path).unwrap();
+        let mut b = CiReport::new("beta");
+        b.metric("overhead_sec", 2e-6);
+        b.save(&path).unwrap();
+        // Re-saving a section replaces it without touching the other.
+        let mut a2 = CiReport::new("alpha");
+        a2.metric("tasks_per_sec", 2.5e6);
+        a2.save(&path).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let alpha = parsed.get("alpha").unwrap();
+        assert_eq!(alpha.get("tasks_per_sec").and_then(Json::as_f64), Some(2.5e6));
+        assert!(alpha.get("allocs_per_replay").is_none(), "stale metric survived");
+        let beta = parsed.get("beta").unwrap();
+        assert_eq!(beta.get("overhead_sec").and_then(Json::as_f64), Some(2e-6));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn json_str_escapes() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("x\ny"), "\"x\\ny\"");
     }
 }

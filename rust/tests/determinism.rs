@@ -12,8 +12,8 @@
 //!    replicates it; that must equal running the full `iters` loop.
 
 use bsf::experiments::{
-    analytic_provider, paper_jacobi_params, simulated_curve_threads, simulated_curves,
-    ExperimentCtx, SweepJob,
+    analytic_provider, boundary_row, boundary_rows, paper_gravity_params, paper_jacobi_params,
+    simulated_curve_threads, simulated_curves, BoundarySpec, ExperimentCtx, SweepJob,
 };
 use bsf::simulator::{
     simulate_iteration, simulate_run, AnalyticCost, IterationTemplate, IterationTiming, SimParams,
@@ -152,6 +152,38 @@ fn pooled_multi_sweep_bitwise_equals_sequential_sweeps() {
                 assert_eq!(a.speedup.to_bits(), b.speedup.to_bits(), "threads={threads} K={}", a.k);
             }
         }
+    }
+}
+
+#[test]
+fn pooled_boundary_rows_bitwise_equal_serial_rows() {
+    // The batched boundary comparison (the queue explorer/sqrt_law feed
+    // their cells/sizes through) must reproduce the one-spec-at-a-time
+    // pipeline bit for bit — including across *different applications* in
+    // one pool, since the RNG roots fork in spec order at job
+    // construction, not at execution.
+    let ctx = ExperimentCtx { quick: true, ..Default::default() };
+    let p1 = paper_jacobi_params(1_500).unwrap();
+    let p2 = paper_gravity_params(300).unwrap();
+    let prov1 = analytic_provider(&p1);
+    let prov2 = analytic_provider(&p2);
+    let specs = vec![
+        BoundarySpec { n: 1_500, params: p1, words_down: 1_500, words_up: 1_500, factory: &prov1 },
+        BoundarySpec { n: 300, params: p2, words_down: 3, words_up: 3, factory: &prov2 },
+    ];
+    let pooled = boundary_rows(&ctx, &specs, &mut Rng::new(0xE0));
+    let mut rng = Rng::new(0xE0);
+    let serial: Vec<_> = specs
+        .iter()
+        .map(|s| boundary_row(&ctx, s.n, &s.params, s.words_down, s.words_up, s.factory, &mut rng))
+        .collect();
+    assert_eq!(pooled.len(), serial.len());
+    for (a, b) in pooled.iter().zip(&serial) {
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.k_bsf.to_bits(), b.k_bsf.to_bits(), "n={}", a.n);
+        assert_eq!(a.k_test.to_bits(), b.k_test.to_bits(), "n={}", a.n);
+        assert_eq!(a.peak_speedup.to_bits(), b.peak_speedup.to_bits(), "n={}", a.n);
+        assert_eq!(a.plateau, b.plateau, "n={}", a.n);
     }
 }
 

@@ -12,8 +12,13 @@
 //! * the engine's calendar event queue vs a reference binary-heap
 //!   scheduler on random DAGs (bitwise finish times + per-resource order,
 //!   time ties included);
-//! * collective schedules: full coverage and log-depth for random K.
+//! * collective schedules: full coverage and log-depth for random K;
+//! * the SIMD-dispatched matvec kernels: AVX2 == scalar **bitwise** on
+//!   random shapes (remainder rows/columns included), and the blocked
+//!   `col_block_matvec_acc` equals its per-row scalar composition bitwise
+//!   whichever kernel the process selected.
 
+use bsf::linalg::{kernels, Matrix};
 use bsf::lists::{map_reduce, partition_even, reduce, Add, Monoid, VecAdd};
 use bsf::model::{BsfModel, CostParams};
 use bsf::net::{CollectiveAlgo, CollectiveSchedule};
@@ -221,6 +226,72 @@ fn prop_calendar_queue_matches_reference_heap_on_random_dags() {
         let replay = eng.run_reuse();
         for (w, g) in want_finish.iter().zip(replay) {
             assert_eq!(w.to_bits(), g.to_bits(), "case {case}: replay drift");
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_dispatch_bitwise_identical() {
+    // The AVX2 and scalar kernels perform the same IEEE-754 operation
+    // sequence, so they must agree bit for bit on every input — every
+    // length class mod 4 (vector remainders) appears in the sweep.
+    if !kernels::available(kernels::KernelKind::Avx2) {
+        eprintln!("skipping AVX2 half: unsupported on this host (scalar-only arch)");
+        return;
+    }
+    let mut rng = Rng::new(0x51AD);
+    for case in 0..CASES {
+        let n = rng.below(260) as usize;
+        let mk = |rng: &mut Rng| -> Vec<f64> { (0..n).map(|_| rng.normal() * 3.0).collect() };
+        let r0 = mk(&mut rng);
+        let r1 = mk(&mut rng);
+        let r2 = mk(&mut rng);
+        let r3 = mk(&mut rng);
+        let x = mk(&mut rng);
+        let s = kernels::dot_with(kernels::KernelKind::Scalar, &r0, &x);
+        let v = kernels::dot_with(kernels::KernelKind::Avx2, &r0, &x);
+        assert_eq!(s.to_bits(), v.to_bits(), "case {case}: dot n={n} ({s} vs {v})");
+        let a = kernels::dot4_with(kernels::KernelKind::Scalar, &r0, &r1, &r2, &r3, &x);
+        let b = kernels::dot4_with(kernels::KernelKind::Avx2, &r0, &r1, &r2, &r3, &x);
+        for (i, (sa, sb)) in [(a.0, b.0), (a.1, b.1), (a.2, b.2), (a.3, b.3)]
+            .iter()
+            .enumerate()
+        {
+            assert_eq!(sa.to_bits(), sb.to_bits(), "case {case}: dot4 row {i} n={n}");
+        }
+    }
+}
+
+#[test]
+fn prop_blocked_matvec_equals_scalar_composition_bitwise() {
+    // Whatever kernel `BSF_KERNEL`/auto-detection selected for this
+    // process, the blocked column-range matvec must equal the per-row
+    // scalar dot composition bitwise — random shapes including remainder
+    // rows (rows % 4) and remainder columns (width % 4), partial column
+    // ranges, and pre-populated accumulators.
+    let mut rng = Rng::new(0xB10C);
+    for case in 0..CASES {
+        let rows = 1 + rng.below(40) as usize;
+        let cols = rng.below(65) as usize;
+        let m = Matrix::from_fn(rows, cols, |i, j| {
+            (((i * 37 + j * 11 + case) % 29) as f64) * 0.21 - 3.0
+        });
+        let x: Vec<f64> = (0..cols).map(|_| rng.normal()).collect();
+        let j0 = rng.below(cols as u64 + 1) as usize;
+        let j1 = j0 + rng.below((cols - j0) as u64 + 1) as usize;
+        let mut y: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        let y0 = y.clone();
+        m.col_block_matvec_acc(j0, j1, &x[j0..j1], &mut y);
+        for i in 0..rows {
+            let want = y0[i]
+                + kernels::dot_with(kernels::KernelKind::Scalar, &m.row(i)[j0..j1], &x[j0..j1]);
+            assert_eq!(
+                want.to_bits(),
+                y[i].to_bits(),
+                "case {case}: row {i} rows={rows} cols={cols} j0={j0} j1={j1} \
+                 (active kernel {:?})",
+                kernels::active()
+            );
         }
     }
 }
