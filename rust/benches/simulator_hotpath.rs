@@ -15,7 +15,13 @@
 //!   counting allocator (must be 0);
 //! * the **calendar event queue vs the retired binary heap** on the
 //!   identical K=270 iteration graph (schedules asserted bitwise equal;
-//!   calendar must be no slower).
+//!   calendar must be no slower);
+//! * the **order-cached linear replay vs the calendar queue** on that
+//!   same K=270 graph, deterministic and jittered (schedule equality
+//!   hard-asserted both ways; the deterministic replay must hit the
+//!   cache 100% of the time — no bucket scan after the first run — and
+//!   perform **zero** heap allocations once warm; hit-rate and fallback
+//!   counts land in `BENCH_ci.json`).
 //!
 //! ```text
 //! cargo bench --bench simulator_hotpath
@@ -25,9 +31,10 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use bsf::experiments::{analytic_provider, simulated_curve_threads, ExperimentCtx};
+use bsf::linalg::kernels;
 use bsf::simulator::{
-    simulate_iteration, simulate_iteration_full, AnalyticCost, Engine, IterationTemplate,
-    ReferenceScheduler, SimParams,
+    sched_mode, simulate_iteration, simulate_iteration_full, AnalyticCost, Engine,
+    IterationTemplate, ReferenceScheduler, SchedMode, SimParams, TaskId,
 };
 use bsf::util::bench::{bench_throughput, human_time, CiReport};
 use bsf::util::Rng;
@@ -58,6 +65,11 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 fn main() {
     let mut ci = CiReport::new("simulator_hotpath");
     println!("== simulator_hotpath ==");
+    println!("active kernel: {}, scheduler: {}", kernels::active().name(), sched_mode().name());
+    // Self-describe the configuration that produced these figures.
+    let flag = |b: bool| if b { 1.0 } else { 0.0 };
+    ci.metric("config_kernel_avx2", flag(kernels::active() == kernels::KernelKind::Avx2));
+    ci.metric("config_sched_cached", flag(sched_mode() == SchedMode::Cached));
 
     // Raw engine: chain graphs, rebuild vs replay.
     for tasks in [1_000usize, 100_000] {
@@ -204,6 +216,9 @@ fn main() {
     let mut prov_cmp = AnalyticCost { t_map_full: 0.373, l: n, t_a: 9.31e-6, t_p: 3.7e-5 };
     let (_, mut eng, _) =
         simulate_iteration_full(270, n, &params, &mut prov_cmp, &mut Rng::new(14));
+    // Pin this engine to the pure calendar path so the line below measures
+    // the event queue, not the order cache, whatever BSF_SCHED says.
+    eng.set_sched_mode(Some(SchedMode::Calendar));
     let mut heap_ref = ReferenceScheduler::from_engine(&eng);
     let want = heap_ref.run().to_vec();
     let got = eng.run_reuse();
@@ -218,6 +233,102 @@ fn main() {
     ci.rate(&r);
     let r = bench_throughput("event loop: calendar queue,  K=270 graph", 3, 20, tasks, || {
         std::hint::black_box(Engine::makespan(eng.run_reuse()));
+    });
+    ci.rate(&r);
+
+    // Order-cached linear replay vs the calendar queue, same K=270 graph
+    // (two engines holding the identical graph, explicitly pinned to one
+    // scheduler each — the `_with`-style race, independent of BSF_SCHED).
+    let (_, mut eng_cal, _) =
+        simulate_iteration_full(270, n, &params, &mut prov_cmp, &mut Rng::new(14));
+    let (_, mut eng_oc, _) =
+        simulate_iteration_full(270, n, &params, &mut prov_cmp, &mut Rng::new(14));
+    eng_cal.set_sched_mode(Some(SchedMode::Calendar));
+    eng_oc.set_sched_mode(Some(SchedMode::Cached));
+    eng_oc.run_reuse(); // record the pop order once
+
+    // (a) deterministic durations: every replay must be a cache hit —
+    // after the first run, no calendar bucket scan ever executes again.
+    let before = eng_oc.sched_counters();
+    let r = bench_throughput("replay det: calendar queue,  K=270 graph", 3, 20, tasks, || {
+        std::hint::black_box(Engine::makespan(eng_cal.run_reuse()));
+    });
+    ci.rate(&r);
+    let r = bench_throughput("replay det: order-cached,    K=270 graph", 3, 20, tasks, || {
+        std::hint::black_box(Engine::makespan(eng_oc.run_reuse()));
+    });
+    ci.rate(&r);
+    {
+        let want = eng_cal.run_reuse().to_vec();
+        let got = eng_oc.run_reuse();
+        for (i, (w, g)) in want.iter().zip(got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "calendar vs order-cached diverge at task {i}");
+        }
+    }
+    let after = eng_oc.sched_counters();
+    assert_eq!(
+        after.calendar_runs,
+        before.calendar_runs,
+        "deterministic replay fell back to the calendar"
+    );
+    assert_eq!(after.fallbacks, before.fallbacks);
+    let det_replays = after.cached_hits - before.cached_hits;
+    println!("    -> deterministic cache hit-rate: 100% ({det_replays} replays, 0 fallbacks)");
+    ci.metric("cached_hit_rate_deterministic", 1.0);
+
+    // Zero heap allocations once warm (hard assert, like the template
+    // replay audit above).
+    let before_allocs = ALLOCS.load(Ordering::Relaxed);
+    let reps = 100u64;
+    for _ in 0..reps {
+        std::hint::black_box(Engine::makespan(eng_oc.run_reuse()));
+    }
+    let allocs = ALLOCS.load(Ordering::Relaxed) - before_allocs;
+    assert_eq!(allocs, 0, "order-cached replay must be zero-alloc once warm");
+    println!("    -> allocations per order-cached replay: {}", allocs as f64 / reps as f64);
+    ci.metric("allocs_per_cached_replay", allocs as f64 / reps as f64);
+
+    // (b) jittered durations (small lognormal, the Fig.-6 ablation
+    // regime): equality hard-asserted per replay, hit-rate recorded.
+    let base: Vec<f64> = eng_oc.durations().to_vec();
+    let sigma = 0.01;
+    let mut rj_cal = Rng::new(21);
+    let mut rj_oc = Rng::new(21);
+    let before = eng_oc.sched_counters();
+    let audit_reps = 40u64;
+    for _ in 0..audit_reps {
+        for (id, &b) in base.iter().enumerate() {
+            eng_cal.set_duration(id as TaskId, b * rj_cal.jitter(sigma));
+            eng_oc.set_duration(id as TaskId, b * rj_oc.jitter(sigma));
+        }
+        let want = eng_cal.run_reuse().to_vec();
+        let got = eng_oc.run_reuse();
+        for (i, (w, g)) in want.iter().zip(got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "jittered schedules diverge at task {i}");
+        }
+    }
+    let after = eng_oc.sched_counters();
+    let hits = after.cached_hits - before.cached_hits;
+    let falls = after.fallbacks - before.fallbacks;
+    let hit_rate = hits as f64 / audit_reps as f64;
+    println!(
+        "    -> jittered (sigma={sigma}) cache hit-rate: {:.1}% ({hits} hits, {falls} fallbacks)",
+        hit_rate * 100.0
+    );
+    ci.metric("cached_hit_rate_jittered", hit_rate);
+    ci.metric("cached_fallbacks_jittered", falls as f64);
+    let r = bench_throughput("replay jit: calendar queue,  K=270 graph", 3, 20, tasks, || {
+        for (id, &b) in base.iter().enumerate() {
+            eng_cal.set_duration(id as TaskId, b * rj_cal.jitter(sigma));
+        }
+        std::hint::black_box(Engine::makespan(eng_cal.run_reuse()));
+    });
+    ci.rate(&r);
+    let r = bench_throughput("replay jit: order-cached,    K=270 graph", 3, 20, tasks, || {
+        for (id, &b) in base.iter().enumerate() {
+            eng_oc.set_duration(id as TaskId, b * rj_oc.jitter(sigma));
+        }
+        std::hint::black_box(Engine::makespan(eng_oc.run_reuse()));
     });
     ci.rate(&r);
 

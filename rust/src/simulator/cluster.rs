@@ -24,10 +24,16 @@
 //! therefore builds an [`IterationTemplate`] once and
 //! [`IterationTemplate::replay`]s it per iteration: the graph, CSR edges
 //! and engine scratch are all reused, so a replay performs zero heap
-//! allocations. When the configuration is fully deterministic (zero jitter
-//! and a [`CostProvider::is_deterministic`] provider) every iteration is
-//! identical, and [`simulate_run`] simulates one iteration and replicates
-//! the timing — a Fig.-6-style sweep then costs one engine run per K.
+//! allocations. Durations are re-derived from a kind-grouped SoA table
+//! (tag column in task-id order + dense per-kind payload columns), and
+//! the engine serves repeat replays through its order-cached linear path
+//! when the pop order is unchanged — no event queue at all (see
+//! `engine.rs`; [`IterationTemplate::reset_to`] invalidates the cache
+//! with the graph). When the configuration is fully deterministic (zero
+//! jitter and a [`CostProvider::is_deterministic`] provider) every
+//! iteration is identical, and [`simulate_run`] simulates one iteration
+//! and replicates the timing — a Fig.-6-style sweep then costs one
+//! engine run per K.
 
 use crate::net::{CollectiveAlgo, CollectiveSchedule, NetworkParams};
 use crate::simulator::engine::{Engine, TaskId};
@@ -227,6 +233,72 @@ enum DurKind {
     Post,
 }
 
+/// One-byte duration-kind tag, in task-id order (see [`DurTable`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+enum DurTag {
+    Fixed,
+    Comm,
+    MapFold,
+    FoldN,
+    Post,
+}
+
+/// Kind-grouped SoA duration table: one 1-byte tag per task in task-id
+/// order plus dense per-kind payload columns (`Comm` bases, `MapFold`
+/// worker/chunk pairs, `FoldN` counts, `Fixed` values), each filled in
+/// task-id order within its kind. The replay duration-refresh loop walks
+/// the tag column once, pulling each kind's payload from its own cursor —
+/// so the provider/rng **call sequence stays exactly task-id order** (the
+/// bitwise determinism contract in PERF.md depends on draws staying in
+/// task-id order) while the hot loop reads homogeneous dense columns
+/// instead of a 24-byte tagged union per task.
+#[derive(Debug, Default)]
+struct DurTable {
+    tag: Vec<DurTag>,
+    fixed: Vec<f64>,
+    comm_base: Vec<f64>,
+    mf_worker: Vec<u32>,
+    mf_chunk: Vec<u32>,
+    fold_n: Vec<u32>,
+}
+
+impl DurTable {
+    /// Drop all entries, keeping every column's capacity (rebuilds reuse).
+    fn clear(&mut self) {
+        self.tag.clear();
+        self.fixed.clear();
+        self.comm_base.clear();
+        self.mf_worker.clear();
+        self.mf_chunk.clear();
+        self.fold_n.clear();
+    }
+
+    /// Append the next task's (task-id order) duration rule.
+    fn push(&mut self, kind: DurKind) {
+        match kind {
+            DurKind::Fixed(v) => {
+                self.tag.push(DurTag::Fixed);
+                self.fixed.push(v);
+            }
+            DurKind::Comm(base) => {
+                self.tag.push(DurTag::Comm);
+                self.comm_base.push(base);
+            }
+            DurKind::MapFold { worker, chunk } => {
+                self.tag.push(DurTag::MapFold);
+                self.mf_worker.push(worker);
+                self.mf_chunk.push(chunk);
+            }
+            DurKind::FoldN(n) => {
+                self.tag.push(DurTag::FoldN);
+                self.fold_n.push(n);
+            }
+            DurKind::Post => self.tag.push(DurTag::Post),
+        }
+    }
+}
+
 /// A reusable Algorithm-2 iteration for fixed `(K, l, params)`: the task
 /// graph is built once, each [`IterationTemplate::replay`] refreshes the
 /// durations (provider samples × jitter, drawn in task-id order) and
@@ -236,7 +308,7 @@ enum DurKind {
 /// thread's share of the (experiment × size × K) work queue.
 pub struct IterationTemplate {
     eng: Engine,
-    durs: Vec<DurKind>,
+    durs: DurTable,
     jitter_comp: f64,
     jitter_comm: f64,
     /// Last broadcast-completion task per worker (empty entries skipped).
@@ -254,7 +326,7 @@ pub struct IterationTemplate {
 /// template's engine and duration table so rebuilds reuse their capacity.
 struct Build<'p> {
     eng: &'p mut Engine,
-    durs: &'p mut Vec<DurKind>,
+    durs: &'p mut DurTable,
     params: &'p SimParams,
 }
 
@@ -412,7 +484,7 @@ impl IterationTemplate {
     pub fn new(k: usize, l: usize, params: &SimParams) -> IterationTemplate {
         let mut tmpl = IterationTemplate {
             eng: Engine::new(),
-            durs: Vec::new(),
+            durs: DurTable::default(),
             jitter_comp: 0.0,
             jitter_comm: 0.0,
             bcast_tasks: Vec::new(),
@@ -425,8 +497,9 @@ impl IterationTemplate {
     }
 
     /// Rebuild the template for a new `(k, l, params)` point **in place**,
-    /// reusing the engine (graph + scratch capacity, via [`Engine::reset`])
-    /// and every template buffer. Produces a graph bitwise identical to a
+    /// reusing the engine (graph + scratch capacity, via [`Engine::reset`],
+    /// which also invalidates the order cache along with the graph) and
+    /// every template buffer. Produces a graph bitwise identical to a
     /// fresh [`IterationTemplate::new`] — pinned by the module tests — so
     /// pooled sweep workers can hold one template for their whole queue.
     pub fn reset_to(&mut self, k: usize, l: usize, params: &SimParams) {
@@ -564,22 +637,40 @@ impl IterationTemplate {
 
     /// Simulate one iteration: refresh every task's duration (provider
     /// samples and jitter draws, in task-id order — deterministic for a
-    /// given provider/rng state) and re-execute the graph in place.
+    /// given provider/rng state) and re-execute the graph in place. The
+    /// refresh is one pass over the [`DurTable`] tag column with per-kind
+    /// payload cursors; the execution dispatches through the engine's
+    /// order cache (deterministic configs validate always, jittered
+    /// configs almost always — stale orders fall back to the calendar,
+    /// bitwise-identically).
     pub fn replay(&mut self, provider: &mut dyn CostProvider, rng: &mut Rng) -> IterationTiming {
-        for (id, kind) in self.durs.iter().enumerate() {
-            let d = match *kind {
-                DurKind::Fixed(v) => v,
-                DurKind::Comm(base) => base * rng.jitter(self.jitter_comm),
-                DurKind::MapFold { worker, chunk } => {
-                    let map_t = provider.map_time(worker as usize, chunk as usize);
-                    let folds =
-                        (chunk as usize).saturating_sub(1) as f64 * provider.combine_time();
+        let (mut fx, mut cm, mut mf, mut fo) = (0usize, 0usize, 0usize, 0usize);
+        for (id, &tag) in self.durs.tag.iter().enumerate() {
+            let d = match tag {
+                DurTag::Fixed => {
+                    let v = self.durs.fixed[fx];
+                    fx += 1;
+                    v
+                }
+                DurTag::Comm => {
+                    let base = self.durs.comm_base[cm];
+                    cm += 1;
+                    base * rng.jitter(self.jitter_comm)
+                }
+                DurTag::MapFold => {
+                    let worker = self.durs.mf_worker[mf] as usize;
+                    let chunk = self.durs.mf_chunk[mf] as usize;
+                    mf += 1;
+                    let map_t = provider.map_time(worker, chunk);
+                    let folds = chunk.saturating_sub(1) as f64 * provider.combine_time();
                     (map_t + folds) * rng.jitter(self.jitter_comp)
                 }
-                DurKind::FoldN(c) => {
+                DurTag::FoldN => {
+                    let c = self.durs.fold_n[fo];
+                    fo += 1;
                     c as f64 * provider.combine_time() * rng.jitter(self.jitter_comp)
                 }
-                DurKind::Post => provider.post_time() * rng.jitter(self.jitter_comp),
+                DurTag::Post => provider.post_time() * rng.jitter(self.jitter_comp),
             };
             self.eng.set_duration(id as TaskId, d);
         }

@@ -28,6 +28,48 @@
 //! pinned by `rust/tests/determinism.rs` and the random-DAG property test
 //! in `rust/tests/properties.rs`, which compares against a reference heap
 //! implementation including time ties.
+//!
+//! ## Order-cached linear replay
+//!
+//! A sweep replays one graph thousands of times with slightly different
+//! durations, and list scheduling almost never changes its pop order
+//! under small perturbations. The engine therefore retains the pop order
+//! of the last full calendar run as a permutation; when the order cache
+//! is valid, [`Engine::run_reuse`] executes a single linear pass over it
+//! (`start = max(ready_at, resource_free)`, successors' `ready_at`
+//! updated in place — no queue, no bucket scans) guarded by an exact
+//! O(T) **validity check**: the sequence `(ready_at_at_pop, id)` along
+//! the cached permutation must be lexicographically *strictly*
+//! increasing. Because predecessors precede successors in any recorded
+//! pop order, every `ready_at` is final when its task is reached, and a
+//! strictly increasing sequence means each task is the unique
+//! `(time, id)` minimum of the event queue at its turn — i.e. the
+//! calendar/heap would have popped exactly this order, so the linear
+//! pass reproduces the calendar schedule **bitwise by construction**.
+//! On violation the pass aborts and a full calendar run executes,
+//! refreshing the cache — results stay bitwise identical to
+//! [`ReferenceScheduler`] in both branches (the check is conservative:
+//! it may reject a still-valid order in exotic zero-duration tie cases,
+//! which only costs a fallback, never correctness).
+//!
+//! Dispatch mirrors `BSF_KERNEL`: `BSF_SCHED=calendar|cached` overrides
+//! **once per process** (unset = `cached`, the auto default; any other
+//! value panics), read by [`sched_mode`]. [`Engine::set_sched_mode`] is
+//! the explicit per-instance override (like `kernels::dot_with`) used by
+//! the test suites and `simulator_hotpath` to race both paths inside one
+//! process. Cache hits/fallbacks are counted per engine
+//! ([`Engine::sched_counters`]) and land in `BENCH_ci.json`.
+//!
+//! ## Adaptive calendar width
+//!
+//! A fallback calendar run tracks its bucket min-scan lengths (mean and
+//! max) and overflow rebases; when occupancy sits far from the O(√R)
+//! sizing target, the next `Calendar::prime` applies a corrected
+//! width à la Brown's calendar queue (`Calendar::adapt`). Pop order is
+//! width-independent — every bucket holds a time-disjoint slice and the
+//! min-scan returns the global `(time, id)` minimum for any width — so
+//! resizing is bitwise-neutral, pinned by the reference-heap property
+//! test and the `adaptive_resize_is_bitwise_neutral` unit test.
 
 /// Identifier of a task within one [`Engine`] run.
 pub type TaskId = u32;
@@ -41,6 +83,63 @@ pub struct TaskSpec {
     pub resource: u32,
     /// Duration in seconds.
     pub duration: f64,
+}
+
+/// Which replay scheduler [`Engine::run_reuse`] uses (see the module docs'
+/// "Order-cached linear replay" section).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Always run the full calendar event queue (the reference hot path).
+    Calendar,
+    /// Replay the cached pop order linearly when valid; fall back to the
+    /// calendar (refreshing the cache) when the validity check rejects.
+    Cached,
+}
+
+impl SchedMode {
+    /// Human-readable name (reports, BENCH_ci.json).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedMode::Calendar => "calendar",
+            SchedMode::Cached => "cached",
+        }
+    }
+}
+
+static ACTIVE_SCHED: std::sync::OnceLock<SchedMode> = std::sync::OnceLock::new();
+
+/// The scheduler selected for this process (reads `BSF_SCHED` once).
+/// Engines without a [`Engine::set_sched_mode`] override dispatch through
+/// this, so CI can run the whole suite under either scheduler.
+pub fn sched_mode() -> SchedMode {
+    *ACTIVE_SCHED.get_or_init(|| select_sched(std::env::var("BSF_SCHED").ok().as_deref()))
+}
+
+/// Pure selection logic (unit-tested separately from process env state).
+/// Requesting anything but `calendar`/`cached` panics loudly rather than
+/// silently falling back — an override that does nothing would invalidate
+/// any benchmark run on top of it.
+fn select_sched(request: Option<&str>) -> SchedMode {
+    match request {
+        Some("calendar") => SchedMode::Calendar,
+        Some("cached") => SchedMode::Cached,
+        Some(other) => panic!("BSF_SCHED must be 'calendar' or 'cached', got '{other}'"),
+        None => SchedMode::Cached,
+    }
+}
+
+/// Scheduler-path counters for one [`Engine`] (cache telemetry — the
+/// benches record hit-rate and fallback counts into `BENCH_ci.json`).
+/// Counters accumulate for the life of the engine, across
+/// [`Engine::reset`] calls.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SchedCounters {
+    /// Replays served entirely by the order-cached linear pass.
+    pub cached_hits: u64,
+    /// Cached replays rejected by the validity check (stale pop order).
+    pub fallbacks: u64,
+    /// Full calendar runs (first runs, forced-calendar runs, fallbacks).
+    pub calendar_runs: u64,
 }
 
 /// Sentinel for "no entry" in the calendar's intrusive linked lists.
@@ -62,7 +161,7 @@ const NONE: u32 = u32::MAX;
 /// global minimum. Worst case (all events tied in one bucket) degrades to
 /// `O(queue²)`; iteration graphs keep bucket occupancy near the
 /// [`Calendar::prime`] sizing target.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct Calendar {
     /// Head of each bucket's list (`NONE` = empty).
     heads: Vec<u32>,
@@ -78,6 +177,38 @@ struct Calendar {
     overflow: u32,
     /// Queued events (buckets + overflow).
     len: usize,
+    /// Adaptive width correction carried between runs (see
+    /// [`Calendar::adapt`]); 1.0 = the static heuristic of
+    /// [`Calendar::prime`] unchanged.
+    width_scale: f64,
+    // --- per-run occupancy stats, reset by `prime` ---
+    /// Total elements examined across all bucket min-scans.
+    scan_len: u64,
+    /// Number of pops that scanned a bucket.
+    scan_pops: u64,
+    /// Longest single bucket min-scan.
+    max_scan: u32,
+    /// Overflow redistributions ([`Calendar::rebase`] calls).
+    rebases: u32,
+}
+
+impl Default for Calendar {
+    fn default() -> Calendar {
+        Calendar {
+            heads: Vec::new(),
+            next: Vec::new(),
+            base: 0.0,
+            width: 1.0,
+            cur: 0,
+            overflow: NONE,
+            len: 0,
+            width_scale: 1.0,
+            scan_len: 0,
+            scan_pops: 0,
+            max_scan: 0,
+            rebases: 0,
+        }
+    }
 }
 
 impl Calendar {
@@ -94,19 +225,27 @@ impl Calendar {
         self.heads.resize(nb, NONE);
         self.next.clear();
         self.next.resize(n, NONE);
-        let w = total / (n.max(1) as f64 * (max_res.max(1) as f64).sqrt());
+        let w = total * self.width_scale / (n.max(1) as f64 * (max_res.max(1) as f64).sqrt());
         self.width = if w.is_finite() && w > 0.0 { w } else { 1.0 };
         self.base = 0.0;
         self.cur = 0;
         self.overflow = NONE;
         self.len = 0;
+        self.scan_len = 0;
+        self.scan_pops = 0;
+        self.max_scan = 0;
+        self.rebases = 0;
     }
 
     /// Insert task `id` ready at time `t` (`t` must be ≥ the time of the
     /// most recent pop — guaranteed because successor ready times are
-    /// finish times of already-popped tasks).
+    /// finish times of already-popped tasks). Finiteness is debug-asserted
+    /// where durations are set and here (this is the hottest store in the
+    /// event loop); in release builds a non-finite time parks on the
+    /// overflow list and trips the hard assert in the cold
+    /// [`Calendar::rebase`] path instead of spinning.
     fn push(&mut self, t: f64, id: TaskId) {
-        assert!(t.is_finite(), "non-finite task time");
+        debug_assert!(t.is_finite(), "non-finite task time");
         let d = (t - self.base) / self.width;
         if d < self.heads.len() as f64 {
             let b = d as usize;
@@ -134,20 +273,29 @@ impl Calendar {
                 continue;
             }
             // Linear min-scan of the bucket; ties break on the smaller id,
-            // matching the retired heap's ordering bit for bit.
+            // matching the retired heap's ordering bit for bit. The running
+            // minimum's time is kept in a register instead of re-loaded
+            // from `time_of` per comparison.
             let mut best = head;
+            let mut best_t = time_of[head as usize];
             let mut best_prev = NONE;
             let mut prev = head;
             let mut at = self.next[head as usize];
+            let mut scanned = 1u32;
             while at != NONE {
-                let (t, bt) = (time_of[at as usize], time_of[best as usize]);
-                if t < bt || (t == bt && at < best) {
+                let t = time_of[at as usize];
+                if t < best_t || (t == best_t && at < best) {
                     best = at;
+                    best_t = t;
                     best_prev = prev;
                 }
                 prev = at;
                 at = self.next[at as usize];
+                scanned += 1;
             }
+            self.scan_len += scanned as u64;
+            self.scan_pops += 1;
+            self.max_scan = self.max_scan.max(scanned);
             if best == head {
                 self.heads[self.cur] = self.next[best as usize];
             } else {
@@ -163,12 +311,18 @@ impl Calendar {
     /// queued events live on the overflow list.
     fn rebase(&mut self, time_of: &[f64]) {
         debug_assert!(self.overflow != NONE, "rebase with events still queued");
+        self.rebases += 1;
         let mut t_min = f64::INFINITY;
         let mut at = self.overflow;
         while at != NONE {
             t_min = t_min.min(time_of[at as usize]);
             at = self.next[at as usize];
         }
+        // Hard assert (cold path — once per window, never per event): a
+        // non-finite event time would otherwise cycle on the overflow
+        // list forever. This is where release builds catch what the hot
+        // `push` only debug-asserts.
+        assert!(t_min.is_finite(), "non-finite task time");
         self.base = t_min;
         self.cur = 0;
         let nb = self.heads.len() as f64;
@@ -186,6 +340,32 @@ impl Calendar {
                 self.overflow = at;
             }
             at = nx;
+        }
+    }
+
+    /// Adaptive width correction à la Brown's calendar queue, applied
+    /// after a completed run: when the observed bucket min-scan lengths
+    /// sit far above the O(√R) occupancy the static [`Calendar::prime`]
+    /// heuristic targets, narrow the buckets for the next run; when a run
+    /// spent its time redistributing the overflow list instead, widen
+    /// them. Only `width_scale` changes — pop order is width-independent
+    /// (each bucket holds a time-disjoint slice and the min-scan returns
+    /// the global `(time, id)` minimum for any width), so this is
+    /// bitwise-neutral, pinned by the reference-heap property test.
+    fn adapt(&mut self, max_res: usize) {
+        if self.scan_pops == 0 {
+            return;
+        }
+        let target = (max_res.max(1) as f64).sqrt().max(1.0);
+        let mean = self.scan_len as f64 / self.scan_pops as f64;
+        // Blend mean and max so one pathological bucket (a tie cluster)
+        // also registers as crowding.
+        let crowd = mean.max(self.max_scan as f64 / 8.0);
+        if crowd > 4.0 * target {
+            let shrink = (target / crowd).max(1.0 / 64.0);
+            self.width_scale = (self.width_scale * shrink).max(1e-3);
+        } else if f64::from(self.rebases) > 8.0 * target && mean < 1.0 + target / 4.0 {
+            self.width_scale = (self.width_scale * 4.0).min(1e3);
         }
     }
 }
@@ -223,6 +403,16 @@ pub struct Engine {
     finish: Vec<f64>,
     resource_free: Vec<f64>,
     queue: Calendar,
+    // --- order cache (see module docs "Order-cached linear replay") ---
+    /// Pop order of the last recorded calendar run (a permutation of all
+    /// task ids; predecessors precede successors).
+    order: Vec<TaskId>,
+    /// True while `order` matches the current graph structure.
+    order_ok: bool,
+    /// Per-instance scheduler override; `None` defers to [`sched_mode`].
+    mode_override: Option<SchedMode>,
+    /// Cache hit/fallback telemetry.
+    stats: SchedCounters,
 }
 
 impl Engine {
@@ -238,7 +428,7 @@ impl Engine {
 
     /// Add a labelled task (label shows up in exported traces).
     pub fn task_labeled(&mut self, resource: u32, duration: f64, label: &'static str) -> TaskId {
-        debug_assert!(duration >= 0.0, "negative duration");
+        debug_assert!(duration.is_finite() && duration >= 0.0, "negative or non-finite duration");
         let id = self.resources.len() as TaskId;
         self.resources.push(resource);
         self.durations.push(duration);
@@ -294,10 +484,26 @@ impl Engine {
 
     /// Overwrite a task's duration (graph structure unchanged) — the replay
     /// API: build the graph once, then per iteration set new durations and
-    /// call [`Engine::run_reuse`].
+    /// call [`Engine::run_reuse`]. The order cache survives (the validity
+    /// check, not the setter, decides whether the new durations preserve
+    /// the pop order).
     pub fn set_duration(&mut self, id: TaskId, duration: f64) {
-        debug_assert!(duration >= 0.0, "negative duration");
+        debug_assert!(duration.is_finite() && duration >= 0.0, "negative or non-finite duration");
         self.durations[id as usize] = duration;
+    }
+
+    /// Per-instance scheduler override (`None` = the process-wide
+    /// [`sched_mode`]). The explicit-mode hook, mirroring
+    /// `kernels::dot_with`: the test suites and `simulator_hotpath` use it
+    /// to race the calendar and order-cached paths inside one process.
+    pub fn set_sched_mode(&mut self, mode: Option<SchedMode>) {
+        self.mode_override = mode;
+    }
+
+    /// Order-cache telemetry (hits/fallbacks/calendar runs) accumulated
+    /// over this engine's lifetime.
+    pub fn sched_counters(&self) -> SchedCounters {
+        self.stats
     }
 
     /// Clear the graph (tasks, labels, edges) while keeping the capacity of
@@ -312,6 +518,7 @@ impl Engine {
         self.indegree.clear();
         self.csr_valid = false;
         self.max_res = 0;
+        self.order_ok = false;
     }
 
     /// Per-task finish times of the most recent run (empty before any run).
@@ -341,6 +548,9 @@ impl Engine {
             cursor[f as usize] += 1;
         }
         self.csr_valid = true;
+        // The graph changed structurally — the cached pop order is for a
+        // different task/edge set and must never be consulted again.
+        self.order_ok = false;
     }
 
     /// Execute the graph; returns per-task finish times as a fresh vector.
@@ -355,10 +565,80 @@ impl Engine {
     /// Execute the graph into the engine's reusable scratch buffers and
     /// return the per-task finish times as a borrowed slice. Zero heap
     /// allocations once the scratch has grown to the graph's size.
+    ///
+    /// Under [`SchedMode::Cached`] (the default) a valid order cache is
+    /// replayed linearly — no event queue at all; the calendar runs on
+    /// the first execution, after graph changes, and when the validity
+    /// check rejects a stale order. Both branches produce the identical
+    /// bitwise schedule (see the module docs).
     pub fn run_reuse(&mut self) -> &[f64] {
         if !self.csr_valid {
             self.finalize();
         }
+        let want_cached = self.mode_override.unwrap_or_else(sched_mode) == SchedMode::Cached;
+        if want_cached && self.order_ok {
+            if self.replay_cached() {
+                self.stats.cached_hits += 1;
+                return &self.finish;
+            }
+            self.stats.fallbacks += 1;
+            self.order_ok = false;
+        }
+        self.run_calendar(want_cached)
+    }
+
+    /// Linear pass over the cached pop order. Returns `false` (leaving
+    /// scratch in an undefined state for the calendar fallback to
+    /// reinitialise) as soon as the `(ready_at, id)` sequence fails to be
+    /// lexicographically strictly increasing; returns `true` with `finish`
+    /// holding the exact calendar schedule otherwise. Zero allocations.
+    fn replay_cached(&mut self) -> bool {
+        let n = self.resources.len();
+        debug_assert_eq!(self.order.len(), n, "order cache out of sync with graph");
+        self.ready_at.clear();
+        self.ready_at.resize(n, 0.0);
+        self.finish.clear();
+        self.finish.resize(n, f64::NAN);
+        self.resource_free.clear();
+        self.resource_free.resize(self.max_res, 0.0);
+        let mut prev_t = f64::NEG_INFINITY;
+        let mut prev_id: TaskId = 0;
+        for &id in &self.order {
+            let i = id as usize;
+            // Predecessors precede `id` in any recorded pop order, so
+            // `ready_at[i]` is final here — the value the calendar would
+            // have popped this task at.
+            let ready = self.ready_at[i];
+            // Strictly increasing (ready, id), or the cache is stale. NaN
+            // ready times (only reachable via unchecked non-finite
+            // durations in release builds) compare false and reject.
+            let ok = ready > prev_t || (ready == prev_t && id > prev_id);
+            if !ok {
+                return false;
+            }
+            prev_t = ready;
+            prev_id = id;
+            let res = self.resources[i] as usize;
+            // Same float ops as the calendar loop, for bitwise identity.
+            let start = ready.max(self.resource_free[res]);
+            let end = start + self.durations[i];
+            self.resource_free[res] = end;
+            self.finish[i] = end;
+            let lo = self.csr_off[i];
+            let hi = self.csr_off[i + 1];
+            for e in lo..hi {
+                let succ = self.csr_dst[e] as usize;
+                if self.ready_at[succ] < end {
+                    self.ready_at[succ] = end;
+                }
+            }
+        }
+        true
+    }
+
+    /// Full calendar-queue run. With `record`, the pop order is captured
+    /// into the order cache for subsequent linear replays.
+    fn run_calendar(&mut self, record: bool) -> &[f64] {
         let n = self.resources.len();
         self.pending.clear();
         self.pending.extend_from_slice(&self.indegree);
@@ -368,6 +648,9 @@ impl Engine {
         self.finish.resize(n, f64::NAN);
         self.resource_free.clear();
         self.resource_free.resize(self.max_res, 0.0);
+        if record {
+            self.order.clear();
+        }
         // Total work bounds every event time (each finish is a sum of a
         // chain of distinct task durations), so it sizes the calendar.
         let total: f64 = self.durations.iter().sum();
@@ -380,6 +663,9 @@ impl Engine {
         let mut done = 0usize;
         while let Some(id) = self.queue.pop(&self.ready_at) {
             let i = id as usize;
+            if record {
+                self.order.push(id);
+            }
             let res = self.resources[i] as usize;
             let start = self.ready_at[i].max(self.resource_free[res]);
             let end = start + self.durations[i];
@@ -400,6 +686,11 @@ impl Engine {
             }
         }
         assert_eq!(done, n, "cyclic dependency graph: {} tasks never ran", n - done);
+        self.queue.adapt(self.max_res);
+        self.stats.calendar_runs += 1;
+        if record {
+            self.order_ok = true;
+        }
         &self.finish
     }
 
@@ -748,6 +1039,174 @@ mod tests {
         e.dep(b, c);
         let f = e.run();
         assert_eq!(f[c as usize], 3.0);
+    }
+
+    #[test]
+    fn select_sched_parses_overrides() {
+        assert_eq!(select_sched(Some("calendar")), SchedMode::Calendar);
+        assert_eq!(select_sched(Some("cached")), SchedMode::Cached);
+        assert_eq!(select_sched(None), SchedMode::Cached);
+        assert_eq!(SchedMode::Calendar.name(), "calendar");
+        assert_eq!(SchedMode::Cached.name(), "cached");
+    }
+
+    #[test]
+    #[should_panic(expected = "BSF_SCHED must be")]
+    fn select_sched_rejects_unknown_scheduler() {
+        select_sched(Some("fifo"));
+    }
+
+    /// A small fork-join graph with all five structural elements (sources,
+    /// chain, contention, join) for the order-cache tests.
+    fn fork_join_engine() -> Engine {
+        let mut e = Engine::new();
+        let src = e.task(0, 1.0);
+        let l = e.task(1, 2.0);
+        let r = e.task(2, 3.0);
+        let r2 = e.task(2, 0.5);
+        let sink = e.task(0, 1.0);
+        e.dep(src, l);
+        e.dep(src, r);
+        e.dep(src, r2);
+        e.dep(l, sink);
+        e.dep(r, sink);
+        e.dep(r2, sink);
+        e
+    }
+
+    #[test]
+    fn order_cached_replay_hits_and_matches_after_first_run() {
+        let mut e = fork_join_engine();
+        e.set_sched_mode(Some(SchedMode::Cached));
+        let first = e.run();
+        assert_eq!(e.sched_counters(), SchedCounters { calendar_runs: 1, ..Default::default() });
+        for round in 1..=3u64 {
+            let got = e.run_reuse();
+            assert_eq!(got, &first[..], "round {round}");
+            let c = e.sched_counters();
+            assert_eq!(c.cached_hits, round, "round {round}");
+            assert_eq!(c.calendar_runs, 1, "round {round}: cached replay hit the calendar");
+            assert_eq!(c.fallbacks, 0, "round {round}");
+        }
+    }
+
+    #[test]
+    fn cached_replay_tracks_duration_changes_bitwise() {
+        // Perturbed durations that keep the pop order valid must replay
+        // through the cache and still match a from-scratch reference.
+        let mut e = fork_join_engine();
+        e.set_sched_mode(Some(SchedMode::Cached));
+        e.run();
+        for (id, d) in [(0u32, 1.5), (1, 2.25), (2, 3.5), (3, 0.75), (4, 0.5)] {
+            e.set_duration(id, d);
+        }
+        let mut reference = ReferenceScheduler::from_engine(&e);
+        let want = reference.run().to_vec();
+        let got = e.run_reuse();
+        for (i, (w, g)) in want.iter().zip(got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "task {i}");
+        }
+        assert_eq!(e.sched_counters().cached_hits, 1);
+        assert_eq!(e.sched_counters().fallbacks, 0);
+    }
+
+    #[test]
+    fn stale_order_cache_rejected_on_ready_order_swap() {
+        // Two same-resource tasks whose ready order flips between runs:
+        // the validity check must reject the stale permutation and fall
+        // back to a full calendar run (which re-records the cache).
+        let mut e = Engine::new();
+        e.set_sched_mode(Some(SchedMode::Cached));
+        let a = e.task(0, 1.0);
+        let b = e.task(1, 2.0);
+        let c = e.task(2, 0.5);
+        let d = e.task(2, 0.5);
+        e.dep(a, c);
+        e.dep(b, d);
+        let first = e.run();
+        assert_eq!(first[c as usize], 1.5);
+        assert_eq!(first[d as usize], 2.5);
+        // Swap the ready order of c and d on resource 2: c now ready at
+        // 3.0, d still at 2.0 — the cached order (… c before d) is stale.
+        e.set_duration(a, 3.0);
+        let mut reference = ReferenceScheduler::from_engine(&e);
+        let want = reference.run().to_vec();
+        let got = e.run_reuse().to_vec();
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "task {i}");
+        }
+        assert_eq!(got[d as usize], 2.5, "d must now run first on resource 2");
+        assert_eq!(got[c as usize], 3.5);
+        let counters = e.sched_counters();
+        assert_eq!(counters.fallbacks, 1, "stale cache must be rejected");
+        assert_eq!(counters.cached_hits, 0);
+        assert_eq!(counters.calendar_runs, 2);
+        // The fallback refreshed the cache: an unchanged replay hits again.
+        assert_eq!(e.run_reuse(), &got[..]);
+        assert_eq!(e.sched_counters().cached_hits, 1);
+    }
+
+    #[test]
+    fn forced_calendar_mode_never_consults_the_cache() {
+        let mut e = fork_join_engine();
+        e.set_sched_mode(Some(SchedMode::Calendar));
+        let first = e.run();
+        for _ in 0..3 {
+            assert_eq!(e.run_reuse(), &first[..]);
+        }
+        let c = e.sched_counters();
+        assert_eq!(c.cached_hits, 0);
+        assert_eq!(c.fallbacks, 0);
+        assert_eq!(c.calendar_runs, 4);
+    }
+
+    #[test]
+    fn graph_edits_invalidate_the_order_cache() {
+        let mut e = fork_join_engine();
+        e.set_sched_mode(Some(SchedMode::Cached));
+        e.run();
+        e.run_reuse();
+        assert_eq!(e.sched_counters().cached_hits, 1);
+        // Adding a task + edge rebuilds the CSR and must force a calendar
+        // run, not a cached replay of the old permutation.
+        let extra = e.task(1, 0.25);
+        e.dep(0, extra);
+        e.run_reuse();
+        let c = e.sched_counters();
+        assert_eq!(c.calendar_runs, 2, "edited graph must re-run the calendar");
+        assert_eq!(c.fallbacks, 0, "structural invalidation, not a validity fallback");
+    }
+
+    #[test]
+    fn adaptive_resize_is_bitwise_neutral() {
+        // Hundreds of exactly-tied events pile into one bucket and trip
+        // the adaptive width correction after the first run; replays under
+        // the corrected width must stay bitwise identical (pop order is
+        // width-independent). Forced calendar mode so every run actually
+        // exercises the bucket scan.
+        let mut e = Engine::new();
+        e.set_sched_mode(Some(SchedMode::Calendar));
+        let n = 400u32;
+        for i in 0..n {
+            e.task(i % 2, 0.125);
+        }
+        let first = e.run();
+        for round in 0..3 {
+            assert_eq!(e.run_reuse(), &first[..], "round {round}");
+        }
+        // And a spread-out chain workload on the same engine (reset keeps
+        // the adapted width): still bitwise stable across replays.
+        e.reset();
+        let mut prev = e.task(0, 1.0);
+        for i in 1..256u32 {
+            let t = e.task(i % 4, 1.0);
+            e.dep(prev, t);
+            prev = t;
+        }
+        let first = e.run();
+        for round in 0..3 {
+            assert_eq!(e.run_reuse(), &first[..], "chain round {round}");
+        }
     }
 
     #[test]

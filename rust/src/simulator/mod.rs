@@ -25,4 +25,6 @@ pub use cluster::{
     CostProvider, IterationTemplate, IterationTiming, ReduceMode, SampledCost, SimParams,
 };
 pub use trace::{trace_iteration, Trace, TraceEvent};
-pub use engine::{Engine, ReferenceScheduler, TaskId, TaskSpec};
+pub use engine::{
+    sched_mode, Engine, ReferenceScheduler, SchedCounters, SchedMode, TaskId, TaskSpec,
+};

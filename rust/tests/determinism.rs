@@ -10,13 +10,20 @@
 //! 2. **Replication == naive loop, bitwise.** With zero jitter and a
 //!    deterministic provider, `simulate_run` simulates one iteration and
 //!    replicates it; that must equal running the full `iters` loop.
+//! 3. **Order-cached == calendar, bitwise.** The engine's order-cached
+//!    linear replay must produce the calendar queue's exact schedule on
+//!    every input (hit or fallback). The explicit two-engine race below
+//!    pins it in-process; CI additionally runs this whole suite under
+//!    both `BSF_SCHED=calendar` and `BSF_SCHED=cached`, so every
+//!    pooled-vs-serial equality above doubles as a cross-scheduler check.
 
 use bsf::experiments::{
     analytic_provider, boundary_row, boundary_rows, paper_gravity_params, paper_jacobi_params,
     simulated_curve_threads, simulated_curves, BoundarySpec, ExperimentCtx, SweepJob,
 };
 use bsf::simulator::{
-    simulate_iteration, simulate_run, AnalyticCost, IterationTemplate, IterationTiming, SimParams,
+    simulate_iteration, simulate_iteration_full, simulate_run, AnalyticCost, IterationTemplate,
+    IterationTiming, SchedMode, SimParams, TaskId,
 };
 use bsf::util::Rng;
 
@@ -222,6 +229,46 @@ fn jittered_run_matches_per_iteration_rebuild() {
     for (i, (a, b)) in reused.iter().zip(&rebuilt).enumerate() {
         assert_bitwise_eq(a, b, &format!("iter={i}"));
     }
+}
+
+#[test]
+fn order_cached_and_calendar_engines_agree_on_jittered_replays() {
+    // Two engines holding the identical Algorithm-2 iteration graph
+    // (K=48), one pinned to the pure calendar scheduler and one to the
+    // order-cached replay path; the same jittered duration stream drives
+    // both. Every replay — cache hit or validity-check fallback alike —
+    // must produce the calendar's schedule bit for bit.
+    let l = 2_048;
+    let params = SimParams::new(l, l);
+    let mut prov = AnalyticCost { t_map_full: 0.3, l, t_a: 1e-6, t_p: 1e-5 };
+    let (_, mut cal, _) = simulate_iteration_full(48, l, &params, &mut prov, &mut Rng::new(1));
+    let (_, mut oc, _) = simulate_iteration_full(48, l, &params, &mut prov, &mut Rng::new(1));
+    cal.set_sched_mode(Some(SchedMode::Calendar));
+    oc.set_sched_mode(Some(SchedMode::Cached));
+    // Prime the order cache under the pinned mode (the template's own
+    // first run used the process-wide BSF_SCHED, which may be calendar).
+    oc.run_reuse();
+    let base = cal.durations().to_vec();
+    let mut r_cal = Rng::new(55);
+    let mut r_oc = Rng::new(55);
+    for (round, sigma) in [0.0, 1e-6, 0.01, 0.1, 0.1, 0.01].into_iter().enumerate() {
+        for (id, &b) in base.iter().enumerate() {
+            cal.set_duration(id as TaskId, b * r_cal.jitter(sigma));
+            oc.set_duration(id as TaskId, b * r_oc.jitter(sigma));
+        }
+        let want = cal.run_reuse().to_vec();
+        let got = oc.run_reuse();
+        assert_eq!(want.len(), got.len());
+        for (i, (w, g)) in want.iter().zip(got).enumerate() {
+            assert_eq!(
+                w.to_bits(),
+                g.to_bits(),
+                "round {round} (sigma={sigma}): task {i} finish {w} vs {g}"
+            );
+        }
+    }
+    let c = oc.sched_counters();
+    assert!(c.cached_hits >= 1, "the unjittered replay must hit the order cache");
 }
 
 #[test]

@@ -12,6 +12,9 @@
 //! * the engine's calendar event queue vs a reference binary-heap
 //!   scheduler on random DAGs (bitwise finish times + per-resource order,
 //!   time ties included);
+//! * the order-cached linear replay vs the reference heap on random DAGs
+//!   with durations re-perturbed across replays — cache hits and
+//!   validity-check fallbacks both exercised, both bitwise-pinned;
 //! * collective schedules: full coverage and log-depth for random K;
 //! * the SIMD-dispatched matvec kernels: AVX2 == scalar **bitwise** on
 //!   random shapes (remainder rows/columns included), and the blocked
@@ -23,7 +26,7 @@ use bsf::lists::{map_reduce, partition_even, reduce, Add, Monoid, VecAdd};
 use bsf::model::{BsfModel, CostParams};
 use bsf::net::{CollectiveAlgo, CollectiveSchedule};
 use bsf::simulator::{
-    simulate_iteration, AnalyticCost, Engine, ReferenceScheduler, SimParams, TaskId,
+    simulate_iteration, AnalyticCost, Engine, ReferenceScheduler, SchedMode, SimParams, TaskId,
 };
 use bsf::util::Rng;
 
@@ -228,6 +231,92 @@ fn prop_calendar_queue_matches_reference_heap_on_random_dags() {
             assert_eq!(w.to_bits(), g.to_bits(), "case {case}: replay drift");
         }
     }
+}
+
+#[test]
+fn prop_order_cached_replay_matches_reference_on_random_dags() {
+    // Race the order-cached linear replay against the reference heap on
+    // random DAGs whose durations are re-perturbed between replays:
+    // identical and gently nudged durations mostly keep the cached pop
+    // order valid (hits), while coarse tie-heavy grid redraws scramble
+    // the ready order wholesale and force the validity check to reject
+    // the stale permutation (fallbacks). Every replay, hit or fallback,
+    // must be bitwise equal to a from-scratch reference-heap run. Engines
+    // are pinned to SchedMode::Cached explicitly so the sweep tests the
+    // cached path regardless of the process-wide BSF_SCHED value.
+    let mut rng = Rng::new(0x0CDE);
+    let (mut hits, mut fallbacks) = (0u64, 0u64);
+    for case in 0..80u64 {
+        let n = 2 + rng.below(160) as usize;
+        let n_res = 1 + rng.below(8) as u32;
+        let mut resources = Vec::with_capacity(n);
+        let mut durations = Vec::with_capacity(n);
+        let mut eng = Engine::new();
+        eng.set_sched_mode(Some(SchedMode::Cached));
+        for _ in 0..n {
+            let res = rng.below(n_res as u64) as u32;
+            let dur = rng.range(0.0, 3.0);
+            resources.push(res);
+            durations.push(dur);
+            eng.task(res, dur);
+        }
+        let mut edges: Vec<(TaskId, TaskId)> = Vec::new();
+        for j in 1..n {
+            let tries = 1 + rng.below(3);
+            for _ in 0..tries {
+                let i = rng.below(j as u64) as usize;
+                eng.dep(i as TaskId, j as TaskId);
+                edges.push((i as TaskId, j as TaskId));
+            }
+        }
+        // First run records the cache; it must already match the heap.
+        let mut reference = ReferenceScheduler::new(resources.clone(), durations.clone(), &edges);
+        let want = reference.run().to_vec();
+        for (i, (w, g)) in want.iter().zip(eng.run()).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "case {case}: first run, task {i}");
+        }
+        for round in 0..4u64 {
+            match round {
+                // Unchanged durations: replays the recording run exactly.
+                0 => {}
+                // Gentle multiplicative nudges: order usually survives.
+                1 => {
+                    for (id, d) in durations.iter_mut().enumerate() {
+                        *d *= 1.0 + rng.range(-0.02, 0.02);
+                        eng.set_duration(id as TaskId, *d);
+                    }
+                }
+                // Coarse tie-heavy grids: ready order scrambles, ties
+                // abound — the stale cache must be rejected, not trusted.
+                _ => {
+                    for (id, d) in durations.iter_mut().enumerate() {
+                        *d = rng.below(3) as f64 * 0.5;
+                        eng.set_duration(id as TaskId, *d);
+                    }
+                }
+            }
+            let mut reference =
+                ReferenceScheduler::new(resources.clone(), durations.clone(), &edges);
+            let want = reference.run().to_vec();
+            let got = eng.run_reuse();
+            for (i, (w, g)) in want.iter().zip(got).enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    g.to_bits(),
+                    "case {case} round {round}: task {i} (n={n}, res={n_res})"
+                );
+            }
+        }
+        let c = eng.sched_counters();
+        hits += c.cached_hits;
+        fallbacks += c.fallbacks;
+    }
+    // The sweep must exercise both branches of the dispatch. Hits are
+    // guaranteed by the unchanged-duration rounds (forward edges make the
+    // recorded order lexicographically valid under identical durations);
+    // fallbacks by the grid redraws.
+    assert!(hits > 0, "order cache never hit across the sweep");
+    assert!(fallbacks > 0, "validity check never rejected a stale cache");
 }
 
 #[test]
