@@ -37,7 +37,7 @@ use bsf::linalg::{generators, kernels};
 use bsf::net::transport::{fabric, Downlink, Uplink};
 use bsf::problems::{CimminoProblem, GravityProblem, JacobiProblem, MonteCarloPi};
 use bsf::runtime::{KernelRuntime, TensorView};
-use bsf::simulator::{sched_mode, SchedMode};
+use bsf::simulator::{lanes_enabled, sched_mode, SchedMode};
 use bsf::util::bench::{bench, human_time, CiReport};
 
 /// Counts every allocation so the zero-allocation claims are measured,
@@ -263,13 +263,19 @@ fn assert_zero_alloc_live_uplink(ci: &mut CiReport) {
 fn main() {
     let mut ci = CiReport::new("coordinator_hotpath");
     println!("== coordinator_hotpath: skeleton overhead per iteration ==");
-    println!("active kernel: {}, scheduler: {}", kernels::active().name(), sched_mode().name());
+    println!(
+        "active kernel: {}, scheduler: {}, lanes: {}",
+        kernels::active().name(),
+        sched_mode().name(),
+        if lanes_enabled() { "on" } else { "off" }
+    );
     // Self-describe the configuration that produced these figures, so a
-    // BENCH_ci.json artifact is attributable to its BSF_KERNEL/BSF_SCHED
-    // cell without consulting the CI log.
+    // BENCH_ci.json artifact is attributable to its
+    // BSF_KERNEL/BSF_SCHED/BSF_LANES cell without consulting the CI log.
     let flag = |b: bool| if b { 1.0 } else { 0.0 };
     ci.metric("config_kernel_avx2", flag(kernels::active() == kernels::KernelKind::Avx2));
     ci.metric("config_sched_cached", flag(sched_mode() == SchedMode::Cached));
+    ci.metric("config_lanes_on", flag(lanes_enabled()));
     let iters = 400;
     for k in [1usize, 2, 4, 8] {
         for payload in [8usize, 4_096] {

@@ -21,7 +21,13 @@
 //!   hard-asserted both ways; the deterministic replay must hit the
 //!   cache 100% of the time — no bucket scan after the first run — and
 //!   perform **zero** heap allocations once warm; hit-rate and fallback
-//!   counts land in `BENCH_ci.json`).
+//!   counts land in `BENCH_ci.json`);
+//! * the **lane-batched jittered replay vs the scalar loop** on that
+//!   same K=270 graph — four independent jittered duration sets per pass
+//!   through the order cache (per-lane equality hard-asserted against
+//!   the one-at-a-time loop, zero heap allocations once warm asserted;
+//!   `lane_hit_rate_jittered` + the lane-vs-scalar throughput pair land
+//!   in `BENCH_ci.json`).
 //!
 //! ```text
 //! cargo bench --bench simulator_hotpath
@@ -33,8 +39,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use bsf::experiments::{analytic_provider, simulated_curve_threads, ExperimentCtx};
 use bsf::linalg::kernels;
 use bsf::simulator::{
-    sched_mode, simulate_iteration, simulate_iteration_full, AnalyticCost, Engine,
-    IterationTemplate, ReferenceScheduler, SchedMode, SimParams, TaskId,
+    lanes_enabled, sched_mode, simulate_iteration, simulate_iteration_full, AnalyticCost, Engine,
+    IterationTemplate, LANES, ReferenceScheduler, SchedMode, SimParams, TaskId,
 };
 use bsf::util::bench::{bench_throughput, human_time, CiReport};
 use bsf::util::Rng;
@@ -65,11 +71,17 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 fn main() {
     let mut ci = CiReport::new("simulator_hotpath");
     println!("== simulator_hotpath ==");
-    println!("active kernel: {}, scheduler: {}", kernels::active().name(), sched_mode().name());
+    println!(
+        "active kernel: {}, scheduler: {}, lanes: {}",
+        kernels::active().name(),
+        sched_mode().name(),
+        if lanes_enabled() { "on" } else { "off" }
+    );
     // Self-describe the configuration that produced these figures.
     let flag = |b: bool| if b { 1.0 } else { 0.0 };
     ci.metric("config_kernel_avx2", flag(kernels::active() == kernels::KernelKind::Avx2));
     ci.metric("config_sched_cached", flag(sched_mode() == SchedMode::Cached));
+    ci.metric("config_lanes_on", flag(lanes_enabled()));
 
     // Raw engine: chain graphs, rebuild vs replay.
     for tasks in [1_000usize, 100_000] {
@@ -331,6 +343,127 @@ fn main() {
         std::hint::black_box(Engine::makespan(eng_oc.run_reuse()));
     });
     ci.rate(&r);
+
+    // (c) lane-batched jittered replay vs the scalar one-at-a-time loop,
+    // same K=270 graph: four independent jittered duration sets per pass
+    // through the order cache. Both engines pinned to the cached
+    // scheduler; the lane engine forces the vector pass on (the
+    // `set_lane_mode` analogue of the `_with` races above) so this
+    // section measures the lane pass whatever BSF_LANES says, under the
+    // process's BSF_KERNEL implementation.
+    let (_, mut eng_sc, _) =
+        simulate_iteration_full(270, n, &params, &mut prov_cmp, &mut Rng::new(14));
+    let (_, mut eng_ln, _) =
+        simulate_iteration_full(270, n, &params, &mut prov_cmp, &mut Rng::new(14));
+    eng_sc.set_sched_mode(Some(SchedMode::Cached));
+    eng_ln.set_sched_mode(Some(SchedMode::Cached));
+    eng_ln.set_lane_mode(Some(true));
+    eng_sc.run_reuse();
+    eng_ln.run_reuse(); // record the pop order once each
+    let n_tasks = eng_ln.len();
+    let mut rl_sc = Rng::new(23);
+    let mut rl_ln = Rng::new(23);
+
+    // Correctness audit: every lane of every batch must equal the scalar
+    // loop replaying the identical duration sets, bit for bit.
+    let before = eng_ln.sched_counters();
+    let lane_batches = 40u64;
+    for _ in 0..lane_batches {
+        let mat = eng_ln.lane_durations_mut(LANES);
+        for m in 0..LANES {
+            for (i, &b) in base.iter().enumerate() {
+                mat[i * LANES + m] = b * rl_ln.jitter(sigma);
+            }
+        }
+        eng_ln.run_lanes(LANES);
+        for m in 0..LANES {
+            for (i, &b) in base.iter().enumerate() {
+                eng_sc.set_duration(i as TaskId, b * rl_sc.jitter(sigma));
+            }
+            let want = eng_sc.run_reuse();
+            let got = eng_ln.lane_finish();
+            for (i, w) in want.iter().enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    got[i * LANES + m].to_bits(),
+                    "lane {m} diverges from the scalar loop at task {i}"
+                );
+            }
+            assert_eq!(
+                eng_sc.last_makespan().to_bits(),
+                eng_ln.lane_makespans()[m].to_bits(),
+                "lane {m} makespan diverges"
+            );
+        }
+    }
+    let after = eng_ln.sched_counters();
+    let lhits = after.lane_hits - before.lane_hits;
+    let lfalls = after.lane_fallbacks - before.lane_fallbacks;
+    let lane_rate = lhits as f64 / (lane_batches * LANES as u64) as f64;
+    println!(
+        "    -> lane (sigma={sigma}) hit-rate: {:.1}% ({lhits} hits, {lfalls} batch fallbacks)",
+        lane_rate * 100.0
+    );
+    ci.metric("lane_hit_rate_jittered", lane_rate);
+    ci.metric("lane_fallbacks_jittered", lfalls as f64);
+    ci.metric("lane_width", after.lane_width as f64);
+
+    // Zero heap allocations once warm — matrix fill + lane pass (and any
+    // per-lane fallback it takes) must never touch the allocator.
+    let before_allocs = ALLOCS.load(Ordering::Relaxed);
+    let lane_reps = 25u64;
+    for _ in 0..lane_reps {
+        let mat = eng_ln.lane_durations_mut(LANES);
+        for m in 0..LANES {
+            for (i, &b) in base.iter().enumerate() {
+                mat[i * LANES + m] = b * rl_ln.jitter(sigma);
+            }
+        }
+        std::hint::black_box(eng_ln.run_lanes(LANES).len());
+    }
+    let allocs = ALLOCS.load(Ordering::Relaxed) - before_allocs;
+    assert_eq!(allocs, 0, "lane-batched replay must be zero-alloc once warm");
+    println!("    -> allocations per lane batch: {}", allocs as f64 / lane_reps as f64);
+    ci.metric("allocs_per_lane_batch", allocs as f64 / lane_reps as f64);
+
+    // Throughput: LANES jittered replays per timed unit on both paths.
+    // Re-sync the jitter streams (the alloc audit advanced only rl_ln)
+    // so both timed loops replay the identical duration sets.
+    rl_sc = Rng::new(29);
+    rl_ln = Rng::new(29);
+    let r = bench_throughput(
+        "replay jit: scalar loop x4,  K=270 graph",
+        3,
+        20,
+        tasks * LANES as u64,
+        || {
+            for _ in 0..LANES {
+                for (i, &b) in base.iter().enumerate() {
+                    eng_sc.set_duration(i as TaskId, b * rl_sc.jitter(sigma));
+                }
+                std::hint::black_box(Engine::makespan(eng_sc.run_reuse()));
+            }
+        },
+    );
+    ci.rate(&r);
+    let r = bench_throughput(
+        "replay jit: lane-batched x4, K=270 graph",
+        3,
+        20,
+        tasks * LANES as u64,
+        || {
+            let mat = eng_ln.lane_durations_mut(LANES);
+            for m in 0..LANES {
+                for (i, &b) in base.iter().enumerate() {
+                    mat[i * LANES + m] = b * rl_ln.jitter(sigma);
+                }
+            }
+            eng_ln.run_lanes(LANES);
+            std::hint::black_box(eng_ln.lane_makespans()[LANES - 1]);
+        },
+    );
+    ci.rate(&r);
+    assert_eq!(n_tasks as u64, tasks, "lane engine graph drifted from the K=270 reference");
 
     if let Err(e) = ci.save("BENCH_ci.json") {
         eprintln!("warning: could not write BENCH_ci.json: {e}");

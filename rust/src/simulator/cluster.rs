@@ -33,10 +33,17 @@
 //! jitter and a [`CostProvider::is_deterministic`] provider) every
 //! iteration is identical, and [`simulate_run`] simulates one iteration
 //! and replicates the timing — a Fig.-6-style sweep then costs one
-//! engine run per K.
+//! engine run per K. Under jitter that shortcut is unavailable, so
+//! [`IterationTemplate::run_into`] instead groups its replays into
+//! lane-width batches: up to [`LANES`] independent duration sets execute
+//! through one shared pass over the cached pop order (see `engine.rs`
+//! "Lane-parallel replay"), with a scalar remainder — bitwise identical
+//! to replaying one iteration at a time.
 
+use crate::linalg::kernels;
 use crate::net::{CollectiveAlgo, CollectiveSchedule, NetworkParams};
 use crate::simulator::engine::{Engine, TaskId};
+use crate::simulator::lanes::{self, LANES};
 use crate::util::Rng;
 
 /// How partial foldings travel back to the master.
@@ -272,6 +279,54 @@ impl DurTable {
         self.mf_worker.clear();
         self.mf_chunk.clear();
         self.fold_n.clear();
+    }
+
+    /// Compute one replay's duration per task — provider samples × jitter,
+    /// drawn strictly **in task-id order** (the bitwise determinism
+    /// contract) — handing each `(task id, duration)` to `sink`. One walk
+    /// of the tag column with per-kind payload cursors; the sink decides
+    /// where the value lands (the engine's duration column for a scalar
+    /// replay, one lane of the lane matrix for a batched one). Generic
+    /// over the sink so the trivial stores inline into this hot loop
+    /// (two call sites — monomorphization cost is negligible).
+    fn refresh<F: FnMut(usize, f64)>(
+        &self,
+        jitter_comp: f64,
+        jitter_comm: f64,
+        provider: &mut dyn CostProvider,
+        rng: &mut Rng,
+        mut sink: F,
+    ) {
+        let (mut fx, mut cm, mut mf, mut fo) = (0usize, 0usize, 0usize, 0usize);
+        for (id, &tag) in self.tag.iter().enumerate() {
+            let d = match tag {
+                DurTag::Fixed => {
+                    let v = self.fixed[fx];
+                    fx += 1;
+                    v
+                }
+                DurTag::Comm => {
+                    let base = self.comm_base[cm];
+                    cm += 1;
+                    base * rng.jitter(jitter_comm)
+                }
+                DurTag::MapFold => {
+                    let worker = self.mf_worker[mf] as usize;
+                    let chunk = self.mf_chunk[mf] as usize;
+                    mf += 1;
+                    let map_t = provider.map_time(worker, chunk);
+                    let folds = chunk.saturating_sub(1) as f64 * provider.combine_time();
+                    (map_t + folds) * rng.jitter(jitter_comp)
+                }
+                DurTag::FoldN => {
+                    let c = self.fold_n[fo];
+                    fo += 1;
+                    c as f64 * provider.combine_time() * rng.jitter(jitter_comp)
+                }
+                DurTag::Post => provider.post_time() * rng.jitter(jitter_comp),
+            };
+            sink(id, d);
+        }
     }
 
     /// Append the next task's (task-id order) duration rule.
@@ -644,37 +699,13 @@ impl IterationTemplate {
     /// configs almost always — stale orders fall back to the calendar,
     /// bitwise-identically).
     pub fn replay(&mut self, provider: &mut dyn CostProvider, rng: &mut Rng) -> IterationTiming {
-        let (mut fx, mut cm, mut mf, mut fo) = (0usize, 0usize, 0usize, 0usize);
-        for (id, &tag) in self.durs.tag.iter().enumerate() {
-            let d = match tag {
-                DurTag::Fixed => {
-                    let v = self.durs.fixed[fx];
-                    fx += 1;
-                    v
-                }
-                DurTag::Comm => {
-                    let base = self.durs.comm_base[cm];
-                    cm += 1;
-                    base * rng.jitter(self.jitter_comm)
-                }
-                DurTag::MapFold => {
-                    let worker = self.durs.mf_worker[mf] as usize;
-                    let chunk = self.durs.mf_chunk[mf] as usize;
-                    mf += 1;
-                    let map_t = provider.map_time(worker, chunk);
-                    let folds = chunk.saturating_sub(1) as f64 * provider.combine_time();
-                    (map_t + folds) * rng.jitter(self.jitter_comp)
-                }
-                DurTag::FoldN => {
-                    let c = self.durs.fold_n[fo];
-                    fo += 1;
-                    c as f64 * provider.combine_time() * rng.jitter(self.jitter_comp)
-                }
-                DurTag::Post => provider.post_time() * rng.jitter(self.jitter_comp),
-            };
-            self.eng.set_duration(id as TaskId, d);
-        }
-        let finish = self.eng.run_reuse();
+        let eng = &mut self.eng;
+        self.durs.refresh(self.jitter_comp, self.jitter_comm, provider, rng, |id, d| {
+            eng.set_duration(id as TaskId, d);
+        });
+        eng.run_reuse();
+        let total = eng.last_makespan(); // fused max fold — no finish re-walk
+        let finish = eng.last_finish();
         let broadcast_done =
             self.bcast_tasks.iter().map(|&t| finish[t as usize]).fold(0.0, f64::max);
         let map_done = self.map_tasks.iter().map(|&t| finish[t as usize]).fold(0.0, f64::max);
@@ -683,7 +714,51 @@ impl IterationTemplate {
             map_done,
             reduce_done: finish[self.final_fold as usize],
             post_done: finish[self.post as usize],
-            total: Engine::makespan(finish),
+            total,
+        }
+    }
+
+    /// Simulate `lanes` jittered iterations in **one lane-batched engine
+    /// pass** (see `engine.rs` "Lane-parallel replay"), appending their
+    /// timings to `out` in lane order. Duration draws fill the lane
+    /// matrix replay-by-replay — provider/rng draws stay in task-id order
+    /// within each replay, replays drawn in sequence, so the draw stream
+    /// is untouched — and the per-replay timing extraction (the
+    /// `broadcast_done`/`map_done` folds and the makespan) vectorizes
+    /// across lanes. Bitwise identical to `lanes` successive
+    /// [`IterationTemplate::replay`] calls, vector hit or per-lane
+    /// fallback alike (the engine owns that contract).
+    fn replay_lanes_into(
+        &mut self,
+        lanes: usize,
+        provider: &mut dyn CostProvider,
+        rng: &mut Rng,
+        out: &mut Vec<IterationTiming>,
+    ) {
+        let eng = &mut self.eng;
+        let (jc, jm) = (self.jitter_comp, self.jitter_comm);
+        let mat = eng.lane_durations_mut(lanes);
+        for lane in 0..lanes {
+            self.durs.refresh(jc, jm, provider, rng, |id, d| {
+                mat[id * lanes + lane] = d;
+            });
+        }
+        eng.run_lanes(lanes);
+        let kind = kernels::active();
+        let finish = eng.lane_finish();
+        let mut bcast = [0.0f64; LANES];
+        let mut mapd = [0.0f64; LANES];
+        lanes::fold_max_tasks(kind, finish, lanes, &self.bcast_tasks, &mut bcast);
+        lanes::fold_max_tasks(kind, finish, lanes, &self.map_tasks, &mut mapd);
+        let mks = eng.lane_makespans();
+        for m in 0..lanes {
+            out.push(IterationTiming {
+                broadcast_done: bcast[m],
+                map_done: mapd[m],
+                reduce_done: finish[self.final_fold as usize * lanes + m],
+                post_done: finish[self.post as usize * lanes + m],
+                total: mks[m],
+            });
         }
     }
 
@@ -691,6 +766,11 @@ impl IterationTemplate {
     /// jitter and a deterministic provider every iteration is identical, so
     /// one replay is simulated and its timing replicated — bitwise equal to
     /// the naive loop (and to [`simulate_run`] on a fresh template).
+    /// Stochastic configurations group their replays into lane-width
+    /// batches ([`IterationTemplate::replay_lanes_into`], up to [`LANES`]
+    /// independent replays per pass through the engine's order cache) with
+    /// a scalar remainder — bitwise identical to the one-at-a-time loop
+    /// (pinned by `rust/tests/determinism.rs`).
     pub fn run_into(
         &mut self,
         iters: usize,
@@ -708,7 +788,12 @@ impl IterationTemplate {
             let t = self.replay(provider, rng);
             out.resize(iters, t);
         } else {
-            for _ in 0..iters {
+            let mut left = iters;
+            while left >= LANES {
+                self.replay_lanes_into(LANES, provider, rng, out);
+                left -= LANES;
+            }
+            for _ in 0..left {
                 let t = self.replay(provider, rng);
                 out.push(t);
             }

@@ -70,6 +70,30 @@
 //! min-scan returns the global `(time, id)` minimum for any width — so
 //! resizing is bitwise-neutral, pinned by the reference-heap property
 //! test and the `adaptive_resize_is_bitwise_neutral` unit test.
+//!
+//! ## Lane-parallel replay
+//!
+//! Under jitter the deterministic-replication shortcut is unavailable and
+//! every replay runs separately — but the order-cached linear pass is just
+//! `max`/`+` per task, both exact IEEE-754 operations, so up to
+//! [`super::lanes::LANES`] *independent* duration sets replay through one
+//! shared pass at four replays per instruction. [`Engine::run_lanes`]
+//! executes a lane batch: fill the lane-strided duration matrix via
+//! [`Engine::lane_durations_mut`] (`[task][lane]`, one task's lanes
+//! contiguous for a single AVX2 load), then the vectorized pass carries
+//! the per-lane validity check alongside the timeline; any failing lane
+//! aborts the batch to a sequential scalar re-run *in lane order* (each
+//! lane's [`Engine::run_reuse`] performing its own cached-check /
+//! calendar-fallback with cache refreshes), so hit and fallback results
+//! are both bitwise identical to replaying the lanes one at a time. The
+//! implementation pair (AVX2 + a scalar twin with the identical per-lane
+//! operation sequence) dispatches through the existing `BSF_KERNEL`
+//! mechanism; `BSF_LANES=on|off` (unset = `on`) gates the vector pass
+//! process-wide, with [`Engine::set_lane_mode`] as the per-instance
+//! override. See `simulator/lanes.rs`.
+
+use crate::linalg::kernels;
+use crate::simulator::lanes;
 
 /// Identifier of a task within one [`Engine`] run.
 pub type TaskId = u32;
@@ -140,6 +164,15 @@ pub struct SchedCounters {
     pub fallbacks: u64,
     /// Full calendar runs (first runs, forced-calendar runs, fallbacks).
     pub calendar_runs: u64,
+    /// Replays served by the vectorized lane-batched pass (counted per
+    /// lane, i.e. per replay — see [`Engine::run_lanes`]).
+    pub lane_hits: u64,
+    /// Lane batches whose vector pass aborted (some lane failed the
+    /// validity check) and re-ran through the sequential scalar path;
+    /// those replays land in the ordinary counters above.
+    pub lane_fallbacks: u64,
+    /// Widest lane batch this engine has executed (0 = never batched).
+    pub lane_width: u64,
 }
 
 /// Sentinel for "no entry" in the calendar's intrusive linked lists.
@@ -413,6 +446,29 @@ pub struct Engine {
     mode_override: Option<SchedMode>,
     /// Cache hit/fallback telemetry.
     stats: SchedCounters,
+    // --- lane-parallel replay state (see module docs + simulator/lanes) ---
+    /// Lane-strided duration matrix `[task][lane]` for the next lane batch
+    /// (filled through [`Engine::lane_durations_mut`]).
+    lane_durs: Vec<f64>,
+    /// Lane-strided ready-time scratch.
+    lane_ready: Vec<f64>,
+    /// Lane-strided per-resource free-time scratch.
+    lane_free: Vec<f64>,
+    /// Lane-strided finish times of the last [`Engine::run_lanes`] batch.
+    lane_finish: Vec<f64>,
+    /// Per-lane makespans of the last batch (fused fold, see
+    /// [`Engine::lane_makespans`]).
+    lane_makespan: [f64; lanes::LANES],
+    /// Per-instance lane-pass override; `None` defers to
+    /// [`lanes::lanes_enabled`].
+    lane_override: Option<bool>,
+    /// Running Σ durations — sizes the fallback calendar without the
+    /// per-run O(T) re-sum. Incremental drift only perturbs the bucket
+    /// width, which never affects pop order (bitwise-neutral).
+    total_work: f64,
+    /// Makespan of the most recent run (the `max` fold fused into the
+    /// replay/calendar pass — see [`Engine::last_makespan`]).
+    last_makespan: f64,
 }
 
 impl Engine {
@@ -432,6 +488,7 @@ impl Engine {
         let id = self.resources.len() as TaskId;
         self.resources.push(resource);
         self.durations.push(duration);
+        self.total_work += duration;
         self.labels.push(label);
         self.indegree.push(0);
         self.max_res = self.max_res.max(resource as usize + 1);
@@ -489,6 +546,11 @@ impl Engine {
     /// the pop order).
     pub fn set_duration(&mut self, id: TaskId, duration: f64) {
         debug_assert!(duration.is_finite() && duration >= 0.0, "negative or non-finite duration");
+        // Keep the running total in step so a calendar fallback can size
+        // its buckets without re-summing all T durations. Incremental
+        // rounding drift only nudges the bucket width, which never
+        // affects pop order (the width-independence contract in PERF.md).
+        self.total_work += duration - self.durations[id as usize];
         self.durations[id as usize] = duration;
     }
 
@@ -519,6 +581,8 @@ impl Engine {
         self.csr_valid = false;
         self.max_res = 0;
         self.order_ok = false;
+        self.total_work = 0.0;
+        self.last_makespan = 0.0;
     }
 
     /// Per-task finish times of the most recent run (empty before any run).
@@ -603,6 +667,7 @@ impl Engine {
         self.resource_free.resize(self.max_res, 0.0);
         let mut prev_t = f64::NEG_INFINITY;
         let mut prev_id: TaskId = 0;
+        let mut mk = 0.0f64;
         for &id in &self.order {
             let i = id as usize;
             // Predecessors precede `id` in any recorded pop order, so
@@ -624,6 +689,9 @@ impl Engine {
             let end = start + self.durations[i];
             self.resource_free[res] = end;
             self.finish[i] = end;
+            // Fused makespan fold: `max` is exact, so tracking the running
+            // maximum here is bitwise identical to re-walking `finish`.
+            mk = mk.max(end);
             let lo = self.csr_off[i];
             let hi = self.csr_off[i + 1];
             for e in lo..hi {
@@ -633,6 +701,7 @@ impl Engine {
                 }
             }
         }
+        self.last_makespan = mk;
         true
     }
 
@@ -653,14 +722,16 @@ impl Engine {
         }
         // Total work bounds every event time (each finish is a sum of a
         // chain of distinct task durations), so it sizes the calendar.
-        let total: f64 = self.durations.iter().sum();
-        self.queue.prime(n, total, self.max_res);
+        // Maintained incrementally by `task`/`set_duration` — a fallback
+        // no longer re-sums all T durations just to pick a bucket width.
+        self.queue.prime(n, self.total_work, self.max_res);
         for (i, &p) in self.pending.iter().enumerate() {
             if p == 0 {
                 self.queue.push(0.0, i as TaskId);
             }
         }
         let mut done = 0usize;
+        let mut mk = 0.0f64;
         while let Some(id) = self.queue.pop(&self.ready_at) {
             let i = id as usize;
             if record {
@@ -671,6 +742,7 @@ impl Engine {
             let end = start + self.durations[i];
             self.resource_free[res] = end;
             self.finish[i] = end;
+            mk = mk.max(end);
             done += 1;
             let lo = self.csr_off[i];
             let hi = self.csr_off[i + 1];
@@ -688,6 +760,7 @@ impl Engine {
         assert_eq!(done, n, "cyclic dependency graph: {} tasks never ran", n - done);
         self.queue.adapt(self.max_res);
         self.stats.calendar_runs += 1;
+        self.last_makespan = mk;
         if record {
             self.order_ok = true;
         }
@@ -697,6 +770,123 @@ impl Engine {
     /// Makespan of the last `run`'s schedule (max finish time).
     pub fn makespan(finish: &[f64]) -> f64 {
         finish.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Makespan of the most recent run — the `max` fold fused into the
+    /// replay/calendar pass itself (`max` is exact, so this is bitwise
+    /// [`Engine::makespan`] of [`Engine::last_finish`] without the extra
+    /// O(T) walk). `0.0` before any run.
+    pub fn last_makespan(&self) -> f64 {
+        self.last_makespan
+    }
+
+    /// Per-instance lane-pass override (`None` = the process-wide
+    /// `BSF_LANES` selection): `Some(true)` forces the vectorized lane
+    /// batch on, `Some(false)` forces every batch through the sequential
+    /// scalar path. The test suites and `simulator_hotpath` use it to
+    /// race both paths inside one process, like [`Engine::set_sched_mode`].
+    pub fn set_lane_mode(&mut self, on: Option<bool>) {
+        self.lane_override = on;
+    }
+
+    /// The lane-strided duration matrix for the next [`Engine::run_lanes`]
+    /// batch of `lanes` independent replays: entry `[task][lane]` lives at
+    /// `task * lanes + lane`. Sized here — the caller must fill **every**
+    /// slot (only newly grown tail slots are initialised; a resize never
+    /// memsets the whole matrix, this is the hot path). No allocation
+    /// once the matrix has grown to the graph.
+    pub fn lane_durations_mut(&mut self, lanes: usize) -> &mut [f64] {
+        assert!((1..=lanes::LANES).contains(&lanes), "1..={} lanes", lanes::LANES);
+        let n = self.resources.len();
+        self.lane_durs.resize(n * lanes, 0.0);
+        &mut self.lane_durs
+    }
+
+    /// Execute `lanes` independent replays whose duration sets occupy the
+    /// lane matrix (fill [`Engine::lane_durations_mut`] first). Lane `m`'s
+    /// finish times land at `task * lanes + m` of [`Engine::lane_finish`],
+    /// its makespan in [`Engine::lane_makespans`]. **Bitwise contract:**
+    /// hit or fallback, the results equal running each lane's durations
+    /// through [`Engine::set_duration`] + [`Engine::run_reuse`] in lane
+    /// order — a full-width batch with a valid order cache goes through
+    /// the vectorized lane pass (all-lane validity check; any failing
+    /// lane aborts to the sequential path, because its calendar fallback
+    /// would refresh the cache the later lanes are checked against);
+    /// everything else runs the sequential loop directly. Zero heap
+    /// allocations once the lane scratch is warm.
+    ///
+    /// The batch's outputs are [`Engine::lane_finish`] and
+    /// [`Engine::lane_makespans`] **only**: after a lane batch the scalar
+    /// accessors ([`Engine::last_finish`], [`Engine::last_makespan`],
+    /// [`Engine::durations`]) are unspecified — a vector hit leaves them
+    /// at their pre-batch values while the sequential path leaves them at
+    /// the last lane's replay. (Normalising them would cost a full copy
+    /// per hit; the lane accessors are bitwise identical either way.)
+    pub fn run_lanes(&mut self, lanes: usize) -> &[f64] {
+        assert!((1..=lanes::LANES).contains(&lanes), "1..={} lanes", lanes::LANES);
+        if !self.csr_valid {
+            self.finalize();
+        }
+        let n = self.resources.len();
+        assert_eq!(self.lane_durs.len(), n * lanes, "fill lane_durations_mut({lanes}) first");
+        self.stats.lane_width = self.stats.lane_width.max(lanes as u64);
+        let want_cached = self.mode_override.unwrap_or_else(sched_mode) == SchedMode::Cached;
+        let lanes_on = self.lane_override.unwrap_or_else(lanes::lanes_enabled);
+        if lanes_on && lanes == lanes::LANES && want_cached && self.order_ok {
+            // ready/free genuinely need a zeroed start; finish is fully
+            // overwritten by a successful pass (every task appears in the
+            // valid order) or by the fallback below, so it is only sized.
+            self.lane_ready.clear();
+            self.lane_ready.resize(n * lanes, 0.0);
+            self.lane_free.clear();
+            self.lane_free.resize(self.max_res * lanes, 0.0);
+            self.lane_finish.resize(n * lanes, f64::NAN);
+            let mut pass = lanes::LanePass {
+                order: &self.order,
+                resources: &self.resources,
+                csr_off: &self.csr_off,
+                csr_dst: &self.csr_dst,
+                durs: &self.lane_durs,
+                ready: &mut self.lane_ready,
+                free: &mut self.lane_free,
+                finish: &mut self.lane_finish,
+                makespan: &mut self.lane_makespan,
+            };
+            if lanes::replay(kernels::active(), &mut pass) {
+                self.stats.lane_hits += lanes as u64;
+                return &self.lane_finish;
+            }
+            self.stats.lane_fallbacks += 1;
+        }
+        // Sequential path: exactly the one-at-a-time loop the lane pass
+        // replaces — each lane's run_reuse does its own cached-check /
+        // calendar-fallback (with cache refreshes), in lane order. The
+        // copy loop below overwrites every slot, so finish is only sized.
+        self.lane_finish.resize(n * lanes, f64::NAN);
+        for m in 0..lanes {
+            for i in 0..n {
+                let d = self.lane_durs[i * lanes + m];
+                self.set_duration(i as TaskId, d);
+            }
+            self.run_reuse();
+            for i in 0..n {
+                self.lane_finish[i * lanes + m] = self.finish[i];
+            }
+            self.lane_makespan[m] = self.last_makespan;
+        }
+        &self.lane_finish
+    }
+
+    /// Lane-strided finish times of the most recent [`Engine::run_lanes`]
+    /// batch (lane `m` of task `t` at `t * lanes + m`).
+    pub fn lane_finish(&self) -> &[f64] {
+        &self.lane_finish
+    }
+
+    /// Per-lane makespans of the most recent [`Engine::run_lanes`] batch
+    /// (the fused `max` fold; only the first `lanes` entries meaningful).
+    pub fn lane_makespans(&self) -> &[f64; lanes::LANES] {
+        &self.lane_makespan
     }
 }
 
@@ -1207,6 +1397,150 @@ mod tests {
         for round in 0..3 {
             assert_eq!(e.run_reuse(), &first[..], "chain round {round}");
         }
+    }
+
+    #[test]
+    fn last_makespan_matches_finish_fold() {
+        // Fused fold == re-walk, on both the calendar and cached paths.
+        let mut e = fork_join_engine();
+        e.set_sched_mode(Some(SchedMode::Cached));
+        let first = e.run(); // calendar path
+        assert_eq!(e.last_makespan().to_bits(), Engine::makespan(&first).to_bits());
+        e.set_duration(2, 3.25);
+        let replay = e.run_reuse().to_vec(); // cached path
+        assert_eq!(e.sched_counters().cached_hits, 1);
+        assert_eq!(e.last_makespan().to_bits(), Engine::makespan(&replay).to_bits());
+    }
+
+    /// Fill engine `a`'s lane matrix and engine `b` sequentially with the
+    /// same duration sets, then assert `run_lanes` equals the
+    /// one-at-a-time `run_reuse` loop bitwise, lane by lane.
+    fn assert_lanes_match_sequential(a: &mut Engine, b: &mut Engine, sets: &[Vec<f64>]) {
+        let lanes = sets.len();
+        let n = b.len();
+        let mat = a.lane_durations_mut(lanes);
+        for (m, set) in sets.iter().enumerate() {
+            for (i, &d) in set.iter().enumerate() {
+                mat[i * lanes + m] = d;
+            }
+        }
+        a.run_lanes(lanes);
+        for (m, set) in sets.iter().enumerate() {
+            for (i, &d) in set.iter().enumerate() {
+                b.set_duration(i as TaskId, d);
+            }
+            let want = b.run_reuse().to_vec();
+            let got = a.lane_finish();
+            for (i, w) in want.iter().enumerate() {
+                assert_eq!(w.to_bits(), got[i * lanes + m].to_bits(), "lane {m} task {i}");
+            }
+            assert_eq!(
+                b.last_makespan().to_bits(),
+                a.lane_makespans()[m].to_bits(),
+                "lane {m} makespan"
+            );
+            assert_eq!(n, want.len());
+        }
+    }
+
+    #[test]
+    fn lane_batch_hit_matches_sequential_replays_bitwise() {
+        let mut a = fork_join_engine();
+        let mut b = fork_join_engine();
+        a.set_sched_mode(Some(SchedMode::Cached));
+        a.set_lane_mode(Some(true));
+        b.set_sched_mode(Some(SchedMode::Cached));
+        a.run();
+        b.run();
+        // Gently perturbed per-lane duration sets: the pop order stays
+        // valid in every lane, so the vector pass serves the whole batch.
+        let base: Vec<f64> = b.durations().to_vec();
+        let sets: Vec<Vec<f64>> = (0..lanes::LANES)
+            .map(|m| base.iter().map(|d| d * (1.0 + (m as f64 + 1.0) * 0.01)).collect())
+            .collect();
+        assert_lanes_match_sequential(&mut a, &mut b, &sets);
+        let c = a.sched_counters();
+        assert_eq!(c.lane_hits, lanes::LANES as u64, "all lanes must hit the vector pass");
+        assert_eq!(c.lane_fallbacks, 0);
+        assert_eq!(c.lane_width, lanes::LANES as u64);
+        assert_eq!(c.cached_hits, 0, "a vector hit must not touch the scalar counters");
+    }
+
+    #[test]
+    fn lane_batch_stale_lane_falls_back_in_lane_order() {
+        // The stale-cache scenario of `stale_order_cache_rejected_…`, but
+        // smuggled into lane 2 of a batch: the vector pass must abort and
+        // the sequential re-run (lane order, cache refreshes included)
+        // must still match the one-at-a-time loop bitwise.
+        fn graph() -> Engine {
+            let mut e = Engine::new();
+            let a = e.task(0, 1.0);
+            let b = e.task(1, 2.0);
+            let c = e.task(2, 0.5);
+            let d = e.task(2, 0.5);
+            e.dep(a, c);
+            e.dep(b, d);
+            e
+        }
+        let mut a = graph();
+        let mut b = graph();
+        a.set_sched_mode(Some(SchedMode::Cached));
+        a.set_lane_mode(Some(true));
+        b.set_sched_mode(Some(SchedMode::Cached));
+        a.run();
+        b.run();
+        let base: Vec<f64> = b.durations().to_vec();
+        let mut sets: Vec<Vec<f64>> = vec![base.clone(); lanes::LANES];
+        // Lane 2 flips the ready order of the two resource-2 tasks.
+        sets[2][0] = 3.0;
+        assert_lanes_match_sequential(&mut a, &mut b, &sets);
+        let c = a.sched_counters();
+        assert_eq!(c.lane_fallbacks, 1, "the stale lane must abort the vector pass");
+        assert_eq!(c.lane_hits, 0);
+        // The sequential re-run mirrors the twin engine's counters: same
+        // hit/fallback/calendar pattern, because it IS the same loop.
+        let cb = b.sched_counters();
+        assert_eq!(c.cached_hits, cb.cached_hits);
+        assert_eq!(c.fallbacks, cb.fallbacks);
+        assert_eq!(c.calendar_runs, cb.calendar_runs);
+    }
+
+    #[test]
+    fn lane_mode_off_takes_the_sequential_path_bitwise() {
+        let mut a = fork_join_engine();
+        let mut b = fork_join_engine();
+        a.set_sched_mode(Some(SchedMode::Cached));
+        a.set_lane_mode(Some(false));
+        b.set_sched_mode(Some(SchedMode::Cached));
+        a.run();
+        b.run();
+        let base: Vec<f64> = b.durations().to_vec();
+        let sets: Vec<Vec<f64>> = (0..lanes::LANES)
+            .map(|m| base.iter().map(|d| d * (1.0 + m as f64 * 0.02)).collect())
+            .collect();
+        assert_lanes_match_sequential(&mut a, &mut b, &sets);
+        let c = a.sched_counters();
+        assert_eq!(c.lane_hits, 0, "lanes forced off must never vectorize");
+        assert_eq!(c.lane_fallbacks, 0, "a skipped vector pass is not a fallback");
+        assert_eq!(c.lane_width, lanes::LANES as u64);
+    }
+
+    #[test]
+    fn partial_lane_batch_runs_sequentially() {
+        let mut a = fork_join_engine();
+        let mut b = fork_join_engine();
+        a.set_sched_mode(Some(SchedMode::Cached));
+        a.set_lane_mode(Some(true));
+        b.set_sched_mode(Some(SchedMode::Cached));
+        a.run();
+        b.run();
+        let base: Vec<f64> = b.durations().to_vec();
+        let sets: Vec<Vec<f64>> =
+            (0..2).map(|m| base.iter().map(|d| d * (1.1 + m as f64 * 0.1)).collect()).collect();
+        assert_lanes_match_sequential(&mut a, &mut b, &sets);
+        let c = a.sched_counters();
+        assert_eq!(c.lane_hits, 0, "a remainder batch takes the scalar path");
+        assert_eq!(c.lane_width, 2);
     }
 
     #[test]

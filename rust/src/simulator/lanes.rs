@@ -1,0 +1,418 @@
+//! Lane-parallel order-cached replay: simulate up to [`LANES`] independent
+//! jittered replays of one graph in a single pass over the cached pop
+//! order.
+//!
+//! PR 4's order-cached replay reduced a replay to two IEEE-754 operations
+//! per task — `start = max(ready, resource_free)` and `end = start + dur` —
+//! plus an exact `(ready, id)` validity check. Both `max` and `+` return
+//! the unique correctly-rounded result for their operands, so evaluating
+//! them **per lane** over four independent duration sets is bitwise
+//! identical to evaluating the four replays one at a time: the same trick
+//! `linalg::kernels` uses for the compute plane (identical per-lane
+//! operation sequence in a scalar twin and an AVX2 kernel), applied to
+//! the simulation plane.
+//!
+//! ## Layout
+//!
+//! Every lane array is **lane-strided**: element `[task][lane]` lives at
+//! `task * LANES + lane`, so one task's four lanes are contiguous and a
+//! single `_mm256_loadu_pd` fetches all four replays' values. The same
+//! layout covers `ready`/`finish` (per task) and `free` (per resource).
+//!
+//! ## Per-lane validity
+//!
+//! The scalar validity check accepts task `id` when `(ready, id)` exceeds
+//! the previous pop lexicographically. The task *order* is shared across
+//! lanes (it is the one cached permutation), so the id comparison is one
+//! scalar branch per task and only the `ready` comparison is lane-wise:
+//! `id > prev_id` selects a `>=` compare, otherwise `>` — vectorized as
+//! `_mm256_cmp_pd` (`_CMP_GE_OQ`/`_CMP_GT_OQ`) + movemask, all four lanes
+//! required to pass. Any failing lane aborts the whole pass ([`replay`]
+//! returns `false`) because the sequential semantics of the failing lane
+//! (a calendar fallback that *refreshes the cache*) would change what the
+//! later lanes are checked against; the engine then re-runs the batch
+//! through the ordinary scalar `run_reuse` path in lane order, which
+//! reproduces the one-at-a-time loop exactly (see
+//! `Engine::run_lanes`). NaN ready times (only reachable via unchecked
+//! non-finite durations in release builds) fail both ordered compares and
+//! reject, exactly like the scalar check.
+//!
+//! ## Dispatch
+//!
+//! The implementation pair dispatches through the *existing*
+//! `BSF_KERNEL` mechanism (`linalg::kernels::active()`): the scalar twin
+//! performs the identical per-lane operation sequence (`a > b ? a : b`
+//! mirrors `_mm256_max_pd` exactly, including NaN operand selection), so
+//! the two agree bit for bit on every input — pinned by the unit tests
+//! below and by CI running the whole suite under both `BSF_KERNEL`
+//! values. A separate process-wide `BSF_LANES=on|off` switch (unset =
+//! `on`; anything else panics loudly, like `BSF_SCHED`) disables the
+//! vectorized pass entirely, forcing every lane batch through the
+//! sequential scalar path — results are bitwise identical either way, so
+//! CI crosses it with one representative kernel/scheduler cell.
+
+use crate::linalg::kernels::KernelKind;
+use crate::simulator::engine::TaskId;
+
+/// Lane width of the batched replay pass (AVX2 holds four f64 lanes).
+/// Remainder batches (fewer than `LANES` replays left) take the scalar
+/// one-at-a-time path.
+pub const LANES: usize = 4;
+
+static ACTIVE_LANES: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+
+/// Whether the vectorized lane pass is enabled for this process (reads
+/// `BSF_LANES` once). Engines without an `Engine::set_lane_mode` override
+/// dispatch through this, so CI can run the whole suite with the lane
+/// pass forced off (every batch then exercises the sequential fallback).
+pub fn lanes_enabled() -> bool {
+    *ACTIVE_LANES.get_or_init(|| select_lanes(std::env::var("BSF_LANES").ok().as_deref()))
+}
+
+/// Pure selection logic (unit-tested separately from process env state).
+/// Requesting anything but `on`/`off` panics loudly rather than silently
+/// falling back — an override that does nothing would invalidate any
+/// benchmark run on top of it.
+fn select_lanes(request: Option<&str>) -> bool {
+    match request {
+        Some("on") => true,
+        Some("off") => false,
+        Some(other) => panic!("BSF_LANES must be 'on' or 'off', got '{other}'"),
+        None => true,
+    }
+}
+
+/// Borrowed view of everything one lane-batched pass needs: the engine's
+/// graph (cached pop order + SoA columns + CSR successors) and its
+/// lane-strided scratch. `ready` and `free` must arrive zeroed; `durs`
+/// holds the `LANES` duration sets task-major (`[task * LANES + lane]`).
+pub(crate) struct LanePass<'a> {
+    pub order: &'a [TaskId],
+    pub resources: &'a [u32],
+    pub csr_off: &'a [usize],
+    pub csr_dst: &'a [TaskId],
+    pub durs: &'a [f64],
+    pub ready: &'a mut [f64],
+    pub free: &'a mut [f64],
+    pub finish: &'a mut [f64],
+    /// Per-lane running makespan (the fused `max` fold over finish times).
+    pub makespan: &'a mut [f64; LANES],
+}
+
+/// Execute the lane-batched linear pass through `kind`'s implementation.
+/// Returns `false` as soon as any lane fails the validity check (scratch
+/// is then undefined — the caller re-runs the batch sequentially);
+/// returns `true` with `finish`/`makespan` holding all `LANES` replays'
+/// results otherwise. Zero heap allocations.
+pub(crate) fn replay(kind: KernelKind, p: &mut LanePass<'_>) -> bool {
+    match kind {
+        KernelKind::Scalar => replay_scalar(p),
+        KernelKind::Avx2 => replay_avx2_checked(p),
+    }
+}
+
+/// Fold `out[lane] = max(0, max over tasks of finish[task][lane])` — the
+/// lane-parallel analogue of the per-replay `fold(0.0, f64::max)` timing
+/// extraction. `max` is exact, so the fold order is bitwise-irrelevant
+/// and both implementations trivially agree.
+pub(crate) fn fold_max_tasks(
+    kind: KernelKind,
+    finish: &[f64],
+    lanes: usize,
+    tasks: &[TaskId],
+    out: &mut [f64; LANES],
+) {
+    out.fill(0.0);
+    if lanes == LANES && kind == KernelKind::Avx2 {
+        fold_max_avx2_checked(finish, tasks, out);
+    } else {
+        for &t in tasks {
+            let at = t as usize * lanes;
+            for m in 0..lanes {
+                let v = finish[at + m];
+                out[m] = if out[m] > v { out[m] } else { v };
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- scalar
+
+/// Portable lane pass: per task, the per-lane operation sequence mirrors
+/// the AVX2 kernel literally — `a > b ? a : b` for every `max` (the exact
+/// `_mm256_max_pd` operand selection, NaN included) and one `+` per lane
+/// — so the two implementations are bitwise identical on every input.
+fn replay_scalar(p: &mut LanePass<'_>) -> bool {
+    let mut prev = [f64::NEG_INFINITY; LANES];
+    let mut prev_id: TaskId = 0;
+    let mut mk = [0.0f64; LANES];
+    for &id in p.order {
+        let i = id as usize;
+        let at = i * LANES;
+        // Validity first, all lanes, like the vector twin's movemask.
+        let ge = id > prev_id;
+        for m in 0..LANES {
+            let ready = p.ready[at + m];
+            let ok = if ge { ready >= prev[m] } else { ready > prev[m] };
+            if !ok {
+                return false;
+            }
+        }
+        let res = p.resources[i] as usize * LANES;
+        let mut end = [0.0f64; LANES];
+        for m in 0..LANES {
+            let ready = p.ready[at + m];
+            prev[m] = ready;
+            let free = p.free[res + m];
+            // Same float ops as the scalar calendar loop (`max`, `+`) —
+            // ternary form mirrors `_mm256_max_pd` exactly.
+            let start = if ready > free { ready } else { free };
+            let e = start + p.durs[at + m];
+            p.free[res + m] = e;
+            p.finish[at + m] = e;
+            mk[m] = if mk[m] > e { mk[m] } else { e };
+            end[m] = e;
+        }
+        prev_id = id;
+        for e in p.csr_off[i]..p.csr_off[i + 1] {
+            let s = p.csr_dst[e] as usize * LANES;
+            for m in 0..LANES {
+                let cur = p.ready[s + m];
+                p.ready[s + m] = if cur > end[m] { cur } else { end[m] };
+            }
+        }
+    }
+    *p.makespan = mk;
+    true
+}
+
+// ----------------------------------------------------------------- avx2
+
+#[cfg(target_arch = "x86_64")]
+fn replay_avx2_checked(p: &mut LanePass<'_>) -> bool {
+    assert!(
+        crate::linalg::kernels::available(KernelKind::Avx2),
+        "AVX2 lane pass invoked without CPU support"
+    );
+    // SAFETY: AVX2 support verified above; every strided index stays
+    // inside the lane arrays (sized n * LANES / max_res * LANES by the
+    // engine before the call).
+    unsafe { replay_avx2(p) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn replay_avx2_checked(_p: &mut LanePass<'_>) -> bool {
+    unreachable!("AVX2 lane pass selected on a non-x86_64 target")
+}
+
+#[cfg(target_arch = "x86_64")]
+fn fold_max_avx2_checked(finish: &[f64], tasks: &[TaskId], out: &mut [f64; LANES]) {
+    assert!(
+        crate::linalg::kernels::available(KernelKind::Avx2),
+        "AVX2 lane fold invoked without CPU support"
+    );
+    // SAFETY: AVX2 support verified above; `finish` is lane-strided with
+    // LANES lanes, so `t * LANES` is in bounds for every listed task.
+    unsafe { fold_max_avx2(finish, tasks, out) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn fold_max_avx2_checked(_finish: &[f64], _tasks: &[TaskId], _out: &mut [f64; LANES]) {
+    unreachable!("AVX2 lane fold selected on a non-x86_64 target")
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn replay_avx2(p: &mut LanePass<'_>) -> bool {
+    use std::arch::x86_64::*;
+    let mut prev = _mm256_set1_pd(f64::NEG_INFINITY);
+    let mut prev_id: TaskId = 0;
+    let mut mk = _mm256_setzero_pd();
+    for &id in p.order {
+        let i = id as usize;
+        let ready = _mm256_loadu_pd(p.ready.as_ptr().add(i * LANES));
+        // Strictly increasing (ready, id) per lane; the id tie-break is
+        // shared (one cached order), so it selects the compare predicate.
+        let cmp = if id > prev_id {
+            _mm256_cmp_pd::<_CMP_GE_OQ>(ready, prev)
+        } else {
+            _mm256_cmp_pd::<_CMP_GT_OQ>(ready, prev)
+        };
+        if _mm256_movemask_pd(cmp) != 0b1111 {
+            return false;
+        }
+        prev = ready;
+        prev_id = id;
+        let res = p.resources[i] as usize * LANES;
+        let free = _mm256_loadu_pd(p.free.as_ptr().add(res));
+        // Same float ops as the scalar calendar loop, one per lane.
+        let start = _mm256_max_pd(ready, free);
+        let end = _mm256_add_pd(start, _mm256_loadu_pd(p.durs.as_ptr().add(i * LANES)));
+        _mm256_storeu_pd(p.free.as_mut_ptr().add(res), end);
+        _mm256_storeu_pd(p.finish.as_mut_ptr().add(i * LANES), end);
+        mk = _mm256_max_pd(mk, end);
+        for e in p.csr_off[i]..p.csr_off[i + 1] {
+            let s = p.csr_dst[e] as usize * LANES;
+            let cur = _mm256_loadu_pd(p.ready.as_ptr().add(s));
+            _mm256_storeu_pd(p.ready.as_mut_ptr().add(s), _mm256_max_pd(cur, end));
+        }
+    }
+    _mm256_storeu_pd(p.makespan.as_mut_ptr(), mk);
+    true
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn fold_max_avx2(finish: &[f64], tasks: &[TaskId], out: &mut [f64; LANES]) {
+    use std::arch::x86_64::*;
+    let mut acc = _mm256_setzero_pd();
+    for &t in tasks {
+        acc = _mm256_max_pd(acc, _mm256_loadu_pd(finish.as_ptr().add(t as usize * LANES)));
+    }
+    _mm256_storeu_pd(out.as_mut_ptr(), acc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::kernels;
+
+    #[test]
+    fn select_lanes_parses_overrides() {
+        assert!(select_lanes(Some("on")));
+        assert!(!select_lanes(Some("off")));
+        assert!(select_lanes(None));
+    }
+
+    #[test]
+    #[should_panic(expected = "BSF_LANES must be")]
+    fn select_lanes_rejects_unknown_value() {
+        select_lanes(Some("4"));
+    }
+
+    /// A small hand-built chain-with-fork graph (raw arrays, no Engine)
+    /// so the pass implementations can be compared in isolation.
+    struct Case {
+        order: Vec<TaskId>,
+        resources: Vec<u32>,
+        csr_off: Vec<usize>,
+        csr_dst: Vec<TaskId>,
+        durs: Vec<f64>,
+        n_res: usize,
+    }
+
+    fn chain_case() -> Case {
+        // 0 → 1 → 2 → 3 on alternating resources, distinct durations per
+        // lane so lanes genuinely diverge.
+        let n = 4;
+        let mut durs = vec![0.0; n * LANES];
+        for (i, d) in durs.iter_mut().enumerate() {
+            let (task, lane) = (i / LANES, i % LANES);
+            *d = 0.25 + task as f64 * 0.5 + lane as f64 * 0.125;
+        }
+        Case {
+            order: vec![0, 1, 2, 3],
+            resources: vec![0, 1, 0, 1],
+            csr_off: vec![0, 1, 2, 3, 3],
+            csr_dst: vec![1, 2, 3],
+            durs,
+            n_res: 2,
+        }
+    }
+
+    fn run_case(kind: KernelKind, c: &Case) -> Option<(Vec<f64>, [f64; LANES])> {
+        let n = c.resources.len();
+        let mut ready = vec![0.0; n * LANES];
+        let mut free = vec![0.0; c.n_res * LANES];
+        let mut finish = vec![f64::NAN; n * LANES];
+        let mut mk = [0.0f64; LANES];
+        let ok = replay(
+            kind,
+            &mut LanePass {
+                order: &c.order,
+                resources: &c.resources,
+                csr_off: &c.csr_off,
+                csr_dst: &c.csr_dst,
+                durs: &c.durs,
+                ready: &mut ready,
+                free: &mut free,
+                finish: &mut finish,
+                makespan: &mut mk,
+            },
+        );
+        ok.then_some((finish, mk))
+    }
+
+    #[test]
+    fn scalar_lane_pass_matches_per_lane_chain_arithmetic() {
+        let c = chain_case();
+        let (finish, mk) = run_case(KernelKind::Scalar, &c).expect("valid chain order");
+        for m in 0..LANES {
+            let mut t = 0.0f64;
+            for task in 0..4usize {
+                t += c.durs[task * LANES + m];
+                assert_eq!(finish[task * LANES + m].to_bits(), t.to_bits(), "lane {m} task {task}");
+            }
+            assert_eq!(mk[m].to_bits(), t.to_bits(), "lane {m} makespan");
+        }
+    }
+
+    #[test]
+    fn avx2_lane_pass_matches_scalar_bitwise_when_supported() {
+        if !kernels::available(KernelKind::Avx2) {
+            eprintln!("skipping: no AVX2 on this host");
+            return;
+        }
+        let c = chain_case();
+        let (fs, ms) = run_case(KernelKind::Scalar, &c).expect("scalar pass valid");
+        let (fv, mv) = run_case(KernelKind::Avx2, &c).expect("avx2 pass valid");
+        for (i, (a, b)) in fs.iter().zip(&fv).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "finish slot {i}");
+        }
+        for m in 0..LANES {
+            assert_eq!(ms[m].to_bits(), mv[m].to_bits(), "lane {m} makespan");
+        }
+    }
+
+    #[test]
+    fn stale_order_rejected_by_both_implementations() {
+        // Two independent same-resource tasks recorded in the order
+        // [1, 0]: task 0's (0.0, 0) does not exceed task 1's (0.0, 1)
+        // lexicographically, so every implementation must reject.
+        let c = Case {
+            order: vec![1, 0],
+            resources: vec![0, 0],
+            csr_off: vec![0, 0, 0],
+            csr_dst: vec![],
+            durs: vec![1.0; 2 * LANES],
+            n_res: 1,
+        };
+        assert!(run_case(KernelKind::Scalar, &c).is_none(), "scalar accepted a stale order");
+        if kernels::available(KernelKind::Avx2) {
+            assert!(run_case(KernelKind::Avx2, &c).is_none(), "avx2 accepted a stale order");
+        }
+    }
+
+    #[test]
+    fn fold_max_tasks_picks_lane_maxima() {
+        // finish for 3 tasks × LANES lanes; fold over tasks {0, 2}.
+        let mut finish = vec![0.0; 3 * LANES];
+        for (i, f) in finish.iter_mut().enumerate() {
+            let (task, lane) = (i / LANES, i % LANES);
+            *f = (task * 10 + lane) as f64;
+        }
+        let tasks: Vec<TaskId> = vec![0, 2];
+        let mut out = [0.0f64; LANES];
+        fold_max_tasks(KernelKind::Scalar, &finish, LANES, &tasks, &mut out);
+        for (m, &v) in out.iter().enumerate() {
+            assert_eq!(v, (20 + m) as f64, "lane {m}");
+        }
+        if kernels::available(KernelKind::Avx2) {
+            let mut out_v = [0.0f64; LANES];
+            fold_max_tasks(KernelKind::Avx2, &finish, LANES, &tasks, &mut out_v);
+            for m in 0..LANES {
+                assert_eq!(out[m].to_bits(), out_v[m].to_bits(), "lane {m}");
+            }
+        }
+    }
+}

@@ -18,6 +18,7 @@
 
 mod cluster;
 mod engine;
+mod lanes;
 pub mod trace;
 
 pub use cluster::{
@@ -28,3 +29,4 @@ pub use trace::{trace_iteration, Trace, TraceEvent};
 pub use engine::{
     sched_mode, Engine, ReferenceScheduler, SchedCounters, SchedMode, TaskId, TaskSpec,
 };
+pub use lanes::{lanes_enabled, LANES};

@@ -16,6 +16,12 @@
 //!    pins it in-process; CI additionally runs this whole suite under
 //!    both `BSF_SCHED=calendar` and `BSF_SCHED=cached`, so every
 //!    pooled-vs-serial equality above doubles as a cross-scheduler check.
+//! 4. **Lane-batched == one-at-a-time, bitwise.** `run_into`'s jittered
+//!    branch groups replays into lane-width batches (four duration sets
+//!    per pass through the order cache, scalar remainder); the batched
+//!    template must equal calling `replay()` per iteration. CI also runs
+//!    this suite under `BSF_LANES=off`, which forces every batch through
+//!    the sequential fallback — results must not move.
 
 use bsf::experiments::{
     analytic_provider, boundary_row, boundary_rows, paper_gravity_params, paper_jacobi_params,
@@ -269,6 +275,33 @@ fn order_cached_and_calendar_engines_agree_on_jittered_replays() {
     }
     let c = oc.sched_counters();
     assert!(c.cached_hits >= 1, "the unjittered replay must hit the order cache");
+}
+
+#[test]
+fn lane_batched_run_into_matches_one_at_a_time_replays() {
+    // run_into groups jittered replays into lane-width batches (four
+    // independent duration sets per pass through the engine's order
+    // cache) with a scalar remainder; on a real Algorithm-2 template the
+    // batched path must be bitwise identical to calling replay() once
+    // per iteration — draws, hits, and per-lane fallbacks included. 11
+    // iterations = two full lane batches + a remainder of three.
+    let l = 1_024;
+    let mut params = SimParams::new(l, l);
+    params.jitter_comp = 0.1;
+    params.jitter_comm = 0.05;
+    let mut prov_a = AnalyticCost { t_map_full: 0.2, l, t_a: 1e-6, t_p: 1e-5 };
+    let mut prov_b = prov_a.clone();
+    let mut batched = IterationTemplate::new(24, l, &params);
+    let mut one_at_a_time = IterationTemplate::new(24, l, &params);
+    let mut out = Vec::new();
+    batched.run_into(11, &mut prov_a, &mut Rng::new(77), &mut out);
+    assert_eq!(out.len(), 11);
+    let mut rng = Rng::new(77);
+    let seq: Vec<IterationTiming> =
+        (0..11).map(|_| one_at_a_time.replay(&mut prov_b, &mut rng)).collect();
+    for (i, (a, b)) in out.iter().zip(&seq).enumerate() {
+        assert_bitwise_eq(a, b, &format!("iter={i}"));
+    }
 }
 
 #[test]

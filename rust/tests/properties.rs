@@ -15,6 +15,10 @@
 //! * the order-cached linear replay vs the reference heap on random DAGs
 //!   with durations re-perturbed across replays — cache hits and
 //!   validity-check fallbacks both exercised, both bitwise-pinned;
+//! * the lane-batched replay (`Engine::run_lanes`, up to four jittered
+//!   replays per pass) vs the scalar one-at-a-time `run_reuse` loop on
+//!   random DAGs — gently perturbed and tie-heavy per-lane redraws force
+//!   both vector hits and per-lane fallbacks, both bitwise-pinned;
 //! * collective schedules: full coverage and log-depth for random K;
 //! * the SIMD-dispatched matvec kernels: AVX2 == scalar **bitwise** on
 //!   random shapes (remainder rows/columns included), and the blocked
@@ -26,7 +30,8 @@ use bsf::lists::{map_reduce, partition_even, reduce, Add, Monoid, VecAdd};
 use bsf::model::{BsfModel, CostParams};
 use bsf::net::{CollectiveAlgo, CollectiveSchedule};
 use bsf::simulator::{
-    simulate_iteration, AnalyticCost, Engine, ReferenceScheduler, SchedMode, SimParams, TaskId,
+    simulate_iteration, AnalyticCost, Engine, LANES, ReferenceScheduler, SchedMode, SimParams,
+    TaskId,
 };
 use bsf::util::Rng;
 
@@ -317,6 +322,113 @@ fn prop_order_cached_replay_matches_reference_on_random_dags() {
     // fallbacks by the grid redraws.
     assert!(hits > 0, "order cache never hit across the sweep");
     assert!(fallbacks > 0, "validity check never rejected a stale cache");
+}
+
+#[test]
+fn prop_lane_batched_replay_matches_scalar_loop_on_random_dags() {
+    // Race the lane-batched replay (four independent duration sets per
+    // pass through the order cache) against a twin engine running the
+    // same four sets through the scalar set_duration + run_reuse loop in
+    // lane order. Gentle per-lane perturbations mostly keep every lane's
+    // pop order valid (vector hits); coarse tie-heavy per-lane grid
+    // redraws scramble some lane's ready order and force the all-lane
+    // validity check to abort the batch (per-lane fallbacks, re-run
+    // sequentially with cache refreshes). Every lane of every batch must
+    // equal the scalar loop bitwise — and the scalar loop itself is
+    // pinned against the reference heap by the props above, so this
+    // transitively pins the lane pass to the heap too. Both engines are
+    // pinned to SchedMode::Cached and the lane engine forces the vector
+    // pass on, so the sweep races both paths whatever BSF_SCHED /
+    // BSF_LANES say (the process-wide BSF_KERNEL still selects which
+    // lane implementation — AVX2 or its scalar twin — is under test).
+    let mut rng = Rng::new(0x1A2E5);
+    let (mut lane_hits, mut lane_falls) = (0u64, 0u64);
+    for case in 0..60u64 {
+        let n = 2 + rng.below(140) as usize;
+        let n_res = 1 + rng.below(8) as u32;
+        let mut durations = Vec::with_capacity(n);
+        let mut eng = Engine::new();
+        let mut twin = Engine::new();
+        eng.set_sched_mode(Some(SchedMode::Cached));
+        eng.set_lane_mode(Some(true));
+        twin.set_sched_mode(Some(SchedMode::Cached));
+        for _ in 0..n {
+            let res = rng.below(n_res as u64) as u32;
+            let dur = rng.range(0.0, 3.0);
+            durations.push(dur);
+            eng.task(res, dur);
+            twin.task(res, dur);
+        }
+        for j in 1..n {
+            let tries = 1 + rng.below(3);
+            for _ in 0..tries {
+                let i = rng.below(j as u64) as usize;
+                eng.dep(i as TaskId, j as TaskId);
+                twin.dep(i as TaskId, j as TaskId);
+            }
+        }
+        // First runs record both order caches (identical graphs).
+        let a = eng.run();
+        let b = twin.run();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: recording run, task {i}");
+        }
+        for round in 0..3u64 {
+            // Draw the four per-lane duration sets once, then feed the
+            // identical sets to both engines. Round 0 replays the
+            // recorded durations unchanged (a guaranteed all-lane hit:
+            // the recorded order is lexicographically valid under
+            // identical durations); round 1 nudges gently (usually
+            // valid); round 2 redraws on a coarse tie-heavy grid
+            // (scrambles some lane's ready order — forced fallback).
+            let sets: Vec<Vec<f64>> = (0..LANES)
+                .map(|_| {
+                    durations
+                        .iter()
+                        .map(|d| match round {
+                            0 => *d,
+                            1 => d * (1.0 + rng.range(-0.02, 0.02)),
+                            _ => rng.below(3) as f64 * 0.5,
+                        })
+                        .collect()
+                })
+                .collect();
+            let mat = eng.lane_durations_mut(LANES);
+            for (m, set) in sets.iter().enumerate() {
+                for (i, &d) in set.iter().enumerate() {
+                    mat[i * LANES + m] = d;
+                }
+            }
+            eng.run_lanes(LANES);
+            for (m, set) in sets.iter().enumerate() {
+                for (i, &d) in set.iter().enumerate() {
+                    twin.set_duration(i as TaskId, d);
+                }
+                let want = twin.run_reuse();
+                let got = eng.lane_finish();
+                for (i, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        w.to_bits(),
+                        got[i * LANES + m].to_bits(),
+                        "case {case} round {round} lane {m}: task {i} (n={n}, res={n_res})"
+                    );
+                }
+                assert_eq!(
+                    twin.last_makespan().to_bits(),
+                    eng.lane_makespans()[m].to_bits(),
+                    "case {case} round {round} lane {m}: makespan"
+                );
+            }
+        }
+        let c = eng.sched_counters();
+        lane_hits += c.lane_hits;
+        lane_falls += c.lane_fallbacks;
+    }
+    // The sweep must exercise both branches of the batch dispatch: hits
+    // from the gently perturbed rounds, forced per-lane fallbacks from
+    // the tie-heavy grid redraws.
+    assert!(lane_hits > 0, "lane pass never served a batch across the sweep");
+    assert!(lane_falls > 0, "no lane ever failed the validity check across the sweep");
 }
 
 #[test]
