@@ -227,13 +227,21 @@ fn assert_zero_alloc_live_uplink(ci: &mut CiReport) {
     for epoch in 0..(warm + reps) {
         // Master downlink (allocations allowed here: the mpsc node).
         master
-            .send_to(1, Downlink::Approximation { x: x.clone(), epoch, reuse: recycle.take() })
+            .send_to(
+                1,
+                Downlink::Approximation {
+                    x: x.clone(),
+                    epoch,
+                    reuse: recycle.take(),
+                    extra: Vec::new(),
+                },
+            )
             .expect("worker alive");
         let before = ALLOCS.load(Ordering::Relaxed);
         // Worker iteration: receive, compute into the rotated buffer, send
         // by move through the uplink slot.
         match w.recv().expect("master alive") {
-            Downlink::Approximation { x, epoch, reuse } => {
+            Downlink::Approximation { x, epoch, reuse, extra: _ } => {
                 let mut partial =
                     reuse.or_else(|| spare.take()).expect("rotation primed");
                 problem.map_fold_into(0..64, &x, &mut partial, &mut ws, None);

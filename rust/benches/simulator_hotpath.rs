@@ -36,11 +36,15 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use bsf::experiments::{analytic_provider, simulated_curve_threads, ExperimentCtx};
+use bsf::experiments::{
+    analytic_provider, simulated_curve_threads, simulated_curves, ExperimentCtx, SweepJob,
+};
 use bsf::linalg::kernels;
+use bsf::model::scalability::peak_knee;
 use bsf::simulator::{
-    lanes_enabled, sched_mode, simulate_iteration, simulate_iteration_full, AnalyticCost, Engine,
-    IterationTemplate, LANES, ReferenceScheduler, SchedMode, SimParams, TaskId,
+    faults_audit, lanes_enabled, sched_mode, simulate_iteration, simulate_iteration_full,
+    AnalyticCost, Engine, FaultSpec, IterationTemplate, RecoveryPolicy, LANES, ReferenceScheduler,
+    SchedMode, SimParams, TaskId,
 };
 use bsf::util::bench::{bench_throughput, human_time, CiReport};
 use bsf::util::Rng;
@@ -82,6 +86,7 @@ fn main() {
     ci.metric("config_kernel_avx2", flag(kernels::active() == kernels::KernelKind::Avx2));
     ci.metric("config_sched_cached", flag(sched_mode() == SchedMode::Cached));
     ci.metric("config_lanes_on", flag(lanes_enabled()));
+    ci.metric("config_faults_audit", flag(faults_audit()));
 
     // Raw engine: chain graphs, rebuild vs replay.
     for tasks in [1_000usize, 100_000] {
@@ -464,6 +469,54 @@ fn main() {
     );
     ci.rate(&r);
     assert_eq!(n_tasks as u64, tasks, "lane engine graph drifted from the K=270 reference");
+
+    // Faulty-sweep smoke: run a clean and a fault-injected sweep over the
+    // same per-K split streams and track (a) how much recovery work
+    // inflates the mean iteration time and (b) how far the speedup peak
+    // K* retreats. Both ride BENCH_ci.json so the bench-compare step
+    // flags drift in the fault plane's cost model.
+    {
+        println!("\n-- faulty-sweep smoke (failure rate 5%, stragglers 3x) --");
+        let l = 1_500;
+        let mut params = SimParams::new(l, l);
+        params.jitter_comp = 0.05;
+        let prov = AnalyticCost { t_map_full: 0.2, l, t_a: 1e-6, t_p: 1e-5 };
+        let ks: Vec<usize> = (1..=48).collect();
+        let spec = FaultSpec {
+            speed_sigma: 0.05,
+            straggler_prob: 0.1,
+            straggler_factor: 3.0,
+            fail_prob: 0.05,
+            downtime: 2,
+            policy: RecoveryPolicy::Redistribute,
+        };
+        let mut rng = Rng::new(0xFA11);
+        let jobs = vec![
+            SweepJob::new(params.clone(), l, &prov, ks.clone(), 6, &mut rng),
+            SweepJob::new(params.clone(), l, &prov, ks.clone(), 6, &mut rng).with_fault(spec),
+        ];
+        let curves = simulated_curves(&jobs, 4);
+        let (clean, faulty) = (&curves[0], &curves[1]);
+        let mean = |c: &[_]| {
+            c.iter().map(|p: &bsf::model::scalability::SpeedupPoint| p.t_k).sum::<f64>()
+                / c.len() as f64
+        };
+        let overhead = mean(faulty) / mean(clean);
+        let w = (ks.len() / 10).max(3);
+        let peak = |c: &[bsf::model::scalability::SpeedupPoint]| {
+            peak_knee(c, w, 0.99).map(|p| p.k).unwrap_or(0)
+        };
+        let shift = peak(clean) as f64 - peak(faulty) as f64;
+        println!(
+            "    recovery overhead: {:.3}x mean T(K); boundary shift: {:+} nodes (K*={} -> {})",
+            overhead,
+            shift,
+            peak(clean),
+            peak(faulty)
+        );
+        ci.metric("fault_recovery_overhead", overhead);
+        ci.metric("boundary_shift_k", shift);
+    }
 
     if let Err(e) = ci.save("BENCH_ci.json") {
         eprintln!("warning: could not write BENCH_ci.json: {e}");

@@ -21,7 +21,9 @@ mod metrics;
 mod runner;
 
 pub use metrics::{IterationMetrics, Metrics};
-pub use runner::{calibrate_problem, run_sequential, LiveRunner, RunReport};
+pub use runner::{
+    calibrate_problem, run_sequential, FaultCounters, LiveRunner, PhaseTimeouts, RunReport,
+};
 
 use std::ops::Range;
 

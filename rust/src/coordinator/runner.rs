@@ -1,17 +1,50 @@
 //! Runners: sequential (Algorithm 1) and live master/worker (Algorithm 2).
 
+use std::ops::Range;
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{BsfProblem, IterationMetrics, Metrics, Workspace};
 use crate::lists::partition_even;
-use crate::model::Calibration;
-use crate::net::transport::{fabric, Downlink, TransportError, Uplink};
+use crate::model::{BsfModel, Calibration};
+use crate::net::transport::{
+    fabric, Downlink, MasterEndpoint, TransportError, Uplink, WorkerEndpoint,
+};
+use crate::net::NetworkParams;
 use crate::runtime::KernelRuntime;
+use crate::simulator::RecoveryPolicy;
 use crate::util::Timer;
+
+/// Fault telemetry accumulated by the live master loop. All zeros on a
+/// clean run (and always for [`run_sequential`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Worker deaths detected (failed downlink, panic, or missed gather
+    /// deadline).
+    pub injected: usize,
+    /// Successful respawns — a dead worker rejoined the farm.
+    pub recovered: usize,
+    /// Dead sublists re-dispatched to surviving workers (one count per
+    /// range per iteration).
+    pub redispatched: usize,
+    /// Uplinks discarded by the gather: stale epochs and deliveries from
+    /// superseded or dead incarnations.
+    pub late_uplinks_dropped: usize,
+}
+
+/// Per-phase deadlines for the live master loop. The scatter bound guards
+/// the downlink phase; the gather bound is the worker-failure detector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseTimeouts {
+    /// Bound on the downlink (scatter) phase of one iteration.
+    pub scatter: Duration,
+    /// Bound on each gather (worker failure detection).
+    pub gather: Duration,
+}
 
 /// Outcome of a run.
 #[derive(Debug, Clone)]
@@ -25,6 +58,14 @@ pub struct RunReport {
     pub converged: bool,
     /// Per-iteration timings.
     pub metrics: Metrics,
+    /// Fault telemetry (all zeros on a clean run).
+    pub faults: FaultCounters,
+    /// The scatter deadline the run used (zero for [`run_sequential`]).
+    pub scatter_timeout: Duration,
+    /// The gather deadline the run used — explicit or derived from the
+    /// problem's [`crate::coordinator::CostSpec`] (zero for
+    /// [`run_sequential`]).
+    pub gather_timeout: Duration,
     /// Total wall time (seconds).
     pub wall: f64,
 }
@@ -67,7 +108,16 @@ pub fn run_sequential(
             break;
         }
     }
-    RunReport { iterations, final_approx: x, converged, metrics, wall: timer.elapsed() }
+    RunReport {
+        iterations,
+        final_approx: x,
+        converged,
+        metrics,
+        faults: FaultCounters::default(),
+        scatter_timeout: Duration::ZERO,
+        gather_timeout: Duration::ZERO,
+        wall: timer.elapsed(),
+    }
 }
 
 /// Algorithm 2 over real threads — the live BSF skeleton.
@@ -80,26 +130,47 @@ pub struct LiveRunner {
     /// Artifact directory for per-worker PJRT runtimes (`None` = native
     /// Rust compute only).
     pub artifact_dir: Option<PathBuf>,
-    /// Bound on each gather (worker failure detection).
-    pub gather_timeout: Duration,
+    /// Per-phase deadlines. `None` (the default) derives both bounds from
+    /// the problem's [`crate::coordinator::CostSpec`]: the estimated
+    /// single-worker iteration time `T_1` scaled by a generous safety
+    /// factor, clamped to `[10 s, 600 s]` (gather) and `[2 s, 60 s]`
+    /// (scatter). The values actually used are surfaced on
+    /// [`RunReport::gather_timeout`] / [`RunReport::scatter_timeout`].
+    pub timeouts: Option<PhaseTimeouts>,
     /// Degraded-mode recovery: when a worker dies (panic / hang past the
-    /// gather timeout), the master marks it dead, computes its sublist
-    /// itself from then on, and the iteration stream continues — the
-    /// result is identical because Map is deterministic and `⊕` is
-    /// associative. Off by default (a dead worker aborts the run, like
-    /// `MPI_ERRORS_ARE_FATAL`).
+    /// gather timeout), the master marks it dead and the iteration stream
+    /// continues — the result is identical because Map is deterministic
+    /// and `⊕` is associative. Off by default (a dead worker aborts the
+    /// run, like `MPI_ERRORS_ARE_FATAL`).
     pub fault_tolerant: bool,
+    /// What to do with a dead worker's sublist while it is down (only
+    /// consulted when [`LiveRunner::fault_tolerant`] is set):
+    /// [`RecoveryPolicy::MasterRecompute`] (the default) folds it on the
+    /// master; [`RecoveryPolicy::Redistribute`] re-dispatches it across
+    /// the survivors via the downlink's extra ranges, falling back to the
+    /// master only when the carrier also misses the gather.
+    pub recovery: RecoveryPolicy,
+    /// Bounded retry: how many times to respawn each dead worker
+    /// (0 = never respawn; dead workers stay dead).
+    pub respawn_limit: usize,
+    /// Base delay before the first respawn attempt; doubles per attempt
+    /// (exponential backoff).
+    pub respawn_backoff: Duration,
 }
 
 impl LiveRunner {
-    /// Runner with defaults (no artifacts, 60 s gather timeout).
+    /// Runner with defaults: no artifacts, timeouts derived from the
+    /// problem's cost spec, faults fatal.
     pub fn new(k: usize, max_iters: usize) -> LiveRunner {
         LiveRunner {
             k,
             max_iters,
             artifact_dir: None,
-            gather_timeout: Duration::from_secs(60),
+            timeouts: None,
             fault_tolerant: false,
+            recovery: RecoveryPolicy::MasterRecompute,
+            respawn_limit: 0,
+            respawn_backoff: Duration::from_millis(100),
         }
     }
 
@@ -107,6 +178,23 @@ impl LiveRunner {
     pub fn with_artifacts(mut self, dir: impl Into<PathBuf>) -> LiveRunner {
         self.artifact_dir = Some(dir.into());
         self
+    }
+
+    /// The phase deadlines this run will use: the explicit setting, or the
+    /// cost-spec-derived default. Derivation prices the problem on a fast
+    /// fabric at 1 ns/op — an underestimate of real iteration time only by
+    /// bounded factors, which the 20×/200× safety margins and the floors
+    /// absorb.
+    pub fn resolve_timeouts(&self, problem: &dyn BsfProblem) -> PhaseTimeouts {
+        if let Some(t) = self.timeouts {
+            return t;
+        }
+        let params = problem.cost_spec().cost_params(1e-9, &NetworkParams::fast_fabric());
+        let t1 = BsfModel::new(params).t1();
+        PhaseTimeouts {
+            scatter: Duration::from_secs_f64((t1 * 20.0).clamp(2.0, 60.0)),
+            gather: Duration::from_secs_f64((t1 * 200.0).clamp(10.0, 600.0)),
+        }
     }
 
     /// Execute Algorithm 2. Spawns K worker threads, runs the master loop
@@ -122,51 +210,18 @@ impl LiveRunner {
             bail!("LiveRunner needs at least one worker");
         }
         let timer = Timer::start();
+        let timeouts = self.resolve_timeouts(problem.as_ref());
         let l = problem.list_len();
         let parts = partition_even(l, self.k);
-        let (master, workers) = fabric(self.k);
+        let (mut master, workers) = fabric(self.k);
 
         let mut handles = Vec::with_capacity(self.k);
         for w in workers {
-            let problem = problem.clone();
             let range = parts.range(w.id - 1);
-            let artifact_dir = self.artifact_dir.clone();
-            handles.push(std::thread::spawn(move || {
-                // Each worker owns its PJRT runtime (the client is not
-                // Send); a failed open degrades to native compute.
-                let kernels = artifact_dir.and_then(|d| KernelRuntime::open(d).ok());
-                // Double-buffer swap: `spare` seeds the first iteration;
-                // afterwards each downlink returns the previously sent
-                // buffer in `reuse`, so two owned buffers rotate and the
-                // loop allocates nothing in steady state.
-                let mut spare = Some(problem.fold_identity());
-                let mut ws = Workspace::new();
-                loop {
-                    match w.recv() {
-                        Ok(Downlink::Approximation { x, epoch, reuse }) => {
-                            let mut partial = reuse
-                                .or_else(|| spare.take())
-                                .unwrap_or_else(|| problem.fold_identity());
-                            let t = Timer::start();
-                            problem.map_fold_into(
-                                range.clone(),
-                                &x,
-                                &mut partial,
-                                &mut ws,
-                                kernels.as_ref(),
-                            );
-                            let dt = t.elapsed();
-                            if w.send(epoch, partial, dt).is_err() {
-                                break; // master gone; nothing to report to
-                            }
-                        }
-                        Ok(Downlink::Stop { .. }) | Err(_) => break,
-                    }
-                }
-            }));
+            handles.push(self.spawn_worker(&problem, w, range));
         }
 
-        let run = self.master_loop(problem.as_ref(), &master);
+        let run = self.master_loop(&problem, &mut master, &mut handles, timeouts);
         // Always release the workers, even on error paths (best-effort:
         // a dead worker's closed channel must not prevent the Stop from
         // reaching the live ones).
@@ -179,15 +234,83 @@ impl LiveRunner {
                 joined.ok().context("worker thread panicked")?;
             }
         }
-        let (iterations, final_approx, converged, metrics) = run?;
-        Ok(RunReport { iterations, final_approx, converged, metrics, wall: timer.elapsed() })
+        let (iterations, final_approx, converged, metrics, faults) = run?;
+        Ok(RunReport {
+            iterations,
+            final_approx,
+            converged,
+            metrics,
+            faults,
+            scatter_timeout: timeouts.scatter,
+            gather_timeout: timeouts.gather,
+            wall: timer.elapsed(),
+        })
+    }
+
+    /// Spawn one worker thread over its endpoint and static sublist. Also
+    /// the respawn path: a recovered worker gets a fresh incarnation of
+    /// the same range.
+    fn spawn_worker(
+        &self,
+        problem: &Arc<dyn BsfProblem>,
+        w: WorkerEndpoint,
+        range: Range<usize>,
+    ) -> JoinHandle<()> {
+        let problem = problem.clone();
+        let artifact_dir = self.artifact_dir.clone();
+        std::thread::spawn(move || {
+            // Each worker owns its PJRT runtime (the client is not
+            // Send); a failed open degrades to native compute.
+            let kernels = artifact_dir.and_then(|d| KernelRuntime::open(d).ok());
+            // Double-buffer swap: `spare` seeds the first iteration;
+            // afterwards each downlink returns the previously sent
+            // buffer in `reuse`, so two owned buffers rotate and the
+            // loop allocates nothing in steady state.
+            let mut spare = Some(problem.fold_identity());
+            let mut ws = Workspace::new();
+            // Scratch partial for re-dispatched dead ranges; allocated
+            // lazily so the clean path stays allocation-free.
+            let mut extra_buf: Option<Vec<f64>> = None;
+            loop {
+                match w.recv() {
+                    Ok(Downlink::Approximation { x, epoch, reuse, extra }) => {
+                        let mut partial = reuse
+                            .or_else(|| spare.take())
+                            .unwrap_or_else(|| problem.fold_identity());
+                        let t = Timer::start();
+                        problem.map_fold_into(
+                            range.clone(),
+                            &x,
+                            &mut partial,
+                            &mut ws,
+                            kernels.as_ref(),
+                        );
+                        // Redistributed sublists of dead workers fold into
+                        // the same uplink partial — `⊕` is associative, so
+                        // the master's per-worker fold stays unchanged.
+                        for r in extra {
+                            let buf = extra_buf.get_or_insert_with(|| problem.fold_identity());
+                            problem.map_fold_into(r, &x, buf, &mut ws, kernels.as_ref());
+                            problem.combine_into(&mut partial, buf);
+                        }
+                        let dt = t.elapsed();
+                        if w.send(epoch, partial, dt).is_err() {
+                            break; // master gone; nothing to report to
+                        }
+                    }
+                    Ok(Downlink::Stop { .. }) | Err(_) => break,
+                }
+            }
+        })
     }
 
     fn master_loop(
         &self,
-        problem: &dyn BsfProblem,
-        master: &crate::net::transport::MasterEndpoint,
-    ) -> Result<(usize, Vec<f64>, bool, Metrics)> {
+        problem: &Arc<dyn BsfProblem>,
+        master: &mut MasterEndpoint,
+        handles: &mut Vec<JoinHandle<()>>,
+        timeouts: PhaseTimeouts,
+    ) -> Result<(usize, Vec<f64>, bool, Metrics, FaultCounters)> {
         let l = problem.list_len();
         let parts = partition_even(l, self.k);
         let mut alive = vec![true; self.k];
@@ -204,14 +327,73 @@ impl LiveRunner {
         let mut ws = Workspace::new();
         let mut recycle: Vec<Option<Vec<f64>>> = (0..self.k).map(|_| None).collect();
         let mut got: Vec<Option<Uplink>> = Vec::with_capacity(self.k);
+        // Fault machinery, all reused across iterations: telemetry,
+        // respawn bookkeeping, this iteration's re-dispatch assignments
+        // (carrier wid, dead wid), per-carrier extra ranges, and which
+        // workers' partials arrived (consulted after `got` is drained).
+        let mut counters = FaultCounters::default();
+        let mut respawn_attempts = vec![0usize; self.k];
+        let mut next_respawn_at: Vec<Option<Instant>> = vec![None; self.k];
+        let mut assigned: Vec<(usize, usize)> = Vec::new();
+        let mut extras: Vec<Vec<Range<usize>>> = vec![Vec::new(); self.k];
+        let mut delivered = vec![false; self.k];
         let mut iterations = 0;
         let mut converged = false;
         let mut metrics = Metrics::default();
         while iterations < self.max_iters {
             let mut it_timer = Timer::start();
             let epoch = iterations as u64;
+            // Bounded retry: respawn dead workers whose backoff elapsed.
+            for wid in 1..=self.k {
+                if alive[wid - 1] {
+                    continue;
+                }
+                let Some(at) = next_respawn_at[wid - 1] else { continue };
+                if Instant::now() < at {
+                    continue;
+                }
+                next_respawn_at[wid - 1] = None;
+                respawn_attempts[wid - 1] += 1;
+                let w = master.respawn(wid);
+                handles.push(self.spawn_worker(problem, w, parts.range(wid - 1)));
+                alive[wid - 1] = true;
+                // The buffer sent to the dead incarnation is lost.
+                recycle[wid - 1] = None;
+                counters.recovered += 1;
+                eprintln!(
+                    "bsf: worker {wid} respawned (attempt {}/{})",
+                    respawn_attempts[wid - 1],
+                    self.respawn_limit
+                );
+            }
+            // Redistribution: round-robin dead sublists over the survivors
+            // as extra downlink ranges. Whole ranges only — an uneven split
+            // across carriers costs at most one sublist of imbalance and
+            // keeps the fallback (carrier also dies) trivially correct.
+            assigned.clear();
+            if self.recovery == RecoveryPolicy::Redistribute && alive.iter().any(|a| !a) {
+                let survivors: Vec<usize> = (1..=self.k).filter(|&w| alive[w - 1]).collect();
+                if !survivors.is_empty() {
+                    let mut next = 0usize;
+                    for wid in 1..=self.k {
+                        if alive[wid - 1] {
+                            continue;
+                        }
+                        let r = parts.range(wid - 1);
+                        if r.is_empty() {
+                            continue;
+                        }
+                        let carrier = survivors[next % survivors.len()];
+                        next += 1;
+                        extras[carrier - 1].push(r);
+                        assigned.push((carrier, wid));
+                        counters.redispatched += 1;
+                    }
+                }
+            }
             // Downlink: per-worker sends so each worker gets its own
             // recycled buffer back alongside the shared approximation.
+            let scatter_timer = Timer::start();
             for wid in 1..=self.k {
                 if !alive[wid - 1] {
                     continue;
@@ -220,27 +402,52 @@ impl LiveRunner {
                     x: x.clone(),
                     epoch,
                     reuse: recycle[wid - 1].take(),
+                    extra: std::mem::take(&mut extras[wid - 1]),
                 };
                 if let Err(e) = master.send_to(wid, msg) {
                     if self.fault_tolerant {
-                        alive[wid - 1] = false;
-                        eprintln!(
-                            "bsf: worker {wid} died before downlink; master takes over its sublist"
+                        mark_dead(
+                            wid,
+                            "died before downlink",
+                            &mut alive,
+                            &mut counters,
+                            &respawn_attempts,
+                            &mut next_respawn_at,
+                            self.respawn_limit,
+                            self.respawn_backoff,
                         );
                     } else {
                         return Err(e.into());
                     }
                 }
             }
-            let received = master.gather_into(&alive, epoch, self.gather_timeout, &mut got);
+            // The in-process sends never block, so this guard only fires
+            // under pathological scheduling — but it makes the scatter
+            // phase a bounded step like the gather, as a real fabric needs.
+            if scatter_timer.elapsed() > timeouts.scatter.as_secs_f64() {
+                if self.fault_tolerant {
+                    eprintln!("bsf: scatter phase overran its {:?} budget", timeouts.scatter);
+                } else {
+                    bail!("scatter phase exceeded its {:?} timeout", timeouts.scatter);
+                }
+            }
+            let (received, late) =
+                master.gather_with_stats(&alive, epoch, timeouts.gather, &mut got);
+            counters.late_uplinks_dropped += late;
             let expected = alive.iter().filter(|&&a| a).count();
             if received < expected {
                 if self.fault_tolerant {
                     for wid in 1..=self.k {
                         if alive[wid - 1] && got[wid - 1].is_none() {
-                            alive[wid - 1] = false;
-                            eprintln!(
-                                "bsf: worker {wid} missed the gather deadline; marked dead"
+                            mark_dead(
+                                wid,
+                                "missed the gather deadline",
+                                &mut alive,
+                                &mut counters,
+                                &respawn_attempts,
+                                &mut next_respawn_at,
+                                self.respawn_limit,
+                                self.respawn_backoff,
                             );
                         }
                     }
@@ -253,6 +460,9 @@ impl LiveRunner {
                 }
             }
             let roundtrip = it_timer.lap();
+            for i in 0..self.k {
+                delivered[i] = got[i].is_some();
+            }
             let map_fold: Vec<f64> =
                 got.iter().flatten().map(|u| u.map_seconds).collect();
             // Fold in worker-id order (identical to the sequential fold
@@ -264,17 +474,29 @@ impl LiveRunner {
                     recycle[u.worker - 1] = Some(u.partial);
                 }
             }
-            // Degraded mode: the master computes dead workers' sublists.
+            // Degraded mode: the master computes every dead sublist that a
+            // surviving carrier did not deliver this iteration — not
+            // re-dispatched (MasterRecompute, or the worker died after the
+            // scatter), or re-dispatched to a carrier that also missed.
             for wid in 1..=self.k {
                 if alive[wid - 1] {
                     continue;
+                }
+                let r = parts.range(wid - 1);
+                if r.is_empty() {
+                    continue;
+                }
+                if let Some(&(carrier, _)) = assigned.iter().find(|&&(_, d)| d == wid) {
+                    if delivered[carrier - 1] {
+                        continue;
+                    }
                 }
                 let kern = master_kernels
                     .get_or_insert_with(|| {
                         self.artifact_dir.clone().and_then(|d| KernelRuntime::open(d).ok())
                     })
                     .as_ref();
-                problem.map_fold_into(parts.range(wid - 1), &x, &mut dead_partial, &mut ws, kern);
+                problem.map_fold_into(r, &x, &mut dead_partial, &mut ws, kern);
                 problem.combine_into(&mut acc, &dead_partial);
             }
             let master_fold = it_timer.lap();
@@ -296,7 +518,32 @@ impl LiveRunner {
             }
         }
         let final_approx = Arc::try_unwrap(x).unwrap_or_else(|a| (*a).clone());
-        Ok((iterations, final_approx, converged, metrics))
+        Ok((iterations, final_approx, converged, metrics, counters))
+    }
+}
+
+/// Record a worker death: mark it dead, bump the telemetry, and — when the
+/// retry budget allows — schedule a respawn with exponential backoff.
+#[allow(clippy::too_many_arguments)]
+fn mark_dead(
+    wid: usize,
+    why: &str,
+    alive: &mut [bool],
+    counters: &mut FaultCounters,
+    respawn_attempts: &[usize],
+    next_respawn_at: &mut [Option<Instant>],
+    respawn_limit: usize,
+    respawn_backoff: Duration,
+) {
+    alive[wid - 1] = false;
+    counters.injected += 1;
+    if respawn_limit > 0 && respawn_attempts[wid - 1] < respawn_limit {
+        let exp = (respawn_attempts[wid - 1] as u32).min(16);
+        next_respawn_at[wid - 1] =
+            Some(Instant::now() + respawn_backoff * 2u32.saturating_pow(exp));
+        eprintln!("bsf: worker {wid} {why}; respawn scheduled");
+    } else {
+        eprintln!("bsf: worker {wid} {why}; master takes over its sublist");
     }
 }
 
@@ -321,8 +568,14 @@ pub fn calibrate_problem(
         k: 1,
         max_iters: warmup + iters,
         artifact_dir: artifact_dir.clone(),
-        gather_timeout: Duration::from_secs(600),
+        timeouts: Some(PhaseTimeouts {
+            scatter: Duration::from_secs(60),
+            gather: Duration::from_secs(600),
+        }),
         fault_tolerant: false,
+        recovery: RecoveryPolicy::MasterRecompute,
+        respawn_limit: 0,
+        respawn_backoff: Duration::from_millis(100),
     };
     let report = runner.run(problem.clone())?;
     let metrics = report.metrics.without_warmup(warmup.min(report.metrics.len().saturating_sub(1)));
@@ -374,6 +627,7 @@ mod tests {
         assert!(r.converged, "did not converge in {} iters", r.iterations);
         assert!((r.final_approx[0] - 2.0).abs() < 1e-9);
         assert_eq!(r.metrics.len(), r.iterations);
+        assert_eq!(r.faults, FaultCounters::default());
     }
 
     #[test]
@@ -388,6 +642,7 @@ mod tests {
                 (live.final_approx[0] - seq.final_approx[0]).abs() < 1e-12,
                 "k={k}"
             );
+            assert_eq!(live.faults, FaultCounters::default(), "k={k}");
         }
     }
 
@@ -423,6 +678,34 @@ mod tests {
             assert_eq!(it.map_fold.len(), 4);
             assert!(it.total > 0.0);
         }
+    }
+
+    #[test]
+    fn derived_timeouts_are_clamped_and_reported() {
+        // A tiny problem prices far below the floors, so the clamps bind.
+        let runner = LiveRunner::new(2, 3);
+        let p = Relaxation::unit(50);
+        let t = runner.resolve_timeouts(&p);
+        assert_eq!(t.gather, Duration::from_secs(10));
+        assert_eq!(t.scatter, Duration::from_secs(2));
+        let r = runner.run(Arc::new(p) as Arc<dyn BsfProblem>).unwrap();
+        assert_eq!(r.gather_timeout, Duration::from_secs(10));
+        assert_eq!(r.scatter_timeout, Duration::from_secs(2));
+    }
+
+    #[test]
+    fn explicit_timeouts_win_over_derivation() {
+        let mut runner = LiveRunner::new(1, 2);
+        let t = PhaseTimeouts {
+            scatter: Duration::from_millis(123),
+            gather: Duration::from_millis(456),
+        };
+        runner.timeouts = Some(t);
+        let p = Relaxation::unit(10);
+        assert_eq!(runner.resolve_timeouts(&p), t);
+        let r = runner.run(Arc::new(p) as Arc<dyn BsfProblem>).unwrap();
+        assert_eq!(r.gather_timeout, t.gather);
+        assert_eq!(r.scatter_timeout, t.scatter);
     }
 
     #[test]

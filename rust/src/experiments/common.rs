@@ -13,7 +13,8 @@ use crate::model::scalability::SpeedupPoint;
 use crate::model::{BsfModel, CostParams};
 use crate::problems::{CimminoProblem, GravityProblem, JacobiProblem};
 use crate::simulator::{
-    AnalyticCost, CostFactory, IterationTemplate, IterationTiming, SampledCost, SimParams,
+    run_faulty_into, AnalyticCost, CostFactory, FaultPlan, FaultScratch, FaultSpec,
+    IterationTemplate, IterationTiming, SampledCost, SimParams,
 };
 use crate::util::parallel::{default_threads, parallel_map_with};
 use crate::util::{Rng, Table};
@@ -199,7 +200,17 @@ pub struct SweepJob<'a> {
     pub iters: usize,
     /// Sweep-root RNG; the per-K stream is `root.split(k)`.
     pub root: Rng,
+    /// Optional fault/heterogeneity injection: when set, each K-point
+    /// replays under a [`FaultPlan`] generated from this spec and a per-K
+    /// stream split off the sweep root — deterministic at any thread
+    /// count, exactly like the clean per-K draws.
+    pub fault: Option<FaultSpec>,
 }
+
+/// Stream tag for per-K fault-plan generation. The clean per-K streams use
+/// `root.split(k)` with `k < 2^32`, so the high bit keeps the plan stream
+/// disjoint from every timing stream.
+const FAULT_PLAN_STREAM: u64 = 1 << 63;
 
 impl<'a> SweepJob<'a> {
     /// Build a job, forking the sweep root off `rng` exactly like the
@@ -214,7 +225,13 @@ impl<'a> SweepJob<'a> {
         iters: usize,
         rng: &mut Rng,
     ) -> SweepJob<'a> {
-        SweepJob { params, l, factory, ks, iters, root: rng.fork(0x5EED) }
+        SweepJob { params, l, factory, ks, iters, root: rng.fork(0x5EED), fault: None }
+    }
+
+    /// Replay this sweep under a fault spec (builder form).
+    pub fn with_fault(mut self, spec: FaultSpec) -> SweepJob<'a> {
+        self.fault = Some(spec);
+        self
     }
 }
 
@@ -225,6 +242,7 @@ impl<'a> SweepJob<'a> {
 struct SweepWorker {
     tmpl: Option<IterationTemplate>,
     runs: Vec<IterationTiming>,
+    fault_scratch: FaultScratch,
 }
 
 /// Mean iteration time of `job` at worker count `k` — a pure function of
@@ -232,6 +250,25 @@ struct SweepWorker {
 fn sweep_point(w: &mut SweepWorker, job: &SweepJob, k: usize) -> f64 {
     let mut provider = job.factory.instance(k as u64);
     let mut rng_k = job.root.split(k as u64);
+    if let Some(spec) = &job.fault {
+        // Faulty replay: the plan is a pure function of (spec, k, sweep
+        // root), so pooled execution stays bitwise identical to serial.
+        let plan_root = job.root.split(FAULT_PLAN_STREAM | k as u64);
+        let plan = FaultPlan::generate(spec, k, job.iters as u64, &plan_root);
+        let tmpl = w.tmpl.get_or_insert_with(|| IterationTemplate::new(k, job.l, &job.params));
+        run_faulty_into(
+            tmpl,
+            &plan,
+            job.l,
+            &job.params,
+            job.iters,
+            provider.as_mut(),
+            &mut rng_k,
+            &mut w.runs,
+            &mut w.fault_scratch,
+        );
+        return w.runs.iter().map(|t| t.total).sum::<f64>() / w.runs.len() as f64;
+    }
     if let Some(tmpl) = w.tmpl.as_mut() {
         tmpl.reset_to(k, job.l, &job.params);
     }

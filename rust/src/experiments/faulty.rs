@@ -1,0 +1,147 @@
+//! Faulty-cluster boundary shift (ROADMAP "scenario diversity"): how far
+//! the scalability boundary K* moves off the clean model's prediction as
+//! worker failure rates and straggler factors grow.
+//!
+//! Every cell replays the paper's n = 10000 Jacobi workload through the
+//! DES under a deterministic [`FaultSpec`] — failures cost recovery tasks
+//! + comm edges in the Algorithm-2 graph (per the cell's
+//! [`RecoveryPolicy`]), stragglers stretch the slowest Map lane — and the
+//! peak of the simulated speedup curve is compared against the clean
+//! closed form (eq. 14). The fault draws ride the same split-stream RNG
+//! discipline as the clean sweeps, so the whole table is bitwise
+//! reproducible at any thread count (`rust/tests/faults.rs`).
+
+use anyhow::Result;
+
+use crate::experiments::common::{
+    analytic_provider, effective_net_with_latency, k_sweep, paper_jacobi_params, simulated_curves,
+    ExperimentCtx, SweepJob,
+};
+use crate::model::BsfModel;
+use crate::simulator::{FaultSpec, RecoveryPolicy};
+use crate::util::parallel::default_threads;
+use crate::util::{Rng, Table};
+
+/// One cell of the boundary-shift sweep.
+struct Cell {
+    fail_prob: f64,
+    straggler_factor: f64,
+    policy: RecoveryPolicy,
+}
+
+fn policy_name(p: RecoveryPolicy) -> &'static str {
+    match p {
+        RecoveryPolicy::MasterRecompute => "master-recompute",
+        RecoveryPolicy::Redistribute => "redistribute",
+    }
+}
+
+/// The boundary-shift table: peak K* under growing failure rate and
+/// straggler factor, vs the clean model. The first (clean) cell doubles as
+/// the DES-vs-analytic validation row, like the existing boundary tables.
+pub fn faulty(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
+    let n = 10_000;
+    let params = paper_jacobi_params(n).expect("published");
+    let k_bsf = BsfModel::new(params).k_bsf();
+    let ks = k_sweep(k_bsf, ctx.quick);
+    let iters = if ctx.quick { 3 } else { 7 };
+
+    // Failure/straggler grid, plus two master-recompute cells at the
+    // heaviest rates so the two recovery policies are directly comparable.
+    let cells = [
+        Cell { fail_prob: 0.00, straggler_factor: 1.0, policy: RecoveryPolicy::Redistribute },
+        Cell { fail_prob: 0.01, straggler_factor: 1.0, policy: RecoveryPolicy::Redistribute },
+        Cell { fail_prob: 0.05, straggler_factor: 1.0, policy: RecoveryPolicy::Redistribute },
+        Cell { fail_prob: 0.00, straggler_factor: 4.0, policy: RecoveryPolicy::Redistribute },
+        Cell { fail_prob: 0.01, straggler_factor: 4.0, policy: RecoveryPolicy::Redistribute },
+        Cell { fail_prob: 0.05, straggler_factor: 4.0, policy: RecoveryPolicy::Redistribute },
+        Cell { fail_prob: 0.05, straggler_factor: 1.0, policy: RecoveryPolicy::MasterRecompute },
+        Cell { fail_prob: 0.05, straggler_factor: 4.0, policy: RecoveryPolicy::MasterRecompute },
+    ];
+
+    // Same treatment as `boundary_rows`: charge the simulator a network
+    // consistent with the published t_c, and give every cell its own RNG
+    // root so pooled execution matches the serial cell order bitwise.
+    let prov = analytic_provider(&params);
+    let mut sim = ctx.sim_params(n, n);
+    sim.net = effective_net_with_latency(params.t_c, n, n, ctx.cluster.net.latency);
+    let mut jobs = Vec::with_capacity(cells.len());
+    for cell in &cells {
+        let spec = FaultSpec {
+            speed_sigma: 0.0,
+            straggler_prob: if cell.straggler_factor > 1.0 { 0.1 } else { 0.0 },
+            straggler_factor: cell.straggler_factor,
+            fail_prob: cell.fail_prob,
+            downtime: 2,
+            policy: cell.policy,
+        };
+        let mut rng = Rng::new(ctx.seed ^ 0xFA7);
+        jobs.push(SweepJob::new(sim.clone(), n, &prov, ks.clone(), iters, &mut rng).with_fault(spec));
+    }
+    let curves = simulated_curves(&jobs, default_threads());
+
+    let mut t = Table::new(
+        format!("Faulty cluster (Jacobi n={n}): boundary shift vs clean model"),
+        &[
+            "fail rate",
+            "straggler ×",
+            "recovery",
+            "K* (sim)",
+            "peak speedup",
+            "ΔK* vs clean",
+            "K_BSF (clean, eq.14)",
+            "error vs eq.14",
+        ],
+    );
+    let w = (ks.len() / 10).max(5);
+    let mut clean_peak_k = 0usize;
+    for (i, (cell, curve)) in cells.iter().zip(&curves).enumerate() {
+        let pk = crate::model::scalability::peak_knee(curve, w, 0.99).expect("non-empty curve");
+        if i == 0 {
+            clean_peak_k = pk.k;
+        }
+        let err = crate::model::prediction_error(pk.k as f64, k_bsf);
+        t.row(&[
+            format!("{:.2}", cell.fail_prob),
+            format!("{:.1}", cell.straggler_factor),
+            policy_name(cell.policy).into(),
+            pk.k.to_string(),
+            format!("{:.1}", pk.speedup),
+            format!("{}", clean_peak_k as i64 - pk.k as i64),
+            format!("{k_bsf:.0}"),
+            if i == 0 { format!("{err:.2}") } else { "—".into() },
+        ]);
+    }
+    ctx.save("faulty", &t);
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faulty_table_shape_and_clean_validation() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        let t = faulty(&ctx).unwrap().remove(0);
+        assert_eq!(t.len(), 8);
+        let csv = t.to_csv();
+        let rows: Vec<Vec<&str>> = csv.lines().skip(1).map(|l| l.split(',').collect()).collect();
+        // The clean cell is the DES-vs-analytic validation row: its shift
+        // is zero by construction and its error must stay in the paper's
+        // band (the same setup as `paper_params_boundary_within_band`).
+        assert_eq!(rows[0][0], "0.00");
+        assert_eq!(rows[0][5], "0");
+        let err: f64 = rows[0][7].parse().unwrap();
+        assert!(err < 0.25, "clean-cell DES error too large: {csv}");
+        // Every cell produced a real peak.
+        for r in &rows {
+            assert!(r[3].parse::<usize>().unwrap() >= 1, "{csv}");
+        }
+        // The heaviest failure cell must not out-peak the clean cell's
+        // speedup: faults only add work to the timeline.
+        let clean_peak: f64 = rows[0][4].parse().unwrap();
+        let heavy_peak: f64 = rows[5][4].parse().unwrap();
+        assert!(heavy_peak <= clean_peak * 1.02, "{csv}");
+    }
+}

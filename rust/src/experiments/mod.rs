@@ -21,6 +21,7 @@ mod common;
 mod explorer;
 pub(crate) mod fig6;
 mod fig7;
+mod faulty;
 mod sqrt_law;
 mod tables;
 
@@ -32,6 +33,7 @@ pub use common::{
     BoundarySpec, ExperimentCtx, ProblemKind, SweepJob,
 };
 pub use explorer::explorer;
+pub use faulty::faulty;
 pub use fig6::fig6;
 pub use fig7::fig7;
 pub use sqrt_law::sqrt_law;

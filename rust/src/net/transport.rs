@@ -47,6 +47,12 @@ pub enum Downlink {
         /// handed back for reuse (the uplink double-buffer swap). `None`
         /// on the first iteration.
         reuse: Option<Vec<f64>>,
+        /// Extra list ranges re-dispatched to this worker because their
+        /// owner died (`RecoveryPolicy::Redistribute`). Almost always
+        /// empty — an empty `Vec` never allocates, so the clean path's
+        /// zero-allocation steady state is untouched. The worker folds
+        /// these into the same partial it uplinks.
+        extra: Vec<std::ops::Range<usize>>,
     },
     /// Terminate: the StopCond fired (carries the final iteration count).
     Stop {
@@ -80,6 +86,11 @@ struct Inbox {
     /// so a gather stops waiting for a peer that can never answer —
     /// the fail-fast disconnect detection the old mpsc uplink had.
     gone: Vec<bool>,
+    /// Incarnation counter per worker, bumped by [`MasterEndpoint::respawn`].
+    /// A superseded endpoint (an old incarnation that was replaced while
+    /// hung) must neither re-flag `gone` on its delayed drop nor clobber
+    /// the new incarnation's slot with a late partial.
+    generation: Vec<u32>,
 }
 
 /// The shared uplink bus.
@@ -120,6 +131,8 @@ impl Drop for MasterEndpoint {
 pub struct WorkerEndpoint {
     /// This worker's id (`1..=K`).
     pub id: usize,
+    /// Incarnation this endpoint belongs to (see `Inbox::generation`).
+    generation: u32,
     downlink: Receiver<Downlink>,
     bus: Arc<UplinkBus>,
 }
@@ -128,10 +141,14 @@ impl Drop for WorkerEndpoint {
     fn drop(&mut self) {
         // Runs on normal exit *and* on panic unwind: flag this worker
         // gone and wake the master so an in-flight gather fails fast
-        // instead of sleeping out its deadline.
+        // instead of sleeping out its deadline. A superseded incarnation
+        // (replaced by `respawn` while it was hung) must not re-flag the
+        // live one.
         {
             let mut inbox = self.bus.lock();
-            inbox.gone[self.id - 1] = true;
+            if inbox.generation[self.id - 1] == self.generation {
+                inbox.gone[self.id - 1] = true;
+            }
         }
         self.bus.ready.notify_one();
     }
@@ -143,6 +160,7 @@ pub fn fabric(k: usize) -> (MasterEndpoint, Vec<WorkerEndpoint>) {
         inbox: Mutex::new(Inbox {
             slots: (0..k).map(|_| None).collect(),
             gone: vec![false; k],
+            generation: vec![0; k],
         }),
         ready: Condvar::new(),
         closed: std::sync::atomic::AtomicBool::new(false),
@@ -152,7 +170,7 @@ pub fn fabric(k: usize) -> (MasterEndpoint, Vec<WorkerEndpoint>) {
     for id in 1..=k {
         let (d_tx, d_rx) = channel::<Downlink>();
         downlinks.push(d_tx);
-        workers.push(WorkerEndpoint { id, downlink: d_rx, bus: bus.clone() });
+        workers.push(WorkerEndpoint { id, generation: 0, downlink: d_rx, bus: bus.clone() });
     }
     (MasterEndpoint { downlinks, bus }, workers)
 }
@@ -192,6 +210,26 @@ impl MasterEndpoint {
     /// Number of attached workers.
     pub fn k(&self) -> usize {
         self.downlinks.len()
+    }
+
+    /// Replace worker `id`'s channel with a fresh incarnation and return
+    /// its endpoint (for the caller to hand to a new thread). The old
+    /// downlink sender is dropped — a hung old incarnation blocked on
+    /// `recv` wakes with `MasterGone` and exits — and the inbox bumps the
+    /// worker's generation, so the old endpoint's delayed drop or late
+    /// `send` can no longer disturb the new one. Any undelivered partial
+    /// from the old incarnation is discarded.
+    pub fn respawn(&mut self, id: usize) -> WorkerEndpoint {
+        let (d_tx, d_rx) = channel::<Downlink>();
+        self.downlinks[id - 1] = d_tx;
+        let generation = {
+            let mut inbox = self.bus.lock();
+            inbox.generation[id - 1] += 1;
+            inbox.gone[id - 1] = false;
+            inbox.slots[id - 1] = None;
+            inbox.generation[id - 1]
+        };
+        WorkerEndpoint { id, generation, downlink: d_rx, bus: self.bus.clone() }
     }
 
     /// Send one downlink to worker `id` (1-based) — the per-worker form of
@@ -241,18 +279,45 @@ impl MasterEndpoint {
         timeout: Duration,
         got: &mut Vec<Option<Uplink>>,
     ) -> usize {
+        self.gather_with_stats(expect, epoch, timeout, got).0
+    }
+
+    /// [`MasterEndpoint::gather_into`] that also reports how many **late
+    /// uplinks** were dropped during the gather: stale-epoch partials from
+    /// expected workers, and anything a no-longer-expected worker (marked
+    /// dead in an earlier iteration, woken from a hang since) parked in
+    /// its slot. Dropping the latter also frees its buffer instead of
+    /// letting it sit in the inbox for the rest of the run. Returns
+    /// `(received, late_dropped)`.
+    pub fn gather_with_stats(
+        &self,
+        expect: &[bool],
+        epoch: u64,
+        timeout: Duration,
+        got: &mut Vec<Option<Uplink>>,
+    ) -> (usize, usize) {
         let k = self.k();
         debug_assert_eq!(expect.len(), k);
         got.clear();
         got.resize_with(k, || None);
         let want = expect.iter().filter(|&&e| e).count();
         let mut received = 0usize;
+        let mut late_dropped = 0usize;
         let deadline = std::time::Instant::now() + timeout;
         let mut inbox = self.bus.lock();
         loop {
             let mut unreachable = 0usize;
             for i in 0..k {
-                if !expect[i] || got[i].is_some() {
+                if !expect[i] {
+                    // Not waited for this epoch (marked dead): a parked
+                    // partial here can only be late — drop and count it.
+                    if inbox.slots[i].is_some() {
+                        inbox.slots[i] = None;
+                        late_dropped += 1;
+                    }
+                    continue;
+                }
+                if got[i].is_some() {
                     continue;
                 }
                 if let Some(u) = inbox.slots[i].take() {
@@ -264,6 +329,7 @@ impl MasterEndpoint {
                     // Stale partial from a worker that missed an earlier
                     // deadline: dropped (its range was already recovered
                     // by the master that iteration).
+                    late_dropped += 1;
                 }
                 if inbox.gone[i] {
                     unreachable += 1;
@@ -283,7 +349,7 @@ impl MasterEndpoint {
                 .unwrap_or_else(|e| e.into_inner());
             inbox = guard;
         }
-        received
+        (received, late_dropped)
     }
 
     /// Best-effort broadcast: deliver to every worker whose channel is
@@ -305,7 +371,9 @@ impl WorkerEndpoint {
 
     /// `SendToMaster(s_j)` — moves the partial into this worker's inbox
     /// slot. Zero heap allocations: the buffer travels by move and comes
-    /// back through the next downlink's `reuse`.
+    /// back through the next downlink's `reuse`. A superseded incarnation
+    /// (the master respawned this worker id while this endpoint was hung)
+    /// gets `WorkerGone` instead of clobbering the new incarnation's slot.
     pub fn send(
         &self,
         epoch: u64,
@@ -317,6 +385,9 @@ impl WorkerEndpoint {
         }
         {
             let mut inbox = self.bus.lock();
+            if inbox.generation[self.id - 1] != self.generation {
+                return Err(TransportError::WorkerGone(self.id));
+            }
             inbox.slots[self.id - 1] =
                 Some(Uplink { worker: self.id, epoch, partial, map_seconds });
         }
@@ -331,7 +402,7 @@ mod tests {
     use std::time::Duration;
 
     fn approx(x: Vec<f64>, epoch: u64) -> Downlink {
-        Downlink::Approximation { x: Arc::new(x), epoch, reuse: None }
+        Downlink::Approximation { x: Arc::new(x), epoch, reuse: None, extra: Vec::new() }
     }
 
     #[test]
@@ -460,16 +531,81 @@ mod tests {
                 x: Arc::new(vec![7.0]),
                 epoch: 0,
                 reuse: Some(vec![0.0; 3]),
+                extra: vec![4..8],
             })
             .unwrap();
         // worker 1 has nothing pending; worker 2 got the message + buffer.
         match workers[1].recv().unwrap() {
-            Downlink::Approximation { x, epoch, reuse } => {
+            Downlink::Approximation { x, epoch, reuse, extra } => {
                 assert_eq!(*x, vec![7.0]);
                 assert_eq!(epoch, 0);
                 assert_eq!(reuse.unwrap().len(), 3);
+                assert_eq!(extra, vec![4..8]);
             }
             other => panic!("unexpected: {other:?}"),
         }
+    }
+
+    #[test]
+    fn gather_counts_late_uplinks() {
+        let (master, workers) = fabric(3);
+        // worker 1: stale epoch while still expected; worker 3: parked
+        // partial while no longer expected (marked dead earlier).
+        workers[0].send(3, vec![9.0], 0.0).unwrap();
+        workers[1].send(4, vec![2.0], 0.0).unwrap();
+        workers[2].send(3, vec![8.0], 0.0).unwrap();
+        let mut got = Vec::new();
+        let (received, late) = master.gather_with_stats(
+            &[true, true, false],
+            4,
+            Duration::from_millis(40),
+            &mut got,
+        );
+        assert_eq!(received, 1);
+        assert_eq!(late, 2);
+        assert!(got[0].is_none());
+        assert_eq!(got[1].as_ref().unwrap().partial, vec![2.0]);
+        assert!(got[2].is_none());
+    }
+
+    #[test]
+    fn respawn_supersedes_old_incarnation() {
+        let (mut master, mut workers) = fabric(2);
+        let old = workers.remove(1);
+        let new = master.respawn(2);
+        // The old incarnation can no longer deliver...
+        assert!(matches!(
+            old.send(0, vec![1.0], 0.0).unwrap_err(),
+            TransportError::WorkerGone(2)
+        ));
+        // ...its recv fails fast (the old downlink sender was dropped)...
+        assert!(matches!(old.recv().unwrap_err(), TransportError::MasterGone));
+        // ...and its drop must NOT mark the respawned worker gone.
+        drop(old);
+        new.send(0, vec![5.0], 0.0).unwrap();
+        workers[0].send(0, vec![1.0], 0.0).unwrap();
+        let got = master.gather(0, Duration::from_millis(100)).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[1].partial, vec![5.0]);
+        // The fresh downlink reaches the new incarnation.
+        master.send_to(2, approx(vec![3.0], 1)).unwrap();
+        match new.recv().unwrap() {
+            Downlink::Approximation { x, epoch, .. } => {
+                assert_eq!(*x, vec![3.0]);
+                assert_eq!(epoch, 1);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn respawn_discards_parked_partial() {
+        let (mut master, mut workers) = fabric(1);
+        let old = workers.pop().unwrap();
+        old.send(7, vec![1.0], 0.0).unwrap(); // parked late partial
+        let new = master.respawn(1);
+        new.send(8, vec![2.0], 0.0).unwrap();
+        let got = master.gather(8, Duration::from_millis(100)).unwrap();
+        assert_eq!(got[0].partial, vec![2.0]);
     }
 }

@@ -42,7 +42,8 @@
 
 use crate::linalg::kernels;
 use crate::net::{CollectiveAlgo, CollectiveSchedule, NetworkParams};
-use crate::simulator::engine::{Engine, TaskId};
+use crate::simulator::engine::{Engine, SchedCounters, TaskId};
+use crate::simulator::faults::RecoveryPolicy;
 use crate::simulator::lanes::{self, LANES};
 use crate::util::Rng;
 
@@ -503,6 +504,80 @@ impl<'p> Build<'p> {
         }
     }
 
+    /// [`RecoveryPolicy::MasterRecompute`] for one dead chunk: the group
+    /// master re-runs the dead worker's Map+fold itself *after* its group
+    /// reduce completed (detection happens at the gather deadline — the
+    /// live runner's degraded mode), then folds the result in. The
+    /// recovery Map carries the [`crate::simulator::faults::MASTER_WORKER`]
+    /// sentinel so a fault plan never slows it by the dead worker's
+    /// multiplier. Returns the new group-partial task.
+    fn recover_on_master(
+        &mut self,
+        master_res: u32,
+        anchor: Option<TaskId>,
+        after: TaskId,
+        chunk: usize,
+    ) -> TaskId {
+        let t = self.push(
+            master_res,
+            DurKind::MapFold { worker: u32::MAX, chunk: chunk as u32 },
+            "recover-map",
+        );
+        if let Some(a) = anchor {
+            self.eng.dep(a, t);
+        }
+        self.eng.dep(after, t);
+        let fold = self.push(master_res, DurKind::FoldN(1), "recover-fold");
+        self.eng.dep(t, fold);
+        fold
+    }
+
+    /// [`RecoveryPolicy::Redistribute`] for one dead chunk: the chunk is
+    /// split evenly over the group's survivors `(worker, resource,
+    /// recv-x task)`; each sub-chunk costs a re-dispatch message on the
+    /// master, the survivor's extra Map+fold (serialised with its own Map
+    /// on the survivor's resource, overlapping other nodes), an uplink of
+    /// the extra partial, and one fold at the master chained after the
+    /// group reduce. Dispatches depend only on the master holding `x`
+    /// (they ride the scatter, like the live runner's `extra` ranges on
+    /// the downlink), not on the gather — so redistribution overlaps where
+    /// master recompute serialises. Returns the new group-partial task.
+    fn recover_redistribute(
+        &mut self,
+        master_res: u32,
+        anchor: Option<TaskId>,
+        after: TaskId,
+        chunk: usize,
+        survivors: &[(u32, u32, Option<TaskId>)],
+    ) -> TaskId {
+        let sub = crate::lists::partition_even(chunk, survivors.len());
+        let words_up = self.params.words_up;
+        let mut acc = after;
+        for (i, &(worker, res, recv)) in survivors.iter().enumerate() {
+            let c = sub.size(i);
+            if c == 0 {
+                continue;
+            }
+            // range descriptor (start, len): two words on the downlink
+            let dispatch = self.comm(master_res, 2, "redispatch");
+            if let Some(a) = anchor {
+                self.eng.dep(a, dispatch);
+            }
+            let t = self.push(res, DurKind::MapFold { worker, chunk: c as u32 }, "recover-map");
+            self.eng.dep(dispatch, t);
+            if let Some(r) = recv {
+                self.eng.dep(r, t);
+            }
+            let send = self.comm(res, words_up, "recover-uplink");
+            self.eng.dep(t, send);
+            let fold = self.push(master_res, DurKind::FoldN(1), "recover-fold");
+            self.eng.dep(send, fold);
+            self.eng.dep(acc, fold);
+            acc = fold;
+        }
+        acc
+    }
+
     /// Fold the per-group partials held by masters `1..m` into master 0.
     fn reduce_masters(&mut self, master0_ready: TaskId, peers: &[(u32, TaskId)]) -> TaskId {
         let sched = CollectiveSchedule::reduce(self.params.algo, peers.len());
@@ -558,8 +633,40 @@ impl IterationTemplate {
     /// fresh [`IterationTemplate::new`] — pinned by the module tests — so
     /// pooled sweep workers can hold one template for their whole queue.
     pub fn reset_to(&mut self, k: usize, l: usize, params: &SimParams) {
+        self.build(k, l, params, None);
+    }
+
+    /// Rebuild the template for `(k, l, params)` with the given per-worker
+    /// dead set: dead workers receive no broadcast and run no Map; each
+    /// dead chunk is recovered per `policy` as extra Map tasks + comm
+    /// edges, so the replayed makespan reflects the re-dispatch cost (see
+    /// `faults.rs`). A group whose workers are *all* dead falls back to
+    /// master recompute regardless of the policy (there is nobody left to
+    /// redistribute to). With an all-alive dead set this runs the exact
+    /// same build pass as [`IterationTemplate::reset_to`] — the graphs are
+    /// identical, which the fault-plane bitwise tests pin.
+    pub fn reset_to_faulty(
+        &mut self,
+        k: usize,
+        l: usize,
+        params: &SimParams,
+        dead: &[bool],
+        policy: RecoveryPolicy,
+    ) {
+        assert_eq!(dead.len(), k, "dead set must cover every worker");
+        self.build(k, l, params, Some((dead, policy)));
+    }
+
+    fn build(
+        &mut self,
+        k: usize,
+        l: usize,
+        params: &SimParams,
+        faults: Option<(&[bool], RecoveryPolicy)>,
+    ) {
         assert!(k >= 1, "need at least one worker");
         assert!(params.masters >= 1);
+        let is_dead = |j: usize| faults.is_some_and(|(d, _)| d[j]);
         self.eng.reset();
         self.durs.clear();
         self.bcast_tasks.clear();
@@ -601,7 +708,9 @@ impl IterationTemplate {
         }
 
         for g in 0..m {
-            let members: Vec<usize> = groups.range(g).collect();
+            // Dead workers take no part in the collective: the broadcast
+            // tree spans the group's alive members only.
+            let members: Vec<usize> = groups.range(g).filter(|&w| !is_dead(w)).collect();
             let sched = CollectiveSchedule::broadcast(params.algo, members.len());
             // Schedule node 0 = master g; node i = worker members[i-1].
             let res_of = |node: usize| -> u32 {
@@ -642,8 +751,13 @@ impl IterationTemplate {
         }
 
         // Phase 2: worker compute = Map(chunk) + (chunk-1) local folds.
-        let mut partial_ready: Vec<TaskId> = Vec::with_capacity(k);
+        // Dead workers run nothing; their entry stays None.
+        let mut partial_ready: Vec<Option<TaskId>> = Vec::with_capacity(k);
         for j in 0..k {
+            if is_dead(j) {
+                partial_ready.push(None);
+                continue;
+            }
             let chunk = chunk_of.size(j);
             let t = b.push(
                 worker_res(j),
@@ -653,15 +767,43 @@ impl IterationTemplate {
             if let Some(r) = recv_x[j] {
                 b.eng.dep(r, t);
             }
-            partial_ready.push(t);
+            partial_ready.push(Some(t));
         }
 
         // Phase 3: per-group reduce to the group master, then masters to 0.
+        // Dead chunks are recovered here per the plan's policy, chained
+        // onto the group partial so every recovered element reaches the
+        // final fold — the makespan pays the full re-dispatch cost.
         let mut group_partial: Vec<TaskId> = Vec::with_capacity(m);
         for g in 0..m {
-            let members: Vec<(u32, TaskId)> =
-                groups.range(g).map(|w| (worker_res(w), partial_ready[w])).collect();
-            let gp = b.reduce_group(g as u32, &members);
+            let members: Vec<(u32, TaskId)> = groups
+                .range(g)
+                .filter_map(|w| partial_ready[w].map(|t| (worker_res(w), t)))
+                .collect();
+            let mut gp = b.reduce_group(g as u32, &members);
+            if let Some((dead, policy)) = faults {
+                let anchor = master_recv[g];
+                let survivors: Vec<(u32, u32, Option<TaskId>)> = groups
+                    .range(g)
+                    .filter(|&w| !dead[w])
+                    .map(|w| (w as u32, worker_res(w), recv_x[w]))
+                    .collect();
+                for w in groups.range(g) {
+                    if !dead[w] {
+                        continue;
+                    }
+                    let chunk = chunk_of.size(w);
+                    if chunk == 0 {
+                        continue;
+                    }
+                    gp = match policy {
+                        RecoveryPolicy::Redistribute if !survivors.is_empty() => {
+                            b.recover_redistribute(g as u32, anchor, gp, chunk, &survivors)
+                        }
+                        _ => b.recover_on_master(g as u32, anchor, gp, chunk),
+                    };
+                }
+            }
             group_partial.push(gp);
         }
         // Masters fold to master 0 (tree over m nodes).
@@ -680,7 +822,7 @@ impl IterationTemplate {
         b.eng.dep(final_fold, post);
 
         self.bcast_tasks.extend(recv_x.iter().flatten().copied());
-        self.map_tasks.extend_from_slice(&partial_ready);
+        self.map_tasks.extend(partial_ready.iter().flatten().copied());
         self.final_fold = final_fold;
         self.post = post;
     }
@@ -688,6 +830,13 @@ impl IterationTemplate {
     /// Number of tasks in the iteration graph.
     pub fn task_count(&self) -> usize {
         self.eng.len()
+    }
+
+    /// Scheduler telemetry of the underlying engine (order-cache hits,
+    /// fallbacks, lane batches) — lets tests assert that the fault plane's
+    /// clean path still replays through the cache.
+    pub fn sched_counters(&self) -> SchedCounters {
+        self.eng.sched_counters()
     }
 
     /// Simulate one iteration: refresh every task's duration (provider
@@ -1059,6 +1208,64 @@ mod tests {
         let mut got = Vec::new();
         tmpl.run_into(5, &mut prov, &mut Rng::new(9), &mut got);
         assert_eq!(expect, got);
+    }
+
+    #[test]
+    fn all_alive_faulty_build_matches_clean_build() {
+        // reset_to_faulty with nobody dead must produce the exact graph
+        // reset_to does — the empty-plan bitwise contract rests on it.
+        let mut p = params();
+        p.jitter_comp = 0.05;
+        p.jitter_comm = 0.03;
+        for (k, l, m) in [(1usize, 64usize, 1usize), (8, 1024, 1), (24, 2048, 3)] {
+            p.masters = m;
+            let dead = vec![false; k];
+            let mut faulty = IterationTemplate::new(k, l, &p);
+            faulty.reset_to_faulty(k, l, &p, &dead, RecoveryPolicy::Redistribute);
+            let mut clean = IterationTemplate::new(k, l, &p);
+            assert_eq!(faulty.task_count(), clean.task_count(), "K={k} l={l} m={m}");
+            let a = faulty.replay(&mut analytic(l), &mut Rng::new(42));
+            let b = clean.replay(&mut analytic(l), &mut Rng::new(42));
+            assert_eq!(a, b, "K={k} l={l} m={m}");
+        }
+    }
+
+    #[test]
+    fn dead_worker_adds_recovery_tasks() {
+        let p = params();
+        let (k, l) = (8usize, 1024usize);
+        let mut dead = vec![false; k];
+        dead[3] = true;
+        let mut counts = Vec::new();
+        for policy in [RecoveryPolicy::MasterRecompute, RecoveryPolicy::Redistribute] {
+            let mut tmpl = IterationTemplate::new(k, l, &p);
+            tmpl.reset_to_faulty(k, l, &p, &dead, policy);
+            counts.push(tmpl.task_count());
+            let t = tmpl.replay(&mut analytic(l), &mut Rng::new(3));
+            assert!(t.total > 0.0);
+            assert!(t.reduce_done >= t.map_done);
+            assert!(t.post_done >= t.reduce_done);
+        }
+        // Redistribute fans the dead chunk over 7 survivors (dispatch +
+        // map + uplink + fold each) where master recompute adds only a
+        // serial map + fold — graph sizes must reflect that.
+        assert!(counts[1] > counts[0], "redistribute={} master={}", counts[1], counts[0]);
+    }
+
+    #[test]
+    fn all_workers_dead_still_builds_and_runs() {
+        // Degenerate case: every worker dead — the master recomputes the
+        // whole list regardless of policy (no survivors to redistribute to).
+        let p = params();
+        let (k, l) = (4usize, 256usize);
+        let dead = vec![true; k];
+        for policy in [RecoveryPolicy::MasterRecompute, RecoveryPolicy::Redistribute] {
+            let mut tmpl = IterationTemplate::new(k, l, &p);
+            tmpl.reset_to_faulty(k, l, &p, &dead, policy);
+            let t = tmpl.replay(&mut analytic(l), &mut Rng::new(6));
+            // the master alone pays at least the whole Map
+            assert!(t.total >= 1.0, "{policy:?}: total={}", t.total);
+        }
     }
 
     #[test]

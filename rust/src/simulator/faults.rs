@@ -1,0 +1,628 @@
+//! Faulty-cluster simulation plane: heterogeneous node speeds, heavy-tail
+//! stragglers, and a worker-failure schedule, replayed deterministically on
+//! top of the Algorithm-2 task graph.
+//!
+//! A [`FaultPlan`] is fixed *at construction* from split [`Rng`] streams:
+//! per-worker speed multipliers, a failure schedule ("worker `w` dies at
+//! iteration `i`, recovers after `r`"), and a straggler draw that is a
+//! **pure function of `(worker, iteration)`** — no mutable state, so one
+//! plan can be shared by reference and a pooled faulty sweep is bitwise
+//! identical to the serial one at any thread count (the same contract the
+//! clean sweep's `Rng::split`-per-K streams provide; see
+//! `rust/tests/faults.rs`).
+//!
+//! Recovery is *modeled in the graph*, not hand-waved into the cost
+//! formula: [`IterationTemplate::reset_to_faulty`] adds the recovery
+//! policy's extra Map tasks and comm edges for each dead chunk, so the
+//! replayed makespan reflects re-dispatch cost, straggler overlap, and the
+//! serialisation the policy implies (master recompute serialises after the
+//! reduce; redistribution overlaps with the survivors' own Map).
+//!
+//! ## Bitwise contracts (pinned by tests, see PERF.md "Fault plane")
+//!
+//! * **Empty plan = clean engine.** `run_faulty_into` with an empty plan
+//!   (no failure windows, no stragglers, all speeds exactly 1.0) delegates
+//!   to the untouched clean path — bitwise identical timings, identical
+//!   scheduler counters, so the `BSF_SCHED`/`BSF_LANES` caches keep
+//!   working unchanged.
+//! * **Deterministic fault draws.** Speeds and the failure schedule are
+//!   drawn once at plan construction; straggler multipliers come from
+//!   `split(iteration << 32 | worker)` child streams — evaluation order
+//!   and thread count cannot change any draw.
+//! * **`BSF_FAULTS=audit`** routes even empty plans through the faulty
+//!   machinery (the wrapped provider + the recovery-aware build pass),
+//!   which must still be bitwise identical — CI runs the whole suite in
+//!   that cell so the identity is checked under every kernel/scheduler/
+//!   lane combination.
+
+use std::sync::OnceLock;
+
+use crate::simulator::cluster::{
+    CostProvider, IterationTemplate, IterationTiming, SimParams,
+};
+use crate::util::Rng;
+
+/// How a dead worker's chunk is recovered, both in the DES graph
+/// ([`IterationTemplate::reset_to_faulty`]) and in the live runner
+/// (`LiveRunner::recovery`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecoveryPolicy {
+    /// The master recomputes the dead chunk itself after the gather —
+    /// today's degraded mode: detection at the gather deadline, then a
+    /// serial Map+fold on the master's own resource.
+    #[default]
+    MasterRecompute,
+    /// The dead chunk is split over the group's surviving workers: a
+    /// re-dispatch message per survivor, the survivor's extra Map+fold
+    /// (overlapping its own), an uplink of the extra partial, and one fold
+    /// at the master. Falls back to [`RecoveryPolicy::MasterRecompute`]
+    /// when a group has no survivors left.
+    Redistribute,
+}
+
+/// Generator configuration for [`FaultPlan::generate`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Lognormal sigma of the static per-worker speed multiplier
+    /// (0 = homogeneous: every speed is exactly 1.0).
+    pub speed_sigma: f64,
+    /// Per-(worker, iteration) probability of a straggler event.
+    pub straggler_prob: f64,
+    /// Map-time multiplier applied when a straggler event fires (the
+    /// heavy-tail factor; 1.0 = stragglers change nothing).
+    pub straggler_factor: f64,
+    /// Per-(worker, iteration) probability that the worker dies.
+    pub fail_prob: f64,
+    /// Iterations a dead worker stays down before it recovers (min 1).
+    pub downtime: u64,
+    /// Recovery policy modeled for dead chunks.
+    pub policy: RecoveryPolicy,
+}
+
+impl FaultSpec {
+    /// The no-fault spec: generates an empty plan (all speeds 1.0).
+    pub fn clean() -> FaultSpec {
+        FaultSpec {
+            speed_sigma: 0.0,
+            straggler_prob: 0.0,
+            straggler_factor: 1.0,
+            fail_prob: 0.0,
+            downtime: 1,
+            policy: RecoveryPolicy::MasterRecompute,
+        }
+    }
+}
+
+/// One failure episode: `worker` is down for iterations `from..until`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailureWindow {
+    /// Worker index in `0..k`.
+    pub worker: usize,
+    /// First iteration (inclusive) the worker is dead.
+    pub from: u64,
+    /// First iteration the worker is back up (exclusive end).
+    pub until: u64,
+}
+
+/// `worker` value of the synthetic Map tasks a master runs when it
+/// recomputes a dead chunk itself ([`RecoveryPolicy::MasterRecompute`]):
+/// out of range of any real worker, so [`FaultPlan::mult`] never slows a
+/// master's recovery compute by the dead worker's multiplier.
+pub const MASTER_WORKER: usize = u32::MAX as usize;
+
+// Plan-local stream tags, disjoint in the high bits from each other and
+// from any worker index.
+const SPEED_STREAM: u64 = 0x5BEE_D000 << 32;
+const FAIL_STREAM: u64 = 0xFA11_0000 << 32;
+const STRAGGLER_STREAM: u64 = 0x51AC_0000 << 32;
+
+/// A deterministic fault schedule for `k` workers over a finite horizon.
+///
+/// All randomness is resolved at construction ([`FaultPlan::generate`]) or
+/// through pure `split` streams ([`FaultPlan::mult`]); the plan itself is
+/// immutable and can be shared by `&` across replay loops and threads.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    k: usize,
+    /// Static per-worker Map-time multiplier (1.0 = nominal speed).
+    speeds: Vec<f64>,
+    windows: Vec<FailureWindow>,
+    straggler_prob: f64,
+    straggler_factor: f64,
+    policy: RecoveryPolicy,
+    /// Root of the pure per-(worker, iteration) straggler streams.
+    straggler_root: Rng,
+}
+
+impl FaultPlan {
+    /// The empty plan: no failures, no stragglers, all speeds exactly 1.0.
+    pub fn clean(k: usize) -> FaultPlan {
+        FaultPlan {
+            k,
+            speeds: vec![1.0; k],
+            windows: Vec::new(),
+            straggler_prob: 0.0,
+            straggler_factor: 1.0,
+            policy: RecoveryPolicy::MasterRecompute,
+            straggler_root: Rng::new(0),
+        }
+    }
+
+    /// Draw a plan from `spec` for `k` workers over `horizon` iterations.
+    ///
+    /// Pure in `(spec, k, horizon, root)`: every speed and failure window
+    /// comes from a per-worker `root.split(...)` child stream, so two
+    /// calls with the same arguments — on any thread, in any order —
+    /// produce identical plans.
+    pub fn generate(spec: &FaultSpec, k: usize, horizon: u64, root: &Rng) -> FaultPlan {
+        let mut speeds = Vec::with_capacity(k);
+        for w in 0..k {
+            let mut r = root.split(SPEED_STREAM | w as u64);
+            speeds.push(r.jitter(spec.speed_sigma)); // exactly 1.0 at sigma 0
+        }
+        let mut windows = Vec::new();
+        if spec.fail_prob > 0.0 {
+            for w in 0..k {
+                let mut r = root.split(FAIL_STREAM | w as u64);
+                let mut i = 0u64;
+                while i < horizon {
+                    if r.uniform() < spec.fail_prob {
+                        let until = i.saturating_add(spec.downtime.max(1));
+                        windows.push(FailureWindow { worker: w, from: i, until });
+                        i = until;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        FaultPlan {
+            k,
+            speeds,
+            windows,
+            straggler_prob: spec.straggler_prob,
+            straggler_factor: spec.straggler_factor,
+            policy: spec.policy,
+            straggler_root: root.split(STRAGGLER_STREAM),
+        }
+    }
+
+    /// Explicit failure episode (test/experiment builder).
+    pub fn with_failure(mut self, worker: usize, from: u64, downtime: u64) -> FaultPlan {
+        assert!(worker < self.k, "worker {worker} out of range 0..{}", self.k);
+        self.windows.push(FailureWindow { worker, from, until: from.saturating_add(downtime.max(1)) });
+        self
+    }
+
+    /// Explicit per-worker speed multiplier (test/experiment builder).
+    pub fn with_speed(mut self, worker: usize, mult: f64) -> FaultPlan {
+        assert!(mult > 0.0, "speed multiplier must be positive");
+        self.speeds[worker] = mult;
+        self
+    }
+
+    /// Straggler configuration (test/experiment builder). Draws come from
+    /// pure child streams of `root`.
+    pub fn with_stragglers(mut self, prob: f64, factor: f64, root: &Rng) -> FaultPlan {
+        self.straggler_prob = prob;
+        self.straggler_factor = factor;
+        self.straggler_root = root.split(STRAGGLER_STREAM);
+        self
+    }
+
+    /// Recovery policy for dead chunks (test/experiment builder).
+    pub fn with_policy(mut self, policy: RecoveryPolicy) -> FaultPlan {
+        self.policy = policy;
+        self
+    }
+
+    /// Worker count the plan covers.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Recovery policy modeled for dead chunks.
+    pub fn policy(&self) -> RecoveryPolicy {
+        self.policy
+    }
+
+    /// Static per-worker speed multipliers.
+    pub fn speeds(&self) -> &[f64] {
+        &self.speeds
+    }
+
+    /// The failure schedule.
+    pub fn windows(&self) -> &[FailureWindow] {
+        &self.windows
+    }
+
+    /// True when the plan changes nothing: no failure windows, no
+    /// stragglers, every speed exactly 1.0. `run_faulty_into` then takes
+    /// the untouched clean path (unless [`faults_audit`] forces the faulty
+    /// machinery, which must still be bitwise identical).
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+            && self.straggler_prob == 0.0
+            && self.speeds.iter().all(|&s| s == 1.0)
+    }
+
+    /// True when per-iteration state never changes (no failure windows, no
+    /// straggler draws) — only static heterogeneous speeds, so the clean
+    /// graph and the clean replication/lane batching machinery stay valid
+    /// under the wrapped provider.
+    pub fn is_static(&self) -> bool {
+        self.windows.is_empty() && self.straggler_prob == 0.0
+    }
+
+    /// Map-time multiplier for `worker` at `iter`: static speed × straggler
+    /// draw. Pure in `(self, worker, iter)`. Out-of-range workers (the
+    /// [`MASTER_WORKER`] recovery sentinel) run at nominal speed.
+    pub fn mult(&self, worker: usize, iter: u64) -> f64 {
+        if worker >= self.k {
+            return 1.0;
+        }
+        let mut m = self.speeds[worker];
+        if self.straggler_prob > 0.0 {
+            let mut r = self.straggler_root.split((iter << 32) | worker as u64);
+            if r.uniform() < self.straggler_prob {
+                m *= self.straggler_factor;
+            }
+        }
+        m
+    }
+
+    /// Fill `out[w] = true` iff worker `w` is dead at `iter` (scratch is
+    /// caller-owned so the replay loop allocates nothing once warm).
+    pub fn dead_into(&self, iter: u64, out: &mut Vec<bool>) {
+        out.clear();
+        out.resize(self.k, false);
+        for w in &self.windows {
+            if w.from <= iter && iter < w.until {
+                out[w.worker] = true;
+            }
+        }
+    }
+}
+
+/// [`CostProvider`] adaptor applying a [`FaultPlan`]'s multiplier to
+/// Map times. Passthrough is exact: a multiplier of 1.0 returns the inner
+/// provider's value untouched (no `* 1.0` round trip), which is what makes
+/// the audit-mode empty-plan path bitwise identical to the clean one.
+pub struct FaultyCost<'a> {
+    inner: &'a mut dyn CostProvider,
+    plan: &'a FaultPlan,
+    iter: u64,
+}
+
+impl<'a> FaultyCost<'a> {
+    /// Wrap `inner` for iteration `iter` of `plan`.
+    pub fn new(inner: &'a mut dyn CostProvider, plan: &'a FaultPlan, iter: u64) -> FaultyCost<'a> {
+        FaultyCost { inner, plan, iter }
+    }
+}
+
+impl CostProvider for FaultyCost<'_> {
+    fn map_time(&mut self, worker: usize, chunk: usize) -> f64 {
+        let t = self.inner.map_time(worker, chunk);
+        let m = self.plan.mult(worker, self.iter);
+        if m == 1.0 {
+            t
+        } else {
+            t * m
+        }
+    }
+    fn combine_time(&mut self) -> f64 {
+        self.inner.combine_time()
+    }
+    fn post_time(&mut self) -> f64 {
+        self.inner.post_time()
+    }
+    fn is_deterministic(&self) -> bool {
+        self.inner.is_deterministic() && self.plan.is_static()
+    }
+}
+
+/// Caller-owned scratch for [`run_faulty_into`]'s dead-set tracking (keeps
+/// the replay loop allocation-free once warm, like the engine's buffers).
+#[derive(Debug, Default)]
+pub struct FaultScratch {
+    cur: Vec<bool>,
+    next: Vec<bool>,
+}
+
+/// Simulate `iters` iterations of `(plan.k(), l, params)` under `plan`,
+/// appending timings to `out` (cleared first).
+///
+/// * Empty plan (and not [`faults_audit`]): delegates to the clean
+///   [`IterationTemplate::run_into`] — bitwise identical to today's engine.
+/// * Static plan (speeds only): clean graph + wrapped provider; the
+///   replication / lane-batching machinery still applies because every
+///   iteration's multipliers are identical.
+/// * Failure windows or stragglers: per-iteration scalar replays; the
+///   graph is rebuilt (via [`IterationTemplate::reset_to_faulty`]) only on
+///   iterations where the dead set actually changes, so long failure
+///   windows replay through the engine's order cache like any other
+///   template.
+#[allow(clippy::too_many_arguments)]
+pub fn run_faulty_into(
+    tmpl: &mut IterationTemplate,
+    plan: &FaultPlan,
+    l: usize,
+    params: &SimParams,
+    iters: usize,
+    provider: &mut dyn CostProvider,
+    rng: &mut Rng,
+    out: &mut Vec<IterationTiming>,
+    scratch: &mut FaultScratch,
+) {
+    let k = plan.k();
+    if plan.is_empty() && !faults_audit() {
+        tmpl.reset_to(k, l, params);
+        tmpl.run_into(iters, provider, rng, out);
+        return;
+    }
+    if plan.is_static() {
+        tmpl.reset_to(k, l, params);
+        let mut fc = FaultyCost::new(provider, plan, 0);
+        tmpl.run_into(iters, &mut fc, rng, out);
+        return;
+    }
+    out.clear();
+    let mut built = false;
+    for i in 0..iters {
+        plan.dead_into(i as u64, &mut scratch.next);
+        if !built || scratch.next != scratch.cur {
+            tmpl.reset_to_faulty(k, l, params, &scratch.next, plan.policy());
+            std::mem::swap(&mut scratch.cur, &mut scratch.next);
+            built = true;
+        }
+        let mut fc = FaultyCost::new(provider, plan, i as u64);
+        out.push(tmpl.replay(&mut fc, rng));
+    }
+}
+
+static ACTIVE_FAULTS: OnceLock<bool> = OnceLock::new();
+
+/// Parse the `BSF_FAULTS` value: `audit` routes even empty plans through
+/// the faulty build path + provider wrapper (which must stay bitwise
+/// identical to the clean path — the CI matrix cell relies on it); unset
+/// or `off` keeps the clean fast path. Unknown values panic loudly, like
+/// `BSF_KERNEL`/`BSF_SCHED`/`BSF_LANES`.
+fn select_faults(var: Option<&str>) -> bool {
+    match var {
+        None | Some("off") => false,
+        Some("audit") => true,
+        Some(other) => panic!("BSF_FAULTS must be `audit` or `off` (or unset), got `{other}`"),
+    }
+}
+
+/// Process-wide audit switch, read once from `BSF_FAULTS` (see
+/// [`select_faults`]).
+pub fn faults_audit() -> bool {
+    *ACTIVE_FAULTS.get_or_init(|| select_faults(std::env::var("BSF_FAULTS").ok().as_deref()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::cluster::AnalyticCost;
+
+    fn analytic(l: usize) -> AnalyticCost {
+        AnalyticCost { t_map_full: 1.0, l, t_a: 1e-4, t_p: 1e-3 }
+    }
+
+    #[test]
+    fn select_faults_parses() {
+        assert!(!select_faults(None));
+        assert!(!select_faults(Some("off")));
+        assert!(select_faults(Some("audit")));
+    }
+
+    #[test]
+    #[should_panic(expected = "BSF_FAULTS")]
+    fn select_faults_rejects_unknown() {
+        select_faults(Some("sometimes"));
+    }
+
+    #[test]
+    fn clean_spec_generates_empty_plan() {
+        let root = Rng::new(42);
+        let plan = FaultPlan::generate(&FaultSpec::clean(), 16, 100, &root);
+        assert!(plan.is_empty());
+        assert!(plan.is_static());
+        assert!(plan.windows().is_empty());
+        assert!(plan.speeds().iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn generate_is_pure_in_its_arguments() {
+        let spec = FaultSpec {
+            speed_sigma: 0.2,
+            straggler_prob: 0.1,
+            straggler_factor: 4.0,
+            fail_prob: 0.05,
+            downtime: 2,
+            policy: RecoveryPolicy::Redistribute,
+        };
+        let root = Rng::new(7);
+        let a = FaultPlan::generate(&spec, 12, 50, &root);
+        let b = FaultPlan::generate(&spec, 12, 50, &root);
+        assert_eq!(a.windows(), b.windows());
+        for (x, y) in a.speeds().iter().zip(b.speeds()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // and a fresh root with the same seed agrees too
+        let c = FaultPlan::generate(&spec, 12, 50, &Rng::new(7));
+        assert_eq!(a.windows(), c.windows());
+    }
+
+    #[test]
+    fn failure_windows_respect_downtime_and_horizon() {
+        let spec = FaultSpec { fail_prob: 0.3, downtime: 3, ..FaultSpec::clean() };
+        let plan = FaultPlan::generate(&spec, 8, 40, &Rng::new(3));
+        assert!(!plan.windows().is_empty(), "p=0.3 over 8x40 draws should fire");
+        for w in plan.windows() {
+            assert!(w.from < 40, "window starts inside the horizon");
+            assert_eq!(w.until, w.from + 3);
+        }
+        // per worker: windows are disjoint and ordered
+        for worker in 0..8 {
+            let mut last_until = 0;
+            for w in plan.windows().iter().filter(|w| w.worker == worker) {
+                assert!(w.from >= last_until, "overlapping windows for worker {worker}");
+                last_until = w.until;
+            }
+        }
+    }
+
+    #[test]
+    fn dead_set_tracks_windows() {
+        let plan = FaultPlan::clean(4).with_failure(2, 3, 2);
+        let mut dead = Vec::new();
+        plan.dead_into(2, &mut dead);
+        assert_eq!(dead, vec![false, false, false, false]);
+        plan.dead_into(3, &mut dead);
+        assert_eq!(dead, vec![false, false, true, false]);
+        plan.dead_into(4, &mut dead);
+        assert_eq!(dead, vec![false, false, true, false]);
+        plan.dead_into(5, &mut dead);
+        assert_eq!(dead, vec![false, false, false, false]);
+    }
+
+    #[test]
+    fn straggler_mult_is_pure_and_master_sentinel_is_nominal() {
+        let root = Rng::new(11);
+        let plan = FaultPlan::clean(8).with_stragglers(0.5, 4.0, &root);
+        for w in 0..8 {
+            for i in 0..20u64 {
+                let a = plan.mult(w, i);
+                let b = plan.mult(w, i);
+                assert_eq!(a.to_bits(), b.to_bits(), "mult must be pure in (w, iter)");
+                assert!(a == 1.0 || a == 4.0);
+            }
+        }
+        let fired = (0..8)
+            .flat_map(|w| (0..20u64).map(move |i| (w, i)))
+            .filter(|&(w, i)| plan.mult(w, i) != 1.0)
+            .count();
+        assert!(fired > 0, "p=0.5 over 160 draws should fire");
+        assert!(fired < 160, "p=0.5 should not always fire");
+        assert_eq!(plan.mult(MASTER_WORKER, 5), 1.0);
+    }
+
+    #[test]
+    fn faulty_cost_guards_unit_multiplier() {
+        let plan = FaultPlan::clean(4).with_speed(1, 3.0);
+        let mut inner = analytic(1000);
+        let t0 = inner.map_time(0, 250);
+        let t1 = inner.map_time(1, 250);
+        let mut fc = FaultyCost::new(&mut inner, &plan, 0);
+        // worker 0 at nominal speed: bitwise passthrough
+        assert_eq!(fc.map_time(0, 250).to_bits(), t0.to_bits());
+        assert_eq!(fc.map_time(1, 250), t1 * 3.0);
+        assert!(!plan.is_empty());
+        assert!(plan.is_static());
+    }
+
+    #[test]
+    fn empty_plan_run_matches_clean_run() {
+        let l = 1024;
+        let mut p = SimParams::new(l, l);
+        p.jitter_comp = 0.06;
+        let plan = FaultPlan::clean(12);
+        let mut tmpl_a = IterationTemplate::new(12, l, &p);
+        let mut want = Vec::new();
+        tmpl_a.run_into(6, &mut analytic(l), &mut Rng::new(5), &mut want);
+        let mut tmpl_b = IterationTemplate::new(12, l, &p);
+        let mut got = Vec::new();
+        let mut scratch = FaultScratch::default();
+        run_faulty_into(
+            &mut tmpl_b, &plan, l, &p, 6, &mut analytic(l), &mut Rng::new(5), &mut got,
+            &mut scratch,
+        );
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn failure_costs_makespan() {
+        let l = 4096;
+        let p = SimParams::new(64, 64);
+        let mut clean = Vec::new();
+        IterationTemplate::new(8, l, &p).run_into(4, &mut analytic(l), &mut Rng::new(1), &mut clean);
+        for policy in [RecoveryPolicy::MasterRecompute, RecoveryPolicy::Redistribute] {
+            let plan = FaultPlan::clean(8).with_failure(3, 1, 2).with_policy(policy);
+            let mut got = Vec::new();
+            let mut scratch = FaultScratch::default();
+            run_faulty_into(
+                &mut IterationTemplate::new(8, l, &p),
+                &plan,
+                l,
+                &p,
+                4,
+                &mut analytic(l),
+                &mut Rng::new(1),
+                &mut got,
+                &mut scratch,
+            );
+            assert_eq!(got.len(), 4);
+            // healthy iterations identical, failed iterations strictly slower
+            assert_eq!(got[0], clean[0], "{policy:?}: pre-failure iteration must be clean");
+            assert!(
+                got[1].total > clean[1].total && got[2].total > clean[2].total,
+                "{policy:?}: recovery must cost makespan"
+            );
+            assert_eq!(got[3], clean[3], "{policy:?}: post-recovery iteration must be clean");
+        }
+    }
+
+    #[test]
+    fn redistribute_beats_master_recompute_when_compute_bound() {
+        // Compute-dominated chunk: overlapping the recovery across
+        // survivors must beat a serial re-run on the master.
+        let l = 8192;
+        let p = SimParams::new(16, 16);
+        let run = |policy| {
+            let plan = FaultPlan::clean(8).with_failure(2, 0, 1).with_policy(policy);
+            let mut out = Vec::new();
+            let mut scratch = FaultScratch::default();
+            run_faulty_into(
+                &mut IterationTemplate::new(8, l, &p),
+                &plan,
+                l,
+                &p,
+                1,
+                &mut analytic(l),
+                &mut Rng::new(2),
+                &mut out,
+                &mut scratch,
+            );
+            out[0].total
+        };
+        let mr = run(RecoveryPolicy::MasterRecompute);
+        let rd = run(RecoveryPolicy::Redistribute);
+        assert!(rd < mr, "redistribute={rd} master-recompute={mr}");
+    }
+
+    #[test]
+    fn slow_worker_stretches_map_phase() {
+        let l = 4096;
+        let p = SimParams::new(64, 64);
+        let mut clean = Vec::new();
+        IterationTemplate::new(8, l, &p).run_into(2, &mut analytic(l), &mut Rng::new(4), &mut clean);
+        let plan = FaultPlan::clean(8).with_speed(5, 2.0);
+        let mut got = Vec::new();
+        let mut scratch = FaultScratch::default();
+        run_faulty_into(
+            &mut IterationTemplate::new(8, l, &p),
+            &plan,
+            l,
+            &p,
+            2,
+            &mut analytic(l),
+            &mut Rng::new(4),
+            &mut got,
+            &mut scratch,
+        );
+        assert!(got[0].total > clean[0].total, "a 2x-slow worker must stretch the iteration");
+    }
+}

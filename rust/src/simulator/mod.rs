@@ -18,12 +18,17 @@
 
 mod cluster;
 mod engine;
+mod faults;
 mod lanes;
 pub mod trace;
 
 pub use cluster::{
     simulate_iteration, simulate_iteration_full, simulate_run, AnalyticCost, CostFactory,
     CostProvider, IterationTemplate, IterationTiming, ReduceMode, SampledCost, SimParams,
+};
+pub use faults::{
+    faults_audit, run_faulty_into, FailureWindow, FaultPlan, FaultScratch, FaultSpec, FaultyCost,
+    RecoveryPolicy, MASTER_WORKER,
 };
 pub use trace::{trace_iteration, Trace, TraceEvent};
 pub use engine::{

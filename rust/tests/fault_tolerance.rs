@@ -1,31 +1,72 @@
 //! Failure injection: workers that panic or hang mid-run, with and without
-//! the skeleton's degraded-mode recovery.
+//! the skeleton's degraded-mode recovery — plus redistribution, respawn,
+//! and the fault telemetry on the report.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use bsf::coordinator::{run_sequential, BsfProblem, CostSpec, LiveRunner, Workspace};
+use bsf::coordinator::{
+    run_sequential, BsfProblem, CostSpec, LiveRunner, PhaseTimeouts, Workspace,
+};
 use bsf::runtime::KernelRuntime;
+use bsf::simulator::RecoveryPolicy;
 
-/// Sums `weight * x` over its list; a chosen list index panics (or hangs)
-/// when mapped after a given iteration — simulating a worker crash.
+/// Sums `weight * x` over its list; chosen list indices fail (panic or
+/// hang) when mapped on a worker thread inside a given iteration window —
+/// simulating node crashes. Multiple bad indices across distinct workers'
+/// ranges give true multi-failure scenarios.
 #[derive(Debug)]
 struct Sabotaged {
     l: usize,
-    /// Index whose Map fails.
-    bad_index: usize,
+    /// Indices whose Map fails (each kills whatever worker owns it).
+    bad: Vec<usize>,
     /// First iteration (0-based) at which the failure fires.
     fail_from: usize,
-    /// If true the failure is a hang (sleep) instead of a panic.
-    hang: bool,
+    /// First iteration at which the failure stops firing (exclusive
+    /// window end; `usize::MAX` = forever).
+    fail_until: usize,
+    /// `Some(d)`: the failure is a hang of duration `d` instead of a
+    /// panic. Kept just past the test's gather timeout — burning multiple
+    /// seconds against a 400 ms deadline only slows the suite down.
+    hang: Option<Duration>,
+    /// Artificial per-Map latency (paces iterations so timed machinery
+    /// like respawn backoff can be tested without wall-clock slack).
+    map_delay: Duration,
     iteration_counter: AtomicUsize,
 }
 
 impl Sabotaged {
-    fn new(l: usize, bad_index: usize, fail_from: usize, hang: bool) -> Sabotaged {
-        Sabotaged { l, bad_index, fail_from, hang, iteration_counter: AtomicUsize::new(0) }
+    fn new(l: usize, bad: &[usize], fail_from: usize) -> Sabotaged {
+        Sabotaged {
+            l,
+            bad: bad.to_vec(),
+            fail_from,
+            fail_until: usize::MAX,
+            hang: None,
+            map_delay: Duration::ZERO,
+            iteration_counter: AtomicUsize::new(0),
+        }
+    }
+
+    fn healthy(l: usize) -> Sabotaged {
+        Sabotaged::new(l, &[], 0)
+    }
+
+    fn with_window(mut self, until: usize) -> Sabotaged {
+        self.fail_until = until;
+        self
+    }
+
+    fn with_hang(mut self, d: Duration) -> Sabotaged {
+        self.hang = Some(d);
+        self
+    }
+
+    fn with_map_delay(mut self, d: Duration) -> Sabotaged {
+        self.map_delay = d;
+        self
     }
 }
 
@@ -47,16 +88,17 @@ impl BsfProblem for Sabotaged {
         _ws: &mut Workspace,
         _k: Option<&KernelRuntime>,
     ) {
+        std::thread::sleep(self.map_delay);
         let iter = x[0] as usize; // iteration is encoded in the approximation
         // The injected fault models a *node* failure: it fires only on
         // worker threads (spawned unnamed), never on the master/test
         // thread that recovers the range.
         let on_worker = std::thread::current().name().is_none();
-        if on_worker && range.contains(&self.bad_index) && iter >= self.fail_from {
-            if self.hang {
-                std::thread::sleep(Duration::from_secs(5));
-            } else {
-                panic!("injected worker failure at iteration {iter}");
+        let in_window = iter >= self.fail_from && iter < self.fail_until;
+        if on_worker && in_window && self.bad.iter().any(|b| range.contains(b)) {
+            match self.hang {
+                Some(d) => std::thread::sleep(d),
+                None => panic!("injected worker failure at iteration {iter}"),
             }
         }
         out[0] = range.map(|j| (j + 1) as f64).sum::<f64>() * (x[0] + 1.0);
@@ -70,7 +112,9 @@ impl BsfProblem for Sabotaged {
     fn post(&self, x: &[f64], s: &[f64], iteration: usize) -> (Vec<f64>, bool) {
         self.iteration_counter.fetch_max(iteration + 1, Ordering::Relaxed);
         // carry the iteration number in the approximation; verify the
-        // folded sum is exactly sum(1..=l) * (iter+1).
+        // folded sum is exactly sum(1..=l) * (iter+1). Every value in the
+        // fold is a small integer, so any fold order is exact and a
+        // dropped/duplicated sublist is detected immediately.
         let expect = (self.l * (self.l + 1) / 2) as f64 * (x[0] + 1.0);
         assert_eq!(s[0], expect, "fold corrupted at iteration {iteration}");
         (vec![(iteration + 1) as f64], iteration + 1 >= 6)
@@ -89,23 +133,28 @@ impl BsfProblem for Sabotaged {
 
 fn runner(k: usize, fault_tolerant: bool) -> LiveRunner {
     let mut r = LiveRunner::new(k, 10);
-    r.gather_timeout = Duration::from_millis(400);
+    r.timeouts = Some(PhaseTimeouts {
+        scatter: Duration::from_secs(2),
+        gather: Duration::from_millis(400),
+    });
     r.fault_tolerant = fault_tolerant;
     r
 }
 
 #[test]
 fn healthy_run_completes() {
-    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::new(64, usize::MAX, 0, false));
+    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::healthy(64));
     let report = runner(4, false).run(p).unwrap();
     assert!(report.converged);
     assert_eq!(report.iterations, 6);
+    assert_eq!(report.faults.injected, 0);
+    assert_eq!(report.faults.late_uplinks_dropped, 0);
 }
 
 #[test]
 fn worker_panic_aborts_without_fault_tolerance() {
     // bad index 40 lands in worker 3's range (64/4 = 16 per worker).
-    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::new(64, 40, 2, false));
+    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::new(64, &[40], 2));
     let err = runner(4, false).run(p).unwrap_err();
     let msg = format!("{err:#}");
     assert!(
@@ -116,38 +165,103 @@ fn worker_panic_aborts_without_fault_tolerance() {
 
 #[test]
 fn worker_panic_recovers_with_fault_tolerance() {
-    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::new(64, 40, 2, false));
+    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::new(64, &[40], 2));
     let report = runner(4, true).run(p).unwrap();
     // The run completes all 6 iterations with correct folds (post() asserts
     // exactness every iteration — the master recomputed the dead range).
     assert!(report.converged);
     assert_eq!(report.iterations, 6);
+    assert_eq!(report.faults.injected, 1);
+    assert_eq!(report.faults.recovered, 0);
 }
 
 #[test]
 fn hung_worker_recovers_with_fault_tolerance() {
-    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::new(64, 10, 3, true));
+    // The hang (800 ms) only just outlasts the 400 ms gather deadline —
+    // enough to be detected as dead, without burning seconds of suite time.
+    let p: Arc<dyn BsfProblem> =
+        Arc::new(Sabotaged::new(64, &[10], 3).with_hang(Duration::from_millis(800)));
     let report = runner(4, true).run(p).unwrap();
     assert!(report.converged);
     assert_eq!(report.iterations, 6);
+    assert_eq!(report.faults.injected, 1);
 }
 
 #[test]
 fn multiple_failures_still_recover() {
-    // Two bad indices in different workers' ranges would need two problems;
-    // instead kill worker 1 (index 0) immediately — the master carries 1/4
-    // of the list from iteration 0.
-    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::new(64, 0, 0, false));
+    // Two bad indices in two distinct workers' ranges (k=4, l=64: index 0
+    // is worker 1's, index 40 is worker 3's) — both die, the master
+    // carries both sublists, and the telemetry shows two injections.
+    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::new(64, &[0, 40], 0));
     let report = runner(4, true).run(p).unwrap();
     assert!(report.converged);
     assert_eq!(report.iterations, 6);
+    assert_eq!(report.faults.injected, 2);
 }
 
 #[test]
 fn recovery_matches_sequential_result() {
-    let seq = run_sequential(&Sabotaged::new(64, usize::MAX, 0, false), 10, None);
-    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::new(64, 40, 1, false));
+    let seq = run_sequential(&Sabotaged::healthy(64), 10, None);
+    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::new(64, &[40], 1));
     let live = runner(4, true).run(p).unwrap();
     assert_eq!(live.final_approx, seq.final_approx);
     assert_eq!(live.iterations, seq.iterations);
+}
+
+#[test]
+fn redistribution_carries_dead_range_on_survivors() {
+    // Worker 3 dies only inside iteration 2, so from iteration 3 its range
+    // is safe to hand to a surviving carrier. Redistribution kicks in on
+    // every iteration after the death is detected.
+    let seq = run_sequential(&Sabotaged::healthy(64), 10, None);
+    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::new(64, &[40], 2).with_window(3));
+    let mut r = runner(4, true);
+    r.recovery = RecoveryPolicy::Redistribute;
+    let live = r.run(p).unwrap();
+    assert!(live.converged);
+    assert_eq!(live.final_approx, seq.final_approx);
+    assert_eq!(live.faults.injected, 1);
+    assert!(
+        live.faults.redispatched >= 2,
+        "dead range should ride survivors each remaining iteration: {:?}",
+        live.faults
+    );
+    assert_eq!(live.faults.recovered, 0);
+}
+
+#[test]
+fn bounded_respawn_recovers_the_worker() {
+    // Death fires only inside iteration 2; the respawned incarnation
+    // (backoff 1 ms, iterations paced at ≥2 ms by the map delay) rejoins
+    // after the window closed and finishes the run itself.
+    let seq = run_sequential(&Sabotaged::healthy(64), 10, None);
+    let p: Arc<dyn BsfProblem> = Arc::new(
+        Sabotaged::new(64, &[40], 2)
+            .with_window(3)
+            .with_map_delay(Duration::from_millis(2)),
+    );
+    let mut r = runner(4, true);
+    r.respawn_limit = 2;
+    r.respawn_backoff = Duration::from_millis(1);
+    let live = r.run(p).unwrap();
+    assert!(live.converged);
+    assert_eq!(live.final_approx, seq.final_approx);
+    assert_eq!(live.faults.injected, 1);
+    assert!(
+        live.faults.recovered >= 1,
+        "worker should have respawned: {:?}",
+        live.faults
+    );
+}
+
+#[test]
+fn default_timeouts_derive_from_cost_spec() {
+    // No explicit timeouts: the runner derives them from the problem's
+    // CostSpec (this tiny problem clamps to the floors) and surfaces the
+    // chosen values on the report.
+    let p: Arc<dyn BsfProblem> = Arc::new(Sabotaged::healthy(64));
+    let report = LiveRunner::new(4, 10).run(p).unwrap();
+    assert!(report.converged);
+    assert_eq!(report.gather_timeout, Duration::from_secs(10));
+    assert_eq!(report.scatter_timeout, Duration::from_secs(2));
 }

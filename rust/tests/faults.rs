@@ -1,0 +1,177 @@
+//! Fault-plane contracts (PERF.md "Fault plane"):
+//!
+//! 1. **Empty plan == plain engine, bitwise.** Replaying under a fault
+//!    plan with no failures, no stragglers, and unit speeds must produce
+//!    the clean template's exact timings *and* the same scheduler counter
+//!    activity (order-cache hits, fallbacks, lane batching) — the fault
+//!    plane must not disturb the `BSF_SCHED`/`BSF_LANES` caches. CI runs
+//!    this suite under every kernel/scheduler/lane cell, plus a
+//!    `BSF_FAULTS=audit` cell that routes even empty plans through the
+//!    faulty provider wrapper.
+//! 2. **Pooled faulty sweeps == serial, bitwise.** Fault draws ride per-K
+//!    split streams exactly like the clean timing draws, so thread count
+//!    must not move a single bit.
+//! 3. **Faults only add work.** With pure failure injection (no
+//!    speed/straggler variation), the faulty mean iteration time is never
+//!    below the clean one.
+
+use bsf::experiments::{simulated_curves, SweepJob};
+use bsf::simulator::{
+    run_faulty_into, AnalyticCost, FaultPlan, FaultScratch, FaultSpec, IterationTemplate,
+    IterationTiming, RecoveryPolicy, SimParams,
+};
+use bsf::util::Rng;
+
+fn assert_bitwise_eq(a: &IterationTiming, b: &IterationTiming, what: &str) {
+    for (x, y, field) in [
+        (a.broadcast_done, b.broadcast_done, "broadcast_done"),
+        (a.map_done, b.map_done, "map_done"),
+        (a.reduce_done, b.reduce_done, "reduce_done"),
+        (a.post_done, b.post_done, "post_done"),
+        (a.total, b.total, "total"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {field} differs ({x} vs {y})");
+    }
+}
+
+#[test]
+fn empty_plan_races_plain_engine_bitwise() {
+    // Deterministic and jittered configurations, several (k, l) cells.
+    for (jitter_comp, jitter_comm) in [(0.0, 0.0), (0.12, 0.07)] {
+        for (k, l) in [(1usize, 64usize), (8, 1_024), (24, 2_048)] {
+            let mut params = SimParams::new(l, l);
+            params.jitter_comp = jitter_comp;
+            params.jitter_comm = jitter_comm;
+            let mut prov_clean = AnalyticCost { t_map_full: 0.2, l, t_a: 1e-6, t_p: 1e-5 };
+            let mut prov_faulty = prov_clean.clone();
+
+            let mut clean = IterationTemplate::new(k, l, &params);
+            let mut want = Vec::new();
+            clean.run_into(9, &mut prov_clean, &mut Rng::new(0xFA0), &mut want);
+
+            let mut faulty = IterationTemplate::new(k, l, &params);
+            let plan = FaultPlan::clean(k);
+            assert!(plan.is_empty());
+            let mut got = Vec::new();
+            let mut scratch = FaultScratch::default();
+            run_faulty_into(
+                &mut faulty,
+                &plan,
+                l,
+                &params,
+                9,
+                &mut prov_faulty,
+                &mut Rng::new(0xFA0),
+                &mut got,
+                &mut scratch,
+            );
+
+            assert_eq!(want.len(), got.len());
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_bitwise_eq(a, b, &format!("k={k} l={l} jitter={jitter_comp} iter={i}"));
+            }
+            // The scheduler's cache activity must match too: same order
+            // cache hits, same fallbacks, same lane batching. An empty
+            // plan that silently forced fallbacks would pass the timing
+            // check while destroying the perf contracts.
+            assert_eq!(
+                clean.sched_counters(),
+                faulty.sched_counters(),
+                "k={k} l={l} jitter={jitter_comp}: scheduler activity diverged"
+            );
+            let c = clean.sched_counters();
+            assert!(
+                c.cached_hits + c.fallbacks + c.calendar_runs >= 1,
+                "counters recorded no scheduler activity at all"
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_faulty_sweeps_bitwise_equal_serial() {
+    let l = 1_500;
+    let mut params = SimParams::new(l, l);
+    params.jitter_comp = 0.1;
+    let prov = AnalyticCost { t_map_full: 0.2, l, t_a: 1e-6, t_p: 1e-5 };
+    let ks: Vec<usize> = (1..=24).collect();
+    let spec = FaultSpec {
+        speed_sigma: 0.1,
+        straggler_prob: 0.2,
+        straggler_factor: 3.0,
+        fail_prob: 0.05,
+        downtime: 2,
+        policy: RecoveryPolicy::Redistribute,
+    };
+    let mk_jobs = |rng: &mut Rng| {
+        vec![
+            SweepJob::new(params.clone(), l, &prov, ks.clone(), 4, rng).with_fault(spec),
+            SweepJob::new(params.clone(), l, &prov, ks.clone(), 4, rng)
+                .with_fault(FaultSpec { policy: RecoveryPolicy::MasterRecompute, ..spec }),
+        ]
+    };
+    let reference = simulated_curves(&mk_jobs(&mut Rng::new(0xFA2)), 1);
+    for threads in [1usize, 4, 8] {
+        let got = simulated_curves(&mk_jobs(&mut Rng::new(0xFA2)), threads);
+        assert_eq!(reference.len(), got.len());
+        for (sweep, (want, have)) in reference.iter().zip(&got).enumerate() {
+            assert_eq!(want.len(), have.len());
+            for (a, b) in want.iter().zip(have.iter()) {
+                assert_eq!(a.k, b.k, "threads={threads}");
+                assert_eq!(
+                    a.t_k.to_bits(),
+                    b.t_k.to_bits(),
+                    "threads={threads} sweep={sweep} K={}: t_k {} vs {}",
+                    a.k,
+                    a.t_k,
+                    b.t_k
+                );
+                assert_eq!(
+                    a.speedup.to_bits(),
+                    b.speedup.to_bits(),
+                    "threads={threads} sweep={sweep} K={}",
+                    a.k
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn failure_injection_never_speeds_up_the_sweep() {
+    // Pure failure injection (unit speeds, no stragglers): recovery only
+    // adds Map tasks and comm edges to the timeline, so every K-point's
+    // mean iteration time is at least the clean one.
+    let l = 1_500;
+    let params = SimParams::new(l, l);
+    let prov = AnalyticCost { t_map_full: 0.2, l, t_a: 1e-6, t_p: 1e-5 };
+    let ks: Vec<usize> = (2..=20).collect();
+    let spec = FaultSpec {
+        speed_sigma: 0.0,
+        straggler_prob: 0.0,
+        straggler_factor: 1.0,
+        fail_prob: 0.08,
+        downtime: 2,
+        policy: RecoveryPolicy::MasterRecompute,
+    };
+    let jobs = vec![
+        SweepJob::new(params.clone(), l, &prov, ks.clone(), 5, &mut Rng::new(9)),
+        SweepJob::new(params.clone(), l, &prov, ks.clone(), 5, &mut Rng::new(9)).with_fault(spec),
+    ];
+    let curves = simulated_curves(&jobs, 4);
+    let mut any_slower = false;
+    for (clean, faulty) in curves[0].iter().zip(&curves[1]) {
+        assert_eq!(clean.k, faulty.k);
+        assert!(
+            faulty.t_k >= clean.t_k,
+            "K={}: faulty {} < clean {}",
+            clean.k,
+            faulty.t_k,
+            clean.t_k
+        );
+        if faulty.t_k > clean.t_k {
+            any_slower = true;
+        }
+    }
+    assert!(any_slower, "no failure was drawn anywhere in the sweep — spec too weak");
+}
