@@ -23,11 +23,19 @@
 //!   perform **zero** heap allocations once warm; hit-rate and fallback
 //!   counts land in `BENCH_ci.json`);
 //! * the **lane-batched jittered replay vs the scalar loop** on that
-//!   same K=270 graph — four independent jittered duration sets per pass
-//!   through the order cache (per-lane equality hard-asserted against
-//!   the one-at-a-time loop, zero heap allocations once warm asserted;
-//!   `lane_hit_rate_jittered` + the lane-vs-scalar throughput pair land
-//!   in `BENCH_ci.json`).
+//!   same K=270 graph, at **every dispatch width** (4-lane and 8-lane,
+//!   pinned per engine via `set_lane_width`): independent jittered
+//!   duration sets ride one pass through the order cache (per-lane
+//!   equality hard-asserted against the one-at-a-time loop, zero heap
+//!   allocations once warm asserted at every width), plus a **padded
+//!   remainder** audit (batches narrower than the width ride the same
+//!   pass with discarded pad lanes); per-width hit rates, pad counts
+//!   (`lane_pad_replays`) and lane-vs-scalar throughput pairs land in
+//!   `BENCH_ci.json`;
+//! * the **end-to-end jittered sweep** (K=1..270 × 7 jittered
+//!   iterations through the pooled queue — no replication shortcut) as
+//!   `jittered_sweep_throughput` in tasks/sec, the ROADMAP's
+//!   order-of-magnitude target row.
 //!
 //! ```text
 //! cargo bench --bench simulator_hotpath
@@ -42,9 +50,9 @@ use bsf::experiments::{
 use bsf::linalg::kernels;
 use bsf::model::scalability::peak_knee;
 use bsf::simulator::{
-    faults_audit, lanes_enabled, sched_mode, simulate_iteration, simulate_iteration_full,
-    AnalyticCost, Engine, FaultSpec, IterationTemplate, RecoveryPolicy, LANES, ReferenceScheduler,
-    SchedMode, SimParams, TaskId,
+    faults_audit, lane_width, lanes_enabled, sched_mode, simulate_iteration,
+    simulate_iteration_full, AnalyticCost, Engine, FaultSpec, IterationTemplate, RecoveryPolicy,
+    ReferenceScheduler, SchedMode, SimParams, TaskId,
 };
 use bsf::util::bench::{bench_throughput, human_time, CiReport};
 use bsf::util::Rng;
@@ -76,16 +84,18 @@ fn main() {
     let mut ci = CiReport::new("simulator_hotpath");
     println!("== simulator_hotpath ==");
     println!(
-        "active kernel: {}, scheduler: {}, lanes: {}",
+        "active kernel: {}, scheduler: {}, lanes: {} (dispatch width {})",
         kernels::active().name(),
         sched_mode().name(),
-        if lanes_enabled() { "on" } else { "off" }
+        if lanes_enabled() { "on" } else { "off" },
+        lane_width()
     );
     // Self-describe the configuration that produced these figures.
     let flag = |b: bool| if b { 1.0 } else { 0.0 };
     ci.metric("config_kernel_avx2", flag(kernels::active() == kernels::KernelKind::Avx2));
     ci.metric("config_sched_cached", flag(sched_mode() == SchedMode::Cached));
     ci.metric("config_lanes_on", flag(lanes_enabled()));
+    ci.metric("config_lane_width", lane_width() as f64);
     ci.metric("config_faults_audit", flag(faults_audit()));
 
     // Raw engine: chain graphs, rebuild vs replay.
@@ -227,6 +237,43 @@ fn main() {
     ci.rate(&r);
     ci.metric("sweep_wall_sec_all_cores", r.summary.median);
 
+    // End-to-end jittered sweep: the ROADMAP's order-of-magnitude target
+    // row. Same grid (K=1..270, 7 iterations per point) but with jitter
+    // on, so no replication shortcut applies — every iteration replays
+    // through the lane-batched path, padded remainders included (7 iters
+    // = 4+3 at width 4, one 7-lane padded batch at width 8). Tasks/sec
+    // over the *actual* task graphs, so the figure is an end-to-end
+    // metric, not an inference from micro-pairs.
+    let mut params_jit = params.clone();
+    params_jit.jitter_comp = 0.05;
+    params_jit.jitter_comm = 0.03;
+    let jit_tasks: u64 = ks
+        .iter()
+        .map(|&k| IterationTemplate::new(k, n, &params_jit).task_count() as u64)
+        .sum::<u64>()
+        * iters as u64;
+    let r = bench_throughput(
+        &format!("sweep n={n} K=1..270 x{iters}: jittered,  {threads} threads"),
+        1,
+        3,
+        jit_tasks,
+        || {
+            let mut rng = Rng::new(8);
+            std::hint::black_box(simulated_curve_threads(
+                &ctx,
+                &params_jit,
+                n,
+                &factory,
+                &ks,
+                iters,
+                &mut rng,
+                threads,
+            ));
+        },
+    );
+    ci.rate(&r);
+    ci.metric("jittered_sweep_throughput", jit_tasks as f64 / r.summary.mean);
+
     // Calendar queue vs the retired binary-heap event loop, same graph:
     // the Fig.-6 iteration at K=270 (the paper's largest Jacobi sweep
     // point). The acceptance bar is "calendar no slower than heap".
@@ -350,125 +397,211 @@ fn main() {
     ci.rate(&r);
 
     // (c) lane-batched jittered replay vs the scalar one-at-a-time loop,
-    // same K=270 graph: four independent jittered duration sets per pass
-    // through the order cache. Both engines pinned to the cached
-    // scheduler; the lane engine forces the vector pass on (the
-    // `set_lane_mode` analogue of the `_with` races above) so this
-    // section measures the lane pass whatever BSF_LANES says, under the
-    // process's BSF_KERNEL implementation.
-    let (_, mut eng_sc, _) =
-        simulate_iteration_full(270, n, &params, &mut prov_cmp, &mut Rng::new(14));
-    let (_, mut eng_ln, _) =
-        simulate_iteration_full(270, n, &params, &mut prov_cmp, &mut Rng::new(14));
-    eng_sc.set_sched_mode(Some(SchedMode::Cached));
-    eng_ln.set_sched_mode(Some(SchedMode::Cached));
-    eng_ln.set_lane_mode(Some(true));
-    eng_sc.run_reuse();
-    eng_ln.run_reuse(); // record the pop order once each
-    let n_tasks = eng_ln.len();
-    let mut rl_sc = Rng::new(23);
-    let mut rl_ln = Rng::new(23);
+    // same K=270 graph, once per dispatch width: independent jittered
+    // duration sets per pass through the order cache. Both engines
+    // pinned to the cached scheduler; the lane engine forces the vector
+    // pass on and pins its width (the `set_lane_mode`/`set_lane_width`
+    // analogue of the `_with` races above) so this section measures both
+    // widths whatever BSF_LANES / BSF_LANE_WIDTH say, under the
+    // process's BSF_KERNEL implementation family (width 8 without
+    // avx512f runs the width-generic scalar twin — the row is still
+    // recorded, labeled by width, so the CI compare sees which hardware
+    // produced it; `config_lane_width` above says what a real sweep
+    // would dispatch).
+    let mut total_pads = 0u64;
+    for width in [4usize, 8] {
+        println!("\n-- lane-batched replay, width {width} --");
+        let (_, mut eng_sc, _) =
+            simulate_iteration_full(270, n, &params, &mut prov_cmp, &mut Rng::new(14));
+        let (_, mut eng_ln, _) =
+            simulate_iteration_full(270, n, &params, &mut prov_cmp, &mut Rng::new(14));
+        eng_sc.set_sched_mode(Some(SchedMode::Cached));
+        eng_ln.set_sched_mode(Some(SchedMode::Cached));
+        eng_ln.set_lane_mode(Some(true));
+        eng_ln.set_lane_width(Some(width));
+        eng_sc.run_reuse();
+        eng_ln.run_reuse(); // record the pop order once each
+        assert_eq!(eng_ln.len() as u64, tasks, "lane engine graph drifted from the reference");
+        let mut rl_sc = Rng::new(23);
+        let mut rl_ln = Rng::new(23);
 
-    // Correctness audit: every lane of every batch must equal the scalar
-    // loop replaying the identical duration sets, bit for bit.
-    let before = eng_ln.sched_counters();
-    let lane_batches = 40u64;
-    for _ in 0..lane_batches {
-        let mat = eng_ln.lane_durations_mut(LANES);
-        for m in 0..LANES {
-            for (i, &b) in base.iter().enumerate() {
-                mat[i * LANES + m] = b * rl_ln.jitter(sigma);
+        // Correctness audit: every lane of every batch must equal the
+        // scalar loop replaying the identical duration sets, bit for bit.
+        let before = eng_ln.sched_counters();
+        let lane_batches = 40u64;
+        for _ in 0..lane_batches {
+            let mat = eng_ln.lane_durations_mut(width);
+            for m in 0..width {
+                for (i, &b) in base.iter().enumerate() {
+                    mat[i * width + m] = b * rl_ln.jitter(sigma);
+                }
             }
-        }
-        eng_ln.run_lanes(LANES);
-        for m in 0..LANES {
-            for (i, &b) in base.iter().enumerate() {
-                eng_sc.set_duration(i as TaskId, b * rl_sc.jitter(sigma));
-            }
-            let want = eng_sc.run_reuse();
-            let got = eng_ln.lane_finish();
-            for (i, w) in want.iter().enumerate() {
-                assert_eq!(
-                    w.to_bits(),
-                    got[i * LANES + m].to_bits(),
-                    "lane {m} diverges from the scalar loop at task {i}"
-                );
-            }
-            assert_eq!(
-                eng_sc.last_makespan().to_bits(),
-                eng_ln.lane_makespans()[m].to_bits(),
-                "lane {m} makespan diverges"
-            );
-        }
-    }
-    let after = eng_ln.sched_counters();
-    let lhits = after.lane_hits - before.lane_hits;
-    let lfalls = after.lane_fallbacks - before.lane_fallbacks;
-    let lane_rate = lhits as f64 / (lane_batches * LANES as u64) as f64;
-    println!(
-        "    -> lane (sigma={sigma}) hit-rate: {:.1}% ({lhits} hits, {lfalls} batch fallbacks)",
-        lane_rate * 100.0
-    );
-    ci.metric("lane_hit_rate_jittered", lane_rate);
-    ci.metric("lane_fallbacks_jittered", lfalls as f64);
-    ci.metric("lane_width", after.lane_width as f64);
-
-    // Zero heap allocations once warm — matrix fill + lane pass (and any
-    // per-lane fallback it takes) must never touch the allocator.
-    let before_allocs = ALLOCS.load(Ordering::Relaxed);
-    let lane_reps = 25u64;
-    for _ in 0..lane_reps {
-        let mat = eng_ln.lane_durations_mut(LANES);
-        for m in 0..LANES {
-            for (i, &b) in base.iter().enumerate() {
-                mat[i * LANES + m] = b * rl_ln.jitter(sigma);
-            }
-        }
-        std::hint::black_box(eng_ln.run_lanes(LANES).len());
-    }
-    let allocs = ALLOCS.load(Ordering::Relaxed) - before_allocs;
-    assert_eq!(allocs, 0, "lane-batched replay must be zero-alloc once warm");
-    println!("    -> allocations per lane batch: {}", allocs as f64 / lane_reps as f64);
-    ci.metric("allocs_per_lane_batch", allocs as f64 / lane_reps as f64);
-
-    // Throughput: LANES jittered replays per timed unit on both paths.
-    // Re-sync the jitter streams (the alloc audit advanced only rl_ln)
-    // so both timed loops replay the identical duration sets.
-    rl_sc = Rng::new(29);
-    rl_ln = Rng::new(29);
-    let r = bench_throughput(
-        "replay jit: scalar loop x4,  K=270 graph",
-        3,
-        20,
-        tasks * LANES as u64,
-        || {
-            for _ in 0..LANES {
+            eng_ln.run_lanes(width);
+            for m in 0..width {
                 for (i, &b) in base.iter().enumerate() {
                     eng_sc.set_duration(i as TaskId, b * rl_sc.jitter(sigma));
                 }
-                std::hint::black_box(Engine::makespan(eng_sc.run_reuse()));
+                let want = eng_sc.run_reuse();
+                let got = eng_ln.lane_finish();
+                for (i, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        w.to_bits(),
+                        got[i * width + m].to_bits(),
+                        "width {width} lane {m} diverges from the scalar loop at task {i}"
+                    );
+                }
+                assert_eq!(
+                    eng_sc.last_makespan().to_bits(),
+                    eng_ln.lane_makespans()[m].to_bits(),
+                    "width {width} lane {m} makespan diverges"
+                );
             }
-        },
-    );
-    ci.rate(&r);
-    let r = bench_throughput(
-        "replay jit: lane-batched x4, K=270 graph",
-        3,
-        20,
-        tasks * LANES as u64,
-        || {
-            let mat = eng_ln.lane_durations_mut(LANES);
-            for m in 0..LANES {
+        }
+        let after = eng_ln.sched_counters();
+        assert_eq!(after.lane_width, width as u64, "dispatched width drifted");
+        let lhits = after.lane_hits - before.lane_hits;
+        let lfalls = after.lane_fallbacks - before.lane_fallbacks;
+        let lane_rate = lhits as f64 / (lane_batches * width as u64) as f64;
+        println!(
+            "    -> lane (sigma={sigma}) hit-rate: {:.1}% ({lhits} hits, {lfalls} batch fallbacks)",
+            lane_rate * 100.0
+        );
+        ci.metric(format!("lane_hit_rate_jittered [w={width}]"), lane_rate);
+        ci.metric(format!("lane_fallbacks_jittered [w={width}]"), lfalls as f64);
+
+        // Padded remainder audit: a batch of 3 real lanes rides the same
+        // width-wide pass with (width - 3) discarded pad lanes — the real
+        // lanes must still equal the scalar loop bitwise, and the pad
+        // economics must land in the counters.
+        let before = eng_ln.sched_counters();
+        let rem = 3usize;
+        let pad_batches = 10u64;
+        for _ in 0..pad_batches {
+            let mat = eng_ln.lane_durations_mut(rem);
+            for m in 0..rem {
                 for (i, &b) in base.iter().enumerate() {
-                    mat[i * LANES + m] = b * rl_ln.jitter(sigma);
+                    mat[i * rem + m] = b * rl_ln.jitter(sigma);
                 }
             }
-            eng_ln.run_lanes(LANES);
-            std::hint::black_box(eng_ln.lane_makespans()[LANES - 1]);
-        },
-    );
-    ci.rate(&r);
-    assert_eq!(n_tasks as u64, tasks, "lane engine graph drifted from the K=270 reference");
+            eng_ln.run_lanes(rem);
+            for m in 0..rem {
+                for (i, &b) in base.iter().enumerate() {
+                    eng_sc.set_duration(i as TaskId, b * rl_sc.jitter(sigma));
+                }
+                let want = eng_sc.run_reuse();
+                let got = eng_ln.lane_finish();
+                for (i, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        w.to_bits(),
+                        got[i * rem + m].to_bits(),
+                        "width {width} padded lane {m} diverges at task {i}"
+                    );
+                }
+            }
+        }
+        let after = eng_ln.sched_counters();
+        let pads = after.lane_pad_replays - before.lane_pad_replays;
+        let pad_hits = after.lane_hits - before.lane_hits;
+        println!(
+            "    -> padded remainder (3 of {width}): {pad_hits} real-lane hits, {pads} pad replays"
+        );
+        total_pads += pads;
+
+        // Zero heap allocations once warm — matrix fill + lane pass (and
+        // any per-lane fallback it takes) must never touch the allocator,
+        // full and padded batches alike.
+        let before_allocs = ALLOCS.load(Ordering::Relaxed);
+        let lane_reps = 25u64;
+        for _ in 0..lane_reps {
+            for lanes in [width, rem] {
+                let mat = eng_ln.lane_durations_mut(lanes);
+                for m in 0..lanes {
+                    for (i, &b) in base.iter().enumerate() {
+                        mat[i * lanes + m] = b * rl_ln.jitter(sigma);
+                    }
+                }
+                std::hint::black_box(eng_ln.run_lanes(lanes).len());
+            }
+        }
+        let allocs = ALLOCS.load(Ordering::Relaxed) - before_allocs;
+        assert_eq!(allocs, 0, "lane-batched replay must be zero-alloc once warm (width {width})");
+        println!("    -> allocations per lane batch: {}", allocs as f64 / (2 * lane_reps) as f64);
+        ci.metric(format!("allocs_per_lane_batch [w={width}]"), allocs as f64 / (2 * lane_reps) as f64);
+
+        // Throughput: `width` jittered replays per timed unit on both
+        // paths. Re-sync the jitter streams (the audits advanced them
+        // unevenly) so both timed loops replay identical duration sets.
+        rl_sc = Rng::new(29);
+        rl_ln = Rng::new(29);
+        let r = bench_throughput(
+            &format!("replay jit: scalar loop x{width},  K=270 graph"),
+            3,
+            20,
+            tasks * width as u64,
+            || {
+                for _ in 0..width {
+                    for (i, &b) in base.iter().enumerate() {
+                        eng_sc.set_duration(i as TaskId, b * rl_sc.jitter(sigma));
+                    }
+                    std::hint::black_box(Engine::makespan(eng_sc.run_reuse()));
+                }
+            },
+        );
+        ci.rate(&r);
+        let r = bench_throughput(
+            &format!("replay jit: lane-batched x{width}, K=270 graph"),
+            3,
+            20,
+            tasks * width as u64,
+            || {
+                let mat = eng_ln.lane_durations_mut(width);
+                for m in 0..width {
+                    for (i, &b) in base.iter().enumerate() {
+                        mat[i * width + m] = b * rl_ln.jitter(sigma);
+                    }
+                }
+                eng_ln.run_lanes(width);
+                std::hint::black_box(eng_ln.lane_makespans()[width - 1]);
+            },
+        );
+        ci.rate(&r);
+        // Padded-remainder throughput: 3 replays through one padded pass
+        // (this PR) vs the same 3 through the scalar loop (the old
+        // scalar-remainder path) — the padded batch must win.
+        let r = bench_throughput(
+            &format!("replay jit: scalar rem x3 (w={width}), K=270 graph"),
+            3,
+            20,
+            tasks * 3,
+            || {
+                for _ in 0..3 {
+                    for (i, &b) in base.iter().enumerate() {
+                        eng_sc.set_duration(i as TaskId, b * rl_sc.jitter(sigma));
+                    }
+                    std::hint::black_box(Engine::makespan(eng_sc.run_reuse()));
+                }
+            },
+        );
+        ci.rate(&r);
+        let r = bench_throughput(
+            &format!("replay jit: padded rem x3 (w={width}), K=270 graph"),
+            3,
+            20,
+            tasks * 3,
+            || {
+                let mat = eng_ln.lane_durations_mut(3);
+                for m in 0..3 {
+                    for (i, &b) in base.iter().enumerate() {
+                        mat[i * 3 + m] = b * rl_ln.jitter(sigma);
+                    }
+                }
+                eng_ln.run_lanes(3);
+                std::hint::black_box(eng_ln.lane_makespans()[2]);
+            },
+        );
+        ci.rate(&r);
+    }
+    ci.metric("lane_pad_replays", total_pads as f64);
 
     // Faulty-sweep smoke: run a clean and a fault-injected sweep over the
     // same per-K split streams and track (a) how much recovery work

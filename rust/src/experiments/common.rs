@@ -13,10 +13,10 @@ use crate::model::scalability::SpeedupPoint;
 use crate::model::{BsfModel, CostParams};
 use crate::problems::{CimminoProblem, GravityProblem, JacobiProblem};
 use crate::simulator::{
-    run_faulty_into, AnalyticCost, CostFactory, FaultPlan, FaultScratch, FaultSpec,
+    run_faulty_into, AnalyticCost, CostFactory, FaultPlan, FaultScratch, FaultSpec, GroupCell,
     IterationTemplate, IterationTiming, SampledCost, SimParams,
 };
-use crate::util::parallel::{default_threads, parallel_map_with};
+use crate::util::parallel::{default_threads, parallel_map_groups_with};
 use crate::util::{Rng, Table};
 
 /// Which application an experiment drives.
@@ -277,21 +277,102 @@ fn sweep_point(w: &mut SweepWorker, job: &SweepJob, k: usize) -> f64 {
     w.runs.iter().map(|t| t.total).sum::<f64>() / w.runs.len() as f64
 }
 
+/// Mean iteration times of one K-adjacent group of flat queue cells —
+/// cells whose [`crate::simulator::TopologyClass`] keys are equal, so one
+/// template serves all of them and their jittered replays ride shared
+/// lane batches ([`IterationTemplate::run_group_into`]). Each cell keeps
+/// its own provider instance and per-K rng stream, exactly as
+/// [`sweep_point`] builds them, so the group result is bitwise identical
+/// to calling `sweep_point` per cell in order (pinned in
+/// `rust/tests/determinism.rs`). Size-1 groups — the common case, since
+/// adjacent K-points differ in K — take the unchanged `sweep_point` path.
+fn sweep_group(
+    w: &mut SweepWorker,
+    jobs: &[SweepJob],
+    flat: &[(usize, usize)],
+    group: std::ops::Range<usize>,
+    out: &mut Vec<f64>,
+) {
+    if group.len() == 1 {
+        let (s, i) = flat[group.start];
+        out.push(sweep_point(w, &jobs[s], jobs[s].ks[i]));
+        return;
+    }
+    let (s0, i0) = flat[group.start];
+    let job0 = &jobs[s0];
+    let k = job0.ks[i0];
+    if let Some(tmpl) = w.tmpl.as_mut() {
+        tmpl.reset_to(k, job0.l, &job0.params);
+    }
+    let tmpl = w.tmpl.get_or_insert_with(|| IterationTemplate::new(k, job0.l, &job0.params));
+    let mut cells: Vec<GroupCell> = group
+        .clone()
+        .map(|r| {
+            let (s, i) = flat[r];
+            let (job, kk) = (&jobs[s], jobs[s].ks[i]);
+            GroupCell { provider: job.factory.instance(kk as u64), rng: job.root.split(kk as u64) }
+        })
+        .collect();
+    tmpl.run_group_into(&mut cells, job0.iters, &mut w.runs);
+    for c in 0..cells.len() {
+        let runs = &w.runs[c * job0.iters..(c + 1) * job0.iters];
+        out.push(runs.iter().map(|t| t.total).sum::<f64>() / runs.len() as f64);
+    }
+}
+
+/// Consecutive flat-queue cells that may share one engine pass: grouping
+/// requires equal [`crate::simulator::TopologyClass`] keys (same graph,
+/// same duration table — the `run_group_into` invariant), equal `iters`,
+/// and no fault injection on either side (faulty replays rebuild the
+/// graph per window and keep their own scratch). Groups are computed from
+/// the job list alone — before any work is handed out — so the partition
+/// is identical at every thread count.
+fn flat_groups(jobs: &[SweepJob], flat: &[(usize, usize)]) -> Vec<std::ops::Range<usize>> {
+    let mut groups = Vec::new();
+    let mut start = 0;
+    while start < flat.len() {
+        let (s0, i0) = flat[start];
+        let j0 = &jobs[s0];
+        let mut end = start + 1;
+        if j0.fault.is_none() {
+            while end < flat.len() {
+                let (s1, i1) = flat[end];
+                let j1 = &jobs[s1];
+                if j1.fault.is_some()
+                    || j1.iters != j0.iters
+                    || IterationTemplate::topology_class(j1.ks[i1], j1.l, &j1.params)
+                        != IterationTemplate::topology_class(j0.ks[i0], j0.l, &j0.params)
+                {
+                    break;
+                }
+                end += 1;
+            }
+        }
+        groups.push(start..end);
+        start = end;
+    }
+    groups
+}
+
 /// Evaluate many sweeps through **one** work queue over every
 /// (sweep × K-point) pair: a slow size no longer serialises behind the
 /// previous one, and each worker thread reuses a single engine for its
-/// whole share of the queue. Results are bitwise identical to running the
-/// sweeps one [`simulated_curve`] call at a time, at any thread count.
+/// whole share of the queue. Consecutive cells sharing a topology class
+/// (repeated K on the same grid) are grouped onto one worker and ride
+/// shared lane batches ([`sweep_group`]). Results are bitwise identical
+/// to running the sweeps one [`simulated_curve`] call at a time, at any
+/// thread count.
 pub fn simulated_curves(jobs: &[SweepJob], threads: usize) -> Vec<Vec<SpeedupPoint>> {
     let flat: Vec<(usize, usize)> = jobs
         .iter()
         .enumerate()
         .flat_map(|(s, job)| (0..job.ks.len()).map(move |i| (s, i)))
         .collect();
-    let times = parallel_map_with(flat.len(), threads, SweepWorker::default, |w, idx| {
-        let (s, i) = flat[idx];
-        sweep_point(w, &jobs[s], jobs[s].ks[i])
-    });
+    let groups = flat_groups(jobs, &flat);
+    let times =
+        parallel_map_groups_with(&groups, threads, SweepWorker::default, |w, group, out| {
+            sweep_group(w, jobs, &flat, group, out)
+        });
     let mut fallback = SweepWorker::default();
     let mut out = Vec::with_capacity(jobs.len());
     let mut off = 0;

@@ -35,16 +35,21 @@
 //! and replicates the timing — a Fig.-6-style sweep then costs one
 //! engine run per K. Under jitter that shortcut is unavailable, so
 //! [`IterationTemplate::run_into`] instead groups its replays into
-//! lane-width batches: up to [`LANES`] independent duration sets execute
+//! lane-width batches: up to [`Engine::dispatch_width`] independent
+//! duration sets (4 with AVX2, 8 with AVX-512 — see `lanes.rs`) execute
 //! through one shared pass over the cached pop order (see `engine.rs`
-//! "Lane-parallel replay"), with a scalar remainder — bitwise identical
-//! to replaying one iteration at a time.
+//! "Lane-parallel replay"); remainder batches are padded with a
+//! duplicated lane instead of running scalar — bitwise identical to
+//! replaying one iteration at a time either way. Sweep cells whose
+//! [`TopologyClass`] keys compare equal share one template across cell
+//! boundaries too: [`IterationTemplate::run_group_into`] rides a whole
+//! group of `(provider, rng)` cells through shared lane batches.
 
 use crate::linalg::kernels;
 use crate::net::{CollectiveAlgo, CollectiveSchedule, NetworkParams};
 use crate::simulator::engine::{Engine, SchedCounters, TaskId};
 use crate::simulator::faults::RecoveryPolicy;
-use crate::simulator::lanes::{self, LANES};
+use crate::simulator::lanes::{self, LANES_MAX};
 use crate::util::Rng;
 
 /// How partial foldings travel back to the master.
@@ -66,7 +71,12 @@ pub enum ReduceMode {
 }
 
 /// Simulation parameters for one cluster configuration.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is exact (every field, f64s bitwise via `==`): it backs
+/// the [`TopologyClass`] key, where a false "equal" would merge sweep
+/// cells with different graphs and a false "unequal" only costs a
+/// missed batching opportunity.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimParams {
     /// Interconnect cost model.
     pub net: NetworkParams,
@@ -353,6 +363,45 @@ impl DurTable {
             DurKind::Post => self.tag.push(DurTag::Post),
         }
     }
+}
+
+/// Topology-class key of a clean (fault-free) iteration template.
+///
+/// [`IterationTemplate::build`] is a pure function of `(k, l, params)`:
+/// two cells whose keys compare equal produce bitwise-identical task
+/// graphs (same task count, CSR shape, kind layout) **and** identical
+/// [`DurTable`] payloads — so one template serves both cells, and only
+/// the per-cell sampling state (provider instance + rng stream) differs.
+/// That is the invariant [`IterationTemplate::run_group_into`] batches
+/// on. The comparison is exact equality, not a fingerprint: a missed
+/// match only costs a batching opportunity, but a spurious match would
+/// replay the wrong graph. (Note Algorithm 2 builds one Map task per
+/// worker, so cells with different `k` never share a class — groups form
+/// across repeated-K cells, e.g. refinement re-sweeps or multi-job rows
+/// that revisit the same grid.)
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TopologyClass<'a> {
+    k: usize,
+    l: usize,
+    params: &'a SimParams,
+}
+
+impl<'a> TopologyClass<'a> {
+    /// The class key of the template `(k, l, params)` would build.
+    pub fn of(k: usize, l: usize, params: &'a SimParams) -> TopologyClass<'a> {
+        TopologyClass { k, l, params }
+    }
+}
+
+/// One sweep cell of a K-adjacent batch group: the cell-local sampling
+/// state for a cell whose [`TopologyClass`] equals the group's. The
+/// shared template supplies the graph; each cell keeps its own provider
+/// instance and rng stream, exactly as the serial per-cell loop would.
+pub struct GroupCell {
+    /// The cell's cost provider (its own sample stream).
+    pub provider: Box<dyn CostProvider + Send>,
+    /// The cell's jitter/draw stream.
+    pub rng: Rng,
 }
 
 /// A reusable Algorithm-2 iteration for fixed `(K, l, params)`: the task
@@ -893,13 +942,21 @@ impl IterationTemplate {
             });
         }
         eng.run_lanes(lanes);
+        self.push_lane_timings(lanes, out);
+    }
+
+    /// Extract per-lane [`IterationTiming`]s from the engine's lane state
+    /// after a `run_lanes(lanes)` pass, appending them to `out` in lane
+    /// order. The `broadcast_done`/`map_done` folds vectorize across lanes
+    /// ([`lanes::fold_max_tasks`]); the remaining fields are strided reads.
+    fn push_lane_timings(&self, lanes: usize, out: &mut Vec<IterationTiming>) {
         let kind = kernels::active();
-        let finish = eng.lane_finish();
-        let mut bcast = [0.0f64; LANES];
-        let mut mapd = [0.0f64; LANES];
+        let finish = self.eng.lane_finish();
+        let mut bcast = [0.0f64; LANES_MAX];
+        let mut mapd = [0.0f64; LANES_MAX];
         lanes::fold_max_tasks(kind, finish, lanes, &self.bcast_tasks, &mut bcast);
         lanes::fold_max_tasks(kind, finish, lanes, &self.map_tasks, &mut mapd);
-        let mks = eng.lane_makespans();
+        let mks = self.eng.lane_makespans();
         for m in 0..lanes {
             out.push(IterationTiming {
                 broadcast_done: bcast[m],
@@ -915,11 +972,12 @@ impl IterationTemplate {
     /// jitter and a deterministic provider every iteration is identical, so
     /// one replay is simulated and its timing replicated — bitwise equal to
     /// the naive loop (and to [`simulate_run`] on a fresh template).
-    /// Stochastic configurations group their replays into lane-width
-    /// batches ([`IterationTemplate::replay_lanes_into`], up to [`LANES`]
-    /// independent replays per pass through the engine's order cache) with
-    /// a scalar remainder — bitwise identical to the one-at-a-time loop
-    /// (pinned by `rust/tests/determinism.rs`).
+    /// Stochastic configurations group their replays into batches of the
+    /// engine's dispatched lane width ([`Engine::dispatch_width`]: 8 with
+    /// AVX-512, else 4) via [`IterationTemplate::replay_lanes_into`]; a
+    /// final partial batch rides the same lane pass with discarded pad
+    /// lanes (no scalar remainder). Bitwise identical to the one-at-a-time
+    /// loop (pinned by `rust/tests/determinism.rs`).
     pub fn run_into(
         &mut self,
         iters: usize,
@@ -937,15 +995,79 @@ impl IterationTemplate {
             let t = self.replay(provider, rng);
             out.resize(iters, t);
         } else {
+            let width = self.eng.dispatch_width();
             let mut left = iters;
-            while left >= LANES {
-                self.replay_lanes_into(LANES, provider, rng, out);
-                left -= LANES;
+            while left > 0 {
+                let lanes = left.min(width);
+                self.replay_lanes_into(lanes, provider, rng, out);
+                left -= lanes;
             }
-            for _ in 0..left {
-                let t = self.replay(provider, rng);
-                out.push(t);
+        }
+    }
+
+    /// The [`TopologyClass`] this template's graph belongs to — equal keys
+    /// guarantee bitwise-identical graphs and duration tables (the
+    /// [`IterationTemplate::run_group_into`] batching invariant).
+    pub fn topology_class<'a>(k: usize, l: usize, params: &'a SimParams) -> TopologyClass<'a> {
+        TopologyClass::of(k, l, params)
+    }
+
+    /// Simulate `iters` iterations for **each** of `cells.len()` sweep
+    /// cells that share this template's [`TopologyClass`], appending
+    /// `cells.len() * iters` timings to `out` in cell-major order (all of
+    /// cell 0's iterations, then cell 1's, …) — exactly the order a serial
+    /// per-cell [`IterationTemplate::run_into`] loop would produce.
+    ///
+    /// Replays are indexed flat (`r = cell * iters + iter`) and batched
+    /// into lane passes of the dispatched width, so batches *span cell
+    /// boundaries*: with width 8 and 7 iterations per cell, lanes 0..7 of
+    /// the first pass carry cell 0's seven replays plus cell 1's first.
+    /// Each lane is refreshed from **its own cell's** provider and rng, in
+    /// flat order — each cell's draw stream advances exactly as its serial
+    /// loop would (streams are independent, so interleaving cells within a
+    /// batch is bitwise-irrelevant). Pinned against the per-cell loop by
+    /// `rust/tests/determinism.rs`.
+    ///
+    /// Fully deterministic groups (zero jitter, every provider
+    /// deterministic) take the same one-replay-per-cell replication
+    /// shortcut as [`IterationTemplate::run_into`].
+    pub fn run_group_into(
+        &mut self,
+        cells: &mut [GroupCell],
+        iters: usize,
+        out: &mut Vec<IterationTiming>,
+    ) {
+        out.clear();
+        if iters == 0 || cells.is_empty() {
+            return;
+        }
+        let deterministic = self.jitter_comp == 0.0
+            && self.jitter_comm == 0.0
+            && cells.iter().all(|c| c.provider.is_deterministic());
+        if deterministic {
+            for cell in cells.iter_mut() {
+                let t = self.replay(cell.provider.as_mut(), &mut cell.rng);
+                out.extend(std::iter::repeat(t).take(iters));
             }
+            return;
+        }
+        let width = self.eng.dispatch_width();
+        let total = cells.len() * iters;
+        let mut done = 0;
+        while done < total {
+            let lanes = width.min(total - done);
+            let eng = &mut self.eng;
+            let (jc, jm) = (self.jitter_comp, self.jitter_comm);
+            let mat = eng.lane_durations_mut(lanes);
+            for lane in 0..lanes {
+                let cell = &mut cells[(done + lane) / iters];
+                self.durs.refresh(jc, jm, cell.provider.as_mut(), &mut cell.rng, |id, d| {
+                    mat[id * lanes + lane] = d;
+                });
+            }
+            eng.run_lanes(lanes);
+            self.push_lane_timings(lanes, out);
+            done += lanes;
         }
     }
 
@@ -1265,6 +1387,77 @@ mod tests {
             let t = tmpl.replay(&mut analytic(l), &mut Rng::new(6));
             // the master alone pays at least the whole Map
             assert!(t.total >= 1.0, "{policy:?}: total={}", t.total);
+        }
+    }
+
+    #[test]
+    fn topology_class_keys_match_iff_build_inputs_match() {
+        let p = params();
+        let mut q = params();
+        q.jitter_comp = 0.05;
+        assert_eq!(
+            IterationTemplate::topology_class(12, 1024, &p),
+            TopologyClass::of(12, 1024, &p)
+        );
+        assert_ne!(TopologyClass::of(12, 1024, &p), TopologyClass::of(13, 1024, &p));
+        assert_ne!(TopologyClass::of(12, 1024, &p), TopologyClass::of(12, 512, &p));
+        assert_ne!(TopologyClass::of(12, 1024, &p), TopologyClass::of(12, 1024, &q));
+    }
+
+    #[test]
+    fn run_group_into_matches_per_cell_run_into_bitwise() {
+        // K-adjacent batching contract: one shared template driving N
+        // cells' replays through flat lane batches (which span cell
+        // boundaries) must be bitwise identical to a serial per-cell
+        // run_into loop, in cell-major order.
+        let l = 1024;
+        let mut p = params();
+        p.jitter_comp = 0.06;
+        p.jitter_comm = 0.04;
+        let (k, iters, n_cells) = (12usize, 7usize, 3usize);
+        let root = Rng::new(0x5EED);
+        let mut expect = Vec::new();
+        for c in 0..n_cells {
+            let mut tmpl = IterationTemplate::new(k, l, &p);
+            let mut prov = analytic(l);
+            let mut rng = root.split(c as u64);
+            let mut out = Vec::new();
+            tmpl.run_into(iters, &mut prov, &mut rng, &mut out);
+            expect.extend(out);
+        }
+        let mut tmpl = IterationTemplate::new(k, l, &p);
+        let mut cells: Vec<GroupCell> = (0..n_cells)
+            .map(|c| GroupCell {
+                provider: Box::new(analytic(l)),
+                rng: root.split(c as u64),
+            })
+            .collect();
+        let mut got = Vec::new();
+        tmpl.run_group_into(&mut cells, iters, &mut got);
+        assert_eq!(expect, got);
+        let c = tmpl.sched_counters();
+        assert!(c.lane_hits > 0 || c.lane_fallbacks > 0, "group run never batched: {c:?}");
+    }
+
+    #[test]
+    fn run_group_into_deterministic_replicates_per_cell() {
+        // Fully deterministic groups take the replication shortcut: one
+        // replay per cell, timings replicated — same as run_into's.
+        let l = 512;
+        let p = params();
+        let mut tmpl = IterationTemplate::new(8, l, &p);
+        let mut cells: Vec<GroupCell> = (0..2)
+            .map(|c| GroupCell {
+                provider: Box::new(analytic(l)),
+                rng: Rng::new(c as u64),
+            })
+            .collect();
+        let mut got = Vec::new();
+        tmpl.run_group_into(&mut cells, 5, &mut got);
+        assert_eq!(got.len(), 10);
+        let one = simulate_iteration(8, l, &p, &mut analytic(l), &mut Rng::new(99));
+        for t in &got {
+            assert_eq!(*t, one);
         }
     }
 

@@ -75,22 +75,38 @@
 //!
 //! Under jitter the deterministic-replication shortcut is unavailable and
 //! every replay runs separately — but the order-cached linear pass is just
-//! `max`/`+` per task, both exact IEEE-754 operations, so up to
-//! [`super::lanes::LANES`] *independent* duration sets replay through one
-//! shared pass at four replays per instruction. [`Engine::run_lanes`]
-//! executes a lane batch: fill the lane-strided duration matrix via
-//! [`Engine::lane_durations_mut`] (`[task][lane]`, one task's lanes
-//! contiguous for a single AVX2 load), then the vectorized pass carries
-//! the per-lane validity check alongside the timeline; any failing lane
-//! aborts the batch to a sequential scalar re-run *in lane order* (each
-//! lane's [`Engine::run_reuse`] performing its own cached-check /
-//! calendar-fallback with cache refreshes), so hit and fallback results
-//! are both bitwise identical to replaying the lanes one at a time. The
-//! implementation pair (AVX2 + a scalar twin with the identical per-lane
-//! operation sequence) dispatches through the existing `BSF_KERNEL`
-//! mechanism; `BSF_LANES=on|off` (unset = `on`) gates the vector pass
-//! process-wide, with [`Engine::set_lane_mode`] as the per-instance
-//! override. See `simulator/lanes.rs`.
+//! `max`/`+` per task, both exact IEEE-754 operations, so a batch of
+//! *independent* duration sets replays through one shared pass at one
+//! replay per lane. The lane width is chosen at runtime
+//! ([`super::lanes::lane_width`], up to [`super::lanes::LANES_MAX`]):
+//! AVX2 carries four f64 lanes, AVX-512 eight on hosts reporting
+//! `avx512f`, and a width-generic scalar twin covers every other
+//! (kernel, width) combination bitwise-identically.
+//! [`Engine::run_lanes`] executes a lane batch: fill the lane-strided
+//! duration matrix via [`Engine::lane_durations_mut`] (`[task][lane]`,
+//! one task's lanes contiguous for a single vector load), then the
+//! vectorized pass carries the per-lane validity check alongside the
+//! timeline; any failing lane aborts the batch to a sequential scalar
+//! re-run *in lane order* (each lane's [`Engine::run_reuse`] performing
+//! its own cached-check / calendar-fallback with cache refreshes), so
+//! hit and fallback results are both bitwise identical to replaying the
+//! lanes one at a time. Batches narrower than the dispatch width are
+//! **padded**: the missing lanes duplicate the last real lane's
+//! durations (copied, never drawn — the jitter draw stream is untouched)
+//! and their results are discarded, so a 3-replay remainder still rides
+//! one vector pass instead of falling back to the scalar loop
+//! (`SchedCounters::lane_pad_replays` counts the discarded lanes). The
+//! implementation set dispatches through the existing `BSF_KERNEL`
+//! mechanism plus `BSF_LANE_WIDTH=4|8` (per-instance:
+//! [`Engine::set_lane_width`]); `BSF_LANES=on|off` (unset = `on`) gates
+//! the vector pass process-wide, with [`Engine::set_lane_mode`] as the
+//! per-instance override. See `simulator/lanes.rs`.
+//!
+//! After a lane batch the scalar accessors ([`Engine::last_finish`],
+//! [`Engine::last_makespan`], [`Engine::durations`]) are unspecified and
+//! **poisoned**: reading one before the next scalar run trips a
+//! `debug_assert`, so misuse fails loudly in tests instead of silently
+//! reading stale lane-0 data.
 
 use crate::linalg::kernels;
 use crate::simulator::lanes;
@@ -171,8 +187,17 @@ pub struct SchedCounters {
     /// validity check) and re-ran through the sequential scalar path;
     /// those replays land in the ordinary counters above.
     pub lane_fallbacks: u64,
-    /// Widest lane batch this engine has executed (0 = never batched).
+    /// Widest lane pass this engine has *dispatched* (0 = never
+    /// batched): the runtime-selected vector width for batches served by
+    /// the lane pass (padded remainders included), the batch size for
+    /// sequential-path batches.
     pub lane_width: u64,
+    /// Discarded pad-lane replays: a batch narrower than the dispatch
+    /// width is padded with duplicates of its last real lane, and those
+    /// lanes' results are thrown away. `lane_hits` counts real lanes
+    /// only, so `lane_hits + lane_pad_replays` is the total lane-pass
+    /// throughput the hardware actually executed.
+    pub lane_pad_replays: u64,
 }
 
 /// Sentinel for "no entry" in the calendar's intrusive linked lists.
@@ -456,12 +481,23 @@ pub struct Engine {
     lane_free: Vec<f64>,
     /// Lane-strided finish times of the last [`Engine::run_lanes`] batch.
     lane_finish: Vec<f64>,
+    /// Widened duration matrix for padded remainder batches (pad lanes
+    /// duplicate the last real lane; `lane_durs` stays untouched so a
+    /// validity fallback replays the caller's original matrix).
+    lane_pad: Vec<f64>,
     /// Per-lane makespans of the last batch (fused fold, see
     /// [`Engine::lane_makespans`]).
-    lane_makespan: [f64; lanes::LANES],
+    lane_makespan: [f64; lanes::LANES_MAX],
     /// Per-instance lane-pass override; `None` defers to
     /// [`lanes::lanes_enabled`].
     lane_override: Option<bool>,
+    /// Per-instance lane-width override; `None` defers to
+    /// [`lanes::lane_width`].
+    lane_width_override: Option<usize>,
+    /// Set by [`Engine::run_lanes`], cleared by the next scalar run: the
+    /// scalar accessors are unspecified while a lane batch is the most
+    /// recent execution (see the module docs).
+    scalar_state_stale: bool,
     /// Running Σ durations — sizes the fallback calendar without the
     /// per-run O(T) re-sum. Incremental drift only perturbs the bucket
     /// width, which never affects pop order (bitwise-neutral).
@@ -502,7 +538,16 @@ impl Engine {
     }
 
     /// Per-task durations (read-only column view).
+    ///
+    /// Unspecified after a lane batch (debug-asserted — see the module
+    /// docs' poisoning contract): the batch's duration sets live in the
+    /// lane matrix, and the scalar column holds whatever the last
+    /// sequential-path lane (or the pre-batch state) left behind.
     pub fn durations(&self) -> &[f64] {
+        debug_assert!(
+            !self.scalar_state_stale,
+            "durations() after run_lanes is unspecified — set new durations or run_reuse first"
+        );
         &self.durations
     }
 
@@ -583,10 +628,18 @@ impl Engine {
         self.order_ok = false;
         self.total_work = 0.0;
         self.last_makespan = 0.0;
+        self.scalar_state_stale = false;
     }
 
     /// Per-task finish times of the most recent run (empty before any run).
+    ///
+    /// Unspecified after a lane batch (debug-asserted — see the module
+    /// docs' poisoning contract): read [`Engine::lane_finish`] instead.
     pub fn last_finish(&self) -> &[f64] {
+        debug_assert!(
+            !self.scalar_state_stale,
+            "last_finish() after run_lanes is unspecified — read lane_finish() instead"
+        );
         &self.finish
     }
 
@@ -636,6 +689,9 @@ impl Engine {
     /// check rejects a stale order. Both branches produce the identical
     /// bitwise schedule (see the module docs).
     pub fn run_reuse(&mut self) -> &[f64] {
+        // A scalar run re-establishes every scalar accessor (finish,
+        // makespan, durations) — lift the post-lane-batch poisoning.
+        self.scalar_state_stale = false;
         if !self.csr_valid {
             self.finalize();
         }
@@ -776,7 +832,14 @@ impl Engine {
     /// replay/calendar pass itself (`max` is exact, so this is bitwise
     /// [`Engine::makespan`] of [`Engine::last_finish`] without the extra
     /// O(T) walk). `0.0` before any run.
+    ///
+    /// Unspecified after a lane batch (debug-asserted — see the module
+    /// docs' poisoning contract): read [`Engine::lane_makespans`] instead.
     pub fn last_makespan(&self) -> f64 {
+        debug_assert!(
+            !self.scalar_state_stale,
+            "last_makespan() after run_lanes is unspecified — read lane_makespans() instead"
+        );
         self.last_makespan
     }
 
@@ -789,6 +852,27 @@ impl Engine {
         self.lane_override = on;
     }
 
+    /// Per-instance lane-width override (`None` = the process-wide
+    /// `BSF_LANE_WIDTH` selection). Unlike the env override, requesting
+    /// width 8 on a host without `avx512f` is allowed here: the lane
+    /// pass falls back to the width-generic scalar twin (bitwise
+    /// identical), which is what lets the test suites race widths on any
+    /// hardware without touching process env.
+    pub fn set_lane_width(&mut self, width: Option<usize>) {
+        if let Some(w) = width {
+            assert!(w == 4 || w == 8, "lane width must be 4 or 8, got {w}");
+        }
+        self.lane_width_override = width;
+    }
+
+    /// The lane width [`Engine::run_lanes`] dispatches at: the
+    /// per-instance override if set, else the process-wide
+    /// [`lanes::lane_width`]. Callers batching replays should cut their
+    /// batches to this width (narrower batches are padded).
+    pub fn dispatch_width(&self) -> usize {
+        self.lane_width_override.unwrap_or_else(lanes::lane_width)
+    }
+
     /// The lane-strided duration matrix for the next [`Engine::run_lanes`]
     /// batch of `lanes` independent replays: entry `[task][lane]` lives at
     /// `task * lanes + lane`. Sized here — the caller must fill **every**
@@ -796,7 +880,7 @@ impl Engine {
     /// memsets the whole matrix, this is the hot path). No allocation
     /// once the matrix has grown to the graph.
     pub fn lane_durations_mut(&mut self, lanes: usize) -> &mut [f64] {
-        assert!((1..=lanes::LANES).contains(&lanes), "1..={} lanes", lanes::LANES);
+        assert!((1..=lanes::LANES_MAX).contains(&lanes), "1..={} lanes", lanes::LANES_MAX);
         let n = self.resources.len();
         self.lane_durs.resize(n * lanes, 0.0);
         &mut self.lane_durs
@@ -808,11 +892,16 @@ impl Engine {
     /// its makespan in [`Engine::lane_makespans`]. **Bitwise contract:**
     /// hit or fallback, the results equal running each lane's durations
     /// through [`Engine::set_duration`] + [`Engine::run_reuse`] in lane
-    /// order — a full-width batch with a valid order cache goes through
-    /// the vectorized lane pass (all-lane validity check; any failing
-    /// lane aborts to the sequential path, because its calendar fallback
-    /// would refresh the cache the later lanes are checked against);
-    /// everything else runs the sequential loop directly. Zero heap
+    /// order — a batch with a valid order cache goes through the lane
+    /// pass at the dispatch width ([`Engine::dispatch_width`]), padding
+    /// narrower batches with duplicates of their last real lane (copied
+    /// durations — the caller's draw stream is never consulted — results
+    /// discarded, counted in `lane_pad_replays`); the all-lane validity
+    /// check covers pad lanes too (they replay a real lane's durations,
+    /// so they can only fail together with it), and any failing lane
+    /// aborts to the sequential path, because its calendar fallback
+    /// would refresh the cache the later lanes are checked against.
+    /// Everything else runs the sequential loop directly. Zero heap
     /// allocations once the lane scratch is warm.
     ///
     /// The batch's outputs are [`Engine::lane_finish`] and
@@ -822,38 +911,72 @@ impl Engine {
     /// at their pre-batch values while the sequential path leaves them at
     /// the last lane's replay. (Normalising them would cost a full copy
     /// per hit; the lane accessors are bitwise identical either way.)
+    /// Reading one before the next scalar run trips a `debug_assert`.
     pub fn run_lanes(&mut self, lanes: usize) -> &[f64] {
-        assert!((1..=lanes::LANES).contains(&lanes), "1..={} lanes", lanes::LANES);
+        assert!((1..=lanes::LANES_MAX).contains(&lanes), "1..={} lanes", lanes::LANES_MAX);
         if !self.csr_valid {
             self.finalize();
         }
         let n = self.resources.len();
         assert_eq!(self.lane_durs.len(), n * lanes, "fill lane_durations_mut({lanes}) first");
-        self.stats.lane_width = self.stats.lane_width.max(lanes as u64);
         let want_cached = self.mode_override.unwrap_or_else(sched_mode) == SchedMode::Cached;
         let lanes_on = self.lane_override.unwrap_or_else(lanes::lanes_enabled);
-        if lanes_on && lanes == lanes::LANES && want_cached && self.order_ok {
+        let width = self.dispatch_width();
+        if lanes_on && lanes <= width && want_cached && self.order_ok {
+            // Remainder batch: widen the duration matrix into separate
+            // pad scratch (lane_durs stays untouched at its `lanes`
+            // stride, so a validity fallback below replays the caller's
+            // original matrix). Pad lanes duplicate the last real lane.
+            let pad = lanes < width;
+            if pad {
+                self.lane_pad.resize(n * width, 0.0);
+                for i in 0..n {
+                    let row = i * lanes;
+                    for m in 0..width {
+                        self.lane_pad[i * width + m] = self.lane_durs[row + m.min(lanes - 1)];
+                    }
+                }
+            }
             // ready/free genuinely need a zeroed start; finish is fully
             // overwritten by a successful pass (every task appears in the
             // valid order) or by the fallback below, so it is only sized.
             self.lane_ready.clear();
-            self.lane_ready.resize(n * lanes, 0.0);
+            self.lane_ready.resize(n * width, 0.0);
             self.lane_free.clear();
-            self.lane_free.resize(self.max_res * lanes, 0.0);
-            self.lane_finish.resize(n * lanes, f64::NAN);
+            self.lane_free.resize(self.max_res * width, 0.0);
+            self.lane_finish.resize(n * width, f64::NAN);
+            let durs: &[f64] = if pad { &self.lane_pad } else { &self.lane_durs };
             let mut pass = lanes::LanePass {
                 order: &self.order,
                 resources: &self.resources,
                 csr_off: &self.csr_off,
                 csr_dst: &self.csr_dst,
-                durs: &self.lane_durs,
+                durs,
                 ready: &mut self.lane_ready,
                 free: &mut self.lane_free,
                 finish: &mut self.lane_finish,
-                makespan: &mut self.lane_makespan,
+                makespan: &mut self.lane_makespan[..],
+                width,
             };
             if lanes::replay(kernels::active(), &mut pass) {
+                if pad {
+                    // Discard the pad lanes: compact finish from stride
+                    // `width` to stride `lanes` in place. Forward order is
+                    // safe — the destination index never passes the next
+                    // unread source (`i*lanes + m <= i*width + m`, equal
+                    // only at i == 0 where it is a self-copy). The real
+                    // lanes' makespans already sit at slots 0..lanes.
+                    for i in 0..n {
+                        for m in 0..lanes {
+                            self.lane_finish[i * lanes + m] = self.lane_finish[i * width + m];
+                        }
+                    }
+                    self.lane_finish.truncate(n * lanes);
+                    self.stats.lane_pad_replays += (width - lanes) as u64;
+                }
                 self.stats.lane_hits += lanes as u64;
+                self.stats.lane_width = self.stats.lane_width.max(width as u64);
+                self.scalar_state_stale = true;
                 return &self.lane_finish;
             }
             self.stats.lane_fallbacks += 1;
@@ -862,6 +985,7 @@ impl Engine {
         // replaces — each lane's run_reuse does its own cached-check /
         // calendar-fallback (with cache refreshes), in lane order. The
         // copy loop below overwrites every slot, so finish is only sized.
+        self.stats.lane_width = self.stats.lane_width.max(lanes as u64);
         self.lane_finish.resize(n * lanes, f64::NAN);
         for m in 0..lanes {
             for i in 0..n {
@@ -874,6 +998,7 @@ impl Engine {
             }
             self.lane_makespan[m] = self.last_makespan;
         }
+        self.scalar_state_stale = true;
         &self.lane_finish
     }
 
@@ -884,8 +1009,9 @@ impl Engine {
     }
 
     /// Per-lane makespans of the most recent [`Engine::run_lanes`] batch
-    /// (the fused `max` fold; only the first `lanes` entries meaningful).
-    pub fn lane_makespans(&self) -> &[f64; lanes::LANES] {
+    /// (the fused `max` fold; only the first `lanes` entries meaningful —
+    /// pad lanes' slots are discarded state).
+    pub fn lane_makespans(&self) -> &[f64] {
         &self.lane_makespan
     }
 }
@@ -1445,25 +1571,31 @@ mod tests {
 
     #[test]
     fn lane_batch_hit_matches_sequential_replays_bitwise() {
-        let mut a = fork_join_engine();
-        let mut b = fork_join_engine();
-        a.set_sched_mode(Some(SchedMode::Cached));
-        a.set_lane_mode(Some(true));
-        b.set_sched_mode(Some(SchedMode::Cached));
-        a.run();
-        b.run();
-        // Gently perturbed per-lane duration sets: the pop order stays
-        // valid in every lane, so the vector pass serves the whole batch.
-        let base: Vec<f64> = b.durations().to_vec();
-        let sets: Vec<Vec<f64>> = (0..lanes::LANES)
-            .map(|m| base.iter().map(|d| d * (1.0 + (m as f64 + 1.0) * 0.01)).collect())
-            .collect();
-        assert_lanes_match_sequential(&mut a, &mut b, &sets);
-        let c = a.sched_counters();
-        assert_eq!(c.lane_hits, lanes::LANES as u64, "all lanes must hit the vector pass");
-        assert_eq!(c.lane_fallbacks, 0);
-        assert_eq!(c.lane_width, lanes::LANES as u64);
-        assert_eq!(c.cached_hits, 0, "a vector hit must not touch the scalar counters");
+        for width in [4usize, 8] {
+            let mut a = fork_join_engine();
+            let mut b = fork_join_engine();
+            a.set_sched_mode(Some(SchedMode::Cached));
+            a.set_lane_mode(Some(true));
+            a.set_lane_width(Some(width));
+            b.set_sched_mode(Some(SchedMode::Cached));
+            a.run();
+            b.run();
+            // Gently perturbed per-lane duration sets: the pop order stays
+            // valid in every lane, so the lane pass serves the whole batch
+            // (width 8 takes AVX-512 or its scalar twin depending on host —
+            // bitwise identical either way).
+            let base: Vec<f64> = b.durations().to_vec();
+            let sets: Vec<Vec<f64>> = (0..width)
+                .map(|m| base.iter().map(|d| d * (1.0 + (m as f64 + 1.0) * 0.01)).collect())
+                .collect();
+            assert_lanes_match_sequential(&mut a, &mut b, &sets);
+            let c = a.sched_counters();
+            assert_eq!(c.lane_hits, width as u64, "all lanes must hit the lane pass");
+            assert_eq!(c.lane_fallbacks, 0, "width {width}");
+            assert_eq!(c.lane_width, width as u64, "width {width}");
+            assert_eq!(c.lane_pad_replays, 0, "full-width batch needs no padding");
+            assert_eq!(c.cached_hits, 0, "a lane hit must not touch the scalar counters");
+        }
     }
 
     #[test]
@@ -1486,11 +1618,12 @@ mod tests {
         let mut b = graph();
         a.set_sched_mode(Some(SchedMode::Cached));
         a.set_lane_mode(Some(true));
+        a.set_lane_width(Some(4));
         b.set_sched_mode(Some(SchedMode::Cached));
         a.run();
         b.run();
         let base: Vec<f64> = b.durations().to_vec();
-        let mut sets: Vec<Vec<f64>> = vec![base.clone(); lanes::LANES];
+        let mut sets: Vec<Vec<f64>> = vec![base.clone(); 4];
         // Lane 2 flips the ready order of the two resource-2 tasks.
         sets[2][0] = 3.0;
         assert_lanes_match_sequential(&mut a, &mut b, &sets);
@@ -1511,36 +1644,132 @@ mod tests {
         let mut b = fork_join_engine();
         a.set_sched_mode(Some(SchedMode::Cached));
         a.set_lane_mode(Some(false));
+        a.set_lane_width(Some(4));
         b.set_sched_mode(Some(SchedMode::Cached));
         a.run();
         b.run();
         let base: Vec<f64> = b.durations().to_vec();
-        let sets: Vec<Vec<f64>> = (0..lanes::LANES)
+        let sets: Vec<Vec<f64>> = (0..4)
             .map(|m| base.iter().map(|d| d * (1.0 + m as f64 * 0.02)).collect())
             .collect();
         assert_lanes_match_sequential(&mut a, &mut b, &sets);
         let c = a.sched_counters();
         assert_eq!(c.lane_hits, 0, "lanes forced off must never vectorize");
         assert_eq!(c.lane_fallbacks, 0, "a skipped vector pass is not a fallback");
-        assert_eq!(c.lane_width, lanes::LANES as u64);
+        assert_eq!(c.lane_width, 4);
     }
 
     #[test]
-    fn partial_lane_batch_runs_sequentially() {
-        let mut a = fork_join_engine();
-        let mut b = fork_join_engine();
+    fn padded_remainder_batch_rides_the_lane_pass_bitwise() {
+        // A 2-replay batch at dispatch width 4 pads two duplicate lanes,
+        // rides one lane pass, and discards the pad results — bitwise
+        // equal to the one-at-a-time loop, with the padding visible only
+        // in the counters. Repeat at width 8 (scalar twin on hosts
+        // without avx512f) with a 3-replay batch.
+        for (width, batch) in [(4usize, 2usize), (8, 3)] {
+            let mut a = fork_join_engine();
+            let mut b = fork_join_engine();
+            a.set_sched_mode(Some(SchedMode::Cached));
+            a.set_lane_mode(Some(true));
+            a.set_lane_width(Some(width));
+            b.set_sched_mode(Some(SchedMode::Cached));
+            a.run();
+            b.run();
+            let base: Vec<f64> = b.durations().to_vec();
+            let sets: Vec<Vec<f64>> = (0..batch)
+                .map(|m| base.iter().map(|d| d * (1.1 + m as f64 * 0.1)).collect())
+                .collect();
+            assert_lanes_match_sequential(&mut a, &mut b, &sets);
+            let c = a.sched_counters();
+            assert_eq!(c.lane_hits, batch as u64, "real lanes hit the lane pass");
+            assert_eq!(c.lane_fallbacks, 0, "width {width}");
+            assert_eq!(c.lane_pad_replays, (width - batch) as u64, "width {width}");
+            assert_eq!(c.lane_width, width as u64, "padded batches dispatch at full width");
+            assert_eq!(c.cached_hits, 0, "padding must not touch the scalar counters");
+        }
+    }
+
+    #[test]
+    fn padded_batch_with_stale_pad_source_falls_back_like_its_real_lane() {
+        // The pad lanes duplicate the LAST real lane; if that lane's
+        // durations invalidate the cached order, the pad lanes fail the
+        // validity check with it and the whole batch falls back — results
+        // must still equal the one-at-a-time loop (which never saw a pad
+        // lane at all).
+        let mut a = Engine::new();
+        let mut b = Engine::new();
+        for e in [&mut a, &mut b] {
+            let w = e.task(0, 1.0);
+            let x = e.task(1, 2.0);
+            let y = e.task(2, 0.5);
+            let z = e.task(2, 0.5);
+            e.dep(w, y);
+            e.dep(x, z);
+        }
         a.set_sched_mode(Some(SchedMode::Cached));
         a.set_lane_mode(Some(true));
+        a.set_lane_width(Some(4));
         b.set_sched_mode(Some(SchedMode::Cached));
         a.run();
         b.run();
         let base: Vec<f64> = b.durations().to_vec();
-        let sets: Vec<Vec<f64>> =
-            (0..2).map(|m| base.iter().map(|d| d * (1.1 + m as f64 * 0.1)).collect()).collect();
+        let mut sets: Vec<Vec<f64>> = vec![base.clone(); 2];
+        // The last real lane (lane 1, the pad source) goes stale.
+        sets[1][0] = 3.0;
         assert_lanes_match_sequential(&mut a, &mut b, &sets);
         let c = a.sched_counters();
-        assert_eq!(c.lane_hits, 0, "a remainder batch takes the scalar path");
-        assert_eq!(c.lane_width, 2);
+        assert_eq!(c.lane_fallbacks, 1, "the stale pad-source lane must abort the pass");
+        assert_eq!(c.lane_hits, 0);
+        assert_eq!(c.lane_pad_replays, 0, "an aborted pass discards nothing");
+        let cb = b.sched_counters();
+        assert_eq!(c.cached_hits, cb.cached_hits);
+        assert_eq!(c.fallbacks, cb.fallbacks);
+        assert_eq!(c.calendar_runs, cb.calendar_runs);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "after run_lanes is unspecified")]
+    fn scalar_accessors_are_poisoned_after_a_lane_batch() {
+        let mut e = fork_join_engine();
+        e.set_sched_mode(Some(SchedMode::Cached));
+        e.set_lane_width(Some(4));
+        e.run();
+        let base: Vec<f64> = e.durations().to_vec();
+        let mat = e.lane_durations_mut(4);
+        for (i, &d) in base.iter().enumerate() {
+            for m in 0..4 {
+                mat[i * 4 + m] = d * (1.0 + m as f64 * 0.01);
+            }
+        }
+        e.run_lanes(4);
+        // Poisoned: the batch's outputs are the lane accessors only.
+        let _ = e.last_makespan();
+    }
+
+    #[test]
+    fn scalar_poisoning_clears_on_the_next_scalar_run() {
+        let mut e = fork_join_engine();
+        e.set_sched_mode(Some(SchedMode::Cached));
+        e.set_lane_width(Some(4));
+        let first = e.run();
+        let base: Vec<f64> = e.durations().to_vec();
+        let mat = e.lane_durations_mut(4);
+        for (i, &d) in base.iter().enumerate() {
+            for m in 0..4 {
+                mat[i * 4 + m] = d;
+            }
+        }
+        e.run_lanes(4);
+        // A scalar replay re-establishes (and un-poisons) the scalar
+        // accessors, whatever path the lane batch took.
+        for (i, &d) in base.iter().enumerate() {
+            e.set_duration(i as TaskId, d);
+        }
+        let again = e.run_reuse().to_vec();
+        assert_eq!(again, first);
+        assert_eq!(e.last_makespan().to_bits(), Engine::makespan(&again).to_bits());
+        assert_eq!(e.durations(), &base[..]);
     }
 
     #[test]

@@ -1,23 +1,24 @@
-//! Lane-parallel order-cached replay: simulate up to [`LANES`] independent
+//! Lane-parallel order-cached replay: simulate a batch of independent
 //! jittered replays of one graph in a single pass over the cached pop
-//! order.
+//! order, at a lane width chosen at runtime (up to [`LANES_MAX`]).
 //!
 //! PR 4's order-cached replay reduced a replay to two IEEE-754 operations
 //! per task — `start = max(ready, resource_free)` and `end = start + dur` —
 //! plus an exact `(ready, id)` validity check. Both `max` and `+` return
 //! the unique correctly-rounded result for their operands, so evaluating
-//! them **per lane** over four independent duration sets is bitwise
-//! identical to evaluating the four replays one at a time: the same trick
-//! `linalg::kernels` uses for the compute plane (identical per-lane
-//! operation sequence in a scalar twin and an AVX2 kernel), applied to
-//! the simulation plane.
+//! them **per lane** over independent duration sets is bitwise identical
+//! to evaluating the replays one at a time — at *any* lane width: the
+//! same trick `linalg::kernels` uses for the compute plane (identical
+//! per-lane operation sequence in a scalar twin and a vector kernel),
+//! applied to the simulation plane.
 //!
 //! ## Layout
 //!
 //! Every lane array is **lane-strided**: element `[task][lane]` lives at
-//! `task * LANES + lane`, so one task's four lanes are contiguous and a
-//! single `_mm256_loadu_pd` fetches all four replays' values. The same
-//! layout covers `ready`/`finish` (per task) and `free` (per resource).
+//! `task * width + lane`, so one task's lanes are contiguous and a single
+//! `_mm256_loadu_pd` (width 4) or `_mm512_loadu_pd` (width 8) fetches all
+//! replays' values. The same layout covers `ready`/`finish` (per task)
+//! and `free` (per resource).
 //!
 //! ## Per-lane validity
 //!
@@ -26,7 +27,8 @@
 //! lanes (it is the one cached permutation), so the id comparison is one
 //! scalar branch per task and only the `ready` comparison is lane-wise:
 //! `id > prev_id` selects a `>=` compare, otherwise `>` — vectorized as
-//! `_mm256_cmp_pd` (`_CMP_GE_OQ`/`_CMP_GT_OQ`) + movemask, all four lanes
+//! `_mm256_cmp_pd` + movemask (`!= 0b1111` rejects) at width 4 and
+//! `_mm512_cmp_pd_mask` (`!= 0xFF` rejects) at width 8, all lanes
 //! required to pass. Any failing lane aborts the whole pass ([`replay`]
 //! returns `false`) because the sequential semantics of the failing lane
 //! (a calendar fallback that *refreshes the cache*) would change what the
@@ -39,27 +41,41 @@
 //!
 //! ## Dispatch
 //!
-//! The implementation pair dispatches through the *existing*
-//! `BSF_KERNEL` mechanism (`linalg::kernels::active()`): the scalar twin
-//! performs the identical per-lane operation sequence (`a > b ? a : b`
-//! mirrors `_mm256_max_pd` exactly, including NaN operand selection), so
-//! the two agree bit for bit on every input — pinned by the unit tests
-//! below and by CI running the whole suite under both `BSF_KERNEL`
-//! values. A separate process-wide `BSF_LANES=on|off` switch (unset =
-//! `on`; anything else panics loudly, like `BSF_SCHED`) disables the
-//! vectorized pass entirely, forcing every lane batch through the
-//! sequential scalar path — results are bitwise identical either way, so
-//! CI crosses it with one representative kernel/scheduler cell.
+//! Two independent axes pick the implementation:
+//!
+//! * **Kernel** — the *existing* `BSF_KERNEL` mechanism
+//!   (`linalg::kernels::active()`): `scalar` forces the width-generic
+//!   scalar twin, whose per-lane operation sequence mirrors the vector
+//!   kernels literally (`a > b ? a : b` is the exact `_mm256_max_pd` /
+//!   `_mm512_max_pd` operand selection, NaN included), so all
+//!   implementations agree bit for bit on every input.
+//! * **Width** — `BSF_LANE_WIDTH=4|8` (unset = 8 when the CPU reports
+//!   `avx512f`, else 4; `8` on a host without `avx512f` panics loudly,
+//!   as does any other value — an override that does nothing would
+//!   invalidate any benchmark run on top of it). [`lane_width`] reads it
+//!   once; `Engine::set_lane_width` overrides per instance so tests can
+//!   race widths without touching process env. A (kernel, width)
+//!   combination with no vector kernel — e.g. width 8 without `avx512f`
+//!   via the per-instance override — takes the scalar twin at that
+//!   width, so width-8 batches are testable on any host.
+//!
+//! A separate process-wide `BSF_LANES=on|off` switch (unset = `on`;
+//! anything else panics loudly, like `BSF_SCHED`) disables the batched
+//! pass entirely, forcing every lane batch through the sequential scalar
+//! path — results are bitwise identical either way, so CI crosses it
+//! with one representative kernel/scheduler cell.
 
 use crate::linalg::kernels::KernelKind;
 use crate::simulator::engine::TaskId;
 
-/// Lane width of the batched replay pass (AVX2 holds four f64 lanes).
-/// Remainder batches (fewer than `LANES` replays left) take the scalar
-/// one-at-a-time path.
-pub const LANES: usize = 4;
+/// Maximum lane width of the batched replay pass (AVX-512 holds eight
+/// f64 lanes). The dispatched width is [`lane_width`] (or a per-engine
+/// override); remainder batches are padded up to it with a duplicated
+/// real lane whose results are discarded (see `Engine::run_lanes`).
+pub const LANES_MAX: usize = 8;
 
 static ACTIVE_LANES: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+static ACTIVE_WIDTH: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
 
 /// Whether the vectorized lane pass is enabled for this process (reads
 /// `BSF_LANES` once). Engines without an `Engine::set_lane_mode` override
@@ -67,6 +83,26 @@ static ACTIVE_LANES: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
 /// pass forced off (every batch then exercises the sequential fallback).
 pub fn lanes_enabled() -> bool {
     *ACTIVE_LANES.get_or_init(|| select_lanes(std::env::var("BSF_LANES").ok().as_deref()))
+}
+
+/// The process-wide lane width (reads `BSF_LANE_WIDTH` once): 8 when the
+/// CPU reports `avx512f`, else 4, unless overridden. Engines without an
+/// `Engine::set_lane_width` override dispatch through this.
+pub fn lane_width() -> usize {
+    *ACTIVE_WIDTH.get_or_init(|| {
+        select_width(std::env::var("BSF_LANE_WIDTH").ok().as_deref(), avx512_supported())
+    })
+}
+
+/// Whether this CPU can run the width-8 AVX-512 lane pass.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn avx512_supported() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn avx512_supported() -> bool {
+    false
 }
 
 /// Pure selection logic (unit-tested separately from process env state).
@@ -82,10 +118,26 @@ fn select_lanes(request: Option<&str>) -> bool {
     }
 }
 
+/// Pure width selection (unit-tested separately from process env state
+/// and CPU detection). Requesting width 8 on a host without `avx512f`
+/// panics rather than silently narrowing: a benchmark run under a
+/// half-honoured override would measure the wrong kernel.
+fn select_width(request: Option<&str>, avx512_ok: bool) -> usize {
+    match request {
+        Some("4") => 4,
+        Some("8") if avx512_ok => 8,
+        Some("8") => panic!("BSF_LANE_WIDTH=8 requires avx512f, which this CPU does not report"),
+        Some(other) => panic!("BSF_LANE_WIDTH must be '4' or '8', got '{other}'"),
+        None if avx512_ok => 8,
+        None => 4,
+    }
+}
+
 /// Borrowed view of everything one lane-batched pass needs: the engine's
 /// graph (cached pop order + SoA columns + CSR successors) and its
 /// lane-strided scratch. `ready` and `free` must arrive zeroed; `durs`
-/// holds the `LANES` duration sets task-major (`[task * LANES + lane]`).
+/// holds `width` duration sets task-major (`[task * width + lane]`), and
+/// `makespan` must hold at least `width` slots.
 pub(crate) struct LanePass<'a> {
     pub order: &'a [TaskId],
     pub resources: &'a [u32],
@@ -96,41 +148,51 @@ pub(crate) struct LanePass<'a> {
     pub free: &'a mut [f64],
     pub finish: &'a mut [f64],
     /// Per-lane running makespan (the fused `max` fold over finish times).
-    pub makespan: &'a mut [f64; LANES],
+    pub makespan: &'a mut [f64],
+    /// Lane count of this batch — the stride of every array above.
+    pub width: usize,
 }
 
-/// Execute the lane-batched linear pass through `kind`'s implementation.
-/// Returns `false` as soon as any lane fails the validity check (scratch
-/// is then undefined — the caller re-runs the batch sequentially);
-/// returns `true` with `finish`/`makespan` holding all `LANES` replays'
-/// results otherwise. Zero heap allocations.
+/// Execute the lane-batched linear pass through the widest kernel that
+/// fits `(kind, width, CPU)`; any combination without a vector kernel
+/// takes the width-generic scalar twin (bitwise identical). Returns
+/// `false` as soon as any lane fails the validity check (scratch is then
+/// undefined — the caller re-runs the batch sequentially); returns `true`
+/// with `finish`/`makespan` holding all `width` replays' results
+/// otherwise. Zero heap allocations.
 pub(crate) fn replay(kind: KernelKind, p: &mut LanePass<'_>) -> bool {
-    match kind {
-        KernelKind::Scalar => replay_scalar(p),
-        KernelKind::Avx2 => replay_avx2_checked(p),
+    match (kind, p.width) {
+        (KernelKind::Avx2, 4) => replay_avx2_checked(p),
+        (KernelKind::Avx2, 8) if avx512_supported() => replay_avx512_checked(p),
+        _ => replay_scalar(p),
     }
 }
 
-/// Fold `out[lane] = max(0, max over tasks of finish[task][lane])` — the
-/// lane-parallel analogue of the per-replay `fold(0.0, f64::max)` timing
-/// extraction. `max` is exact, so the fold order is bitwise-irrelevant
-/// and both implementations trivially agree.
+/// Fold `out[lane] = max(0, max over tasks of finish[task][lane])` for
+/// `lane < lanes` — the lane-parallel analogue of the per-replay
+/// `fold(0.0, f64::max)` timing extraction. `max` is exact, so the fold
+/// order is bitwise-irrelevant and all implementations trivially agree.
+/// `out` must hold at least `lanes` slots; slots past `lanes` are left
+/// untouched by the scalar path and may be clobbered by a vector one, so
+/// callers read only `out[..lanes]`.
 pub(crate) fn fold_max_tasks(
     kind: KernelKind,
     finish: &[f64],
     lanes: usize,
     tasks: &[TaskId],
-    out: &mut [f64; LANES],
+    out: &mut [f64],
 ) {
-    out.fill(0.0);
-    if lanes == LANES && kind == KernelKind::Avx2 {
-        fold_max_avx2_checked(finish, tasks, out);
-    } else {
-        for &t in tasks {
-            let at = t as usize * lanes;
-            for m in 0..lanes {
-                let v = finish[at + m];
-                out[m] = if out[m] > v { out[m] } else { v };
+    out[..lanes].fill(0.0);
+    match (kind, lanes) {
+        (KernelKind::Avx2, 4) => fold_max_avx2_checked(finish, tasks, out),
+        (KernelKind::Avx2, 8) if avx512_supported() => fold_max_avx512_checked(finish, tasks, out),
+        _ => {
+            for &t in tasks {
+                let at = t as usize * lanes;
+                for m in 0..lanes {
+                    let v = finish[at + m];
+                    out[m] = if out[m] > v { out[m] } else { v };
+                }
             }
         }
     }
@@ -138,34 +200,36 @@ pub(crate) fn fold_max_tasks(
 
 // ---------------------------------------------------------------- scalar
 
-/// Portable lane pass: per task, the per-lane operation sequence mirrors
-/// the AVX2 kernel literally — `a > b ? a : b` for every `max` (the exact
-/// `_mm256_max_pd` operand selection, NaN included) and one `+` per lane
-/// — so the two implementations are bitwise identical on every input.
+/// Portable lane pass at any width: per task, the per-lane operation
+/// sequence mirrors the vector kernels literally — `a > b ? a : b` for
+/// every `max` (the exact `_mm256_max_pd`/`_mm512_max_pd` operand
+/// selection, NaN included) and one `+` per lane — so all
+/// implementations are bitwise identical on every input.
 fn replay_scalar(p: &mut LanePass<'_>) -> bool {
-    let mut prev = [f64::NEG_INFINITY; LANES];
+    let w = p.width;
+    let mut prev = [f64::NEG_INFINITY; LANES_MAX];
     let mut prev_id: TaskId = 0;
-    let mut mk = [0.0f64; LANES];
+    let mut mk = [0.0f64; LANES_MAX];
     for &id in p.order {
         let i = id as usize;
-        let at = i * LANES;
-        // Validity first, all lanes, like the vector twin's movemask.
+        let at = i * w;
+        // Validity first, all lanes, like the vector twins' masks.
         let ge = id > prev_id;
-        for m in 0..LANES {
+        for m in 0..w {
             let ready = p.ready[at + m];
             let ok = if ge { ready >= prev[m] } else { ready > prev[m] };
             if !ok {
                 return false;
             }
         }
-        let res = p.resources[i] as usize * LANES;
-        let mut end = [0.0f64; LANES];
-        for m in 0..LANES {
+        let res = p.resources[i] as usize * w;
+        let mut end = [0.0f64; LANES_MAX];
+        for m in 0..w {
             let ready = p.ready[at + m];
             prev[m] = ready;
             let free = p.free[res + m];
             // Same float ops as the scalar calendar loop (`max`, `+`) —
-            // ternary form mirrors `_mm256_max_pd` exactly.
+            // ternary form mirrors the vector max exactly.
             let start = if ready > free { ready } else { free };
             let e = start + p.durs[at + m];
             p.free[res + m] = e;
@@ -175,14 +239,14 @@ fn replay_scalar(p: &mut LanePass<'_>) -> bool {
         }
         prev_id = id;
         for e in p.csr_off[i]..p.csr_off[i + 1] {
-            let s = p.csr_dst[e] as usize * LANES;
-            for m in 0..LANES {
+            let s = p.csr_dst[e] as usize * w;
+            for m in 0..w {
                 let cur = p.ready[s + m];
                 p.ready[s + m] = if cur > end[m] { cur } else { end[m] };
             }
         }
     }
-    *p.makespan = mk;
+    p.makespan[..w].copy_from_slice(&mk[..w]);
     true
 }
 
@@ -194,9 +258,10 @@ fn replay_avx2_checked(p: &mut LanePass<'_>) -> bool {
         crate::linalg::kernels::available(KernelKind::Avx2),
         "AVX2 lane pass invoked without CPU support"
     );
+    debug_assert_eq!(p.width, 4, "AVX2 lane pass is width 4");
     // SAFETY: AVX2 support verified above; every strided index stays
-    // inside the lane arrays (sized n * LANES / max_res * LANES by the
-    // engine before the call).
+    // inside the lane arrays (sized n * 4 / max_res * 4 by the engine
+    // before the call), and `makespan` holds >= 4 slots.
     unsafe { replay_avx2(p) }
 }
 
@@ -206,18 +271,19 @@ fn replay_avx2_checked(_p: &mut LanePass<'_>) -> bool {
 }
 
 #[cfg(target_arch = "x86_64")]
-fn fold_max_avx2_checked(finish: &[f64], tasks: &[TaskId], out: &mut [f64; LANES]) {
+fn fold_max_avx2_checked(finish: &[f64], tasks: &[TaskId], out: &mut [f64]) {
     assert!(
         crate::linalg::kernels::available(KernelKind::Avx2),
         "AVX2 lane fold invoked without CPU support"
     );
+    assert!(out.len() >= 4, "AVX2 lane fold stores 4 lanes");
     // SAFETY: AVX2 support verified above; `finish` is lane-strided with
-    // LANES lanes, so `t * LANES` is in bounds for every listed task.
+    // 4 lanes, so `t * 4` is in bounds for every listed task.
     unsafe { fold_max_avx2(finish, tasks, out) }
 }
 
 #[cfg(not(target_arch = "x86_64"))]
-fn fold_max_avx2_checked(_finish: &[f64], _tasks: &[TaskId], _out: &mut [f64; LANES]) {
+fn fold_max_avx2_checked(_finish: &[f64], _tasks: &[TaskId], _out: &mut [f64]) {
     unreachable!("AVX2 lane fold selected on a non-x86_64 target")
 }
 
@@ -225,12 +291,13 @@ fn fold_max_avx2_checked(_finish: &[f64], _tasks: &[TaskId], _out: &mut [f64; LA
 #[target_feature(enable = "avx2")]
 unsafe fn replay_avx2(p: &mut LanePass<'_>) -> bool {
     use std::arch::x86_64::*;
+    const W: usize = 4;
     let mut prev = _mm256_set1_pd(f64::NEG_INFINITY);
     let mut prev_id: TaskId = 0;
     let mut mk = _mm256_setzero_pd();
     for &id in p.order {
         let i = id as usize;
-        let ready = _mm256_loadu_pd(p.ready.as_ptr().add(i * LANES));
+        let ready = _mm256_loadu_pd(p.ready.as_ptr().add(i * W));
         // Strictly increasing (ready, id) per lane; the id tie-break is
         // shared (one cached order), so it selects the compare predicate.
         let cmp = if id > prev_id {
@@ -243,16 +310,16 @@ unsafe fn replay_avx2(p: &mut LanePass<'_>) -> bool {
         }
         prev = ready;
         prev_id = id;
-        let res = p.resources[i] as usize * LANES;
+        let res = p.resources[i] as usize * W;
         let free = _mm256_loadu_pd(p.free.as_ptr().add(res));
         // Same float ops as the scalar calendar loop, one per lane.
         let start = _mm256_max_pd(ready, free);
-        let end = _mm256_add_pd(start, _mm256_loadu_pd(p.durs.as_ptr().add(i * LANES)));
+        let end = _mm256_add_pd(start, _mm256_loadu_pd(p.durs.as_ptr().add(i * W)));
         _mm256_storeu_pd(p.free.as_mut_ptr().add(res), end);
-        _mm256_storeu_pd(p.finish.as_mut_ptr().add(i * LANES), end);
+        _mm256_storeu_pd(p.finish.as_mut_ptr().add(i * W), end);
         mk = _mm256_max_pd(mk, end);
         for e in p.csr_off[i]..p.csr_off[i + 1] {
-            let s = p.csr_dst[e] as usize * LANES;
+            let s = p.csr_dst[e] as usize * W;
             let cur = _mm256_loadu_pd(p.ready.as_ptr().add(s));
             _mm256_storeu_pd(p.ready.as_mut_ptr().add(s), _mm256_max_pd(cur, end));
         }
@@ -263,13 +330,96 @@ unsafe fn replay_avx2(p: &mut LanePass<'_>) -> bool {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
-unsafe fn fold_max_avx2(finish: &[f64], tasks: &[TaskId], out: &mut [f64; LANES]) {
+unsafe fn fold_max_avx2(finish: &[f64], tasks: &[TaskId], out: &mut [f64]) {
     use std::arch::x86_64::*;
     let mut acc = _mm256_setzero_pd();
     for &t in tasks {
-        acc = _mm256_max_pd(acc, _mm256_loadu_pd(finish.as_ptr().add(t as usize * LANES)));
+        acc = _mm256_max_pd(acc, _mm256_loadu_pd(finish.as_ptr().add(t as usize * 4)));
     }
     _mm256_storeu_pd(out.as_mut_ptr(), acc);
+}
+
+// --------------------------------------------------------------- avx512
+
+#[cfg(target_arch = "x86_64")]
+fn replay_avx512_checked(p: &mut LanePass<'_>) -> bool {
+    assert!(avx512_supported(), "AVX-512 lane pass invoked without CPU support");
+    debug_assert_eq!(p.width, 8, "AVX-512 lane pass is width 8");
+    // SAFETY: avx512f support verified above; every strided index stays
+    // inside the lane arrays (sized n * 8 / max_res * 8 by the engine
+    // before the call), and `makespan` holds >= 8 slots.
+    unsafe { replay_avx512(p) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn replay_avx512_checked(_p: &mut LanePass<'_>) -> bool {
+    unreachable!("AVX-512 lane pass selected on a non-x86_64 target")
+}
+
+#[cfg(target_arch = "x86_64")]
+fn fold_max_avx512_checked(finish: &[f64], tasks: &[TaskId], out: &mut [f64]) {
+    assert!(avx512_supported(), "AVX-512 lane fold invoked without CPU support");
+    assert!(out.len() >= 8, "AVX-512 lane fold stores 8 lanes");
+    // SAFETY: avx512f support verified above; `finish` is lane-strided
+    // with 8 lanes, so `t * 8` is in bounds for every listed task.
+    unsafe { fold_max_avx512(finish, tasks, out) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn fold_max_avx512_checked(_finish: &[f64], _tasks: &[TaskId], _out: &mut [f64]) {
+    unreachable!("AVX-512 lane fold selected on a non-x86_64 target")
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn replay_avx512(p: &mut LanePass<'_>) -> bool {
+    use std::arch::x86_64::*;
+    const W: usize = 8;
+    let mut prev = _mm512_set1_pd(f64::NEG_INFINITY);
+    let mut prev_id: TaskId = 0;
+    let mut mk = _mm512_setzero_pd();
+    for &id in p.order {
+        let i = id as usize;
+        let ready = _mm512_loadu_pd(p.ready.as_ptr().add(i * W));
+        // Same predicate selection as the AVX2 pass; the 512-bit compare
+        // yields a mask register directly — all 8 lanes must pass.
+        let cmp = if id > prev_id {
+            _mm512_cmp_pd_mask::<_CMP_GE_OQ>(ready, prev)
+        } else {
+            _mm512_cmp_pd_mask::<_CMP_GT_OQ>(ready, prev)
+        };
+        if cmp != 0xFF {
+            return false;
+        }
+        prev = ready;
+        prev_id = id;
+        let res = p.resources[i] as usize * W;
+        let free = _mm512_loadu_pd(p.free.as_ptr().add(res));
+        // Same float ops as the scalar calendar loop, one per lane.
+        let start = _mm512_max_pd(ready, free);
+        let end = _mm512_add_pd(start, _mm512_loadu_pd(p.durs.as_ptr().add(i * W)));
+        _mm512_storeu_pd(p.free.as_mut_ptr().add(res), end);
+        _mm512_storeu_pd(p.finish.as_mut_ptr().add(i * W), end);
+        mk = _mm512_max_pd(mk, end);
+        for e in p.csr_off[i]..p.csr_off[i + 1] {
+            let s = p.csr_dst[e] as usize * W;
+            let cur = _mm512_loadu_pd(p.ready.as_ptr().add(s));
+            _mm512_storeu_pd(p.ready.as_mut_ptr().add(s), _mm512_max_pd(cur, end));
+        }
+    }
+    _mm512_storeu_pd(p.makespan.as_mut_ptr(), mk);
+    true
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn fold_max_avx512(finish: &[f64], tasks: &[TaskId], out: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let mut acc = _mm512_setzero_pd();
+    for &t in tasks {
+        acc = _mm512_max_pd(acc, _mm512_loadu_pd(finish.as_ptr().add(t as usize * 8)));
+    }
+    _mm512_storeu_pd(out.as_mut_ptr(), acc);
 }
 
 #[cfg(test)]
@@ -290,8 +440,30 @@ mod tests {
         select_lanes(Some("4"));
     }
 
+    #[test]
+    fn select_width_parses_overrides_and_detects() {
+        assert_eq!(select_width(Some("4"), true), 4);
+        assert_eq!(select_width(Some("4"), false), 4);
+        assert_eq!(select_width(Some("8"), true), 8);
+        assert_eq!(select_width(None, true), 8);
+        assert_eq!(select_width(None, false), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "BSF_LANE_WIDTH=8 requires avx512f")]
+    fn select_width_rejects_8_without_avx512() {
+        select_width(Some("8"), false);
+    }
+
+    #[test]
+    #[should_panic(expected = "BSF_LANE_WIDTH must be")]
+    fn select_width_rejects_unknown_value() {
+        select_width(Some("16"), true);
+    }
+
     /// A small hand-built chain-with-fork graph (raw arrays, no Engine)
-    /// so the pass implementations can be compared in isolation.
+    /// so the pass implementations can be compared in isolation, at any
+    /// lane width.
     struct Case {
         order: Vec<TaskId>,
         resources: Vec<u32>,
@@ -299,15 +471,16 @@ mod tests {
         csr_dst: Vec<TaskId>,
         durs: Vec<f64>,
         n_res: usize,
+        width: usize,
     }
 
-    fn chain_case() -> Case {
+    fn chain_case(width: usize) -> Case {
         // 0 → 1 → 2 → 3 on alternating resources, distinct durations per
         // lane so lanes genuinely diverge.
         let n = 4;
-        let mut durs = vec![0.0; n * LANES];
+        let mut durs = vec![0.0; n * width];
         for (i, d) in durs.iter_mut().enumerate() {
-            let (task, lane) = (i / LANES, i % LANES);
+            let (task, lane) = (i / width, i % width);
             *d = 0.25 + task as f64 * 0.5 + lane as f64 * 0.125;
         }
         Case {
@@ -317,15 +490,17 @@ mod tests {
             csr_dst: vec![1, 2, 3],
             durs,
             n_res: 2,
+            width,
         }
     }
 
-    fn run_case(kind: KernelKind, c: &Case) -> Option<(Vec<f64>, [f64; LANES])> {
+    fn run_case(kind: KernelKind, c: &Case) -> Option<(Vec<f64>, Vec<f64>)> {
         let n = c.resources.len();
-        let mut ready = vec![0.0; n * LANES];
-        let mut free = vec![0.0; c.n_res * LANES];
-        let mut finish = vec![f64::NAN; n * LANES];
-        let mut mk = [0.0f64; LANES];
+        let w = c.width;
+        let mut ready = vec![0.0; n * w];
+        let mut free = vec![0.0; c.n_res * w];
+        let mut finish = vec![f64::NAN; n * w];
+        let mut mk = vec![0.0f64; LANES_MAX];
         let ok = replay(
             kind,
             &mut LanePass {
@@ -338,22 +513,30 @@ mod tests {
                 free: &mut free,
                 finish: &mut finish,
                 makespan: &mut mk,
+                width: w,
             },
         );
+        mk.truncate(w);
         ok.then_some((finish, mk))
     }
 
     #[test]
-    fn scalar_lane_pass_matches_per_lane_chain_arithmetic() {
-        let c = chain_case();
-        let (finish, mk) = run_case(KernelKind::Scalar, &c).expect("valid chain order");
-        for m in 0..LANES {
-            let mut t = 0.0f64;
-            for task in 0..4usize {
-                t += c.durs[task * LANES + m];
-                assert_eq!(finish[task * LANES + m].to_bits(), t.to_bits(), "lane {m} task {task}");
+    fn scalar_lane_pass_matches_per_lane_chain_arithmetic_at_both_widths() {
+        for width in [4usize, 8] {
+            let c = chain_case(width);
+            let (finish, mk) = run_case(KernelKind::Scalar, &c).expect("valid chain order");
+            for m in 0..width {
+                let mut t = 0.0f64;
+                for task in 0..4usize {
+                    t += c.durs[task * width + m];
+                    assert_eq!(
+                        finish[task * width + m].to_bits(),
+                        t.to_bits(),
+                        "width {width} lane {m} task {task}"
+                    );
+                }
+                assert_eq!(mk[m].to_bits(), t.to_bits(), "width {width} lane {m} makespan");
             }
-            assert_eq!(mk[m].to_bits(), t.to_bits(), "lane {m} makespan");
         }
     }
 
@@ -363,55 +546,102 @@ mod tests {
             eprintln!("skipping: no AVX2 on this host");
             return;
         }
-        let c = chain_case();
+        let c = chain_case(4);
         let (fs, ms) = run_case(KernelKind::Scalar, &c).expect("scalar pass valid");
         let (fv, mv) = run_case(KernelKind::Avx2, &c).expect("avx2 pass valid");
         for (i, (a, b)) in fs.iter().zip(&fv).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "finish slot {i}");
         }
-        for m in 0..LANES {
+        for m in 0..4 {
             assert_eq!(ms[m].to_bits(), mv[m].to_bits(), "lane {m} makespan");
         }
     }
 
     #[test]
-    fn stale_order_rejected_by_both_implementations() {
-        // Two independent same-resource tasks recorded in the order
-        // [1, 0]: task 0's (0.0, 0) does not exceed task 1's (0.0, 1)
-        // lexicographically, so every implementation must reject.
-        let c = Case {
-            order: vec![1, 0],
-            resources: vec![0, 0],
-            csr_off: vec![0, 0, 0],
-            csr_dst: vec![],
-            durs: vec![1.0; 2 * LANES],
-            n_res: 1,
-        };
-        assert!(run_case(KernelKind::Scalar, &c).is_none(), "scalar accepted a stale order");
-        if kernels::available(KernelKind::Avx2) {
-            assert!(run_case(KernelKind::Avx2, &c).is_none(), "avx2 accepted a stale order");
+    fn avx512_lane_pass_matches_scalar_bitwise_when_supported() {
+        if !avx512_supported() {
+            eprintln!("skipping: no avx512f on this host");
+            return;
+        }
+        let c = chain_case(8);
+        let (fs, ms) = run_case(KernelKind::Scalar, &c).expect("scalar pass valid");
+        // The (Avx2 kernel, width 8) pair dispatches to the AVX-512 pass
+        // on capable hosts — the exact production route.
+        let (fv, mv) = run_case(KernelKind::Avx2, &c).expect("avx512 pass valid");
+        for (i, (a, b)) in fs.iter().zip(&fv).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "finish slot {i}");
+        }
+        for m in 0..8 {
+            assert_eq!(ms[m].to_bits(), mv[m].to_bits(), "lane {m} makespan");
         }
     }
 
     #[test]
-    fn fold_max_tasks_picks_lane_maxima() {
-        // finish for 3 tasks × LANES lanes; fold over tasks {0, 2}.
-        let mut finish = vec![0.0; 3 * LANES];
-        for (i, f) in finish.iter_mut().enumerate() {
-            let (task, lane) = (i / LANES, i % LANES);
-            *f = (task * 10 + lane) as f64;
+    fn width_8_without_avx512_takes_the_scalar_twin() {
+        // On hosts without avx512f the (Avx2, 8) pair must quietly take
+        // the width-generic scalar twin (bitwise identical), not panic —
+        // this is what lets width-8 tests run everywhere. On capable
+        // hosts the same call dispatches to AVX-512, which the race
+        // above already pins to the scalar result.
+        let c = chain_case(8);
+        let (fs, _) = run_case(KernelKind::Scalar, &c).expect("scalar pass valid");
+        let (fd, _) = run_case(KernelKind::Avx2, &c).expect("dispatched pass valid");
+        for (i, (a, b)) in fs.iter().zip(&fd).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "finish slot {i}");
         }
-        let tasks: Vec<TaskId> = vec![0, 2];
-        let mut out = [0.0f64; LANES];
-        fold_max_tasks(KernelKind::Scalar, &finish, LANES, &tasks, &mut out);
-        for (m, &v) in out.iter().enumerate() {
-            assert_eq!(v, (20 + m) as f64, "lane {m}");
+    }
+
+    #[test]
+    fn stale_order_rejected_by_all_implementations() {
+        // Two independent same-resource tasks recorded in the order
+        // [1, 0]: task 0's (0.0, 0) does not exceed task 1's (0.0, 1)
+        // lexicographically, so every implementation must reject.
+        for width in [4usize, 8] {
+            let c = Case {
+                order: vec![1, 0],
+                resources: vec![0, 0],
+                csr_off: vec![0, 0, 0],
+                csr_dst: vec![],
+                durs: vec![1.0; 2 * width],
+                n_res: 1,
+                width,
+            };
+            assert!(
+                run_case(KernelKind::Scalar, &c).is_none(),
+                "scalar accepted a stale order at width {width}"
+            );
+            if kernels::available(KernelKind::Avx2) {
+                // Width 4 → AVX2; width 8 → AVX-512 when available, else
+                // the scalar twin again — rejection is required either way.
+                assert!(
+                    run_case(KernelKind::Avx2, &c).is_none(),
+                    "vector pass accepted a stale order at width {width}"
+                );
+            }
         }
-        if kernels::available(KernelKind::Avx2) {
-            let mut out_v = [0.0f64; LANES];
-            fold_max_tasks(KernelKind::Avx2, &finish, LANES, &tasks, &mut out_v);
-            for m in 0..LANES {
-                assert_eq!(out[m].to_bits(), out_v[m].to_bits(), "lane {m}");
+    }
+
+    #[test]
+    fn fold_max_tasks_picks_lane_maxima_at_both_widths() {
+        for width in [4usize, 8] {
+            // finish for 3 tasks × width lanes; fold over tasks {0, 2}.
+            let mut finish = vec![0.0; 3 * width];
+            for (i, f) in finish.iter_mut().enumerate() {
+                let (task, lane) = (i / width, i % width);
+                *f = (task * 10 + lane) as f64;
+            }
+            let tasks: Vec<TaskId> = vec![0, 2];
+            let mut out = [0.0f64; LANES_MAX];
+            fold_max_tasks(KernelKind::Scalar, &finish, width, &tasks, &mut out);
+            for (m, &v) in out.iter().take(width).enumerate() {
+                assert_eq!(v, (20 + m) as f64, "width {width} lane {m}");
+            }
+            if kernels::available(KernelKind::Avx2) {
+                let mut out_v = [0.0f64; LANES_MAX];
+                fold_max_tasks(KernelKind::Avx2, &finish, width, &tasks, &mut out_v);
+                for m in 0..width {
+                    assert_eq!(out[m].to_bits(), out_v[m].to_bits(), "width {width} lane {m}");
+                }
             }
         }
     }

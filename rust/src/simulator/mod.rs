@@ -24,7 +24,8 @@ pub mod trace;
 
 pub use cluster::{
     simulate_iteration, simulate_iteration_full, simulate_run, AnalyticCost, CostFactory,
-    CostProvider, IterationTemplate, IterationTiming, ReduceMode, SampledCost, SimParams,
+    CostProvider, GroupCell, IterationTemplate, IterationTiming, ReduceMode, SampledCost,
+    SimParams, TopologyClass,
 };
 pub use faults::{
     faults_audit, run_faulty_into, FailureWindow, FaultPlan, FaultScratch, FaultSpec, FaultyCost,
@@ -34,4 +35,4 @@ pub use trace::{trace_iteration, Trace, TraceEvent};
 pub use engine::{
     sched_mode, Engine, ReferenceScheduler, SchedCounters, SchedMode, TaskId, TaskSpec,
 };
-pub use lanes::{lanes_enabled, LANES};
+pub use lanes::{lane_width, lanes_enabled, LANES_MAX};

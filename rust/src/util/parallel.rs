@@ -85,6 +85,81 @@ where
     out.into_iter().map(|o| o.expect("every index produced")).collect()
 }
 
+/// [`parallel_map_with`] over **groups** of consecutive indices: each
+/// group is one unit of work handed to one worker, which appends exactly
+/// `group.len()` results to its output buffer (one per index, in index
+/// order). Results come back flattened in index order, so the caller sees
+/// the same `Vec` as `parallel_map_with` over the underlying indices.
+///
+/// `groups` must partition `0..n` contiguously and in order
+/// (`groups[i].end == groups[i+1].start`, first starts at 0) — the sweep
+/// queue uses this to keep K-adjacent cells that share a topology class on
+/// one worker, where they ride one lane batch through one shared engine
+/// pass. Determinism contract: each group's results must be a pure
+/// function of the group (scratch caches capacity only), so the output is
+/// bitwise identical at any thread count.
+pub fn parallel_map_groups_with<S, T, I, F>(
+    groups: &[std::ops::Range<usize>],
+    threads: usize,
+    init: I,
+    f: F,
+) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, std::ops::Range<usize>, &mut Vec<T>) + Sync,
+{
+    debug_assert!(groups.first().map_or(true, |g| g.start == 0));
+    debug_assert!(groups.windows(2).all(|w| w[0].end == w[1].start));
+    let n = groups.last().map_or(0, |g| g.end);
+    let threads = threads.clamp(1, groups.len().max(1));
+    if threads <= 1 {
+        let mut state = init();
+        let mut out = Vec::with_capacity(n);
+        for g in groups {
+            let before = out.len();
+            f(&mut state, g.clone(), &mut out);
+            assert_eq!(out.len(), before + g.len(), "one result per index, in order");
+        }
+        return out;
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, Vec<T>)>();
+    let f = &f;
+    let init = &init;
+    let next = &next;
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            s.spawn(move || {
+                let mut state = init();
+                loop {
+                    let gi = next.fetch_add(1, Ordering::Relaxed);
+                    if gi >= groups.len() {
+                        break;
+                    }
+                    let g = groups[gi].clone();
+                    let mut buf = Vec::with_capacity(g.len());
+                    f(&mut state, g.clone(), &mut buf);
+                    assert_eq!(buf.len(), g.len(), "one result per index, in order");
+                    if tx.send((gi, buf)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        while let Ok((gi, buf)) = rx.recv() {
+            for (off, v) in buf.into_iter().enumerate() {
+                out[groups[gi].start + off] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("every index produced")).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +202,39 @@ mod tests {
             );
             assert_eq!(got, want, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn grouped_map_flattens_in_index_order_at_any_thread_count() {
+        // Uneven groups over 0..13; each group emits (index, group length).
+        let groups = vec![0usize..1, 1..4, 4..5, 5..10, 10..13];
+        let want: Vec<(usize, usize)> = groups
+            .iter()
+            .flat_map(|g| g.clone().map(move |i| (i, g.len())))
+            .collect();
+        for threads in [1usize, 2, 4, 9] {
+            let got = parallel_map_groups_with(
+                &groups,
+                threads,
+                || (),
+                |_, g, out| {
+                    for i in g.clone() {
+                        out.push((i, g.len()));
+                    }
+                },
+            );
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn grouped_map_handles_empty_and_single() {
+        assert_eq!(
+            parallel_map_groups_with(&[], 4, || (), |_: &mut (), _, _: &mut Vec<usize>| {}),
+            Vec::<usize>::new()
+        );
+        let one = parallel_map_groups_with(&[0..3], 4, || (), |_, g, out| out.extend(g));
+        assert_eq!(one, vec![0, 1, 2]);
     }
 
     #[test]

@@ -17,19 +17,24 @@
 //!    both `BSF_SCHED=calendar` and `BSF_SCHED=cached`, so every
 //!    pooled-vs-serial equality above doubles as a cross-scheduler check.
 //! 4. **Lane-batched == one-at-a-time, bitwise.** `run_into`'s jittered
-//!    branch groups replays into lane-width batches (four duration sets
-//!    per pass through the order cache, scalar remainder); the batched
-//!    template must equal calling `replay()` per iteration. CI also runs
-//!    this suite under `BSF_LANES=off`, which forces every batch through
-//!    the sequential fallback — results must not move.
+//!    branch groups replays into batches of the dispatched lane width
+//!    (8 with AVX-512, else 4; `BSF_LANE_WIDTH` overrides), and the final
+//!    partial batch rides the same lane pass padded with a discarded
+//!    duplicate lane — no scalar remainder. K-adjacent sweep cells
+//!    sharing a topology class additionally ride shared batches through
+//!    one template (`run_group_into`). All of it must equal calling
+//!    `replay()` once per iteration per cell. CI also runs this suite
+//!    under `BSF_LANES=off` (every batch through the sequential
+//!    fallback) and, on AVX-512 runners, under `BSF_LANE_WIDTH=8` —
+//!    results must not move.
 
 use bsf::experiments::{
     analytic_provider, boundary_row, boundary_rows, paper_gravity_params, paper_jacobi_params,
     simulated_curve_threads, simulated_curves, BoundarySpec, ExperimentCtx, SweepJob,
 };
 use bsf::simulator::{
-    simulate_iteration, simulate_iteration_full, simulate_run, AnalyticCost, IterationTemplate,
-    IterationTiming, SchedMode, SimParams, TaskId,
+    simulate_iteration, simulate_iteration_full, simulate_run, AnalyticCost, CostFactory,
+    IterationTemplate, IterationTiming, SchedMode, SimParams, TaskId,
 };
 use bsf::util::Rng;
 
@@ -279,12 +284,14 @@ fn order_cached_and_calendar_engines_agree_on_jittered_replays() {
 
 #[test]
 fn lane_batched_run_into_matches_one_at_a_time_replays() {
-    // run_into groups jittered replays into lane-width batches (four
-    // independent duration sets per pass through the engine's order
-    // cache) with a scalar remainder; on a real Algorithm-2 template the
-    // batched path must be bitwise identical to calling replay() once
-    // per iteration — draws, hits, and per-lane fallbacks included. 11
-    // iterations = two full lane batches + a remainder of three.
+    // run_into groups jittered replays into batches of the dispatched
+    // lane width (independent duration sets per pass through the engine's
+    // order cache), the final partial batch padded with a discarded
+    // duplicate lane; on a real Algorithm-2 template the batched path
+    // must be bitwise identical to calling replay() once per iteration —
+    // draws, hits, per-lane fallbacks, and pad lanes included. 11
+    // iterations = two full batches + a padded remainder of three at
+    // width 4, or one full batch + a padded remainder of three at 8.
     let l = 1_024;
     let mut params = SimParams::new(l, l);
     params.jitter_comp = 0.1;
@@ -301,6 +308,56 @@ fn lane_batched_run_into_matches_one_at_a_time_replays() {
         (0..11).map(|_| one_at_a_time.replay(&mut prov_b, &mut rng)).collect();
     for (i, (a, b)) in out.iter().zip(&seq).enumerate() {
         assert_bitwise_eq(a, b, &format!("iter={i}"));
+    }
+}
+
+#[test]
+fn k_adjacent_groups_bitwise_equal_per_cell_loop() {
+    // Repeated-K cells (a refinement pass revisiting the same grid) share
+    // a topology class, so the pooled queue batches them onto one worker
+    // where their jittered replays ride shared lane passes spanning cell
+    // boundaries (run_group_into). The grouped queue must equal the
+    // per-cell loop — fresh template + run_into per cell, streams keyed
+    // by K exactly as SweepJob keys them — bitwise, at any thread count.
+    let p = paper_jacobi_params(1_500).unwrap();
+    let prov = analytic_provider(&p);
+    let mut sim = SimParams::new(1_500, 1_500);
+    sim.jitter_comp = 0.12;
+    sim.jitter_comm = 0.06;
+    let ks: Vec<usize> = vec![12, 12, 12, 12, 12, 16, 16, 20];
+    let iters = 5usize;
+
+    let mut rng = Rng::new(99);
+    let job = SweepJob::new(sim.clone(), 1_500, &prov, ks.clone(), iters, &mut rng);
+    let reference: Vec<f64> = job
+        .ks
+        .iter()
+        .map(|&k| {
+            let mut tmpl = IterationTemplate::new(k, 1_500, &sim);
+            let mut provider = prov.instance(k as u64);
+            let mut rk = job.root.split(k as u64);
+            let mut runs = Vec::new();
+            tmpl.run_into(iters, provider.as_mut(), &mut rk, &mut runs);
+            runs.iter().map(|t| t.total).sum::<f64>() / runs.len() as f64
+        })
+        .collect();
+
+    for threads in [1usize, 4, 8] {
+        let mut rng = Rng::new(99);
+        let jobs = vec![SweepJob::new(sim.clone(), 1_500, &prov, ks.clone(), iters, &mut rng)];
+        let got = simulated_curves(&jobs, threads);
+        assert_eq!(got[0].len(), reference.len());
+        for (i, (point, want)) in got[0].iter().zip(&reference).enumerate() {
+            assert_eq!(point.k, ks[i], "threads={threads}");
+            assert_eq!(
+                point.t_k.to_bits(),
+                want.to_bits(),
+                "threads={threads} cell={i} K={}: t_k {} vs {}",
+                point.k,
+                point.t_k,
+                want
+            );
+        }
     }
 }
 

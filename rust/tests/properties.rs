@@ -15,10 +15,12 @@
 //! * the order-cached linear replay vs the reference heap on random DAGs
 //!   with durations re-perturbed across replays — cache hits and
 //!   validity-check fallbacks both exercised, both bitwise-pinned;
-//! * the lane-batched replay (`Engine::run_lanes`, up to four jittered
-//!   replays per pass) vs the scalar one-at-a-time `run_reuse` loop on
+//! * the lane-batched replay (`Engine::run_lanes`) at both dispatch
+//!   widths (4 and 8) vs the scalar one-at-a-time `run_reuse` loop on
 //!   random DAGs — gently perturbed and tie-heavy per-lane redraws force
-//!   both vector hits and per-lane fallbacks, both bitwise-pinned;
+//!   both vector hits and per-lane fallbacks, both bitwise-pinned — plus
+//!   padded remainder batches (1 ≤ lanes < width, pad lanes discarded)
+//!   under the same adversarial redraws;
 //! * collective schedules: full coverage and log-depth for random K;
 //! * the SIMD-dispatched matvec kernels: AVX2 == scalar **bitwise** on
 //!   random shapes (remainder rows/columns included), and the blocked
@@ -30,8 +32,7 @@ use bsf::lists::{map_reduce, partition_even, reduce, Add, Monoid, VecAdd};
 use bsf::model::{BsfModel, CostParams};
 use bsf::net::{CollectiveAlgo, CollectiveSchedule};
 use bsf::simulator::{
-    simulate_iteration, AnalyticCost, Engine, LANES, ReferenceScheduler, SchedMode, SimParams,
-    TaskId,
+    simulate_iteration, AnalyticCost, Engine, ReferenceScheduler, SchedMode, SimParams, TaskId,
 };
 use bsf::util::Rng;
 
@@ -324,111 +325,203 @@ fn prop_order_cached_replay_matches_reference_on_random_dags() {
     assert!(fallbacks > 0, "validity check never rejected a stale cache");
 }
 
-#[test]
-fn prop_lane_batched_replay_matches_scalar_loop_on_random_dags() {
-    // Race the lane-batched replay (four independent duration sets per
-    // pass through the order cache) against a twin engine running the
-    // same four sets through the scalar set_duration + run_reuse loop in
-    // lane order. Gentle per-lane perturbations mostly keep every lane's
-    // pop order valid (vector hits); coarse tie-heavy per-lane grid
-    // redraws scramble some lane's ready order and force the all-lane
-    // validity check to abort the batch (per-lane fallbacks, re-run
-    // sequentially with cache refreshes). Every lane of every batch must
-    // equal the scalar loop bitwise — and the scalar loop itself is
-    // pinned against the reference heap by the props above, so this
-    // transitively pins the lane pass to the heap too. Both engines are
-    // pinned to SchedMode::Cached and the lane engine forces the vector
-    // pass on, so the sweep races both paths whatever BSF_SCHED /
-    // BSF_LANES say (the process-wide BSF_KERNEL still selects which
-    // lane implementation — AVX2 or its scalar twin — is under test).
-    let mut rng = Rng::new(0x1A2E5);
-    let (mut lane_hits, mut lane_falls) = (0u64, 0u64);
-    for case in 0..60u64 {
-        let n = 2 + rng.below(140) as usize;
-        let n_res = 1 + rng.below(8) as u32;
-        let mut durations = Vec::with_capacity(n);
-        let mut eng = Engine::new();
-        let mut twin = Engine::new();
-        eng.set_sched_mode(Some(SchedMode::Cached));
-        eng.set_lane_mode(Some(true));
-        twin.set_sched_mode(Some(SchedMode::Cached));
-        for _ in 0..n {
-            let res = rng.below(n_res as u64) as u32;
-            let dur = rng.range(0.0, 3.0);
-            durations.push(dur);
-            eng.task(res, dur);
-            twin.task(res, dur);
+/// One random DAG for the lane-batch races: task resources/durations and
+/// forward edges, drawn once per case so every width sees the same graph.
+fn random_dag(rng: &mut Rng) -> (Vec<u32>, Vec<f64>, Vec<(TaskId, TaskId)>) {
+    let n = 2 + rng.below(140) as usize;
+    let n_res = 1 + rng.below(8) as u32;
+    let mut resources = Vec::with_capacity(n);
+    let mut durations = Vec::with_capacity(n);
+    for _ in 0..n {
+        resources.push(rng.below(n_res as u64) as u32);
+        durations.push(rng.range(0.0, 3.0));
+    }
+    let mut edges = Vec::new();
+    for j in 1..n {
+        let tries = 1 + rng.below(3);
+        for _ in 0..tries {
+            let i = rng.below(j as u64) as usize;
+            edges.push((i as TaskId, j as TaskId));
         }
-        for j in 1..n {
-            let tries = 1 + rng.below(3);
-            for _ in 0..tries {
-                let i = rng.below(j as u64) as usize;
-                eng.dep(i as TaskId, j as TaskId);
-                twin.dep(i as TaskId, j as TaskId);
+    }
+    (resources, durations, edges)
+}
+
+/// A lane engine (vector pass forced on, pinned width) and its scalar
+/// twin, both holding the given graph with order caches recorded.
+fn lane_engine_pair(
+    resources: &[u32],
+    durations: &[f64],
+    edges: &[(TaskId, TaskId)],
+    width: usize,
+) -> (Engine, Engine) {
+    let mut eng = Engine::new();
+    let mut twin = Engine::new();
+    eng.set_sched_mode(Some(SchedMode::Cached));
+    eng.set_lane_mode(Some(true));
+    eng.set_lane_width(Some(width));
+    twin.set_sched_mode(Some(SchedMode::Cached));
+    for (&res, &dur) in resources.iter().zip(durations) {
+        eng.task(res, dur);
+        twin.task(res, dur);
+    }
+    for &(i, j) in edges {
+        eng.dep(i, j);
+        twin.dep(i, j);
+    }
+    let a = eng.run().to_vec();
+    let b = twin.run();
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "recording run, task {i}");
+    }
+    (eng, twin)
+}
+
+/// Run `rounds` lane batches of `lanes` duration sets against the twin's
+/// scalar loop and assert every real lane bitwise. Round 0 replays the
+/// recorded durations unchanged (guaranteed all-lane hit), round 1 nudges
+/// gently (usually valid), round 2 redraws on a coarse tie-heavy grid
+/// (scrambles some lane's ready order — forced fallback).
+fn race_lane_batches(
+    eng: &mut Engine,
+    twin: &mut Engine,
+    durations: &[f64],
+    lanes: usize,
+    rng: &mut Rng,
+    what: &str,
+) {
+    for round in 0..3u64 {
+        let sets: Vec<Vec<f64>> = (0..lanes)
+            .map(|_| {
+                durations
+                    .iter()
+                    .map(|d| match round {
+                        0 => *d,
+                        1 => d * (1.0 + rng.range(-0.02, 0.02)),
+                        _ => rng.below(3) as f64 * 0.5,
+                    })
+                    .collect()
+            })
+            .collect();
+        let mat = eng.lane_durations_mut(lanes);
+        for (m, set) in sets.iter().enumerate() {
+            for (i, &d) in set.iter().enumerate() {
+                mat[i * lanes + m] = d;
             }
         }
-        // First runs record both order caches (identical graphs).
-        let a = eng.run();
-        let b = twin.run();
-        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
-            assert_eq!(x.to_bits(), y.to_bits(), "case {case}: recording run, task {i}");
-        }
-        for round in 0..3u64 {
-            // Draw the four per-lane duration sets once, then feed the
-            // identical sets to both engines. Round 0 replays the
-            // recorded durations unchanged (a guaranteed all-lane hit:
-            // the recorded order is lexicographically valid under
-            // identical durations); round 1 nudges gently (usually
-            // valid); round 2 redraws on a coarse tie-heavy grid
-            // (scrambles some lane's ready order — forced fallback).
-            let sets: Vec<Vec<f64>> = (0..LANES)
-                .map(|_| {
-                    durations
-                        .iter()
-                        .map(|d| match round {
-                            0 => *d,
-                            1 => d * (1.0 + rng.range(-0.02, 0.02)),
-                            _ => rng.below(3) as f64 * 0.5,
-                        })
-                        .collect()
-                })
-                .collect();
-            let mat = eng.lane_durations_mut(LANES);
-            for (m, set) in sets.iter().enumerate() {
-                for (i, &d) in set.iter().enumerate() {
-                    mat[i * LANES + m] = d;
-                }
+        eng.run_lanes(lanes);
+        for (m, set) in sets.iter().enumerate() {
+            for (i, &d) in set.iter().enumerate() {
+                twin.set_duration(i as TaskId, d);
             }
-            eng.run_lanes(LANES);
-            for (m, set) in sets.iter().enumerate() {
-                for (i, &d) in set.iter().enumerate() {
-                    twin.set_duration(i as TaskId, d);
-                }
-                let want = twin.run_reuse();
-                let got = eng.lane_finish();
-                for (i, w) in want.iter().enumerate() {
-                    assert_eq!(
-                        w.to_bits(),
-                        got[i * LANES + m].to_bits(),
-                        "case {case} round {round} lane {m}: task {i} (n={n}, res={n_res})"
-                    );
-                }
+            let want = twin.run_reuse();
+            let got = eng.lane_finish();
+            for (i, w) in want.iter().enumerate() {
                 assert_eq!(
-                    twin.last_makespan().to_bits(),
-                    eng.lane_makespans()[m].to_bits(),
-                    "case {case} round {round} lane {m}: makespan"
+                    w.to_bits(),
+                    got[i * lanes + m].to_bits(),
+                    "{what} round {round} lane {m}: task {i}"
                 );
             }
+            assert_eq!(
+                twin.last_makespan().to_bits(),
+                eng.lane_makespans()[m].to_bits(),
+                "{what} round {round} lane {m}: makespan"
+            );
         }
-        let c = eng.sched_counters();
-        lane_hits += c.lane_hits;
-        lane_falls += c.lane_fallbacks;
+    }
+}
+
+#[test]
+fn prop_lane_batched_replay_matches_scalar_loop_on_random_dags() {
+    // Race the lane-batched replay — at BOTH dispatch widths, 4 and 8,
+    // pinned per engine via set_lane_width — against a twin engine
+    // running the same duration sets through the scalar set_duration +
+    // run_reuse loop in lane order. Gentle per-lane perturbations mostly
+    // keep every lane's pop order valid (vector hits); coarse tie-heavy
+    // per-lane grid redraws scramble some lane's ready order and force
+    // the all-lane validity check to abort the batch (per-lane
+    // fallbacks, re-run sequentially with cache refreshes). Every lane
+    // of every batch must equal the scalar loop bitwise — and the scalar
+    // loop itself is pinned against the reference heap by the props
+    // above, so this transitively pins the lane pass to the heap too.
+    // Both engines are pinned to SchedMode::Cached and the lane engine
+    // forces the vector pass on, so the sweep races both paths whatever
+    // BSF_SCHED / BSF_LANES / BSF_LANE_WIDTH say (the process-wide
+    // BSF_KERNEL still selects the lane implementation family; width 8
+    // without avx512f runs the width-generic scalar twin — raced all the
+    // same).
+    let mut rng = Rng::new(0x1A2E5);
+    let (mut lane_hits, mut lane_falls) = (0u64, 0u64);
+    for case in 0..40u64 {
+        let (resources, durations, edges) = random_dag(&mut rng);
+        for width in [4usize, 8] {
+            let (mut eng, mut twin) = lane_engine_pair(&resources, &durations, &edges, width);
+            race_lane_batches(
+                &mut eng,
+                &mut twin,
+                &durations,
+                width,
+                &mut rng,
+                &format!("case {case} width {width}"),
+            );
+            let c = eng.sched_counters();
+            assert_eq!(c.lane_width, width as u64, "case {case}: dispatched width");
+            assert_eq!(c.lane_pad_replays, 0, "case {case} width {width}: full batches");
+            lane_hits += c.lane_hits;
+            lane_falls += c.lane_fallbacks;
+        }
     }
     // The sweep must exercise both branches of the batch dispatch: hits
     // from the gently perturbed rounds, forced per-lane fallbacks from
     // the tie-heavy grid redraws.
     assert!(lane_hits > 0, "lane pass never served a batch across the sweep");
     assert!(lane_falls > 0, "no lane ever failed the validity check across the sweep");
+}
+
+#[test]
+fn prop_padded_remainder_batches_match_scalar_loop_on_random_dags() {
+    // Adversarial remainder-padding race: batches of 1 ≤ lanes < width
+    // ride the lane pass padded with duplicates of the last real lane,
+    // and the pad results are discarded. Whatever the pad lane does —
+    // including carrying the tie-heavy redraws of its source lane that
+    // invalidate the cached order — every *real* lane must equal the
+    // scalar loop bitwise, the compacted lane buffers must hold exactly
+    // the real lanes, and the pad must never perturb counters beyond
+    // lane_pad_replays (lane_hits counts real lanes only).
+    let mut rng = Rng::new(0x9AD5);
+    let (mut lane_hits, mut lane_falls, mut pads) = (0u64, 0u64, 0u64);
+    for case in 0..40u64 {
+        let (resources, durations, edges) = random_dag(&mut rng);
+        for width in [4usize, 8] {
+            let lanes = 1 + rng.below(width as u64 - 1) as usize;
+            let (mut eng, mut twin) = lane_engine_pair(&resources, &durations, &edges, width);
+            race_lane_batches(
+                &mut eng,
+                &mut twin,
+                &durations,
+                lanes,
+                &mut rng,
+                &format!("case {case} width {width} lanes {lanes}"),
+            );
+            let c = eng.sched_counters();
+            assert_eq!(c.lane_width, width as u64, "case {case}: dispatched width");
+            // Vector-served batches pad (width - lanes) discarded lanes
+            // each; fallback batches run sequentially, padding nothing.
+            let vector_batches = c.lane_hits / lanes as u64;
+            assert_eq!(
+                c.lane_pad_replays,
+                vector_batches * (width - lanes) as u64,
+                "case {case} width {width} lanes {lanes}: pad economics"
+            );
+            lane_hits += c.lane_hits;
+            lane_falls += c.lane_fallbacks;
+            pads += c.lane_pad_replays;
+        }
+    }
+    assert!(lane_hits > 0, "padded pass never served a batch across the sweep");
+    assert!(lane_falls > 0, "no padded batch ever fell back across the sweep");
+    assert!(pads > 0, "no pad lane ever ran across the sweep");
 }
 
 #[test]
