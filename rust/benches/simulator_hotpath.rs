@@ -35,7 +35,15 @@
 //! * the **end-to-end jittered sweep** (K=1..270 × 7 jittered
 //!   iterations through the pooled queue — no replication shortcut) as
 //!   `jittered_sweep_throughput` in tasks/sec, the ROADMAP's
-//!   order-of-magnitude target row.
+//!   order-of-magnitude target row;
+//! * the **shape-class grouped multi-sweep** (4 sizes sharing one K
+//!   grid, so every K forms a 4-cell shape bucket): grouped vs per-cell
+//!   throughput pair (`jittered_sweep_throughput_grouped` /
+//!   `_percell`), grouped results hard-asserted bitwise equal to the
+//!   per-cell loop at 1 thread and all cores, plus a template-level
+//!   audit per lane width — `group_batches` / `group_spanned_cells` /
+//!   `shape_rebinds` counters (multi-cell batches asserted to occur)
+//!   and zero heap allocations per warm `run_group_into` pass.
 //!
 //! ```text
 //! cargo bench --bench simulator_hotpath
@@ -50,9 +58,9 @@ use bsf::experiments::{
 use bsf::linalg::kernels;
 use bsf::model::scalability::peak_knee;
 use bsf::simulator::{
-    faults_audit, lane_width, lanes_enabled, sched_mode, simulate_iteration,
-    simulate_iteration_full, AnalyticCost, Engine, FaultSpec, IterationTemplate, RecoveryPolicy,
-    ReferenceScheduler, SchedMode, SimParams, TaskId,
+    faults_audit, group_enabled, lane_width, lanes_enabled, sched_mode, simulate_iteration,
+    simulate_iteration_full, AnalyticCost, Engine, FaultSpec, GroupCell, IterationTemplate,
+    IterationTiming, RecoveryPolicy, ReferenceScheduler, SchedMode, SimParams, TaskId,
 };
 use bsf::util::bench::{bench_throughput, human_time, CiReport};
 use bsf::util::Rng;
@@ -84,11 +92,12 @@ fn main() {
     let mut ci = CiReport::new("simulator_hotpath");
     println!("== simulator_hotpath ==");
     println!(
-        "active kernel: {}, scheduler: {}, lanes: {} (dispatch width {})",
+        "active kernel: {}, scheduler: {}, lanes: {} (dispatch width {}), grouping: {}",
         kernels::active().name(),
         sched_mode().name(),
         if lanes_enabled() { "on" } else { "off" },
-        lane_width()
+        lane_width(),
+        if group_enabled() { "on" } else { "off" }
     );
     // Self-describe the configuration that produced these figures.
     let flag = |b: bool| if b { 1.0 } else { 0.0 };
@@ -97,6 +106,7 @@ fn main() {
     ci.metric("config_lanes_on", flag(lanes_enabled()));
     ci.metric("config_lane_width", lane_width() as f64);
     ci.metric("config_faults_audit", flag(faults_audit()));
+    ci.metric("config_group", flag(group_enabled()));
 
     // Raw engine: chain graphs, rebuild vs replay.
     for tasks in [1_000usize, 100_000] {
@@ -602,6 +612,166 @@ fn main() {
         ci.rate(&r);
     }
     ci.metric("lane_pad_replays", total_pads as f64);
+
+    // Shape-class grouped multi-sweep (this PR): a Fig.-6-style jittered
+    // sweep over FOUR list sizes sharing one K grid. All four cells at a
+    // given K have equal ShapeClass (same graph, different duration
+    // payload), so the shape-bucketed partition routes them through one
+    // shared template whose lane batches span cell boundaries — the
+    // remainder iterations that used to pad with duplicates now carry
+    // the next cell's real durations.
+    {
+        println!("\n-- shape-class grouped sweep (4 sizes, jittered) --");
+        let sizes = [2_500usize, 5_000, 10_000, 16_000];
+        let gks: Vec<usize> = (1..=96).collect();
+        let giters = 7usize;
+        let provs: Vec<AnalyticCost> = sizes
+            .iter()
+            .map(|&s| AnalyticCost { t_map_full: 0.373, l: s, t_a: 9.31e-6, t_p: 3.7e-5 })
+            .collect();
+        let gsims: Vec<SimParams> = sizes
+            .iter()
+            .map(|&s| {
+                let mut p = SimParams::new(s, s);
+                p.jitter_comp = 0.05;
+                p.jitter_comm = 0.03;
+                p
+            })
+            .collect();
+        let build_jobs = |group: Option<bool>| {
+            let mut rng = Rng::new(0x6E0);
+            sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| {
+                    SweepJob::new(gsims[i].clone(), s, &provs[i], gks.clone(), giters, &mut rng)
+                        .set_group_mode(group)
+                })
+                .collect::<Vec<_>>()
+        };
+        // Grouping must be invisible in the numbers: the grouped sweep
+        // equals the per-cell loop bitwise, serial and pooled alike.
+        let want = simulated_curves(&build_jobs(Some(false)), 1);
+        for t in [1usize, threads] {
+            let got = simulated_curves(&build_jobs(Some(true)), t);
+            for (s, (wc, gc)) in want.iter().zip(&got).enumerate() {
+                for (w, g) in wc.iter().zip(gc) {
+                    assert_eq!(
+                        w.t_k.to_bits(),
+                        g.t_k.to_bits(),
+                        "grouped sweep diverges from per-cell: size {} K={} ({t} threads)",
+                        sizes[s],
+                        w.k
+                    );
+                }
+            }
+        }
+        // The graph structure is size-independent (that is the point of
+        // the shape key), so one template per K prices the task grid for
+        // all four sizes.
+        let gtasks: u64 = gks
+            .iter()
+            .map(|&k| IterationTemplate::new(k, sizes[0], &gsims[0]).task_count() as u64)
+            .sum::<u64>()
+            * (giters * sizes.len()) as u64;
+        let r = bench_throughput(
+            &format!("msweep 4 sizes K=1..96 x{giters}: per-cell, {threads} threads"),
+            1,
+            3,
+            gtasks,
+            || {
+                std::hint::black_box(simulated_curves(&build_jobs(Some(false)), threads));
+            },
+        );
+        ci.rate(&r);
+        ci.metric("jittered_sweep_throughput_percell", gtasks as f64 / r.summary.mean);
+        let r = bench_throughput(
+            &format!("msweep 4 sizes K=1..96 x{giters}: grouped,  {threads} threads"),
+            1,
+            3,
+            gtasks,
+            || {
+                std::hint::black_box(simulated_curves(&build_jobs(Some(true)), threads));
+            },
+        );
+        ci.rate(&r);
+        ci.metric("jittered_sweep_throughput_grouped", gtasks as f64 / r.summary.mean);
+
+        // Template-level audit at K=64, once per lane width: one shared
+        // template rides the 4-cell bucket through run_group_into; the
+        // reference binds and replays each cell alone through run_into.
+        // Bitwise equal, multi-cell batches must actually occur, and the
+        // warm grouped pass must never touch the allocator.
+        let gk = 64usize;
+        for width in [4usize, 8] {
+            let mk_cells = || -> Vec<GroupCell> {
+                let root = Rng::new(0x6E1);
+                sizes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &s)| {
+                        GroupCell::new(
+                            Box::new(provs[i].clone()),
+                            root.split(i as u64),
+                            s,
+                            &gsims[i],
+                        )
+                    })
+                    .collect()
+            };
+            let mut tmpl = IterationTemplate::new(gk, sizes[0], &gsims[0]);
+            tmpl.set_lane_mode(Some(true));
+            tmpl.set_lane_width(Some(width));
+            let mut want: Vec<IterationTiming> = Vec::new();
+            let mut tmp = Vec::new();
+            for c in &mut mk_cells() {
+                tmpl.reset_shape(gk, c.l, &c.params);
+                tmpl.run_into(giters, c.provider.as_mut(), &mut c.rng, &mut tmp);
+                want.extend_from_slice(&tmp);
+            }
+            let before = tmpl.sched_counters();
+            let mut got: Vec<IterationTiming> = Vec::new();
+            let mut cells = mk_cells();
+            tmpl.run_group_into(&mut cells, giters, &mut got);
+            let after = tmpl.sched_counters();
+            assert_eq!(want.len(), got.len(), "width {width}: grouped replay count");
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(w, g, "width {width}: grouped flat replay {i} diverges from per-cell");
+            }
+            let batches = after.group_batches - before.group_batches;
+            let spanned = after.group_spanned_cells - before.group_spanned_cells;
+            let rebinds = after.shape_rebinds - before.shape_rebinds;
+            assert!(
+                spanned > 0,
+                "width {width}: no lane batch ever spanned a cell boundary"
+            );
+            println!(
+                "    -> width {width}: {batches} group batches, {spanned} spanned cell \
+                 boundaries, {rebinds} payload rebinds"
+            );
+            ci.metric(format!("group_batches [w={width}]"), batches as f64);
+            ci.metric(format!("group_spanned_cells [w={width}]"), spanned as f64);
+            ci.metric(format!("group_shape_rebinds [w={width}]"), rebinds as f64);
+
+            // Zero heap allocations once warm: payload rebinds (closed-form
+            // chunk sizes + comm re-pricing), lane-matrix refreshes and the
+            // timing pushes all reuse capacity from the first pass.
+            tmpl.run_group_into(&mut cells, giters, &mut got); // warm out + matrix
+            let reps = 25u64;
+            let before_allocs = ALLOCS.load(Ordering::Relaxed);
+            for _ in 0..reps {
+                tmpl.run_group_into(&mut cells, giters, &mut got);
+                std::hint::black_box(got.len());
+            }
+            let allocs = ALLOCS.load(Ordering::Relaxed) - before_allocs;
+            assert_eq!(
+                allocs, 0,
+                "grouped lane batches must be zero-alloc once warm (width {width})"
+            );
+            println!("    -> allocations per grouped pass: {}", allocs as f64 / reps as f64);
+            ci.metric(format!("allocs_per_group_pass [w={width}]"), allocs as f64 / reps as f64);
+        }
+    }
 
     // Faulty-sweep smoke: run a clean and a fault-injected sweep over the
     // same per-K split streams and track (a) how much recovery work

@@ -13,10 +13,10 @@ use crate::model::scalability::SpeedupPoint;
 use crate::model::{BsfModel, CostParams};
 use crate::problems::{CimminoProblem, GravityProblem, JacobiProblem};
 use crate::simulator::{
-    run_faulty_into, AnalyticCost, CostFactory, FaultPlan, FaultScratch, FaultSpec, GroupCell,
-    IterationTemplate, IterationTiming, SampledCost, SimParams,
+    group_enabled, run_faulty_into, AnalyticCost, CostFactory, FaultPlan, FaultScratch, FaultSpec,
+    GroupCell, IterationTemplate, IterationTiming, SampledCost, ShapeClass, SimParams,
 };
-use crate::util::parallel::{default_threads, parallel_map_groups_with};
+use crate::util::parallel::{default_threads, parallel_map_index_groups_with};
 use crate::util::{Rng, Table};
 
 /// Which application an experiment drives.
@@ -205,6 +205,12 @@ pub struct SweepJob<'a> {
     /// stream split off the sweep root — deterministic at any thread
     /// count, exactly like the clean per-K draws.
     pub fault: Option<FaultSpec>,
+    /// Per-job override of the shape-class grouping switch: `Some(true)`
+    /// forces this job's cells into shape buckets, `Some(false)` forces
+    /// them into singleton groups (the per-cell path), `None` (default)
+    /// follows the process-wide [`crate::simulator::group_enabled`]
+    /// (`BSF_GROUP`). Grouping is bitwise-neutral either way.
+    pub group: Option<bool>,
 }
 
 /// Stream tag for per-K fault-plan generation. The clean per-K streams use
@@ -225,12 +231,20 @@ impl<'a> SweepJob<'a> {
         iters: usize,
         rng: &mut Rng,
     ) -> SweepJob<'a> {
-        SweepJob { params, l, factory, ks, iters, root: rng.fork(0x5EED), fault: None }
+        SweepJob { params, l, factory, ks, iters, root: rng.fork(0x5EED), fault: None, group: None }
     }
 
     /// Replay this sweep under a fault spec (builder form).
     pub fn with_fault(mut self, spec: FaultSpec) -> SweepJob<'a> {
         self.fault = Some(spec);
+        self
+    }
+
+    /// Override the shape-class grouping switch for this job (builder
+    /// form) — the per-instance mirror of `BSF_GROUP`, like the engine's
+    /// per-instance lane overrides.
+    pub fn set_group_mode(mut self, mode: Option<bool>) -> SweepJob<'a> {
+        self.group = mode;
         self
     }
 }
@@ -277,40 +291,50 @@ fn sweep_point(w: &mut SweepWorker, job: &SweepJob, k: usize) -> f64 {
     w.runs.iter().map(|t| t.total).sum::<f64>() / w.runs.len() as f64
 }
 
-/// Mean iteration times of one K-adjacent group of flat queue cells —
-/// cells whose [`crate::simulator::TopologyClass`] keys are equal, so one
-/// template serves all of them and their jittered replays ride shared
-/// lane batches ([`IterationTemplate::run_group_into`]). Each cell keeps
-/// its own provider instance and per-K rng stream, exactly as
-/// [`sweep_point`] builds them, so the group result is bitwise identical
-/// to calling `sweep_point` per cell in order (pinned in
-/// `rust/tests/determinism.rs`). Size-1 groups — the common case, since
-/// adjacent K-points differ in K — take the unchanged `sweep_point` path.
+/// Mean iteration times of one shape bucket of flat queue cells — cells
+/// whose [`ShapeClass`] keys are equal, so one template serves all of
+/// them (per-cell payload binds via [`IterationTemplate::bind_cell`])
+/// and their jittered replays ride shared lane batches
+/// ([`IterationTemplate::run_group_into`]) even when the cells simulate
+/// different sizes, cost params or jitter. Each cell keeps its own
+/// provider instance and per-K rng stream, exactly as [`sweep_point`]
+/// builds them, so the group result is bitwise identical to calling
+/// `sweep_point` per cell in order (pinned in
+/// `rust/tests/determinism.rs`). Size-1 groups — faulty cells, opted-out
+/// jobs, shapes seen once — take the unchanged [`sweep_point`] path.
 fn sweep_group(
     w: &mut SweepWorker,
     jobs: &[SweepJob],
     flat: &[(usize, usize)],
-    group: std::ops::Range<usize>,
+    group: &[usize],
     out: &mut Vec<f64>,
 ) {
     if group.len() == 1 {
-        let (s, i) = flat[group.start];
+        let (s, i) = flat[group[0]];
         out.push(sweep_point(w, &jobs[s], jobs[s].ks[i]));
         return;
     }
-    let (s0, i0) = flat[group.start];
+    let (s0, i0) = flat[group[0]];
     let job0 = &jobs[s0];
     let k = job0.ks[i0];
-    if let Some(tmpl) = w.tmpl.as_mut() {
-        tmpl.reset_to(k, job0.l, &job0.params);
+    match w.tmpl.as_mut() {
+        Some(tmpl) => {
+            tmpl.reset_shape(k, job0.l, &job0.params);
+        }
+        None => w.tmpl = Some(IterationTemplate::new(k, job0.l, &job0.params)),
     }
-    let tmpl = w.tmpl.get_or_insert_with(|| IterationTemplate::new(k, job0.l, &job0.params));
+    let tmpl = w.tmpl.as_mut().expect("template just ensured");
     let mut cells: Vec<GroupCell> = group
-        .clone()
-        .map(|r| {
+        .iter()
+        .map(|&r| {
             let (s, i) = flat[r];
             let (job, kk) = (&jobs[s], jobs[s].ks[i]);
-            GroupCell { provider: job.factory.instance(kk as u64), rng: job.root.split(kk as u64) }
+            GroupCell::new(
+                job.factory.instance(kk as u64),
+                job.root.split(kk as u64),
+                job.l,
+                &job.params,
+            )
         })
         .collect();
     tmpl.run_group_into(&mut cells, job0.iters, &mut w.runs);
@@ -320,36 +344,54 @@ fn sweep_group(
     }
 }
 
-/// Consecutive flat-queue cells that may share one engine pass: grouping
-/// requires equal [`crate::simulator::TopologyClass`] keys (same graph,
-/// same duration table — the `run_group_into` invariant), equal `iters`,
-/// and no fault injection on either side (faulty replays rebuild the
-/// graph per window and keep their own scratch). Groups are computed from
-/// the job list alone — before any work is handed out — so the partition
-/// is identical at every thread count.
-fn flat_groups(jobs: &[SweepJob], flat: &[(usize, usize)]) -> Vec<std::ops::Range<usize>> {
-    let mut groups = Vec::new();
-    let mut start = 0;
-    while start < flat.len() {
-        let (s0, i0) = flat[start];
-        let j0 = &jobs[s0];
-        let mut end = start + 1;
-        if j0.fault.is_none() {
-            while end < flat.len() {
-                let (s1, i1) = flat[end];
-                let j1 = &jobs[s1];
-                if j1.fault.is_some()
-                    || j1.iters != j0.iters
-                    || IterationTemplate::topology_class(j1.ks[i1], j1.l, &j1.params)
-                        != IterationTemplate::topology_class(j0.ks[i0], j0.l, &j0.params)
-                {
-                    break;
-                }
-                end += 1;
-            }
+/// Maximum cells per shape bucket: one bucket is one unit of work on one
+/// worker thread, so an unbounded bucket would serialise a whole
+/// repeated-shape grid (e.g. 4 sizes × every K of a Fig.-6 grid sharing
+/// each K's shape) behind a single thread. 32 cells keeps groups long
+/// enough to span many lane batches and short enough to load-balance.
+const GROUP_CAP: usize = 32;
+
+/// Shape-bucketed partition of the flat queue: cells that may share one
+/// engine pass are collected into one group wherever they sit in the
+/// flat list — the 4-sizes-per-K structure of the figure grids becomes
+/// real multi-cell groups even though equal-shape cells are never
+/// adjacent there. Grouping requires an equal [`ShapeClass`] (the
+/// [`IterationTemplate::run_group_into`] invariant — sizes, cost params
+/// and jitter may differ freely), equal `iters`, no fault injection
+/// (faulty replays rebuild the graph per window), and the job opting in
+/// ([`SweepJob::group`], defaulting to the process-wide
+/// [`crate::simulator::group_enabled`] switch). Non-groupable cells
+/// become singleton groups.
+///
+/// The partition is a pure function of the job list — computed before
+/// any work is handed out, buckets in first-occurrence order, members in
+/// flat order — so it is identical at every thread count, and pooled
+/// results stay bitwise equal to the serial per-cell loop. Buckets close
+/// at [`GROUP_CAP`] members.
+fn flat_groups(jobs: &[SweepJob], flat: &[(usize, usize)]) -> Vec<Vec<usize>> {
+    let default_group = group_enabled();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    // Open buckets: (shape key, iters, index into `groups`). Linear scan
+    // — bucket counts stay tiny (distinct shapes currently open).
+    let mut open: Vec<(ShapeClass, usize, usize)> = Vec::new();
+    for (r, &(s, i)) in flat.iter().enumerate() {
+        let job = &jobs[s];
+        if !job.group.unwrap_or(default_group) || job.fault.is_some() {
+            groups.push(vec![r]);
+            continue;
         }
-        groups.push(start..end);
-        start = end;
+        let shape = ShapeClass::of(job.ks[i], &job.params);
+        if let Some(&(_, _, gi)) =
+            open.iter().find(|&&(sh, it, _)| sh == shape && it == job.iters)
+        {
+            groups[gi].push(r);
+            if groups[gi].len() >= GROUP_CAP {
+                open.retain(|&(_, _, g)| g != gi);
+            }
+        } else {
+            open.push((shape, job.iters, groups.len()));
+            groups.push(vec![r]);
+        }
     }
     groups
 }
@@ -357,11 +399,11 @@ fn flat_groups(jobs: &[SweepJob], flat: &[(usize, usize)]) -> Vec<std::ops::Rang
 /// Evaluate many sweeps through **one** work queue over every
 /// (sweep × K-point) pair: a slow size no longer serialises behind the
 /// previous one, and each worker thread reuses a single engine for its
-/// whole share of the queue. Consecutive cells sharing a topology class
-/// (repeated K on the same grid) are grouped onto one worker and ride
+/// whole share of the queue. Cells sharing a [`ShapeClass`] (the same K
+/// across sizes, repeated grids) are bucketed onto one worker and ride
 /// shared lane batches ([`sweep_group`]). Results are bitwise identical
 /// to running the sweeps one [`simulated_curve`] call at a time, at any
-/// thread count.
+/// thread count, grouping on or off.
 pub fn simulated_curves(jobs: &[SweepJob], threads: usize) -> Vec<Vec<SpeedupPoint>> {
     let flat: Vec<(usize, usize)> = jobs
         .iter()
@@ -369,10 +411,13 @@ pub fn simulated_curves(jobs: &[SweepJob], threads: usize) -> Vec<Vec<SpeedupPoi
         .flat_map(|(s, job)| (0..job.ks.len()).map(move |i| (s, i)))
         .collect();
     let groups = flat_groups(jobs, &flat);
-    let times =
-        parallel_map_groups_with(&groups, threads, SweepWorker::default, |w, group, out| {
-            sweep_group(w, jobs, &flat, group, out)
-        });
+    let times = parallel_map_index_groups_with(
+        &groups,
+        flat.len(),
+        threads,
+        SweepWorker::default,
+        |w, group, out| sweep_group(w, jobs, &flat, group, out),
+    );
     let mut fallback = SweepWorker::default();
     let mut out = Vec::with_capacity(jobs.len());
     let mut off = 0;

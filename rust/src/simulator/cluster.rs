@@ -41,9 +41,12 @@
 //! "Lane-parallel replay"); remainder batches are padded with a
 //! duplicated lane instead of running scalar — bitwise identical to
 //! replaying one iteration at a time either way. Sweep cells whose
-//! [`TopologyClass`] keys compare equal share one template across cell
-//! boundaries too: [`IterationTemplate::run_group_into`] rides a whole
-//! group of `(provider, rng)` cells through shared lane batches.
+//! [`ShapeClass`] keys compare equal share one template across cell
+//! boundaries too — even when their sizes, network costs, and jitter
+//! differ, since those only set the duration *payload*
+//! ([`IterationTemplate::bind_cell`] swaps it in place without touching
+//! the graph or the order cache): [`IterationTemplate::run_group_into`]
+//! rides a whole group of [`GroupCell`]s through shared lane batches.
 
 use crate::linalg::kernels;
 use crate::net::{CollectiveAlgo, CollectiveSchedule, NetworkParams};
@@ -72,10 +75,11 @@ pub enum ReduceMode {
 
 /// Simulation parameters for one cluster configuration.
 ///
-/// `PartialEq` is exact (every field, f64s bitwise via `==`): it backs
-/// the [`TopologyClass`] key, where a false "equal" would merge sweep
-/// cells with different graphs and a false "unequal" only costs a
-/// missed batching opportunity.
+/// `PartialEq` is exact (every field, f64s bitwise via `==`). Only the
+/// *structural* fields (`algo`, `reduce_mode`, `masters`) enter the
+/// [`ShapeClass`] key; the network model, payload word counts and
+/// jitter sigmas are duration payload that a shared template swaps per
+/// cell via [`IterationTemplate::bind_cell`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimParams {
     /// Interconnect cost model.
@@ -232,16 +236,15 @@ pub struct IterationTiming {
     pub total: f64,
 }
 
-/// How a task's duration is (re)computed on each replay. Communication
-/// bases are fixed by the network model; compute durations defer to the
-/// per-replay [`CostProvider`] calls so sampled providers redraw every
-/// iteration exactly like the rebuild-per-iteration path did.
+/// How a non-message task's duration is (re)computed on each replay
+/// (messages carry a [`CommRule`] instead — see [`DurTable::push_comm`]).
+/// Compute durations defer to the per-replay [`CostProvider`] calls so
+/// sampled providers redraw every iteration exactly like the
+/// rebuild-per-iteration path did.
 #[derive(Debug, Clone, Copy)]
 enum DurKind {
     /// Constant duration (relays, placeholder zero tasks).
     Fixed(f64),
-    /// Message with the given base cost; × comm jitter per replay.
-    Comm(f64),
     /// Worker Map + local fold: `map_time(worker, chunk) +
     /// (chunk−1)·combine_time()`; × comp jitter.
     MapFold { worker: u32, chunk: u32 },
@@ -262,6 +265,35 @@ enum DurTag {
     Post,
 }
 
+/// How a message task's base cost derives from a cell's [`SimParams`].
+/// Stored alongside the evaluated base so [`IterationTemplate::bind_cell`]
+/// can re-price every message for a new cell without rebuilding the graph;
+/// both the build and every rebind price through [`comm_base`], so a
+/// rebind to the original params is bitwise identical to the build.
+#[derive(Debug, Clone, Copy)]
+enum CommRule {
+    /// Downlink payload: `p2p(words_down)`.
+    Down,
+    /// Uplink payload: `p2p(words_up)`.
+    Up,
+    /// Half an uplink transfer (the split send/recv halves of a gather).
+    HalfUp,
+    /// Fixed word count (e.g. the two-word redispatch range descriptor).
+    Words(u32),
+}
+
+/// The single message-pricing function: evaluated at build time and
+/// re-evaluated against each cell's params on every
+/// [`IterationTemplate::bind_cell`].
+fn comm_base(params: &SimParams, rule: CommRule) -> f64 {
+    match rule {
+        CommRule::Down => params.net.p2p(params.words_down),
+        CommRule::Up => params.net.p2p(params.words_up),
+        CommRule::HalfUp => params.net.p2p(params.words_up) / 2.0,
+        CommRule::Words(w) => params.net.p2p(w as usize),
+    }
+}
+
 /// Kind-grouped SoA duration table: one 1-byte tag per task in task-id
 /// order plus dense per-kind payload columns (`Comm` bases, `MapFold`
 /// worker/chunk pairs, `FoldN` counts, `Fixed` values), each filled in
@@ -276,6 +308,10 @@ struct DurTable {
     tag: Vec<DurTag>,
     fixed: Vec<f64>,
     comm_base: Vec<f64>,
+    /// Pricing rule per `Comm` entry, parallel to `comm_base` — the
+    /// re-pricing input of [`IterationTemplate::bind_cell`]. Cold during
+    /// replays (refresh reads only the evaluated bases).
+    comm_rule: Vec<CommRule>,
     mf_worker: Vec<u32>,
     mf_chunk: Vec<u32>,
     fold_n: Vec<u32>,
@@ -287,6 +323,7 @@ impl DurTable {
         self.tag.clear();
         self.fixed.clear();
         self.comm_base.clear();
+        self.comm_rule.clear();
         self.mf_worker.clear();
         self.mf_chunk.clear();
         self.fold_n.clear();
@@ -347,10 +384,6 @@ impl DurTable {
                 self.tag.push(DurTag::Fixed);
                 self.fixed.push(v);
             }
-            DurKind::Comm(base) => {
-                self.tag.push(DurTag::Comm);
-                self.comm_base.push(base);
-            }
             DurKind::MapFold { worker, chunk } => {
                 self.tag.push(DurTag::MapFold);
                 self.mf_worker.push(worker);
@@ -363,45 +396,110 @@ impl DurTable {
             DurKind::Post => self.tag.push(DurTag::Post),
         }
     }
-}
 
-/// Topology-class key of a clean (fault-free) iteration template.
-///
-/// [`IterationTemplate::build`] is a pure function of `(k, l, params)`:
-/// two cells whose keys compare equal produce bitwise-identical task
-/// graphs (same task count, CSR shape, kind layout) **and** identical
-/// [`DurTable`] payloads — so one template serves both cells, and only
-/// the per-cell sampling state (provider instance + rng stream) differs.
-/// That is the invariant [`IterationTemplate::run_group_into`] batches
-/// on. The comparison is exact equality, not a fingerprint: a missed
-/// match only costs a batching opportunity, but a spurious match would
-/// replay the wrong graph. (Note Algorithm 2 builds one Map task per
-/// worker, so cells with different `k` never share a class — groups form
-/// across repeated-K cells, e.g. refinement re-sweeps or multi-job rows
-/// that revisit the same grid.)
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct TopologyClass<'a> {
-    k: usize,
-    l: usize,
-    params: &'a SimParams,
-}
-
-impl<'a> TopologyClass<'a> {
-    /// The class key of the template `(k, l, params)` would build.
-    pub fn of(k: usize, l: usize, params: &'a SimParams) -> TopologyClass<'a> {
-        TopologyClass { k, l, params }
+    /// Append the next task as a message: the evaluated base cost plus
+    /// the [`CommRule`] that [`IterationTemplate::bind_cell`] re-evaluates
+    /// when the template is bound to a different cell.
+    fn push_comm(&mut self, base: f64, rule: CommRule) {
+        self.tag.push(DurTag::Comm);
+        self.comm_base.push(base);
+        self.comm_rule.push(rule);
     }
 }
 
-/// One sweep cell of a K-adjacent batch group: the cell-local sampling
-/// state for a cell whose [`TopologyClass`] equals the group's. The
-/// shared template supplies the graph; each cell keeps its own provider
-/// instance and rng stream, exactly as the serial per-cell loop would.
+/// Structural shape key of a clean (fault-free) iteration template.
+///
+/// The task *structure* a clean [`IterationTemplate::build`] produces —
+/// task count, resource assignment, CSR edges, and the [`DurTable`]
+/// kind/tag layout — is a pure function of `k` and the `SimParams`
+/// fields captured here. Every other build input is duration *payload*:
+/// the list size `l` only sets the `MapFold` chunk column (Algorithm 2
+/// builds one Map task per worker either way), the network model and
+/// word counts only the `Comm` base column, and the jitter sigmas only
+/// the per-replay multipliers. Two cells whose keys compare equal
+/// therefore share one graph build — [`IterationTemplate::bind_cell`]
+/// swaps the payload columns in place without touching the graph or the
+/// order cache — and that is the invariant
+/// [`IterationTemplate::run_group_into`] batches on. The comparison is
+/// exact field equality, never a hash or fingerprint: a missed match
+/// only costs a batching opportunity, but a spurious match would replay
+/// the wrong graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeClass {
+    /// Worker count: per-worker broadcast/reduce trees, so cells with
+    /// different `k` never share a shape.
+    k: usize,
+    /// Effective master count `masters.min(k)` (worker-group structure).
+    m: usize,
+    /// Collective schedule shape (broadcast + reduce trees).
+    algo: CollectiveAlgo,
+    /// Reduce strategy (the whole task layout of phase 3).
+    reduce_mode: ReduceMode,
+}
+
+impl ShapeClass {
+    /// The shape key of the graph `IterationTemplate::new(k, _, params)`
+    /// would build (any list size — size is payload, not shape).
+    pub fn of(k: usize, params: &SimParams) -> ShapeClass {
+        ShapeClass {
+            k,
+            m: params.masters.min(k),
+            algo: params.algo,
+            reduce_mode: params.reduce_mode,
+        }
+    }
+}
+
+/// Structural fingerprint of a built template, for tests that pin the
+/// [`ShapeClass`] contract: everything a clean build derives from the
+/// shape key and nothing derived from the payload. Two templates with
+/// equal [`ShapeClass`] must compare equal here even when their sizes,
+/// network params and jitter all differ (see `rust/tests/properties.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GraphStructure {
+    /// Resource id per task, task-id order.
+    pub resources: Vec<u32>,
+    /// Dependency edges in insertion order.
+    pub edges: Vec<(TaskId, TaskId)>,
+    /// Duration-kind tag per task (as raw bytes), task-id order.
+    pub dur_tags: Vec<u8>,
+    /// `MapFold` worker column (chunk sizes are payload, excluded).
+    pub mf_workers: Vec<u32>,
+    /// `FoldN` count column (fold counts are structural: they follow
+    /// from the reduce tree, not from the cell's size).
+    pub fold_counts: Vec<u32>,
+}
+
+/// One sweep cell of a shape-class batch group: the duration payload
+/// (list size + full params) and sampling state (provider instance +
+/// rng stream) for a cell whose [`ShapeClass`] equals the group's. The
+/// shared template supplies the graph; [`IterationTemplate::bind_cell`]
+/// swaps each cell's payload in; each cell keeps its own provider and
+/// rng, exactly as the serial per-cell loop would.
 pub struct GroupCell {
     /// The cell's cost provider (its own sample stream).
     pub provider: Box<dyn CostProvider + Send>,
     /// The cell's jitter/draw stream.
     pub rng: Rng,
+    /// The cell's list size (sets the `MapFold` chunk column on bind).
+    pub l: usize,
+    /// The cell's full parameters. Structural fields must match the
+    /// group's shared [`ShapeClass`] (asserted on bind); the rest is
+    /// the payload this cell replays under.
+    pub params: SimParams,
+}
+
+impl GroupCell {
+    /// Bundle one cell's sampling state with its duration payload
+    /// (`params` is cloned — `SimParams` is a small flat struct).
+    pub fn new(
+        provider: Box<dyn CostProvider + Send>,
+        rng: Rng,
+        l: usize,
+        params: &SimParams,
+    ) -> GroupCell {
+        GroupCell { provider, rng, l, params: params.clone() }
+    }
 }
 
 /// A reusable Algorithm-2 iteration for fixed `(K, l, params)`: the task
@@ -410,10 +508,21 @@ pub struct GroupCell {
 /// re-executes the graph in the engine's scratch buffers. For sweeps over
 /// many `(K, l)` points, [`IterationTemplate::reset_to`] rebuilds the graph
 /// in place — one engine (and its grown scratch) serves a whole worker
-/// thread's share of the (experiment × size × K) work queue.
+/// thread's share of the (experiment × size × K) work queue, and
+/// [`IterationTemplate::reset_shape`] downgrades the rebuild to a
+/// payload rebind whenever the new point's [`ShapeClass`] matches.
 pub struct IterationTemplate {
     eng: Engine,
     durs: DurTable,
+    /// Worker count of the current build (a shape field).
+    k: usize,
+    /// List size of the currently bound cell (payload).
+    l: usize,
+    /// Shape key of the current build — the bind-compatibility check.
+    shape: ShapeClass,
+    /// Built with a fault plan: recovery structure is baked into the
+    /// graph, so the template is cell-specific and never bind-shared.
+    faulty: bool,
     jitter_comp: f64,
     jitter_comm: f64,
     /// Last broadcast-completion task per worker (empty entries skipped).
@@ -442,15 +551,12 @@ impl<'p> Build<'p> {
         id
     }
 
-    /// Message task with a payload of `words` f64s.
-    fn comm(&mut self, res: u32, words: usize, label: &'static str) -> TaskId {
-        let base = self.params.net.p2p(words);
-        self.push(res, DurKind::Comm(base), label)
-    }
-
-    /// Message task with an explicit base cost (split send/recv halves).
-    fn comm_cost(&mut self, res: u32, base: f64, label: &'static str) -> TaskId {
-        self.push(res, DurKind::Comm(base), label)
+    /// Message task priced by `rule` against the build params (and
+    /// re-priced against each cell's on [`IterationTemplate::bind_cell`]).
+    fn comm(&mut self, res: u32, rule: CommRule, label: &'static str) -> TaskId {
+        let id = self.eng.task_labeled(res, 0.0, label);
+        self.durs.push_comm(comm_base(self.params, rule), rule);
+        id
     }
 
     fn zero(&mut self, res: u32, label: &'static str) -> TaskId {
@@ -465,7 +571,6 @@ impl<'p> Build<'p> {
             // Master with no workers: nothing to fold; synthesise a zero task.
             return self.zero(master_res, "");
         }
-        let words_up = self.params.words_up;
         match self.params.reduce_mode {
             ReduceMode::TreeMasterFold => {
                 // Relay partials over the reduce tree (no intermediate folds —
@@ -486,7 +591,7 @@ impl<'p> Build<'p> {
                 }
                 for round in &sched.rounds {
                     for &(from, to) in round {
-                        let send = self.comm(res_of(from), words_up, "reduce-send");
+                        let send = self.comm(res_of(from), CommRule::Up, "reduce-send");
                         self.eng.dep(holds[from], send);
                         let relay = self.zero(res_of(to), "relay");
                         self.eng.dep(send, relay);
@@ -501,14 +606,14 @@ impl<'p> Build<'p> {
             }
             ReduceMode::GatherThenFold => {
                 // Each worker sends to the master (master NIC serialises
-                // receives); master then folds kk-1 times.
-                let half = self.params.net.p2p(words_up) / 2.0;
+                // receives); master then folds kk-1 times. The transfer
+                // cost is split into send/recv halves.
                 let mut recvs: Vec<TaskId> = Vec::with_capacity(kk);
                 for &(res, ready) in members {
-                    let send = self.comm_cost(res, half, "gather-send");
+                    let send = self.comm(res, CommRule::HalfUp, "gather-send");
                     self.eng.dep(ready, send);
                     // receive occupies the master for the other half of the cost
-                    let recv = self.comm_cost(master_res, half, "gather-recv");
+                    let recv = self.comm(master_res, CommRule::HalfUp, "gather-recv");
                     self.eng.dep(send, recv);
                     recvs.push(recv);
                 }
@@ -540,7 +645,7 @@ impl<'p> Build<'p> {
                 }
                 for round in &sched.rounds {
                     for &(from, to) in round {
-                        let send = self.comm(res_of(from), words_up, "reduce-send");
+                        let send = self.comm(res_of(from), CommRule::Up, "reduce-send");
                         self.eng.dep(holds[from], send);
                         let fold = self.push(res_of(to), DurKind::FoldN(1), "fold");
                         self.eng.dep(send, fold);
@@ -600,7 +705,6 @@ impl<'p> Build<'p> {
         survivors: &[(u32, u32, Option<TaskId>)],
     ) -> TaskId {
         let sub = crate::lists::partition_even(chunk, survivors.len());
-        let words_up = self.params.words_up;
         let mut acc = after;
         for (i, &(worker, res, recv)) in survivors.iter().enumerate() {
             let c = sub.size(i);
@@ -608,7 +712,7 @@ impl<'p> Build<'p> {
                 continue;
             }
             // range descriptor (start, len): two words on the downlink
-            let dispatch = self.comm(master_res, 2, "redispatch");
+            let dispatch = self.comm(master_res, CommRule::Words(2), "redispatch");
             if let Some(a) = anchor {
                 self.eng.dep(a, dispatch);
             }
@@ -617,7 +721,7 @@ impl<'p> Build<'p> {
             if let Some(r) = recv {
                 self.eng.dep(r, t);
             }
-            let send = self.comm(res, words_up, "recover-uplink");
+            let send = self.comm(res, CommRule::Up, "recover-uplink");
             self.eng.dep(t, send);
             let fold = self.push(master_res, DurKind::FoldN(1), "recover-fold");
             self.eng.dep(send, fold);
@@ -631,7 +735,6 @@ impl<'p> Build<'p> {
     fn reduce_masters(&mut self, master0_ready: TaskId, peers: &[(u32, TaskId)]) -> TaskId {
         let sched = CollectiveSchedule::reduce(self.params.algo, peers.len());
         let res_of = |node: usize| -> u32 { if node == 0 { 0 } else { peers[node - 1].0 } };
-        let words_up = self.params.words_up;
         let mut holds: Vec<TaskId> = Vec::with_capacity(sched.size);
         holds.push(master0_ready);
         for &(_, t) in peers {
@@ -639,7 +742,7 @@ impl<'p> Build<'p> {
         }
         for round in &sched.rounds {
             for &(from, to) in round {
-                let send = self.comm(res_of(from), words_up, "reduce-send");
+                let send = self.comm(res_of(from), CommRule::Up, "reduce-send");
                 self.eng.dep(holds[from], send);
                 let fold = self.push(res_of(to), DurKind::FoldN(1), "fold");
                 self.eng.dep(send, fold);
@@ -664,6 +767,10 @@ impl IterationTemplate {
         let mut tmpl = IterationTemplate {
             eng: Engine::new(),
             durs: DurTable::default(),
+            k,
+            l,
+            shape: ShapeClass::of(k, params),
+            faulty: false,
             jitter_comp: 0.0,
             jitter_comm: 0.0,
             bcast_tasks: Vec::new(),
@@ -683,6 +790,58 @@ impl IterationTemplate {
     /// pooled sweep workers can hold one template for their whole queue.
     pub fn reset_to(&mut self, k: usize, l: usize, params: &SimParams) {
         self.build(k, l, params, None);
+    }
+
+    /// Rebind the template to a new cell `(l, params)` of the **same**
+    /// [`ShapeClass`] without rebuilding: swaps the [`DurTable`] payload
+    /// columns in place — `MapFold` chunks from the new size's even
+    /// partition, `Comm` bases re-priced through the recorded
+    /// [`CommRule`]s, jitter sigmas replaced — while the graph, the CSR
+    /// edges and the engine's order cache all survive untouched. Bitwise
+    /// identical to [`IterationTemplate::reset_to`] for the same cell
+    /// (pinned by the module tests); panics on a shape mismatch or on a
+    /// faulty build, where a silent rebind would replay the wrong graph.
+    pub fn bind_cell(&mut self, l: usize, params: &SimParams) {
+        assert!(!self.faulty, "faulty templates are cell-specific; rebuild instead");
+        assert!(
+            ShapeClass::of(self.k, params) == self.shape,
+            "bind_cell requires an equal ShapeClass (a spurious match would \
+             replay the wrong graph)"
+        );
+        self.jitter_comp = params.jitter_comp;
+        self.jitter_comm = params.jitter_comm;
+        let durs = &mut self.durs;
+        if l != self.l {
+            // The even partition's sizes in closed form (remainder spread
+            // to the front, exactly `partition_even`'s layout) — computed
+            // inline so a size swap stays allocation-free on the
+            // `run_group_into` hot path.
+            let (base, extra) = (l / self.k, l % self.k);
+            for i in 0..durs.mf_worker.len() {
+                let w = durs.mf_worker[i] as usize;
+                durs.mf_chunk[i] = (base + usize::from(w < extra)) as u32;
+            }
+            self.l = l;
+        }
+        for i in 0..durs.comm_rule.len() {
+            durs.comm_base[i] = comm_base(params, durs.comm_rule[i]);
+        }
+        self.eng.note_shape_rebind();
+    }
+
+    /// Re-point the template at the sweep point `(k, l, params)` the
+    /// cheapest correct way: a [`IterationTemplate::bind_cell`] payload
+    /// rebind when the point's [`ShapeClass`] matches the current build
+    /// (and the build is clean), a full [`IterationTemplate::reset_to`]
+    /// rebuild otherwise. Returns `true` iff it rebuilt.
+    pub fn reset_shape(&mut self, k: usize, l: usize, params: &SimParams) -> bool {
+        if !self.faulty && ShapeClass::of(k, params) == self.shape {
+            self.bind_cell(l, params);
+            false
+        } else {
+            self.reset_to(k, l, params);
+            true
+        }
     }
 
     /// Rebuild the template for `(k, l, params)` with the given per-worker
@@ -716,6 +875,10 @@ impl IterationTemplate {
         assert!(k >= 1, "need at least one worker");
         assert!(params.masters >= 1);
         let is_dead = |j: usize| faults.is_some_and(|(d, _)| d[j]);
+        self.k = k;
+        self.l = l;
+        self.shape = ShapeClass::of(k, params);
+        self.faulty = faults.is_some();
         self.eng.reset();
         self.durs.clear();
         self.bcast_tasks.clear();
@@ -742,7 +905,7 @@ impl IterationTemplate {
             let mut last_send_of: Vec<Option<TaskId>> = vec![None; m];
             for round in &master_tree.rounds {
                 for &(from, to) in round {
-                    let send = b.comm(from as u32, params.words_down, "bcast-master");
+                    let send = b.comm(from as u32, CommRule::Down, "bcast-master");
                     if let Some(prev) = last_send_of[from] {
                         b.eng.dep(prev, send);
                     }
@@ -775,7 +938,7 @@ impl IterationTemplate {
             let anchor = master_recv[g];
             for round in &sched.rounds {
                 for &(from, to) in round {
-                    let send = b.comm(res_of(from), params.words_down, "bcast");
+                    let send = b.comm(res_of(from), CommRule::Down, "bcast");
                     if let Some(prev) = last_send_of[from] {
                         b.eng.dep(prev, send);
                     }
@@ -886,6 +1049,40 @@ impl IterationTemplate {
     /// clean path still replays through the cache.
     pub fn sched_counters(&self) -> SchedCounters {
         self.eng.sched_counters()
+    }
+
+    /// The [`ShapeClass`] of the current build — cells whose keys equal
+    /// it can be swapped in via [`IterationTemplate::bind_cell`] and
+    /// batched via [`IterationTemplate::run_group_into`].
+    pub fn shape_class(&self) -> ShapeClass {
+        self.shape
+    }
+
+    /// Snapshot the structural fingerprint of the current build (see
+    /// [`GraphStructure`]) — test support for the shape-class contract.
+    pub fn structure(&self) -> GraphStructure {
+        GraphStructure {
+            resources: (0..self.eng.len())
+                .map(|i| self.eng.spec(i as TaskId).resource)
+                .collect(),
+            edges: (0..self.eng.edge_count()).map(|i| self.eng.edge(i)).collect(),
+            dur_tags: self.durs.tag.iter().map(|&t| t as u8).collect(),
+            mf_workers: self.durs.mf_worker.clone(),
+            fold_counts: self.durs.fold_n.clone(),
+        }
+    }
+
+    /// Per-instance lane-replay override, forwarded to the engine (see
+    /// [`Engine::set_lane_mode`]) — lets grouped-vs-per-cell races pin
+    /// the batching mode without touching process env.
+    pub fn set_lane_mode(&mut self, on: Option<bool>) {
+        self.eng.set_lane_mode(on);
+    }
+
+    /// Per-instance lane-width override, forwarded to the engine (see
+    /// [`Engine::set_lane_width`]).
+    pub fn set_lane_width(&mut self, width: Option<usize>) {
+        self.eng.set_lane_width(width);
     }
 
     /// Simulate one iteration: refresh every task's duration (provider
@@ -1005,32 +1202,30 @@ impl IterationTemplate {
         }
     }
 
-    /// The [`TopologyClass`] this template's graph belongs to — equal keys
-    /// guarantee bitwise-identical graphs and duration tables (the
-    /// [`IterationTemplate::run_group_into`] batching invariant).
-    pub fn topology_class<'a>(k: usize, l: usize, params: &'a SimParams) -> TopologyClass<'a> {
-        TopologyClass::of(k, l, params)
-    }
-
     /// Simulate `iters` iterations for **each** of `cells.len()` sweep
-    /// cells that share this template's [`TopologyClass`], appending
+    /// cells whose [`ShapeClass`] equals this template's, appending
     /// `cells.len() * iters` timings to `out` in cell-major order (all of
     /// cell 0's iterations, then cell 1's, …) — exactly the order a serial
-    /// per-cell [`IterationTemplate::run_into`] loop would produce.
+    /// per-cell bind + [`IterationTemplate::run_into`] loop would produce.
+    /// Each cell's payload (size, cost params, jitter) is swapped in via
+    /// [`IterationTemplate::bind_cell`]; the graph and the engine's order
+    /// cache survive every switch.
     ///
-    /// Replays are indexed flat (`r = cell * iters + iter`) and batched
-    /// into lane passes of the dispatched width, so batches *span cell
-    /// boundaries*: with width 8 and 7 iterations per cell, lanes 0..7 of
-    /// the first pass carry cell 0's seven replays plus cell 1's first.
-    /// Each lane is refreshed from **its own cell's** provider and rng, in
-    /// flat order — each cell's draw stream advances exactly as its serial
-    /// loop would (streams are independent, so interleaving cells within a
-    /// batch is bitwise-irrelevant). Pinned against the per-cell loop by
-    /// `rust/tests/determinism.rs`.
+    /// Jittered replays are indexed flat (`r = cell * iters + iter`) and
+    /// batched into lane passes of the dispatched width, so batches *span
+    /// cell boundaries*: with width 8 and 7 iterations per cell, lanes
+    /// 0..7 of the first pass carry cell 0's seven replays plus cell 1's
+    /// first — even when the two cells simulate different list sizes.
+    /// Each lane is refreshed from **its own cell's** bound payload,
+    /// provider and rng, in flat order — each cell's draw stream advances
+    /// exactly as its serial loop would (streams are independent, so
+    /// interleaving cells within a batch is bitwise-irrelevant). Pinned
+    /// against the per-cell loop by `rust/tests/determinism.rs`.
     ///
-    /// Fully deterministic groups (zero jitter, every provider
-    /// deterministic) take the same one-replay-per-cell replication
-    /// shortcut as [`IterationTemplate::run_into`].
+    /// Deterministic cells (zero jitter, deterministic provider) take the
+    /// same one-replay replication shortcut as
+    /// [`IterationTemplate::run_into`]; mixed groups replicate those and
+    /// lane-batch maximal runs of the jittered rest.
     pub fn run_group_into(
         &mut self,
         cells: &mut [GroupCell],
@@ -1041,31 +1236,68 @@ impl IterationTemplate {
         if iters == 0 || cells.is_empty() {
             return;
         }
-        let deterministic = self.jitter_comp == 0.0
-            && self.jitter_comm == 0.0
-            && cells.iter().all(|c| c.provider.is_deterministic());
-        if deterministic {
-            for cell in cells.iter_mut() {
+        let det = |c: &GroupCell| {
+            c.params.jitter_comp == 0.0
+                && c.params.jitter_comm == 0.0
+                && c.provider.is_deterministic()
+        };
+        let mut c0 = 0;
+        while c0 < cells.len() {
+            if det(&cells[c0]) {
+                let cell = &mut cells[c0];
+                self.bind_cell(cell.l, &cell.params);
                 let t = self.replay(cell.provider.as_mut(), &mut cell.rng);
                 out.extend(std::iter::repeat(t).take(iters));
+                c0 += 1;
+            } else {
+                let mut c1 = c0 + 1;
+                while c1 < cells.len() && !det(&cells[c1]) {
+                    c1 += 1;
+                }
+                self.run_group_lanes(&mut cells[c0..c1], iters, out);
+                c0 = c1;
             }
-            return;
         }
+    }
+
+    /// Lane-batch a maximal run of jittered cells (the non-deterministic
+    /// arm of [`IterationTemplate::run_group_into`]): flat replay index
+    /// `r = cell * iters + iter`, batches of the dispatched width, each
+    /// lane refreshed under its own cell's bound payload. A cell switch
+    /// mid-batch is a [`IterationTemplate::bind_cell`] payload rebind;
+    /// per-batch telemetry lands in [`SchedCounters::group_batches`] and
+    /// [`SchedCounters::group_spanned_cells`].
+    fn run_group_lanes(
+        &mut self,
+        cells: &mut [GroupCell],
+        iters: usize,
+        out: &mut Vec<IterationTiming>,
+    ) {
         let width = self.eng.dispatch_width();
         let total = cells.len() * iters;
         let mut done = 0;
+        let mut bound = usize::MAX;
         while done < total {
             let lanes = width.min(total - done);
-            let eng = &mut self.eng;
-            let (jc, jm) = (self.jitter_comp, self.jitter_comm);
-            let mat = eng.lane_durations_mut(lanes);
             for lane in 0..lanes {
-                let cell = &mut cells[(done + lane) / iters];
+                let ci = (done + lane) / iters;
+                if ci != bound {
+                    self.bind_cell(cells[ci].l, &cells[ci].params);
+                    bound = ci;
+                }
+                let (jc, jm) = (self.jitter_comp, self.jitter_comm);
+                let cell = &mut cells[ci];
+                let eng = &mut self.eng;
+                let mat = eng.lane_durations_mut(lanes);
                 self.durs.refresh(jc, jm, cell.provider.as_mut(), &mut cell.rng, |id, d| {
                     mat[id * lanes + lane] = d;
                 });
             }
-            eng.run_lanes(lanes);
+            // Distinct cells in this batch, minus one: flat indexing keeps
+            // a batch's cells contiguous, so last − first counts them.
+            let spanned = ((done + lanes - 1) / iters - done / iters) as u64;
+            self.eng.run_lanes(lanes);
+            self.eng.note_group_batch(spanned);
             self.push_lane_timings(lanes, out);
             done += lanes;
         }
@@ -1391,17 +1623,88 @@ mod tests {
     }
 
     #[test]
-    fn topology_class_keys_match_iff_build_inputs_match() {
+    fn shape_class_splits_on_structure_only() {
         let p = params();
+        // Payload-only differences keep the key equal: size is not even
+        // an input, and jitter / word counts / network model are bound
+        // per cell.
         let mut q = params();
         q.jitter_comp = 0.05;
-        assert_eq!(
-            IterationTemplate::topology_class(12, 1024, &p),
-            TopologyClass::of(12, 1024, &p)
-        );
-        assert_ne!(TopologyClass::of(12, 1024, &p), TopologyClass::of(13, 1024, &p));
-        assert_ne!(TopologyClass::of(12, 1024, &p), TopologyClass::of(12, 512, &p));
-        assert_ne!(TopologyClass::of(12, 1024, &p), TopologyClass::of(12, 1024, &q));
+        q.jitter_comm = 0.02;
+        q.words_down = 17;
+        q.words_up = 3;
+        q.net = NetworkParams::fast_fabric();
+        assert_eq!(ShapeClass::of(12, &p), ShapeClass::of(12, &q));
+        // Structural differences split it.
+        assert_ne!(ShapeClass::of(12, &p), ShapeClass::of(13, &p));
+        let mut alg = params();
+        alg.algo = CollectiveAlgo::Linear;
+        assert_ne!(ShapeClass::of(12, &p), ShapeClass::of(12, &alg));
+        let mut red = params();
+        red.reduce_mode = ReduceMode::InTree;
+        assert_ne!(ShapeClass::of(12, &p), ShapeClass::of(12, &red));
+        let mut mm = params();
+        mm.masters = 3;
+        assert_ne!(ShapeClass::of(12, &p), ShapeClass::of(12, &mm));
+        // Only the *effective* master count is structural: masters 5 and
+        // 9 saturate to the same shape when k = 4.
+        let mut m5 = params();
+        m5.masters = 5;
+        let mut m9 = params();
+        m9.masters = 9;
+        assert_eq!(ShapeClass::of(4, &m5), ShapeClass::of(4, &m9));
+        assert_eq!(IterationTemplate::new(12, 1024, &p).shape_class(), ShapeClass::of(12, &p));
+    }
+
+    #[test]
+    fn bind_cell_matches_fresh_build_bitwise() {
+        // Rebinding a shared-shape template to a new cell's payload
+        // (size, word counts, network, jitter) must replay bitwise
+        // identically to a template freshly built for that cell.
+        let p = params();
+        let mut tmpl = IterationTemplate::new(16, 1024, &p);
+        tmpl.replay(&mut analytic(1024), &mut Rng::new(1));
+        let mut q = params();
+        q.words_down = 4096;
+        q.words_up = 16;
+        q.jitter_comp = 0.06;
+        q.jitter_comm = 0.04;
+        q.net = NetworkParams::fast_fabric();
+        for l in [2048usize, 100, 2048] {
+            tmpl.bind_cell(l, &q);
+            let mut fresh = IterationTemplate::new(16, l, &q);
+            assert_eq!(tmpl.task_count(), fresh.task_count(), "l={l}");
+            assert_eq!(tmpl.structure(), fresh.structure(), "l={l}");
+            let a = tmpl.replay(&mut analytic(l), &mut Rng::new(42));
+            let b = fresh.replay(&mut analytic(l), &mut Rng::new(42));
+            assert_eq!(a, b, "l={l}");
+        }
+        assert_eq!(tmpl.sched_counters().shape_rebinds, 3);
+    }
+
+    #[test]
+    fn reset_shape_rebinds_on_equal_shape_and_rebuilds_otherwise() {
+        let p = params();
+        let mut tmpl = IterationTemplate::new(8, 512, &p);
+        let mut q = params();
+        q.words_up = 9;
+        assert!(!tmpl.reset_shape(8, 4096, &q), "equal shape must rebind");
+        let mut r = params();
+        r.reduce_mode = ReduceMode::GatherThenFold;
+        assert!(tmpl.reset_shape(9, 4096, &q), "new k must rebuild");
+        assert!(tmpl.reset_shape(9, 4096, &r), "new reduce mode must rebuild");
+        let a = tmpl.replay(&mut analytic(4096), &mut Rng::new(7));
+        let b = IterationTemplate::new(9, 4096, &r).replay(&mut analytic(4096), &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal ShapeClass")]
+    fn bind_cell_rejects_shape_mismatch() {
+        let mut tmpl = IterationTemplate::new(8, 512, &params());
+        let mut q = params();
+        q.reduce_mode = ReduceMode::InTree;
+        tmpl.bind_cell(512, &q);
     }
 
     #[test]
@@ -1427,16 +1730,83 @@ mod tests {
         }
         let mut tmpl = IterationTemplate::new(k, l, &p);
         let mut cells: Vec<GroupCell> = (0..n_cells)
-            .map(|c| GroupCell {
-                provider: Box::new(analytic(l)),
-                rng: root.split(c as u64),
-            })
+            .map(|c| GroupCell::new(Box::new(analytic(l)), root.split(c as u64), l, &p))
             .collect();
         let mut got = Vec::new();
         tmpl.run_group_into(&mut cells, iters, &mut got);
         assert_eq!(expect, got);
         let c = tmpl.sched_counters();
         assert!(c.lane_hits > 0 || c.lane_fallbacks > 0, "group run never batched: {c:?}");
+        assert!(c.group_batches > 0, "{c:?}");
+        assert!(c.group_spanned_cells > 0, "3 cells × 7 iters must span: {c:?}");
+    }
+
+    #[test]
+    fn run_group_into_mixed_sizes_matches_per_cell_loop() {
+        // The shape-class contract end to end: four *different sizes* of
+        // one K share one template; grouped lane batches spanning the
+        // size cells must be bitwise identical to a serial per-cell
+        // run_into loop over per-size templates.
+        let mut p = params();
+        p.jitter_comp = 0.06;
+        p.jitter_comm = 0.04;
+        let (k, iters) = (12usize, 7usize);
+        let sizes = [512usize, 1024, 4096, 16384];
+        let root = Rng::new(0xBAD_5EED);
+        let mut expect = Vec::new();
+        for (c, &l) in sizes.iter().enumerate() {
+            let mut tmpl = IterationTemplate::new(k, l, &p);
+            let mut prov = analytic(l);
+            let mut rng = root.split(c as u64);
+            let mut out = Vec::new();
+            tmpl.run_into(iters, &mut prov, &mut rng, &mut out);
+            expect.extend(out);
+        }
+        let mut tmpl = IterationTemplate::new(k, sizes[0], &p);
+        let mut cells: Vec<GroupCell> = sizes
+            .iter()
+            .enumerate()
+            .map(|(c, &l)| GroupCell::new(Box::new(analytic(l)), root.split(c as u64), l, &p))
+            .collect();
+        let mut got = Vec::new();
+        tmpl.run_group_into(&mut cells, iters, &mut got);
+        assert_eq!(expect, got);
+        let c = tmpl.sched_counters();
+        assert!(c.group_spanned_cells > 0, "size cells must share batches: {c:?}");
+        assert!(c.shape_rebinds >= sizes.len() as u64 - 1, "{c:?}");
+    }
+
+    #[test]
+    fn run_group_into_mixed_determinism_matches_per_cell_loop() {
+        // A group mixing deterministic and jittered cells replicates the
+        // former and lane-batches maximal runs of the latter — still in
+        // cell-major order, still bitwise equal to the serial loop.
+        let (k, iters) = (8usize, 5usize);
+        let det_p = params();
+        let mut jit_p = params();
+        jit_p.jitter_comp = 0.08;
+        let specs = [(512usize, &det_p), (1024, &jit_p), (2048, &det_p), (4096, &jit_p)];
+        let root = Rng::new(0xF00D);
+        let mut expect = Vec::new();
+        for (c, &(l, pp)) in specs.iter().enumerate() {
+            let mut tmpl = IterationTemplate::new(k, l, pp);
+            let mut prov = analytic(l);
+            let mut rng = root.split(c as u64);
+            let mut out = Vec::new();
+            tmpl.run_into(iters, &mut prov, &mut rng, &mut out);
+            expect.extend(out);
+        }
+        let mut tmpl = IterationTemplate::new(k, 512, &det_p);
+        let mut cells: Vec<GroupCell> = specs
+            .iter()
+            .enumerate()
+            .map(|(c, &(l, pp))| {
+                GroupCell::new(Box::new(analytic(l)), root.split(c as u64), l, pp)
+            })
+            .collect();
+        let mut got = Vec::new();
+        tmpl.run_group_into(&mut cells, iters, &mut got);
+        assert_eq!(expect, got);
     }
 
     #[test]
@@ -1447,10 +1817,7 @@ mod tests {
         let p = params();
         let mut tmpl = IterationTemplate::new(8, l, &p);
         let mut cells: Vec<GroupCell> = (0..2)
-            .map(|c| GroupCell {
-                provider: Box::new(analytic(l)),
-                rng: Rng::new(c as u64),
-            })
+            .map(|c| GroupCell::new(Box::new(analytic(l)), Rng::new(c as u64), l, &p))
             .collect();
         let mut got = Vec::new();
         tmpl.run_group_into(&mut cells, 5, &mut got);

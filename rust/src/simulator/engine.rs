@@ -198,6 +198,19 @@ pub struct SchedCounters {
     /// only, so `lane_hits + lane_pad_replays` is the total lane-pass
     /// throughput the hardware actually executed.
     pub lane_pad_replays: u64,
+    /// Cross-cell lane batches issued by a shape-class group run
+    /// (`IterationTemplate::run_group_into`'s jittered path) — every
+    /// batch counted, whether or not it crossed a cell boundary.
+    pub group_batches: u64,
+    /// Sum over group batches of `(distinct cells in the batch − 1)`:
+    /// strictly positive iff some lane batch genuinely carried replays
+    /// of more than one sweep cell — the figure the grouped benches
+    /// assert on.
+    pub group_spanned_cells: u64,
+    /// Duration-payload rebinds (`IterationTemplate::bind_cell`): cell
+    /// switches served by swapping the `DurTable` payload columns in
+    /// place instead of rebuilding the graph (the order cache survives).
+    pub shape_rebinds: u64,
 }
 
 /// Sentinel for "no entry" in the calendar's intrusive linked lists.
@@ -611,6 +624,20 @@ impl Engine {
     /// over this engine's lifetime.
     pub fn sched_counters(&self) -> SchedCounters {
         self.stats
+    }
+
+    /// Record one cross-cell group lane batch that carried `spanned + 1`
+    /// distinct sweep cells (telemetry hook for
+    /// `IterationTemplate::run_group_into`).
+    pub(crate) fn note_group_batch(&mut self, spanned: u64) {
+        self.stats.group_batches += 1;
+        self.stats.group_spanned_cells += spanned;
+    }
+
+    /// Record one duration-payload rebind (telemetry hook for
+    /// `IterationTemplate::bind_cell`).
+    pub(crate) fn note_shape_rebind(&mut self) {
+        self.stats.shape_rebinds += 1;
     }
 
     /// Clear the graph (tasks, labels, edges) while keeping the capacity of

@@ -76,6 +76,7 @@ pub const LANES_MAX: usize = 8;
 
 static ACTIVE_LANES: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
 static ACTIVE_WIDTH: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+static ACTIVE_GROUP: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
 
 /// Whether the vectorized lane pass is enabled for this process (reads
 /// `BSF_LANES` once). Engines without an `Engine::set_lane_mode` override
@@ -92,6 +93,17 @@ pub fn lane_width() -> usize {
     *ACTIVE_WIDTH.get_or_init(|| {
         select_width(std::env::var("BSF_LANE_WIDTH").ok().as_deref(), avx512_supported())
     })
+}
+
+/// Whether the sweep queue buckets same-[`crate::simulator::ShapeClass`]
+/// cells into shared-template groups for this process (reads `BSF_GROUP`
+/// once; unset = on). Sweep jobs without a per-job
+/// `SweepJob::set_group_mode` override dispatch through this, so CI and
+/// the benches can race the grouped and per-cell partitions. Grouping is
+/// bitwise-neutral by contract — `off` only changes which template
+/// instance computes each cell, never the numbers.
+pub fn group_enabled() -> bool {
+    *ACTIVE_GROUP.get_or_init(|| select_group(std::env::var("BSF_GROUP").ok().as_deref()))
 }
 
 /// Whether this CPU can run the width-8 AVX-512 lane pass.
@@ -114,6 +126,18 @@ fn select_lanes(request: Option<&str>) -> bool {
         Some("on") => true,
         Some("off") => false,
         Some(other) => panic!("BSF_LANES must be 'on' or 'off', got '{other}'"),
+        None => true,
+    }
+}
+
+/// Pure selection logic for the grouping switch (unit-tested separately
+/// from process env state). Requesting anything but `on`/`off` panics
+/// loudly rather than silently falling back, like every `BSF_*` switch.
+fn select_group(request: Option<&str>) -> bool {
+    match request {
+        Some("on") => true,
+        Some("off") => false,
+        Some(other) => panic!("BSF_GROUP must be 'on' or 'off', got '{other}'"),
         None => true,
     }
 }
@@ -438,6 +462,19 @@ mod tests {
     #[should_panic(expected = "BSF_LANES must be")]
     fn select_lanes_rejects_unknown_value() {
         select_lanes(Some("4"));
+    }
+
+    #[test]
+    fn select_group_parses_overrides() {
+        assert!(select_group(Some("on")));
+        assert!(!select_group(Some("off")));
+        assert!(select_group(None));
+    }
+
+    #[test]
+    #[should_panic(expected = "BSF_GROUP must be")]
+    fn select_group_rejects_unknown_value() {
+        select_group(Some("auto"));
     }
 
     #[test]

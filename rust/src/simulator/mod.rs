@@ -24,8 +24,8 @@ pub mod trace;
 
 pub use cluster::{
     simulate_iteration, simulate_iteration_full, simulate_run, AnalyticCost, CostFactory,
-    CostProvider, GroupCell, IterationTemplate, IterationTiming, ReduceMode, SampledCost,
-    SimParams, TopologyClass,
+    CostProvider, GraphStructure, GroupCell, IterationTemplate, IterationTiming, ReduceMode,
+    SampledCost, ShapeClass, SimParams,
 };
 pub use faults::{
     faults_audit, run_faulty_into, FailureWindow, FaultPlan, FaultScratch, FaultSpec, FaultyCost,
@@ -35,4 +35,4 @@ pub use trace::{trace_iteration, Trace, TraceEvent};
 pub use engine::{
     sched_mode, Engine, ReferenceScheduler, SchedCounters, SchedMode, TaskId, TaskSpec,
 };
-pub use lanes::{lane_width, lanes_enabled, LANES_MAX};
+pub use lanes::{group_enabled, lane_width, lanes_enabled, LANES_MAX};

@@ -92,12 +92,13 @@ where
 /// the same `Vec` as `parallel_map_with` over the underlying indices.
 ///
 /// `groups` must partition `0..n` contiguously and in order
-/// (`groups[i].end == groups[i+1].start`, first starts at 0) — the sweep
-/// queue uses this to keep K-adjacent cells that share a topology class on
-/// one worker, where they ride one lane batch through one shared engine
-/// pass. Determinism contract: each group's results must be a pure
-/// function of the group (scratch caches capacity only), so the output is
-/// bitwise identical at any thread count.
+/// (`groups[i].end == groups[i+1].start`, first starts at 0). The sweep
+/// queue has moved to [`parallel_map_index_groups_with`], whose buckets
+/// need not be contiguous; this range flavor remains for callers whose
+/// groups are naturally consecutive runs. Determinism contract: each
+/// group's results must be a pure function of the group (scratch caches
+/// capacity only), so the output is bitwise identical at any thread
+/// count.
 pub fn parallel_map_groups_with<S, T, I, F>(
     groups: &[std::ops::Range<usize>],
     threads: usize,
@@ -154,6 +155,94 @@ where
         while let Ok((gi, buf)) = rx.recv() {
             for (off, v) in buf.into_iter().enumerate() {
                 out[groups[gi].start + off] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("every index produced")).collect()
+}
+
+/// [`parallel_map_groups_with`] for groups of **arbitrary** (not
+/// necessarily consecutive) indices: each group is one unit of work handed
+/// to one worker, which appends exactly `group.len()` results to its
+/// output buffer — one per index, in the group's own order. Results are
+/// scattered back by index, so the caller sees the same `Vec` as
+/// `parallel_map_with` over `0..n` regardless of how the groups carve it
+/// up. The sweep queue uses this for shape-bucketed partitions, where one
+/// group collects same-[`crate::simulator::ShapeClass`] cells from all
+/// over the flat job list.
+///
+/// `groups` must partition `0..n` exactly — every index in exactly one
+/// group (debug-asserted). Determinism contract: each group's results
+/// must be a pure function of the group (scratch caches capacity only),
+/// so the output is bitwise identical at any thread count.
+pub fn parallel_map_index_groups_with<S, T, I, F>(
+    groups: &[Vec<usize>],
+    n: usize,
+    threads: usize,
+    init: I,
+    f: F,
+) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &[usize], &mut Vec<T>) + Sync,
+{
+    #[cfg(debug_assertions)]
+    {
+        let mut seen = vec![false; n];
+        for g in groups {
+            for &i in g {
+                assert!(i < n && !seen[i], "groups must partition 0..n exactly");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "groups must cover every index");
+    }
+    let threads = threads.clamp(1, groups.len().max(1));
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    if threads <= 1 {
+        let mut state = init();
+        let mut buf = Vec::new();
+        for g in groups {
+            buf.clear();
+            f(&mut state, g, &mut buf);
+            assert_eq!(buf.len(), g.len(), "one result per index, in group order");
+            for (&i, v) in g.iter().zip(buf.drain(..)) {
+                out[i] = Some(v);
+            }
+        }
+        return out.into_iter().map(|o| o.expect("every index produced")).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, Vec<T>)>();
+    let f = &f;
+    let init = &init;
+    let next = &next;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            s.spawn(move || {
+                let mut state = init();
+                loop {
+                    let gi = next.fetch_add(1, Ordering::Relaxed);
+                    if gi >= groups.len() {
+                        break;
+                    }
+                    let g = &groups[gi];
+                    let mut buf = Vec::with_capacity(g.len());
+                    f(&mut state, g, &mut buf);
+                    assert_eq!(buf.len(), g.len(), "one result per index, in group order");
+                    if tx.send((gi, buf)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        while let Ok((gi, buf)) = rx.recv() {
+            for (&i, v) in groups[gi].iter().zip(buf) {
+                out[i] = Some(v);
             }
         }
     });
@@ -225,6 +314,56 @@ mod tests {
             );
             assert_eq!(got, want, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn index_grouped_map_scatters_back_at_any_thread_count() {
+        // Non-consecutive, interleaved groups over 0..10; each group
+        // emits (index, position-in-group).
+        let groups: Vec<Vec<usize>> =
+            vec![vec![0, 3, 7], vec![1, 2], vec![9, 4, 6, 5], vec![8]];
+        let mut want = vec![(0usize, 0usize); 10];
+        for g in &groups {
+            for (pos, &i) in g.iter().enumerate() {
+                want[i] = (i, pos);
+            }
+        }
+        for threads in [1usize, 2, 4, 9] {
+            let got = parallel_map_index_groups_with(
+                &groups,
+                10,
+                threads,
+                || (),
+                |_, g, out| {
+                    for (pos, &i) in g.iter().enumerate() {
+                        out.push((i, pos));
+                    }
+                },
+            );
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn index_grouped_map_handles_empty_and_single() {
+        assert_eq!(
+            parallel_map_index_groups_with(
+                &[],
+                0,
+                4,
+                || (),
+                |_: &mut (), _, _: &mut Vec<usize>| {}
+            ),
+            Vec::<usize>::new()
+        );
+        let one = parallel_map_index_groups_with(
+            &[vec![2, 0, 1]],
+            3,
+            4,
+            || (),
+            |_, g, out| out.extend(g.iter().map(|&i| i * 10)),
+        );
+        assert_eq!(one, vec![0, 10, 20]);
     }
 
     #[test]

@@ -20,12 +20,14 @@
 //!    branch groups replays into batches of the dispatched lane width
 //!    (8 with AVX-512, else 4; `BSF_LANE_WIDTH` overrides), and the final
 //!    partial batch rides the same lane pass padded with a discarded
-//!    duplicate lane — no scalar remainder. K-adjacent sweep cells
-//!    sharing a topology class additionally ride shared batches through
-//!    one template (`run_group_into`). All of it must equal calling
-//!    `replay()` once per iteration per cell. CI also runs this suite
-//!    under `BSF_LANES=off` (every batch through the sequential
-//!    fallback) and, on AVX-512 runners, under `BSF_LANE_WIDTH=8` —
+//!    duplicate lane — no scalar remainder. Sweep cells sharing a
+//!    `ShapeClass` (equal graph structure; sizes, cost params and jitter
+//!    free to differ) additionally ride shared batches through one
+//!    template (`run_group_into`, payload swaps via `bind_cell`). All of
+//!    it must equal calling `replay()` once per iteration per cell. CI
+//!    also runs this suite under `BSF_LANES=off` (every batch through
+//!    the sequential fallback), under `BSF_GROUP=off` (every cell its
+//!    own group), and, on AVX-512 runners, under `BSF_LANE_WIDTH=8` —
 //!    results must not move.
 
 use bsf::experiments::{
@@ -34,7 +36,7 @@ use bsf::experiments::{
 };
 use bsf::simulator::{
     simulate_iteration, simulate_iteration_full, simulate_run, AnalyticCost, CostFactory,
-    IterationTemplate, IterationTiming, SchedMode, SimParams, TaskId,
+    GroupCell, IterationTemplate, IterationTiming, SchedMode, SimParams, TaskId,
 };
 use bsf::util::Rng;
 
@@ -314,7 +316,7 @@ fn lane_batched_run_into_matches_one_at_a_time_replays() {
 #[test]
 fn k_adjacent_groups_bitwise_equal_per_cell_loop() {
     // Repeated-K cells (a refinement pass revisiting the same grid) share
-    // a topology class, so the pooled queue batches them onto one worker
+    // a shape class, so the pooled queue buckets them onto one worker
     // where their jittered replays ride shared lane passes spanning cell
     // boundaries (run_group_into). The grouped queue must equal the
     // per-cell loop — fresh template + run_into per cell, streams keyed
@@ -358,6 +360,97 @@ fn k_adjacent_groups_bitwise_equal_per_cell_loop() {
                 want
             );
         }
+    }
+}
+
+#[test]
+fn multi_size_grouped_race_bitwise_equal_per_cell_loop() {
+    // The shape-bucketed partition turns a Fig.-6-style grid — four
+    // sizes sweeping the *same* K values, with per-size payload words and
+    // a couple of repeated Ks — into multi-cell groups that span size
+    // boundaries. The grouped queue (BSF_GROUP on, forced per job) must
+    // be bitwise equal to the per-cell serial loop (grouping forced off,
+    // one thread) at 1/4/8 threads.
+    let sizes = [1_500usize, 5_000, 10_000, 16_000];
+    let ks: Vec<usize> = vec![6, 10, 14, 18, 22, 10, 14];
+    let iters = 4usize;
+    let provs: Vec<AnalyticCost> =
+        sizes.iter().map(|&n| analytic_provider(&paper_jacobi_params(n).unwrap())).collect();
+    let sims: Vec<SimParams> = sizes
+        .iter()
+        .map(|&n| {
+            let mut s = SimParams::new(n, n);
+            s.jitter_comp = 0.10;
+            s.jitter_comm = 0.05;
+            s
+        })
+        .collect();
+    let build_jobs = |group: Option<bool>| {
+        let mut rng = Rng::new(0xF166);
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                SweepJob::new(sims[i].clone(), n, &provs[i], ks.clone(), iters, &mut rng)
+                    .set_group_mode(group)
+            })
+            .collect::<Vec<_>>()
+    };
+    let reference = simulated_curves(&build_jobs(Some(false)), 1);
+    for threads in [1usize, 4, 8] {
+        let got = simulated_curves(&build_jobs(Some(true)), threads);
+        assert_eq!(got.len(), reference.len());
+        for (s, (want, have)) in reference.iter().zip(&got).enumerate() {
+            assert_eq!(want.len(), have.len());
+            for (a, b) in want.iter().zip(have) {
+                assert_eq!(a.k, b.k, "threads={threads} size={}", sizes[s]);
+                assert_eq!(
+                    a.t_k.to_bits(),
+                    b.t_k.to_bits(),
+                    "threads={threads} size={} K={}: t_k {} vs {}",
+                    sizes[s],
+                    a.k,
+                    a.t_k,
+                    b.t_k
+                );
+                assert_eq!(
+                    a.speedup.to_bits(),
+                    b.speedup.to_bits(),
+                    "threads={threads} size={} K={}",
+                    sizes[s],
+                    a.k
+                );
+            }
+        }
+    }
+
+    // Grouped scheduler telemetry is reproducible, SchedCounters
+    // included: two identical multi-size grouped runs through one shared
+    // template must agree on every counter (group batches, spanned
+    // cells, payload rebinds) and on every timing bit.
+    let grouped_run = || {
+        let mut tmpl = IterationTemplate::new(12, sizes[0], &sims[0]);
+        let root = Rng::new(0xC0FFEE);
+        let mut cells: Vec<GroupCell> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                GroupCell::new(provs[i].instance(12), root.split(i as u64), n, &sims[i])
+            })
+            .collect();
+        let mut out = Vec::new();
+        tmpl.run_group_into(&mut cells, iters, &mut out);
+        (out, tmpl.sched_counters())
+    };
+    let (o1, c1) = grouped_run();
+    let (o2, c2) = grouped_run();
+    assert_eq!(c1, c2, "grouped SchedCounters must be reproducible");
+    assert!(c1.group_batches > 0, "{c1:?}");
+    assert!(c1.group_spanned_cells > 0, "size cells must share batches: {c1:?}");
+    assert!(c1.shape_rebinds >= sizes.len() as u64 - 1, "{c1:?}");
+    assert_eq!(o1.len(), o2.len());
+    for (i, (a, b)) in o1.iter().zip(&o2).enumerate() {
+        assert_bitwise_eq(a, b, &format!("repeat grouped run, replay {i}"));
     }
 }
 

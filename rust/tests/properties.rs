@@ -21,6 +21,13 @@
 //!   both vector hits and per-lane fallbacks, both bitwise-pinned — plus
 //!   padded remainder batches (1 ≤ lanes < width, pad lanes discarded)
 //!   under the same adversarial redraws;
+//! * the shape-class grouping key: random `SimParams` pairs that agree on
+//!   the structural fields (k, masters, algo, reduce mode) but differ in
+//!   payload (list size, word counts, network model, jitter) must produce
+//!   equal `ShapeClass` keys AND structurally identical graphs (task
+//!   count, resources, edges, tag column, fold counts); perturbing any
+//!   structural field must split the key, so grouping can never pair
+//!   templates with different graphs (missed-match-only contract);
 //! * collective schedules: full coverage and log-depth for random K;
 //! * the SIMD-dispatched matvec kernels: AVX2 == scalar **bitwise** on
 //!   random shapes (remainder rows/columns included), and the blocked
@@ -30,9 +37,10 @@
 use bsf::linalg::{kernels, Matrix};
 use bsf::lists::{map_reduce, partition_even, reduce, Add, Monoid, VecAdd};
 use bsf::model::{BsfModel, CostParams};
-use bsf::net::{CollectiveAlgo, CollectiveSchedule};
+use bsf::net::{CollectiveAlgo, CollectiveSchedule, NetworkParams};
 use bsf::simulator::{
-    simulate_iteration, AnalyticCost, Engine, ReferenceScheduler, SchedMode, SimParams, TaskId,
+    simulate_iteration, AnalyticCost, Engine, IterationTemplate, ReduceMode, ReferenceScheduler,
+    SchedMode, ShapeClass, SimParams, TaskId,
 };
 use bsf::util::Rng;
 
@@ -635,4 +643,84 @@ fn prop_jitter_preserves_mean_scale() {
     // Jitter on the max of parallel workers biases slightly upward — that
     // is real straggler physics — but must stay moderate at sigma=0.05.
     assert!(rel < 0.10, "rel drift {rel}");
+}
+
+/// Random payload fields layered over a fixed structural tuple: list
+/// size, word counts, network model and jitter sigmas all redrawn per
+/// call, structural fields (`algo`, `reduce_mode`, `masters`) pinned.
+fn random_payload(
+    rng: &mut Rng,
+    algo: CollectiveAlgo,
+    reduce_mode: ReduceMode,
+    masters: usize,
+) -> (usize, SimParams) {
+    let l = 64 + rng.below(30_000) as usize;
+    let mut p = SimParams::new(1 + rng.below(8_192) as usize, 1 + rng.below(512) as usize);
+    if rng.below(2) == 0 {
+        p.net = NetworkParams::fast_fabric();
+    }
+    p.jitter_comp = if rng.below(2) == 0 { 0.0 } else { rng.range(0.01, 0.2) };
+    p.jitter_comm = if rng.below(2) == 0 { 0.0 } else { rng.range(0.01, 0.2) };
+    p.algo = algo;
+    p.reduce_mode = reduce_mode;
+    p.masters = masters;
+    (l, p)
+}
+
+#[test]
+fn prop_equal_shape_class_builds_identical_structure() {
+    // The grouping contract is asymmetric: a missed match only costs a
+    // rebuild, a spurious match replays the WRONG graph. So the key must
+    // be exactly the set of fields the clean-build graph structure
+    // depends on — no more (or grouping never fires across payloads), no
+    // less (or two different graphs share a template). Random structural
+    // tuples with independently random payloads pin both directions:
+    // equal tuple ⇒ equal `ShapeClass` AND bitwise-equal `structure()`
+    // (task count, resources, CSR edges, duration-tag column, MapFold
+    // fan-out, fold counts); any structural perturbation ⇒ unequal keys,
+    // which is precisely the predicate `flat_groups` buckets on.
+    let algos = [CollectiveAlgo::BinomialTree, CollectiveAlgo::Linear];
+    let modes = [ReduceMode::TreeMasterFold, ReduceMode::InTree, ReduceMode::GatherThenFold];
+    let mut rng = Rng::new(0x5AFE);
+    let mut split_checks = 0u64;
+    for case in 0..60u64 {
+        let k = 1 + rng.below(64) as usize;
+        let masters = 1 + rng.below(12) as usize;
+        let algo = algos[rng.below(2) as usize];
+        let mode = modes[rng.below(3) as usize];
+        let (la, pa) = random_payload(&mut rng, algo, mode, masters);
+        let (lb, pb) = random_payload(&mut rng, algo, mode, masters);
+        assert_eq!(
+            ShapeClass::of(k, &pa),
+            ShapeClass::of(k, &pb),
+            "case {case}: payload leaked into the shape key (k={k})"
+        );
+        let ta = IterationTemplate::new(k, la, &pa);
+        let tb = IterationTemplate::new(k, lb, &pb);
+        assert_eq!(ta.shape_class(), ShapeClass::of(k, &pa), "case {case}: template key");
+        assert_eq!(
+            ta.structure(),
+            tb.structure(),
+            "case {case}: equal shape built different graphs \
+             (k={k} m={masters} algo={algo:?} mode={mode:?})"
+        );
+        // Every structural perturbation must split the key (no grouping).
+        let shape = ShapeClass::of(k, &pa);
+        assert_ne!(shape, ShapeClass::of(k + 1, &pa), "case {case}: k must split");
+        let mut q = pa.clone();
+        q.algo = algos[(algos.iter().position(|&a| a == algo).unwrap() + 1) % 2];
+        assert_ne!(shape, ShapeClass::of(k, &q), "case {case}: algo must split");
+        let mut q = pa.clone();
+        q.reduce_mode = modes[(modes.iter().position(|&m| m == mode).unwrap() + 1) % 3];
+        assert_ne!(shape, ShapeClass::of(k, &q), "case {case}: reduce mode must split");
+        // Masters enters the key saturated at K: a change is structural
+        // exactly when it moves `masters.min(k)`.
+        if masters < k {
+            let mut q = pa.clone();
+            q.masters = k + 3;
+            assert_ne!(shape, ShapeClass::of(k, &q), "case {case}: masters must split");
+            split_checks += 1;
+        }
+    }
+    assert!(split_checks > 0, "masters split direction never exercised");
 }
