@@ -58,9 +58,10 @@ use bsf::experiments::{
 use bsf::linalg::kernels;
 use bsf::model::scalability::peak_knee;
 use bsf::simulator::{
-    faults_audit, group_enabled, lane_width, lanes_enabled, sched_mode, simulate_iteration,
-    simulate_iteration_full, AnalyticCost, Engine, FaultSpec, GroupCell, IterationTemplate,
-    IterationTiming, RecoveryPolicy, ReferenceScheduler, SchedMode, SimParams, TaskId,
+    faults_audit, group_enabled, lane_width, lanes_enabled, run_faulty_into, sched_mode,
+    simulate_iteration, simulate_iteration_full, AnalyticCost, CostFactory, Engine, FaultPlan,
+    FaultScratch, FaultSpec, GroupCell, IterationTemplate, IterationTiming, RecoveryPolicy,
+    ReferenceScheduler, SchedMode, SimParams, TaskId,
 };
 use bsf::util::bench::{bench_throughput, human_time, CiReport};
 use bsf::util::Rng;
@@ -792,6 +793,8 @@ fn main() {
             fail_prob: 0.05,
             downtime: 2,
             policy: RecoveryPolicy::Redistribute,
+            speed_drift: 0.0,
+            hazard_drift: 0.0,
         };
         let mut rng = Rng::new(0xFA11);
         let jobs = vec![
@@ -819,6 +822,107 @@ fn main() {
         );
         ci.metric("fault_recovery_overhead", overhead);
         ci.metric("boundary_shift_k", shift);
+    }
+
+    // Non-stationary smoke: checkpoint/restart overhead with zero
+    // failures, the cost-optimal interval's shift with the failure rate,
+    // and the K* retreat a contended shared link costs. All three land in
+    // BENCH_ci.json so drift in the new planes is flagged by bench-compare.
+    {
+        println!("\n-- non-stationary smoke (checkpointing + shared link) --");
+        let l = 1_500;
+        let k = 16;
+        let iters = 40;
+        let params = SimParams::new(l, l);
+        let prov = AnalyticCost { t_map_full: 0.2, l, t_a: 1e-6, t_p: 1e-5 };
+
+        // (a) Pure checkpoint overhead: no failures, so the only extra
+        // cost is the periodic save task — the ratio must sit just above 1.
+        let mut tmpl = IterationTemplate::new(k, l, &params);
+        let mut scratch = FaultScratch::default();
+        let mut runs = Vec::new();
+        let mean_with = |tmpl: &mut IterationTemplate,
+                         runs: &mut Vec<IterationTiming>,
+                         scratch: &mut FaultScratch,
+                         plan: &FaultPlan| {
+            let mut provider = prov.instance(k as u64);
+            let mut rng = Rng::new(0xC4E0);
+            run_faulty_into(tmpl, plan, l, &params, iters, provider.as_mut(), &mut rng, runs, scratch);
+            runs.iter().map(|t| t.total).sum::<f64>() / runs.len() as f64
+        };
+        let clean_mean = mean_with(&mut tmpl, &mut runs, &mut scratch, &FaultPlan::clean(k));
+        let ckpt_plan =
+            FaultPlan::clean(k).with_policy(RecoveryPolicy::Checkpoint { interval: 4 });
+        let ckpt_mean = mean_with(&mut tmpl, &mut runs, &mut scratch, &ckpt_plan);
+        let ckpt_overhead = ckpt_mean / clean_mean;
+        println!("    checkpoint overhead (interval 4, zero failures): {ckpt_overhead:.4}x");
+        ci.metric("checkpoint_overhead", ckpt_overhead);
+
+        // (b) The cost-optimal interval tightens as failures grow: argmin
+        // interval at 2% minus argmin at 8% over a small grid.
+        let argmin_iv = |fail: f64| {
+            let ivs = [1u64, 2, 4, 8, 16];
+            let mut best = (f64::INFINITY, ivs[0]);
+            for &iv in &ivs {
+                let spec = FaultSpec {
+                    fail_prob: fail,
+                    downtime: 2,
+                    policy: RecoveryPolicy::Checkpoint { interval: iv },
+                    ..FaultSpec::clean()
+                };
+                let root = Rng::new(0xC4E1).split((fail.to_bits() >> 8) ^ iv);
+                let plan = FaultPlan::generate(&spec, k, iters as u64, &root);
+                let mut tmpl = IterationTemplate::new(k, l, &params);
+                let mut scratch = FaultScratch::default();
+                let mut runs = Vec::new();
+                let mut provider = prov.instance(k as u64);
+                let mut rng = root.split(7);
+                run_faulty_into(
+                    &mut tmpl,
+                    &plan,
+                    l,
+                    &params,
+                    iters,
+                    provider.as_mut(),
+                    &mut rng,
+                    &mut runs,
+                    &mut scratch,
+                );
+                let mean = runs.iter().map(|t| t.total).sum::<f64>() / runs.len() as f64;
+                if mean < best.0 {
+                    best = (mean, iv);
+                }
+            }
+            best.1
+        };
+        let (iv_lo, iv_hi) = (argmin_iv(0.02), argmin_iv(0.08));
+        let iv_shift = iv_lo as f64 - iv_hi as f64;
+        println!("    optimal interval: {iv_lo} @ 2% -> {iv_hi} @ 8% (shift {iv_shift:+})");
+        ci.metric("optimal_interval_shift", iv_shift);
+
+        // (c) Contended-link boundary retreat: the same sweep per-edge vs
+        // shared; bandwidth splitting can only push K* down.
+        let ks: Vec<usize> = (1..=48).collect();
+        let mut shared = params.clone();
+        shared.net.link = bsf::net::LinkMode::Shared;
+        let mut rng = Rng::new(0xC4E2);
+        let jobs = vec![
+            SweepJob::new(params.clone(), l, &prov, ks.clone(), 6, &mut rng),
+            SweepJob::new(shared, l, &prov, ks.clone(), 6, &mut rng),
+        ];
+        let curves = simulated_curves(&jobs, 4);
+        let w = (ks.len() / 10).max(3);
+        let peak = |c: &[bsf::model::scalability::SpeedupPoint]| {
+            peak_knee(c, w, 0.99).map(|p| p.k).unwrap_or(0)
+        };
+        let shift = peak(&curves[0]) as f64 - peak(&curves[1]) as f64;
+        println!(
+            "    contended boundary shift: {:+} nodes (K*={} -> {})",
+            shift,
+            peak(&curves[0]),
+            peak(&curves[1])
+        );
+        ci.metric("contended_boundary_shift_k", shift);
     }
 
     if let Err(e) = ci.save("BENCH_ci.json") {

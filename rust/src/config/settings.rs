@@ -4,7 +4,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::net::{CollectiveAlgo, NetworkParams};
+use crate::net::{CollectiveAlgo, LinkMode, NetworkParams};
 use crate::simulator::ReduceMode;
 
 /// A layered string→string settings store.
@@ -150,9 +150,9 @@ impl Default for ClusterConfig {
 
 impl ClusterConfig {
     /// Read from settings keys `cluster.latency`, `cluster.tau_tr`,
-    /// `cluster.collective` (`tree`|`linear`), `cluster.reduce`
-    /// (`paper`|`mpi-reduce`|`gather`), `cluster.jitter_comp`,
-    /// `cluster.jitter_comm`, `cluster.masters`.
+    /// `cluster.link` (`per-edge`|`shared`), `cluster.collective`
+    /// (`tree`|`linear`), `cluster.reduce` (`paper`|`mpi-reduce`|`gather`),
+    /// `cluster.jitter_comp`, `cluster.jitter_comm`, `cluster.masters`.
     pub fn from_settings(s: &Settings) -> Result<ClusterConfig> {
         let d = ClusterConfig::default();
         let algo = match s.get("cluster.collective").unwrap_or("tree") {
@@ -166,10 +166,16 @@ impl ClusterConfig {
             "gather" => ReduceMode::GatherThenFold,
             other => bail!("cluster.reduce={other}: expected paper|mpi-reduce|gather"),
         };
+        let link = match s.get("cluster.link").unwrap_or("per-edge") {
+            "per-edge" => LinkMode::PerEdge,
+            "shared" => LinkMode::Shared,
+            other => bail!("cluster.link={other}: expected per-edge|shared"),
+        };
         Ok(ClusterConfig {
             net: NetworkParams {
                 latency: s.f64_or("cluster.latency", d.net.latency)?,
                 tau_tr: s.f64_or("cluster.tau_tr", d.net.tau_tr)?,
+                link,
             },
             algo,
             reduce_mode,
@@ -235,6 +241,17 @@ mod tests {
         let mut s = Settings::new();
         s.merge_str("[cluster]\ncollective = ring\n").unwrap();
         assert!(ClusterConfig::from_settings(&s).is_err());
+    }
+
+    #[test]
+    fn cluster_link_parses_and_rejects() {
+        let mut s = Settings::new();
+        assert_eq!(ClusterConfig::from_settings(&s).unwrap().net.link, LinkMode::PerEdge);
+        s.merge_str("[cluster]\nlink = shared\n").unwrap();
+        assert_eq!(ClusterConfig::from_settings(&s).unwrap().net.link, LinkMode::Shared);
+        let mut bad = Settings::new();
+        bad.merge_str("[cluster]\nlink = bonded\n").unwrap();
+        assert!(ClusterConfig::from_settings(&bad).is_err());
     }
 
     #[test]

@@ -272,7 +272,11 @@ pub(crate) mod test_problems {
     #[test]
     fn cost_spec_to_params() {
         let p = Relaxation::unit(100).cost_spec();
-        let net = crate::net::NetworkParams { latency: 1e-5, tau_tr: 1e-8 };
+        let net = crate::net::NetworkParams {
+            latency: 1e-5,
+            tau_tr: 1e-8,
+            link: crate::net::LinkMode::PerEdge,
+        };
         let cp = p.cost_params(1e-9, &net);
         assert_eq!(cp.l, 100);
         assert!((cp.t_map - 100.0 * 1e-9).abs() < 1e-18);

@@ -34,6 +34,13 @@ pub struct FaultCounters {
     /// Uplinks discarded by the gather: stale epochs and deliveries from
     /// superseded or dead incarnations.
     pub late_uplinks_dropped: usize,
+    /// Master-side approximation snapshots taken
+    /// ([`RecoveryPolicy::Checkpoint`] only; the checkpoint overhead).
+    pub checkpoints: usize,
+    /// Rollbacks to the last checkpoint after a detected death
+    /// ([`RecoveryPolicy::Checkpoint`] only; each one re-executes the
+    /// iterations since the snapshot).
+    pub restarts: usize,
 }
 
 /// Per-phase deadlines for the live master loop. The scatter bound guards
@@ -44,6 +51,17 @@ pub struct PhaseTimeouts {
     pub scatter: Duration,
     /// Bound on each gather (worker failure detection).
     pub gather: Duration,
+}
+
+impl PhaseTimeouts {
+    /// The "no deadline was enforced" marker reported by runners that
+    /// have no scatter/gather phases at all ([`run_sequential`]). Zero on
+    /// both bounds — distinct from any enforced value, since
+    /// [`LiveRunner::resolve_timeouts`] clamps every derived bound to at
+    /// least 2 s and explicit zero timeouts would fail the first gather.
+    pub fn unenforced() -> PhaseTimeouts {
+        PhaseTimeouts { scatter: Duration::ZERO, gather: Duration::ZERO }
+    }
 }
 
 /// Outcome of a run.
@@ -108,14 +126,18 @@ pub fn run_sequential(
             break;
         }
     }
+    // Sequential runs enforce no phase deadlines; report the explicit
+    // marker rather than ad-hoc zeros so the report stays truthful about
+    // what was actually enforced.
+    let timeouts = PhaseTimeouts::unenforced();
     RunReport {
         iterations,
         final_approx: x,
         converged,
         metrics,
         faults: FaultCounters::default(),
-        scatter_timeout: Duration::ZERO,
-        gather_timeout: Duration::ZERO,
+        scatter_timeout: timeouts.scatter,
+        gather_timeout: timeouts.gather,
         wall: timer.elapsed(),
     }
 }
@@ -340,9 +362,26 @@ impl LiveRunner {
         let mut iterations = 0;
         let mut converged = false;
         let mut metrics = Metrics::default();
+        // Checkpoint/restart: the master keeps the approximation from the
+        // last interval boundary and, on a detected death, rolls the run
+        // back to it instead of patching the failed iteration. Respawn
+        // limits and backoff apply unchanged — the policy only changes
+        // what happens to the iteration stream.
+        let ckpt_interval = match self.recovery {
+            RecoveryPolicy::Checkpoint { interval } => Some(interval.max(1) as usize),
+            _ => None,
+        };
+        let mut snapshot: Option<(usize, Arc<Vec<f64>>)> = None;
         while iterations < self.max_iters {
             let mut it_timer = Timer::start();
             let epoch = iterations as u64;
+            if ckpt_interval.is_some_and(|iv| iterations % iv == 0)
+                && snapshot.as_ref().map_or(true, |(si, _)| *si != iterations)
+            {
+                snapshot = Some((iterations, x.clone()));
+                counters.checkpoints += 1;
+            }
+            let injected_before = counters.injected;
             // Bounded retry: respawn dead workers whose backoff elapsed.
             for wid in 1..=self.k {
                 if alive[wid - 1] {
@@ -457,6 +496,27 @@ impl LiveRunner {
                         expected: self.k,
                     }
                     .into());
+                }
+            }
+            // Checkpoint rollback: any death detected this iteration sends
+            // the run back to the last snapshot instead of patching the
+            // current fold. Gathered partials are recycled, not folded —
+            // their iterations will be re-executed from the snapshot.
+            // Bounded: every rollback consumes at least one injection, and
+            // injections are capped at k × (respawn_limit + 1).
+            if ckpt_interval.is_some() && counters.injected > injected_before {
+                if let Some((snap_iter, snap_x)) = snapshot.clone() {
+                    for slot in got.iter_mut() {
+                        if let Some(u) = slot.take() {
+                            recycle[u.worker - 1] = Some(u.partial);
+                        }
+                    }
+                    metrics.iterations.truncate(snap_iter);
+                    x = snap_x;
+                    iterations = snap_iter;
+                    counters.restarts += 1;
+                    eprintln!("bsf: rolling back to the iteration-{snap_iter} checkpoint");
+                    continue;
                 }
             }
             let roundtrip = it_timer.lap();
@@ -706,6 +766,22 @@ mod tests {
         let r = runner.run(Arc::new(p) as Arc<dyn BsfProblem>).unwrap();
         assert_eq!(r.gather_timeout, t.gather);
         assert_eq!(r.scatter_timeout, t.scatter);
+    }
+
+    #[test]
+    fn checkpoint_policy_snapshots_without_failures() {
+        let p: Arc<dyn BsfProblem> = Arc::new(Relaxation::unit(64));
+        let mut runner = LiveRunner::new(2, 8);
+        runner.fault_tolerant = true;
+        runner.recovery = RecoveryPolicy::Checkpoint { interval: 3 };
+        let r = runner.run(p).unwrap();
+        // One snapshot per interval boundary visited: iterations 0, 3, 6, …
+        assert_eq!(r.faults.checkpoints, (r.iterations + 2) / 3);
+        assert_eq!(r.faults.restarts, 0);
+        assert_eq!(r.faults.injected, 0);
+        // Snapshots are pure bookkeeping — the approximation is untouched.
+        let seq = run_sequential(&Relaxation::unit(64), 8, None);
+        assert!((r.final_approx[0] - seq.final_approx[0]).abs() < 1e-12);
     }
 
     #[test]

@@ -165,7 +165,7 @@ pub fn effective_net_with_latency(
 ) -> crate::net::NetworkParams {
     let words = (words_down + words_up) as f64;
     let tau_tr = ((t_c - 2.0 * latency) / words).max(0.0);
-    crate::net::NetworkParams { latency, tau_tr }
+    crate::net::NetworkParams { latency, tau_tr, link: crate::net::LinkMode::PerEdge }
 }
 
 /// K values to sweep for a curve expected to peak near `k_hint`:

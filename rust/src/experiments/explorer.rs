@@ -94,7 +94,11 @@ pub fn explorer(ctx: &ExperimentCtx, kind: ProblemKind, tau_op: f64) -> Result<V
     for &n in &NS {
         let mut row = vec![n.to_string()];
         for &(tau_tr, fabric) in &TAUS {
-            let net = NetworkParams { latency: ctx.cluster.net.latency, tau_tr };
+            let net = NetworkParams {
+                latency: ctx.cluster.net.latency,
+                tau_tr,
+                link: ctx.cluster.net.link,
+            };
             let cs = spec_for(kind, n);
             let params = cs.cost_params(tau_op, &net);
             let m = BsfModel::new(params);

@@ -33,6 +33,7 @@ fn policy_name(p: RecoveryPolicy) -> &'static str {
     match p {
         RecoveryPolicy::MasterRecompute => "master-recompute",
         RecoveryPolicy::Redistribute => "redistribute",
+        RecoveryPolicy::Checkpoint { .. } => "checkpoint",
     }
 }
 
@@ -57,6 +58,16 @@ pub fn faulty(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
         Cell { fail_prob: 0.05, straggler_factor: 4.0, policy: RecoveryPolicy::Redistribute },
         Cell { fail_prob: 0.05, straggler_factor: 1.0, policy: RecoveryPolicy::MasterRecompute },
         Cell { fail_prob: 0.05, straggler_factor: 4.0, policy: RecoveryPolicy::MasterRecompute },
+        Cell {
+            fail_prob: 0.05,
+            straggler_factor: 1.0,
+            policy: RecoveryPolicy::Checkpoint { interval: 4 },
+        },
+        Cell {
+            fail_prob: 0.05,
+            straggler_factor: 4.0,
+            policy: RecoveryPolicy::Checkpoint { interval: 4 },
+        },
     ];
 
     // Same treatment as `boundary_rows`: charge the simulator a network
@@ -74,6 +85,8 @@ pub fn faulty(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
             fail_prob: cell.fail_prob,
             downtime: 2,
             policy: cell.policy,
+            speed_drift: 0.0,
+            hazard_drift: 0.0,
         };
         let mut rng = Rng::new(ctx.seed ^ 0xFA7);
         jobs.push(SweepJob::new(sim.clone(), n, &prov, ks.clone(), iters, &mut rng).with_fault(spec));
@@ -124,7 +137,7 @@ mod tests {
     fn faulty_table_shape_and_clean_validation() {
         let ctx = ExperimentCtx { quick: true, ..Default::default() };
         let t = faulty(&ctx).unwrap().remove(0);
-        assert_eq!(t.len(), 8);
+        assert_eq!(t.len(), 10);
         let csv = t.to_csv();
         let rows: Vec<Vec<&str>> = csv.lines().skip(1).map(|l| l.split(',').collect()).collect();
         // The clean cell is the DES-vs-analytic validation row: its shift

@@ -22,6 +22,7 @@ mod explorer;
 pub(crate) mod fig6;
 mod fig7;
 mod faulty;
+mod nonstationary;
 mod sqrt_law;
 mod tables;
 
@@ -36,5 +37,6 @@ pub use explorer::explorer;
 pub use faulty::faulty;
 pub use fig6::fig6;
 pub use fig7::fig7;
+pub use nonstationary::nonstationary;
 pub use sqrt_law::sqrt_law;
 pub use tables::{table2, table3, table4};

@@ -1,0 +1,258 @@
+//! Non-stationary fault plane (ROADMAP "scenario diversity", second
+//! wave): drifting worker speeds, failure hazards that rise with job age,
+//! contended shared-link communication, and checkpoint/restart recovery,
+//! all over the BSF-Cimmino workload.
+//!
+//! Two tables:
+//!
+//! 1. **Boundary shift** — where the simulated K* lands when per-worker
+//!    speeds drift iteration by iteration, the failure hazard grows over
+//!    the run, and concurrent Gather/Scatter transfers split one shared
+//!    link, vs the clean closed form (eq. 14). The stationary per-edge
+//!    row doubles as the DES-vs-analytic validation row; an "ambient" row
+//!    takes its link mode from `BSF_NET` and is pinned bitwise to its
+//!    explicit twin (the module test checks both).
+//! 2. **Checkpoint interval** — mean DES iteration cost at a fixed K
+//!    over a failure-rate × interval grid under
+//!    [`RecoveryPolicy::Checkpoint`], the measured cost-optimal interval
+//!    per rate, and Young's analytic interval
+//!    ([`BsfModel::optimal_checkpoint_interval`]) alongside: the optimum
+//!    tightens as the failure rate grows.
+
+use anyhow::Result;
+
+use crate::experiments::common::{
+    analytic_provider, effective_net_with_latency, k_sweep, simulated_curves, ExperimentCtx,
+    ProblemKind, SweepJob,
+};
+use crate::model::BsfModel;
+use crate::net::{default_link_mode, LinkMode};
+use crate::simulator::{
+    run_faulty_into, CostFactory, FaultPlan, FaultScratch, FaultSpec, RecoveryPolicy,
+};
+use crate::simulator::IterationTemplate;
+use crate::util::parallel::default_threads;
+use crate::util::{Rng, Table};
+
+/// One cell of the boundary-shift sweep.
+struct NsCell {
+    fail_prob: f64,
+    speed_drift: f64,
+    hazard_drift: f64,
+    link: LinkMode,
+    /// True for the row whose link mode comes from `BSF_NET` — it must be
+    /// bitwise identical to the explicit row of the same mode.
+    ambient: bool,
+}
+
+fn link_name(l: LinkMode) -> &'static str {
+    match l {
+        LinkMode::PerEdge => "per-edge",
+        LinkMode::Shared => "shared",
+    }
+}
+
+/// The non-stationary sweep: K* boundary shift under drift/hazard/link
+/// contention, and the cost-optimal checkpoint interval vs failure rate.
+pub fn nonstationary(ctx: &ExperimentCtx) -> Result<Vec<Table>> {
+    let n = if ctx.quick { 1_000 } else { 4_000 };
+    let problem = ProblemKind::Cimmino.build(n);
+    let spec = problem.cost_spec();
+    let l = spec.l;
+    let params = spec.cost_params(9.3e-10, &ctx.cluster.net);
+    let k_bsf = BsfModel::new(params).k_bsf();
+    let ks = k_sweep(k_bsf, ctx.quick);
+    let iters = if ctx.quick { 3 } else { 7 };
+
+    // Same discipline as the stationary faulty sweep: charge the DES a
+    // network consistent with the derived t_c, and give every cell an
+    // identically-seeded root so the ambient row is bitwise the twin of
+    // its explicit-link counterpart.
+    let prov = analytic_provider(&params);
+    let mut sim = ctx.sim_params(spec.words_down, spec.words_up);
+    sim.net = effective_net_with_latency(
+        params.t_c,
+        spec.words_down,
+        spec.words_up,
+        ctx.cluster.net.latency,
+    );
+
+    let cells = [
+        NsCell { fail_prob: 0.00, speed_drift: 0.00, hazard_drift: 0.0, link: LinkMode::PerEdge, ambient: false },
+        NsCell { fail_prob: 0.00, speed_drift: 0.00, hazard_drift: 0.0, link: LinkMode::Shared, ambient: false },
+        NsCell { fail_prob: 0.02, speed_drift: 0.00, hazard_drift: 0.0, link: LinkMode::PerEdge, ambient: false },
+        NsCell { fail_prob: 0.02, speed_drift: 0.00, hazard_drift: 2.0, link: LinkMode::PerEdge, ambient: false },
+        NsCell { fail_prob: 0.02, speed_drift: 0.00, hazard_drift: 2.0, link: LinkMode::Shared, ambient: false },
+        NsCell { fail_prob: 0.00, speed_drift: 0.02, hazard_drift: 0.0, link: LinkMode::PerEdge, ambient: false },
+        NsCell { fail_prob: 0.00, speed_drift: 0.00, hazard_drift: 0.0, link: default_link_mode(), ambient: true },
+    ];
+
+    let mut jobs = Vec::with_capacity(cells.len());
+    for cell in &cells {
+        let fspec = FaultSpec {
+            fail_prob: cell.fail_prob,
+            downtime: 2,
+            policy: RecoveryPolicy::Redistribute,
+            speed_drift: cell.speed_drift,
+            hazard_drift: cell.hazard_drift,
+            ..FaultSpec::clean()
+        };
+        let mut cs = sim.clone();
+        cs.net.link = cell.link;
+        let mut rng = Rng::new(ctx.seed ^ 0x2517);
+        let mut job = SweepJob::new(cs, l, &prov, ks.clone(), iters, &mut rng);
+        if cell.fail_prob > 0.0 || cell.speed_drift != 0.0 {
+            job = job.with_fault(fspec);
+        }
+        jobs.push(job);
+    }
+    let curves = simulated_curves(&jobs, default_threads());
+
+    let mut t1 = Table::new(
+        format!("Non-stationary Cimmino (n={n}): K* under drift, hazard and link contention"),
+        &[
+            "fail rate",
+            "speed drift",
+            "hazard drift",
+            "link",
+            "K* (sim)",
+            "peak speedup",
+            "ΔK* vs clean",
+            "K_BSF (clean, eq.14)",
+            "error vs eq.14",
+        ],
+    );
+    let w = (ks.len() / 10).max(5);
+    let mut clean_k = 0usize;
+    for (i, (cell, curve)) in cells.iter().zip(&curves).enumerate() {
+        let pk = crate::model::scalability::peak_knee(curve, w, 0.99).expect("non-empty curve");
+        if i == 0 {
+            clean_k = pk.k;
+        }
+        let err = crate::model::prediction_error(pk.k as f64, k_bsf);
+        t1.row(&[
+            format!("{:.2}", cell.fail_prob),
+            format!("{:.2}", cell.speed_drift),
+            format!("{:.1}", cell.hazard_drift),
+            if cell.ambient {
+                format!("{} (BSF_NET)", link_name(cell.link))
+            } else {
+                link_name(cell.link).into()
+            },
+            pk.k.to_string(),
+            format!("{:.1}", pk.speedup),
+            format!("{}", clean_k as i64 - pk.k as i64),
+            format!("{k_bsf:.0}"),
+            if i == 0 { format!("{err:.2}") } else { "—".into() },
+        ]);
+    }
+    ctx.save("nonstationary_boundary", &t1);
+
+    // Table 2: cost-optimal checkpoint interval vs failure rate at a
+    // fixed K near half the clean boundary. Every cell replays the same
+    // horizon under RecoveryPolicy::Checkpoint from its own pure stream;
+    // the Young column is the analytic argmin over real-valued intervals
+    // with the snapshot priced exactly like the DES save task (one
+    // downlink payload) and λ = the whole-cluster per-iteration death
+    // probability.
+    let k_fix = (k_bsf * 0.5).round().max(4.0) as usize;
+    let horizon = if ctx.quick { 24 } else { 48 };
+    let fails = [0.02, 0.05, 0.10];
+    let intervals = [1u64, 2, 4, 8, 16, 32];
+    let model = BsfModel::new(params);
+    let t_save = sim.net.p2p(spec.words_down);
+    let mut t2 = Table::new(
+        format!("Checkpoint/restart (Cimmino n={n}, K={k_fix}): mean DES iteration cost"),
+        &["fail rate", "iv=1", "iv=2", "iv=4", "iv=8", "iv=16", "iv=32", "iv* (DES)", "iv* (Young)"],
+    );
+    let mut tmpl = IterationTemplate::new(k_fix, l, &sim);
+    let mut scratch = FaultScratch::default();
+    let mut runs = Vec::new();
+    for (fi, &fail) in fails.iter().enumerate() {
+        let mut row = vec![format!("{fail:.2}")];
+        let mut best = (f64::INFINITY, intervals[0]);
+        for &iv in &intervals {
+            let fspec = FaultSpec {
+                fail_prob: fail,
+                downtime: 2,
+                policy: RecoveryPolicy::Checkpoint { interval: iv },
+                ..FaultSpec::clean()
+            };
+            let cell_root = Rng::new(ctx.seed ^ 0xC4E).split(((fi as u64) << 8) | iv);
+            let plan = FaultPlan::generate(&fspec, k_fix, horizon as u64, &cell_root.split(1));
+            let mut provider = prov.instance(k_fix as u64);
+            let mut rng = cell_root.split(2);
+            run_faulty_into(
+                &mut tmpl,
+                &plan,
+                l,
+                &sim,
+                horizon,
+                provider.as_mut(),
+                &mut rng,
+                &mut runs,
+                &mut scratch,
+            );
+            let mean = runs.iter().map(|t| t.total).sum::<f64>() / runs.len() as f64;
+            if mean < best.0 {
+                best = (mean, iv);
+            }
+            row.push(format!("{mean:.4e}"));
+        }
+        let lam = 1.0 - (1.0 - fail).powi(k_fix as i32);
+        let young = model.optimal_checkpoint_interval(k_fix, lam, t_save);
+        row.push(best.1.to_string());
+        row.push(format!("{young:.1}"));
+        t2.row(&row);
+    }
+    ctx.save("nonstationary_checkpoint", &t2);
+
+    Ok(vec![t1, t2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_and_checkpoint_tables() {
+        let ctx = ExperimentCtx { quick: true, ..Default::default() };
+        let mut tables = nonstationary(&ctx).unwrap();
+        let t2 = tables.pop().unwrap();
+        let t1 = tables.pop().unwrap();
+
+        assert_eq!(t1.len(), 7);
+        let csv = t1.to_csv();
+        let rows: Vec<Vec<&str>> = csv.lines().skip(1).map(|l| l.split(',').collect()).collect();
+        // The stationary per-edge row is the eq. 14 validation row.
+        assert_eq!(rows[0][3], "per-edge");
+        let err: f64 = rows[0][8].parse().unwrap();
+        assert!(err < 0.30, "stationary-cell DES error too large: {csv}");
+        // Link contention only adds comm time: the shared-link boundary
+        // must not exceed the per-edge one.
+        let k_clean: usize = rows[0][4].parse().unwrap();
+        let k_shared: usize = rows[1][4].parse().unwrap();
+        assert!(k_shared <= k_clean, "{csv}");
+        // The ambient (BSF_NET) row is bitwise the twin of the explicit
+        // row of the same link mode — same peak, same speedup string.
+        let twin = if rows[6][3].starts_with("shared") { &rows[1] } else { &rows[0] };
+        assert_eq!(rows[6][4], twin[4], "{csv}");
+        assert_eq!(rows[6][5], twin[5], "{csv}");
+        // Every row produced a real peak.
+        for r in &rows {
+            assert!(r[4].parse::<usize>().unwrap() >= 1, "{csv}");
+        }
+
+        assert_eq!(t2.len(), 3);
+        let csv2 = t2.to_csv();
+        let r2: Vec<Vec<&str>> = csv2.lines().skip(1).map(|l| l.split(',').collect()).collect();
+        // The cost-optimal interval must not grow with the failure rate —
+        // in the DES argmin and exactly in Young's analytic column.
+        let iv_lo: u64 = r2[0][7].parse().unwrap();
+        let iv_hi: u64 = r2[2][7].parse().unwrap();
+        assert!(iv_hi <= iv_lo, "iv* grew with failure rate: {csv2}");
+        let y_lo: f64 = r2[0][8].parse().unwrap();
+        let y_hi: f64 = r2[2][8].parse().unwrap();
+        assert!(y_hi < y_lo, "{csv2}");
+    }
+}

@@ -20,8 +20,8 @@ use anyhow::{anyhow, bail, Result};
 use bsf::config::{ClusterConfig, Settings};
 use bsf::coordinator::{calibrate_problem, LiveRunner};
 use bsf::experiments::{
-    ablation_collectives, ablation_masters, baselines, faulty, fig6, fig7, paper_jacobi_params,
-    sqrt_law, table2, table3, table4, ExperimentCtx, ProblemKind,
+    ablation_collectives, ablation_masters, baselines, faulty, fig6, fig7, nonstationary,
+    paper_jacobi_params, sqrt_law, table2, table3, table4, ExperimentCtx, ProblemKind,
 };
 use bsf::model::BsfModel;
 use bsf::util::{table::sci, Rng, Table};
@@ -35,7 +35,7 @@ fn main() {
 
 fn usage() -> String {
     "usage: bsf <experiment|run|calibrate|predict|sweep|trace> [--key=value ...]\n\
-     experiments: fig6 fig7 table2 table3 table4 sqrt-law faulty \
+     experiments: fig6 fig7 table2 table3 table4 sqrt-law faulty nonstationary \
      ablation-collectives ablation-masters baselines explorer all"
         .to_string()
 }
@@ -96,6 +96,7 @@ fn run_experiment(ctx: &ExperimentCtx, settings: &Settings, name: &str) -> Resul
         "table4" => table4(ctx, measured)?,
         "sqrt-law" => sqrt_law(ctx)?,
         "faulty" => faulty(ctx)?,
+        "nonstationary" => nonstationary(ctx)?,
         "ablation-collectives" => ablation_collectives(ctx)?,
         "ablation-masters" => ablation_masters(ctx)?,
         "baselines" => baselines(ctx)?,
@@ -127,6 +128,8 @@ fn run_experiment(ctx: &ExperimentCtx, settings: &Settings, name: &str) -> Resul
             all.extend(sqrt_law(ctx)?);
             eprintln!("== running faulty ==");
             all.extend(faulty(ctx)?);
+            eprintln!("== running nonstationary ==");
+            all.extend(nonstationary(ctx)?);
             eprintln!("== running ablations + baselines ==");
             all.extend(ablation_collectives(ctx)?);
             all.extend(ablation_masters(ctx)?);

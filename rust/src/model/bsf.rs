@@ -128,6 +128,65 @@ impl BsfModel {
     pub fn comm_bound_limit(k: usize) -> f64 {
         1.0 / ((k as f64).log2() + 1.0)
     }
+
+    /// `T_K` on a contended shared link: every `t_c` term of eq. (8) is
+    /// stretched by `factor ≥ 1` (the bandwidth-splitting slowdown of the
+    /// simulator's [`crate::net::LinkMode::Shared`] mode, aggregated into
+    /// one scalar). `factor == 1.0` routes through [`BsfModel::t_k`]
+    /// unchanged — bitwise identical to the per-edge model.
+    pub fn t_k_contended(&self, k: usize, factor: f64) -> f64 {
+        if factor == 1.0 {
+            return self.t_k(k);
+        }
+        assert!(factor > 0.0, "contention factor must be positive");
+        let mut p = self.p;
+        p.t_c *= factor;
+        BsfModel::new(p).t_k(k)
+    }
+
+    /// Eq. (14) under link contention: the boundary for `t_c` stretched
+    /// by `factor`. Since `c = t_c/(t_a ln2)` grows linearly with the
+    /// factor, the boundary can only shrink — contention always moves K*
+    /// down. `factor == 1.0` routes through [`BsfModel::k_bsf`] bitwise.
+    pub fn k_bsf_contended(&self, factor: f64) -> f64 {
+        if factor == 1.0 {
+            return self.k_bsf();
+        }
+        assert!(factor > 0.0, "contention factor must be positive");
+        let mut p = self.p;
+        p.t_c *= factor;
+        BsfModel::new(p).k_bsf()
+    }
+
+    /// Expected per-iteration cost of checkpoint/restart recovery at
+    /// interval `iv` (first-order model, failures rare and independent):
+    ///
+    /// ```text
+    /// E[T] = T_K + t_save/iv + λ · (iv − 1)/2 · T_K
+    /// ```
+    ///
+    /// — the amortised snapshot cost plus the expected rework (a failure
+    /// lands uniformly inside the interval, so on average `(iv − 1)/2`
+    /// iterations are rolled back and re-executed). With `λ = 0` and
+    /// `t_save = 0` this is exactly `T_K` (one float add of `0.0` twice —
+    /// bitwise identity is pinned in tests).
+    pub fn t_k_checkpoint(&self, k: usize, interval: u64, fail_rate: f64, t_save: f64) -> f64 {
+        let iv = interval.max(1) as f64;
+        let t_k = self.t_k(k);
+        t_k + t_save / iv + fail_rate * ((iv - 1.0) / 2.0) * t_k
+    }
+
+    /// Young's approximation of the cost-optimal checkpoint interval (in
+    /// iterations): the argmin of [`BsfModel::t_k_checkpoint`] over real
+    /// `iv`, `iv* = sqrt(2·t_save / (λ·T_K))`. Decreasing in the failure
+    /// rate `λ` — more failures, tighter checkpoints. Returns `+∞` when
+    /// `λ ≤ 0` (no failures: never snapshot).
+    pub fn optimal_checkpoint_interval(&self, k: usize, fail_rate: f64, t_save: f64) -> f64 {
+        if fail_rate <= 0.0 {
+            return f64::INFINITY;
+        }
+        (2.0 * t_save / (fail_rate * self.t_k(k))).sqrt()
+    }
 }
 
 #[cfg(test)]
@@ -252,6 +311,67 @@ mod tests {
     fn k_bsf_requires_positive_ta() {
         let p = CostParams { l: 100, t_c: 1.0, t_p: 0.0, t_map: 1.0, t_a: 0.0 };
         BsfModel::new(p).k_bsf();
+    }
+
+    #[test]
+    fn contention_factor_one_is_bitwise_identity() {
+        let m = BsfModel::new(table2(10_000));
+        for k in [1usize, 8, 64, 512] {
+            assert_eq!(m.t_k_contended(k, 1.0).to_bits(), m.t_k(k).to_bits());
+        }
+        assert_eq!(m.k_bsf_contended(1.0).to_bits(), m.k_bsf().to_bits());
+    }
+
+    #[test]
+    fn contention_shrinks_the_boundary() {
+        let m = BsfModel::new(table2(10_000));
+        let clean = m.k_bsf();
+        let mut prev = clean;
+        for factor in [2.0, 4.0, 8.0] {
+            let contended = m.k_bsf_contended(factor);
+            assert!(contended < prev, "factor={factor}: {contended} !< {prev}");
+            prev = contended;
+        }
+        // And T_K only grows under contention.
+        assert!(m.t_k_contended(64, 4.0) > m.t_k(64));
+    }
+
+    #[test]
+    fn checkpoint_cost_reduces_to_tk_without_failures() {
+        let m = BsfModel::new(table2(5_000));
+        for k in [1usize, 16, 64] {
+            let base = m.t_k(k);
+            assert_eq!(m.t_k_checkpoint(k, 8, 0.0, 0.0).to_bits(), base.to_bits());
+            // A pure snapshot cost amortises exactly.
+            let with_save = m.t_k_checkpoint(k, 4, 0.0, 1e-3);
+            assert!((with_save - (base + 1e-3 / 4.0)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn optimal_interval_decreases_with_failure_rate() {
+        let m = BsfModel::new(table2(5_000));
+        let t_save = m.p.t_c; // snapshot priced like one exchange
+        let lo = m.optimal_checkpoint_interval(16, 0.02, t_save);
+        let hi = m.optimal_checkpoint_interval(16, 0.08, t_save);
+        assert!(hi < lo, "λ=0.08 gives iv*={hi}, λ=0.02 gives iv*={lo}");
+        assert!(m.optimal_checkpoint_interval(16, 0.0, t_save).is_infinite());
+        // Young's iv* is the argmin of the expected-cost curve: the grid
+        // argmin of t_k_checkpoint must bracket it.
+        let grid: Vec<u64> = (1..=64).collect();
+        let argmin = *grid
+            .iter()
+            .min_by(|&&a, &&b| {
+                m.t_k_checkpoint(16, a, 0.05, t_save)
+                    .partial_cmp(&m.t_k_checkpoint(16, b, 0.05, t_save))
+                    .expect("finite")
+            })
+            .expect("non-empty grid");
+        let young = m.optimal_checkpoint_interval(16, 0.05, t_save);
+        assert!(
+            (argmin as f64 - young).abs() <= 1.5,
+            "grid argmin {argmin} vs Young {young:.2}"
+        );
     }
 
     #[test]

@@ -119,7 +119,7 @@ mod tests {
 
     #[test]
     fn t_c_from_postal_model() {
-        let net = NetworkParams { latency: 1e-5, tau_tr: 1e-8 };
+        let net = NetworkParams { latency: 1e-5, tau_tr: 1e-8, link: crate::net::LinkMode::PerEdge };
         let p = cal().params_with_net(&net, 1000, 1000);
         assert!((p.t_c - net.t_c(1000, 1000)).abs() < 1e-18);
     }

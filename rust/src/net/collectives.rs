@@ -162,7 +162,7 @@ mod tests {
 
     #[test]
     fn cost_scales_with_depth_and_payload() {
-        let net = NetworkParams { latency: 1e-5, tau_tr: 1e-8 };
+        let net = NetworkParams { latency: 1e-5, tau_tr: 1e-8, link: crate::net::LinkMode::PerEdge };
         let tree = CollectiveSchedule::broadcast(CollectiveAlgo::BinomialTree, 8);
         let lin = CollectiveSchedule::broadcast(CollectiveAlgo::Linear, 8);
         assert!(tree.cost(&net, 1000, 0.0) < lin.cost(&net, 1000, 0.0));

@@ -17,19 +17,46 @@
 pub mod collectives;
 pub mod transport;
 
+use std::sync::OnceLock;
+
 pub use collectives::{CollectiveAlgo, CollectiveSchedule};
+
+/// How concurrent transfers share the interconnect.
+///
+/// [`LinkMode::PerEdge`] is the classical postal model every existing
+/// configuration uses: each edge has its own full-bandwidth pipe, so a
+/// transfer's cost never depends on what else is in flight.
+/// [`LinkMode::Shared`] models a contended fabric: the `contenders`
+/// transfers of one collective round split the bandwidth term (`τ_tr`
+/// scales by the contender count; latency is per-message and unaffected).
+/// Zero-contention shared pricing (`contenders <= 1`) is **bitwise equal**
+/// to per-edge pricing — the contract the simulator's `comm_base`
+/// re-pricing relies on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LinkMode {
+    /// Independent full-bandwidth edges (the default; today's constants).
+    #[default]
+    PerEdge,
+    /// One shared link: concurrent transfers split bandwidth.
+    Shared,
+}
 
 /// Interconnect cost parameters.
 ///
 /// A point-to-point message of `w` f64 words costs `latency + w * tau_tr`
 /// seconds — the standard postal/Hockney model, which is exactly the shape
-/// the BSF metric assumes in eq. (20): `t_c = c_c·τ_tr + 2L`.
+/// the BSF metric assumes in eq. (20): `t_c = c_c·τ_tr + 2L`. The
+/// [`LinkMode`] field selects how *concurrent* transfers are priced; it
+/// defaults to [`LinkMode::PerEdge`], which reproduces today's per-edge
+/// constants bit for bit.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetworkParams {
     /// One-byte message latency `L` (seconds). Paper §6: `1.5e-5`.
     pub latency: f64,
     /// Per-f64-word transfer time `τ_tr` (seconds/word).
     pub tau_tr: f64,
+    /// Bandwidth sharing discipline for concurrent transfers.
+    pub link: LinkMode,
 }
 
 impl NetworkParams {
@@ -38,17 +65,45 @@ impl NetworkParams {
     /// `τ_tr` is recovered from Table 2's `t_c` at n = 16000:
     /// `t_c = 2(n·τ_tr + L)` ⇒ `τ_tr = (2.95e-3/2 − 1.5e-5)/16000 ≈ 9.13e-8`.
     pub fn tornado_susu() -> NetworkParams {
-        NetworkParams { latency: 1.5e-5, tau_tr: 9.13e-8 }
+        NetworkParams { latency: 1.5e-5, tau_tr: 9.13e-8, link: LinkMode::PerEdge }
     }
 
     /// An idealised fast fabric (for ablations): 1 µs latency, 10 GB/s.
     pub fn fast_fabric() -> NetworkParams {
-        NetworkParams { latency: 1e-6, tau_tr: 8.0 / 10e9 }
+        NetworkParams { latency: 1e-6, tau_tr: 8.0 / 10e9, link: LinkMode::PerEdge }
+    }
+
+    /// The same parameters under a different [`LinkMode`] (builder form).
+    pub fn with_link(mut self, link: LinkMode) -> NetworkParams {
+        self.link = link;
+        self
     }
 
     /// Cost of one point-to-point message of `words` f64 payload.
     pub fn p2p(&self, words: usize) -> f64 {
         self.latency + words as f64 * self.tau_tr
+    }
+
+    /// Cost of one point-to-point message when `contenders` transfers are
+    /// concurrently in flight on the same fabric.
+    ///
+    /// Per-edge mode ignores `contenders` and runs the *identical*
+    /// arithmetic as [`NetworkParams::p2p`] — bitwise equal, so existing
+    /// configurations cannot drift. Shared mode splits the bandwidth term
+    /// across the contenders (latency is per-message, not shared); a
+    /// single transfer (`contenders <= 1`) also routes through the
+    /// untouched [`NetworkParams::p2p`] arithmetic.
+    pub fn p2p_contended(&self, words: usize, contenders: u32) -> f64 {
+        match self.link {
+            LinkMode::PerEdge => self.p2p(words),
+            LinkMode::Shared => {
+                if contenders <= 1 {
+                    self.p2p(words)
+                } else {
+                    self.latency + words as f64 * self.tau_tr * contenders as f64
+                }
+            }
+        }
     }
 
     /// The BSF cost parameter `t_c` for a payload of `words` f64 each way:
@@ -60,13 +115,41 @@ impl NetworkParams {
     }
 }
 
+/// Parse a `BSF_NET` value into the default [`LinkMode`].
+///
+/// `None` (unset) and `per-edge` select [`LinkMode::PerEdge`]; `shared`
+/// selects [`LinkMode::Shared`]. Anything else panics listing the valid
+/// set — the same contract as `BSF_KERNEL`/`BSF_SCHED`/`BSF_FAULTS`, so
+/// typos fail loudly instead of silently running the wrong model.
+pub fn select_net(val: Option<&str>) -> LinkMode {
+    match val {
+        None | Some("per-edge") => LinkMode::PerEdge,
+        Some("shared") => LinkMode::Shared,
+        Some(other) => {
+            panic!("BSF_NET must be `shared` or `per-edge` (or unset), got `{other}`")
+        }
+    }
+}
+
+/// The process-wide default link mode, from the `BSF_NET` env switch.
+///
+/// Cached on first use. This is *only* a default for configurations that
+/// opt in to ambient selection (the `nonstationary` experiment's ambient
+/// row); every explicit `NetworkParams.link` field wins over it, and the
+/// struct default stays [`LinkMode::PerEdge`] so existing configurations
+/// are untouched even in a `BSF_NET=shared` environment.
+pub fn default_link_mode() -> LinkMode {
+    static MODE: OnceLock<LinkMode> = OnceLock::new();
+    *MODE.get_or_init(|| select_net(std::env::var("BSF_NET").ok().as_deref()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn p2p_postal_model() {
-        let p = NetworkParams { latency: 1e-5, tau_tr: 1e-8 };
+        let p = NetworkParams { latency: 1e-5, tau_tr: 1e-8, link: LinkMode::PerEdge };
         assert!((p.p2p(0) - 1e-5).abs() < 1e-18);
         assert!((p.p2p(1000) - (1e-5 + 1e-5)).abs() < 1e-12);
     }
@@ -74,7 +157,7 @@ mod tests {
     #[test]
     fn t_c_matches_eq20_shape() {
         // eq. (20): t_c = 2(n tau_tr + L) when both directions carry n words
-        let p = NetworkParams { latency: 1.5e-5, tau_tr: 9.13e-8 };
+        let p = NetworkParams { latency: 1.5e-5, tau_tr: 9.13e-8, link: LinkMode::PerEdge };
         let n = 16000;
         let tc = p.t_c(n, n);
         let eq20 = 2.0 * (n as f64 * p.tau_tr + p.latency);
@@ -91,5 +174,52 @@ mod tests {
         let p = NetworkParams::tornado_susu();
         let tc = p.t_c(10_000, 10_000);
         assert!((tc - 2.17e-3).abs() / 2.17e-3 < 0.2, "tc={tc}");
+    }
+
+    #[test]
+    fn per_edge_contention_is_bitwise_p2p() {
+        // PerEdge must ignore the contender count entirely: identical bits.
+        let p = NetworkParams::tornado_susu();
+        for contenders in [0u32, 1, 2, 7, 64] {
+            for words in [0usize, 1, 1000, 16_000] {
+                assert_eq!(
+                    p.p2p_contended(words, contenders).to_bits(),
+                    p.p2p(words).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shared_single_transfer_is_bitwise_p2p() {
+        // A lone transfer on a shared link runs the unscaled arithmetic.
+        let p = NetworkParams::tornado_susu().with_link(LinkMode::Shared);
+        for words in [0usize, 1, 1000, 16_000] {
+            assert_eq!(p.p2p_contended(words, 1).to_bits(), p.p2p(words).to_bits());
+            assert_eq!(p.p2p_contended(words, 0).to_bits(), p.p2p(words).to_bits());
+        }
+    }
+
+    #[test]
+    fn shared_contention_scales_bandwidth_term_only() {
+        let p = NetworkParams { latency: 1e-5, tau_tr: 1e-8, link: LinkMode::Shared };
+        // 4 contenders quadruple the transfer term, leave latency alone.
+        let t = p.p2p_contended(1000, 4);
+        assert!((t - (1e-5 + 4.0 * 1e-5)).abs() < 1e-15, "t={t}");
+        // Zero-payload messages are pure latency at any contention.
+        assert_eq!(p.p2p_contended(0, 64).to_bits(), p.latency.to_bits());
+    }
+
+    #[test]
+    fn select_net_parses_the_valid_set() {
+        assert_eq!(select_net(None), LinkMode::PerEdge);
+        assert_eq!(select_net(Some("per-edge")), LinkMode::PerEdge);
+        assert_eq!(select_net(Some("shared")), LinkMode::Shared);
+    }
+
+    #[test]
+    #[should_panic(expected = "BSF_NET must be `shared` or `per-edge`")]
+    fn select_net_rejects_unknown_values() {
+        select_net(Some("fast"));
     }
 }

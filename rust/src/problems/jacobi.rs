@@ -281,7 +281,11 @@ mod tests {
     fn k_bsf_jacobi_closed_form_eq24() {
         let n = 10_000usize;
         let tau_op = 1e-9;
-        let net = crate::net::NetworkParams { latency: 1.5e-5, tau_tr: 9.13e-8 };
+        let net = crate::net::NetworkParams {
+            latency: 1.5e-5,
+            tau_tr: 9.13e-8,
+            link: crate::net::LinkMode::PerEdge,
+        };
         let p = JacobiProblem::new(paper_system(64), 1e-12); // system size irrelevant here
         let mut cs = p.cost_spec();
         // rescale the spec to dimension n analytically

@@ -284,13 +284,18 @@ enum CommRule {
 
 /// The single message-pricing function: evaluated at build time and
 /// re-evaluated against each cell's params on every
-/// [`IterationTemplate::bind_cell`].
-fn comm_base(params: &SimParams, rule: CommRule) -> f64 {
+/// [`IterationTemplate::bind_cell`]. `contenders` is the number of
+/// transfers concurrently in flight in the message's collective round
+/// (structural — it follows from the tree shapes, so a payload rebind
+/// never changes it); under [`crate::net::LinkMode::Shared`] they split
+/// the link bandwidth, under the default per-edge model the count is
+/// ignored and the arithmetic is bitwise identical to the PR-6 constants.
+fn comm_base(params: &SimParams, rule: CommRule, contenders: u32) -> f64 {
     match rule {
-        CommRule::Down => params.net.p2p(params.words_down),
-        CommRule::Up => params.net.p2p(params.words_up),
-        CommRule::HalfUp => params.net.p2p(params.words_up) / 2.0,
-        CommRule::Words(w) => params.net.p2p(w as usize),
+        CommRule::Down => params.net.p2p_contended(params.words_down, contenders),
+        CommRule::Up => params.net.p2p_contended(params.words_up, contenders),
+        CommRule::HalfUp => params.net.p2p_contended(params.words_up, contenders) / 2.0,
+        CommRule::Words(w) => params.net.p2p_contended(w as usize, contenders),
     }
 }
 
@@ -312,6 +317,11 @@ struct DurTable {
     /// re-pricing input of [`IterationTemplate::bind_cell`]. Cold during
     /// replays (refresh reads only the evaluated bases).
     comm_rule: Vec<CommRule>,
+    /// Concurrent-transfer count per `Comm` entry, parallel to
+    /// `comm_base` — the [`comm_base`] contention input. Structural (it
+    /// follows from the collective round shapes), so `bind_cell` re-prices
+    /// through it but never rewrites it.
+    comm_contenders: Vec<u32>,
     mf_worker: Vec<u32>,
     mf_chunk: Vec<u32>,
     fold_n: Vec<u32>,
@@ -324,6 +334,7 @@ impl DurTable {
         self.fixed.clear();
         self.comm_base.clear();
         self.comm_rule.clear();
+        self.comm_contenders.clear();
         self.mf_worker.clear();
         self.mf_chunk.clear();
         self.fold_n.clear();
@@ -398,12 +409,14 @@ impl DurTable {
     }
 
     /// Append the next task as a message: the evaluated base cost plus
-    /// the [`CommRule`] that [`IterationTemplate::bind_cell`] re-evaluates
-    /// when the template is bound to a different cell.
-    fn push_comm(&mut self, base: f64, rule: CommRule) {
+    /// the [`CommRule`] (and its round's contender count) that
+    /// [`IterationTemplate::bind_cell`] re-evaluates when the template is
+    /// bound to a different cell.
+    fn push_comm(&mut self, base: f64, rule: CommRule, contenders: u32) {
         self.tag.push(DurTag::Comm);
         self.comm_base.push(base);
         self.comm_rule.push(rule);
+        self.comm_contenders.push(contenders);
     }
 }
 
@@ -468,6 +481,9 @@ pub struct GraphStructure {
     /// `FoldN` count column (fold counts are structural: they follow
     /// from the reduce tree, not from the cell's size).
     pub fold_counts: Vec<u32>,
+    /// `Comm` contender column (contention counts are structural: they
+    /// follow from the collective round shapes, not from the payload).
+    pub comm_contenders: Vec<u32>,
 }
 
 /// One sweep cell of a shape-class batch group: the duration payload
@@ -551,11 +567,18 @@ impl<'p> Build<'p> {
         id
     }
 
-    /// Message task priced by `rule` against the build params (and
+    /// Lone message task priced by `rule` against the build params (and
     /// re-priced against each cell's on [`IterationTemplate::bind_cell`]).
     fn comm(&mut self, res: u32, rule: CommRule, label: &'static str) -> TaskId {
+        self.comm_n(res, rule, 1, label)
+    }
+
+    /// Message task in a collective round of `contenders` concurrent
+    /// transfers: under a shared link they split the bandwidth (see
+    /// [`comm_base`]); per-edge pricing ignores the count.
+    fn comm_n(&mut self, res: u32, rule: CommRule, contenders: u32, label: &'static str) -> TaskId {
         let id = self.eng.task_labeled(res, 0.0, label);
-        self.durs.push_comm(comm_base(self.params, rule), rule);
+        self.durs.push_comm(comm_base(self.params, rule, contenders), rule, contenders);
         id
     }
 
@@ -590,8 +613,9 @@ impl<'p> Build<'p> {
                     holds.push(ready);
                 }
                 for round in &sched.rounds {
+                    let n = round.len() as u32;
                     for &(from, to) in round {
-                        let send = self.comm(res_of(from), CommRule::Up, "reduce-send");
+                        let send = self.comm_n(res_of(from), CommRule::Up, n, "reduce-send");
                         self.eng.dep(holds[from], send);
                         let relay = self.zero(res_of(to), "relay");
                         self.eng.dep(send, relay);
@@ -609,11 +633,14 @@ impl<'p> Build<'p> {
                 // receives); master then folds kk-1 times. The transfer
                 // cost is split into send/recv halves.
                 let mut recvs: Vec<TaskId> = Vec::with_capacity(kk);
+                // All kk gather transfers target the master at once — the
+                // flat gather is the maximally contended round.
+                let n = kk as u32;
                 for &(res, ready) in members {
-                    let send = self.comm(res, CommRule::HalfUp, "gather-send");
+                    let send = self.comm_n(res, CommRule::HalfUp, n, "gather-send");
                     self.eng.dep(ready, send);
                     // receive occupies the master for the other half of the cost
-                    let recv = self.comm(master_res, CommRule::HalfUp, "gather-recv");
+                    let recv = self.comm_n(master_res, CommRule::HalfUp, n, "gather-recv");
                     self.eng.dep(send, recv);
                     recvs.push(recv);
                 }
@@ -644,8 +671,9 @@ impl<'p> Build<'p> {
                     holds.push(ready);
                 }
                 for round in &sched.rounds {
+                    let n = round.len() as u32;
                     for &(from, to) in round {
-                        let send = self.comm(res_of(from), CommRule::Up, "reduce-send");
+                        let send = self.comm_n(res_of(from), CommRule::Up, n, "reduce-send");
                         self.eng.dep(holds[from], send);
                         let fold = self.push(res_of(to), DurKind::FoldN(1), "fold");
                         self.eng.dep(send, fold);
@@ -741,8 +769,9 @@ impl<'p> Build<'p> {
             holds.push(t);
         }
         for round in &sched.rounds {
+            let n = round.len() as u32;
             for &(from, to) in round {
-                let send = self.comm(res_of(from), CommRule::Up, "reduce-send");
+                let send = self.comm_n(res_of(from), CommRule::Up, n, "reduce-send");
                 self.eng.dep(holds[from], send);
                 let fold = self.push(res_of(to), DurKind::FoldN(1), "fold");
                 self.eng.dep(send, fold);
@@ -789,7 +818,7 @@ impl IterationTemplate {
     /// fresh [`IterationTemplate::new`] — pinned by the module tests — so
     /// pooled sweep workers can hold one template for their whole queue.
     pub fn reset_to(&mut self, k: usize, l: usize, params: &SimParams) {
-        self.build(k, l, params, None);
+        self.build(k, l, params, None, false);
     }
 
     /// Rebind the template to a new cell `(l, params)` of the **same**
@@ -824,7 +853,7 @@ impl IterationTemplate {
             self.l = l;
         }
         for i in 0..durs.comm_rule.len() {
-            durs.comm_base[i] = comm_base(params, durs.comm_rule[i]);
+            durs.comm_base[i] = comm_base(params, durs.comm_rule[i], durs.comm_contenders[i]);
         }
         self.eng.note_shape_rebind();
     }
@@ -861,8 +890,29 @@ impl IterationTemplate {
         dead: &[bool],
         policy: RecoveryPolicy,
     ) {
+        self.reset_to_faulty_ckpt(k, l, params, dead, policy, false);
+    }
+
+    /// [`IterationTemplate::reset_to_faulty`] with an explicit
+    /// checkpoint-save flag: when `ckpt_save` is set, a fixed-duration
+    /// state-save task (the master writing the approximation, priced as
+    /// one downlink payload) is appended *after* `post`. Because every
+    /// other task precedes `post`, the saved iteration's makespan is
+    /// exactly the unsaved one plus the save cost — and because the save
+    /// is a `Fixed` duration it draws no provider sample and no jitter,
+    /// so the rest of the draw stream is bitwise untouched (the
+    /// checkpoint-monotonicity test in `rust/tests/faults.rs` pins both).
+    pub fn reset_to_faulty_ckpt(
+        &mut self,
+        k: usize,
+        l: usize,
+        params: &SimParams,
+        dead: &[bool],
+        policy: RecoveryPolicy,
+        ckpt_save: bool,
+    ) {
         assert_eq!(dead.len(), k, "dead set must cover every worker");
-        self.build(k, l, params, Some((dead, policy)));
+        self.build(k, l, params, Some((dead, policy)), ckpt_save);
     }
 
     fn build(
@@ -871,6 +921,7 @@ impl IterationTemplate {
         l: usize,
         params: &SimParams,
         faults: Option<(&[bool], RecoveryPolicy)>,
+        ckpt_save: bool,
     ) {
         assert!(k >= 1, "need at least one worker");
         assert!(params.masters >= 1);
@@ -904,8 +955,9 @@ impl IterationTemplate {
             // node ids in the schedule: 0 = master 0, i = master i.
             let mut last_send_of: Vec<Option<TaskId>> = vec![None; m];
             for round in &master_tree.rounds {
+                let n = round.len() as u32;
                 for &(from, to) in round {
-                    let send = b.comm(from as u32, CommRule::Down, "bcast-master");
+                    let send = b.comm_n(from as u32, CommRule::Down, n, "bcast-master");
                     if let Some(prev) = last_send_of[from] {
                         b.eng.dep(prev, send);
                     }
@@ -937,8 +989,9 @@ impl IterationTemplate {
             // Master g cannot start before it has the approximation.
             let anchor = master_recv[g];
             for round in &sched.rounds {
+                let n = round.len() as u32;
                 for &(from, to) in round {
-                    let send = b.comm(res_of(from), CommRule::Down, "bcast");
+                    let send = b.comm_n(res_of(from), CommRule::Down, n, "bcast");
                     if let Some(prev) = last_send_of[from] {
                         b.eng.dep(prev, send);
                     }
@@ -1033,6 +1086,20 @@ impl IterationTemplate {
         let post = b.push(0, DurKind::Post, "post");
         b.eng.dep(final_fold, post);
 
+        // Checkpoint save: the master persists the approximation after the
+        // iteration completes. A `Fixed` duration (no provider call, no
+        // jitter draw) priced as one uncontended downlink payload — so a
+        // save-carrying iteration costs exactly `clean total + save cost`
+        // and the draw stream is untouched.
+        if ckpt_save {
+            let save = b.push(
+                0,
+                DurKind::Fixed(comm_base(params, CommRule::Down, 1)),
+                "ckpt-save",
+            );
+            b.eng.dep(post, save);
+        }
+
         self.bcast_tasks.extend(recv_x.iter().flatten().copied());
         self.map_tasks.extend(partial_ready.iter().flatten().copied());
         self.final_fold = final_fold;
@@ -1069,6 +1136,7 @@ impl IterationTemplate {
             dur_tags: self.durs.tag.iter().map(|&t| t as u8).collect(),
             mf_workers: self.durs.mf_worker.clone(),
             fold_counts: self.durs.fold_n.clone(),
+            comm_contenders: self.durs.comm_contenders.clone(),
         }
     }
 
@@ -1620,6 +1688,71 @@ mod tests {
             // the master alone pays at least the whole Map
             assert!(t.total >= 1.0, "{policy:?}: total={}", t.total);
         }
+    }
+
+    #[test]
+    fn shared_link_slows_collectives_and_k1_stays_bitwise() {
+        // Multi-transfer collective rounds split bandwidth under a shared
+        // link, so the iteration must slow down; a single worker's rounds
+        // all have one transfer, so shared pricing is bitwise per-edge.
+        let per_edge = params();
+        let mut shared = params();
+        shared.net.link = crate::net::LinkMode::Shared;
+        let l = 2048;
+        for k in [16usize, 24] {
+            let a = IterationTemplate::new(k, l, &per_edge)
+                .replay(&mut analytic(l), &mut Rng::new(7));
+            let b = IterationTemplate::new(k, l, &shared)
+                .replay(&mut analytic(l), &mut Rng::new(7));
+            assert!(b.total > a.total, "K={k}: shared={} per-edge={}", b.total, a.total);
+        }
+        let a = IterationTemplate::new(1, l, &per_edge).replay(&mut analytic(l), &mut Rng::new(7));
+        let b = IterationTemplate::new(1, l, &shared).replay(&mut analytic(l), &mut Rng::new(7));
+        assert_eq!(a, b, "K=1 has no concurrent transfers to contend");
+    }
+
+    #[test]
+    fn bind_cell_reprices_shared_link_round_trip() {
+        // Rebinding per-edge → shared → per-edge must route contention
+        // through the recorded contender column and return bitwise to the
+        // original pricing.
+        let per_edge = params();
+        let mut shared = params();
+        shared.net.link = crate::net::LinkMode::Shared;
+        let (k, l) = (12usize, 1024usize);
+        let mut tmpl = IterationTemplate::new(k, l, &per_edge);
+        let want = tmpl.replay(&mut analytic(l), &mut Rng::new(5));
+        let mut fresh_shared = IterationTemplate::new(k, l, &shared);
+        let want_shared = fresh_shared.replay(&mut analytic(l), &mut Rng::new(5));
+        tmpl.bind_cell(l, &shared);
+        let got_shared = tmpl.replay(&mut analytic(l), &mut Rng::new(5));
+        assert_eq!(got_shared, want_shared, "rebind must price like a fresh shared build");
+        tmpl.bind_cell(l, &per_edge);
+        let got = tmpl.replay(&mut analytic(l), &mut Rng::new(5));
+        assert_eq!(got, want, "round-trip rebind must restore per-edge pricing");
+    }
+
+    #[test]
+    fn ckpt_save_adds_exactly_the_fixed_save_cost() {
+        // The save task is appended after `post` with a Fixed duration, so
+        // a save-carrying build's makespan is bitwise `clean + save_cost`
+        // and no provider/rng draw moves.
+        let mut p = params();
+        p.jitter_comp = 0.04;
+        p.jitter_comm = 0.02;
+        let (k, l) = (8usize, 1024usize);
+        let dead = vec![false; k];
+        let policy = RecoveryPolicy::Checkpoint { interval: 4 };
+        let mut plain = IterationTemplate::new(k, l, &p);
+        plain.reset_to_faulty_ckpt(k, l, &p, &dead, policy, false);
+        let a = plain.replay(&mut analytic(l), &mut Rng::new(11));
+        let mut saving = IterationTemplate::new(k, l, &p);
+        saving.reset_to_faulty_ckpt(k, l, &p, &dead, policy, true);
+        let b = saving.replay(&mut analytic(l), &mut Rng::new(11));
+        assert_eq!(saving.task_count(), plain.task_count() + 1);
+        assert_eq!(b.post_done.to_bits(), a.post_done.to_bits());
+        let save_cost = p.net.p2p(p.words_down);
+        assert_eq!(b.total.to_bits(), (a.total + save_cost).to_bits());
     }
 
     #[test]

@@ -58,6 +58,20 @@ pub enum RecoveryPolicy {
     /// at the master. Falls back to [`RecoveryPolicy::MasterRecompute`]
     /// when a group has no survivors left.
     Redistribute,
+    /// Periodic checkpoint/restart: every `interval` iterations the master
+    /// saves the current approximation (modeled in the DES graph as a
+    /// state-save task appended after `post`; in the live runner as a
+    /// master-side snapshot of `x`). On a worker death the computation
+    /// rolls back to the last checkpoint and re-executes the lost
+    /// iterations; dead chunks themselves are recomputed on the master
+    /// (detection still happens at the gather deadline). The knob trades
+    /// steady-state save overhead against rollback re-execution — see
+    /// `model::bsf::optimal_checkpoint_interval` for the analytic optimum.
+    Checkpoint {
+        /// Iterations between state saves (min 1; a save fires at every
+        /// iteration `i` with `i % interval == 0`).
+        interval: u64,
+    },
 }
 
 /// Generator configuration for [`FaultPlan::generate`].
@@ -77,6 +91,17 @@ pub struct FaultSpec {
     pub downtime: u64,
     /// Recovery policy modeled for dead chunks.
     pub policy: RecoveryPolicy,
+    /// Lognormal sigma of the per-worker *speed drift trend* (0 = stationary).
+    /// Each worker draws one trend slope `τ_w` at plan construction (from a
+    /// dedicated split stream, so zero-drift plans draw nothing extra) and
+    /// its Map-time multiplier becomes `speed_w · exp(τ_w · iter)` — speeds
+    /// that wander mid-run instead of being fixed at iteration 0.
+    pub speed_drift: f64,
+    /// Exponential failure-hazard growth over the horizon (0 = stationary).
+    /// The per-iteration death probability becomes
+    /// `fail_prob · exp(hazard_drift · i / horizon)` — a cluster whose
+    /// failure rate rises (positive) or burns in (negative) as the job ages.
+    pub hazard_drift: f64,
 }
 
 impl FaultSpec {
@@ -89,6 +114,8 @@ impl FaultSpec {
             fail_prob: 0.0,
             downtime: 1,
             policy: RecoveryPolicy::MasterRecompute,
+            speed_drift: 0.0,
+            hazard_drift: 0.0,
         }
     }
 }
@@ -115,6 +142,7 @@ pub const MASTER_WORKER: usize = u32::MAX as usize;
 const SPEED_STREAM: u64 = 0x5BEE_D000 << 32;
 const FAIL_STREAM: u64 = 0xFA11_0000 << 32;
 const STRAGGLER_STREAM: u64 = 0x51AC_0000 << 32;
+const DRIFT_STREAM: u64 = 0xD21F_0000 << 32;
 
 /// A deterministic fault schedule for `k` workers over a finite horizon.
 ///
@@ -126,6 +154,9 @@ pub struct FaultPlan {
     k: usize,
     /// Static per-worker Map-time multiplier (1.0 = nominal speed).
     speeds: Vec<f64>,
+    /// Per-worker drift trend slope `τ_w` (empty = stationary speeds).
+    /// The iteration-`i` multiplier is `speeds[w] · exp(drift[w] · i)`.
+    drift: Vec<f64>,
     windows: Vec<FailureWindow>,
     straggler_prob: f64,
     straggler_factor: f64,
@@ -140,6 +171,7 @@ impl FaultPlan {
         FaultPlan {
             k,
             speeds: vec![1.0; k],
+            drift: Vec::new(),
             windows: Vec::new(),
             straggler_prob: 0.0,
             straggler_factor: 1.0,
@@ -160,13 +192,32 @@ impl FaultPlan {
             let mut r = root.split(SPEED_STREAM | w as u64);
             speeds.push(r.jitter(spec.speed_sigma)); // exactly 1.0 at sigma 0
         }
+        // Drift trends come from their own split stream so a zero-drift spec
+        // performs no extra draws anywhere — the speed and failure streams
+        // above stay bitwise identical to stationary plans.
+        let mut drift = Vec::new();
+        if spec.speed_drift != 0.0 {
+            drift.reserve(k);
+            for w in 0..k {
+                let mut r = root.split(DRIFT_STREAM | w as u64);
+                drift.push(spec.speed_drift * r.normal());
+            }
+        }
         let mut windows = Vec::new();
         if spec.fail_prob > 0.0 {
+            let h = horizon.max(1) as f64;
             for w in 0..k {
                 let mut r = root.split(FAIL_STREAM | w as u64);
                 let mut i = 0u64;
                 while i < horizon {
-                    if r.uniform() < spec.fail_prob {
+                    // Stationary hazard runs the exact PR-6 comparison; a
+                    // non-zero drift scales the hazard with job age.
+                    let p = if spec.hazard_drift != 0.0 {
+                        spec.fail_prob * (spec.hazard_drift * i as f64 / h).exp()
+                    } else {
+                        spec.fail_prob
+                    };
+                    if r.uniform() < p {
                         let until = i.saturating_add(spec.downtime.max(1));
                         windows.push(FailureWindow { worker: w, from: i, until });
                         i = until;
@@ -179,6 +230,7 @@ impl FaultPlan {
         FaultPlan {
             k,
             speeds,
+            drift,
             windows,
             straggler_prob: spec.straggler_prob,
             straggler_factor: spec.straggler_factor,
@@ -188,6 +240,7 @@ impl FaultPlan {
     }
 
     /// Explicit failure episode (test/experiment builder).
+    #[must_use]
     pub fn with_failure(mut self, worker: usize, from: u64, downtime: u64) -> FaultPlan {
         assert!(worker < self.k, "worker {worker} out of range 0..{}", self.k);
         self.windows.push(FailureWindow { worker, from, until: from.saturating_add(downtime.max(1)) });
@@ -195,14 +248,28 @@ impl FaultPlan {
     }
 
     /// Explicit per-worker speed multiplier (test/experiment builder).
+    #[must_use]
     pub fn with_speed(mut self, worker: usize, mult: f64) -> FaultPlan {
         assert!(mult > 0.0, "speed multiplier must be positive");
         self.speeds[worker] = mult;
         self
     }
 
+    /// Explicit per-worker drift trend slope (test/experiment builder):
+    /// the worker's multiplier becomes `speed · exp(trend · iter)`.
+    #[must_use]
+    pub fn with_speed_drift(mut self, worker: usize, trend: f64) -> FaultPlan {
+        assert!(worker < self.k, "worker {worker} out of range 0..{}", self.k);
+        if self.drift.is_empty() {
+            self.drift.resize(self.k, 0.0);
+        }
+        self.drift[worker] = trend;
+        self
+    }
+
     /// Straggler configuration (test/experiment builder). Draws come from
     /// pure child streams of `root`.
+    #[must_use]
     pub fn with_stragglers(mut self, prob: f64, factor: f64, root: &Rng) -> FaultPlan {
         self.straggler_prob = prob;
         self.straggler_factor = factor;
@@ -211,6 +278,7 @@ impl FaultPlan {
     }
 
     /// Recovery policy for dead chunks (test/experiment builder).
+    #[must_use]
     pub fn with_policy(mut self, policy: RecoveryPolicy) -> FaultPlan {
         self.policy = policy;
         self
@@ -237,31 +305,44 @@ impl FaultPlan {
     }
 
     /// True when the plan changes nothing: no failure windows, no
-    /// stragglers, every speed exactly 1.0. `run_faulty_into` then takes
-    /// the untouched clean path (unless [`faults_audit`] forces the faulty
-    /// machinery, which must still be bitwise identical).
+    /// stragglers, no drift, not checkpointing, every speed exactly 1.0.
+    /// `run_faulty_into` then takes the untouched clean path (unless
+    /// [`faults_audit`] forces the faulty machinery, which must still be
+    /// bitwise identical).
     pub fn is_empty(&self) -> bool {
         self.windows.is_empty()
             && self.straggler_prob == 0.0
+            && self.drift.is_empty()
+            && !matches!(self.policy, RecoveryPolicy::Checkpoint { .. })
             && self.speeds.iter().all(|&s| s == 1.0)
     }
 
     /// True when per-iteration state never changes (no failure windows, no
-    /// straggler draws) — only static heterogeneous speeds, so the clean
-    /// graph and the clean replication/lane batching machinery stay valid
-    /// under the wrapped provider.
+    /// straggler draws, no drift trends, no periodic checkpoint tasks) —
+    /// only static heterogeneous speeds, so the clean graph and the clean
+    /// replication/lane batching machinery stay valid under the wrapped
+    /// provider.
     pub fn is_static(&self) -> bool {
-        self.windows.is_empty() && self.straggler_prob == 0.0
+        self.windows.is_empty()
+            && self.straggler_prob == 0.0
+            && self.drift.is_empty()
+            && !matches!(self.policy, RecoveryPolicy::Checkpoint { .. })
     }
 
-    /// Map-time multiplier for `worker` at `iter`: static speed × straggler
-    /// draw. Pure in `(self, worker, iter)`. Out-of-range workers (the
-    /// [`MASTER_WORKER`] recovery sentinel) run at nominal speed.
+    /// Map-time multiplier for `worker` at `iter`: static speed × drift
+    /// trend × straggler draw. Pure in `(self, worker, iter)`.
+    /// Out-of-range workers (the [`MASTER_WORKER`] recovery sentinel) run
+    /// at nominal speed.
     pub fn mult(&self, worker: usize, iter: u64) -> f64 {
         if worker >= self.k {
             return 1.0;
         }
         let mut m = self.speeds[worker];
+        if let Some(&trend) = self.drift.get(worker) {
+            if trend != 0.0 {
+                m *= (trend * iter as f64).exp();
+            }
+        }
         if self.straggler_prob > 0.0 {
             let mut r = self.straggler_root.split((iter << 32) | worker as u64);
             if r.uniform() < self.straggler_prob {
@@ -338,11 +419,21 @@ pub struct FaultScratch {
 /// * Static plan (speeds only): clean graph + wrapped provider; the
 ///   replication / lane-batching machinery still applies because every
 ///   iteration's multipliers are identical.
-/// * Failure windows or stragglers: per-iteration scalar replays; the
-///   graph is rebuilt (via [`IterationTemplate::reset_to_faulty`]) only on
-///   iterations where the dead set actually changes, so long failure
-///   windows replay through the engine's order cache like any other
-///   template.
+/// * Failure windows, stragglers, drift, or checkpointing: per-iteration
+///   scalar replays; the graph is rebuilt (via
+///   [`IterationTemplate::reset_to_faulty_ckpt`]) only on iterations where
+///   the dead set or the save-this-iteration flag actually changes, so
+///   long failure windows replay through the engine's order cache like
+///   any other template.
+///
+/// Under [`RecoveryPolicy::Checkpoint`], iterations at `i % interval == 0`
+/// carry a state-save task (a fixed-duration append after `post`, so the
+/// saved iteration's total is exactly `clean + save_cost`), and the first
+/// iteration of each failure window additionally charges the rollback:
+/// the `i % interval` iterations since the last checkpoint are re-executed
+/// (extra replays under the post-death graph, folded into that
+/// iteration's `total`). The extra replays consume jitter draws like any
+/// real iteration — the run stays a pure function of `(plan, rng)`.
 #[allow(clippy::too_many_arguments)]
 pub fn run_faulty_into(
     tmpl: &mut IterationTemplate,
@@ -368,16 +459,43 @@ pub fn run_faulty_into(
         return;
     }
     out.clear();
+    let ckpt_interval = match plan.policy() {
+        RecoveryPolicy::Checkpoint { interval } => Some(interval.max(1)),
+        _ => None,
+    };
     let mut built = false;
+    let mut cur_save = false;
     for i in 0..iters {
         plan.dead_into(i as u64, &mut scratch.next);
-        if !built || scratch.next != scratch.cur {
-            tmpl.reset_to_faulty(k, l, params, &scratch.next, plan.policy());
+        let save_now = ckpt_interval.is_some_and(|iv| i as u64 % iv == 0);
+        // A rollback fires on the first iteration of a failure window:
+        // some worker is dead now that was alive when the graph was last
+        // current. (At i = 0 `cur` is still empty; `lost` is 0 there, so
+        // the branch is harmless either way.)
+        let new_death = ckpt_interval.is_some()
+            && scratch
+                .next
+                .iter()
+                .enumerate()
+                .any(|(w, &d)| d && !scratch.cur.get(w).copied().unwrap_or(false));
+        if !built || scratch.next != scratch.cur || save_now != cur_save {
+            tmpl.reset_to_faulty_ckpt(k, l, params, &scratch.next, plan.policy(), save_now);
             std::mem::swap(&mut scratch.cur, &mut scratch.next);
+            cur_save = save_now;
             built = true;
         }
         let mut fc = FaultyCost::new(provider, plan, i as u64);
         out.push(tmpl.replay(&mut fc, rng));
+        if new_death {
+            // Roll back to the last checkpoint: re-execute the iterations
+            // lost since it, under the current (post-death) graph, and
+            // charge them to this iteration's makespan.
+            let lost = ckpt_interval.map_or(0, |iv| i as u64 % iv);
+            for _ in 0..lost {
+                let redo = tmpl.replay(&mut fc, rng);
+                out.last_mut().expect("just pushed").total += redo.total;
+            }
+        }
     }
 }
 
@@ -443,6 +561,8 @@ mod tests {
             fail_prob: 0.05,
             downtime: 2,
             policy: RecoveryPolicy::Redistribute,
+            speed_drift: 0.01,
+            hazard_drift: 1.0,
         };
         let root = Rng::new(7);
         let a = FaultPlan::generate(&spec, 12, 50, &root);
@@ -451,9 +571,102 @@ mod tests {
         for (x, y) in a.speeds().iter().zip(b.speeds()) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+        for (w, i) in (0..12).flat_map(|w| (0..50u64).map(move |i| (w, i))) {
+            assert_eq!(a.mult(w, i).to_bits(), b.mult(w, i).to_bits());
+        }
         // and a fresh root with the same seed agrees too
         let c = FaultPlan::generate(&spec, 12, 50, &Rng::new(7));
         assert_eq!(a.windows(), c.windows());
+    }
+
+    #[test]
+    fn zero_drift_generation_is_bitwise_stationary() {
+        // Adding the drift knobs at zero must not perturb any existing
+        // draw: speeds, windows, and mult all stay bitwise identical to a
+        // spec that predates the fields.
+        let base = FaultSpec {
+            speed_sigma: 0.2,
+            straggler_prob: 0.1,
+            straggler_factor: 4.0,
+            fail_prob: 0.05,
+            downtime: 2,
+            policy: RecoveryPolicy::MasterRecompute,
+            speed_drift: 0.0,
+            hazard_drift: 0.0,
+        };
+        let root = Rng::new(9);
+        let plan = FaultPlan::generate(&base, 10, 60, &root);
+        let drifted = FaultPlan::generate(
+            &FaultSpec { speed_drift: 0.05, hazard_drift: 2.0, ..base },
+            10,
+            60,
+            &root,
+        );
+        // The stationary plan's speeds are untouched by the drift stream.
+        for (x, y) in plan.speeds().iter().zip(drifted.speeds()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Hazard drift only re-weights windows; same streams, same shape.
+        assert_eq!(plan.k(), drifted.k());
+        // Drifted mult actually varies with the iteration index.
+        let varies = (0..10).any(|w| {
+            drifted.mult(w, 0).to_bits() != drifted.mult(w, 40).to_bits()
+        });
+        assert!(varies, "non-zero drift must move multipliers over iterations");
+        // Stationary mult does not drift (modulo straggler draws, disabled here).
+        let still = FaultPlan::generate(
+            &FaultSpec { straggler_prob: 0.0, ..base },
+            10,
+            60,
+            &root,
+        );
+        for w in 0..10 {
+            assert_eq!(still.mult(w, 0).to_bits(), still.mult(w, 40).to_bits());
+        }
+    }
+
+    #[test]
+    fn hazard_drift_raises_late_failure_density() {
+        // With a strongly rising hazard, failures should cluster late.
+        let spec = FaultSpec {
+            fail_prob: 0.02,
+            downtime: 1,
+            hazard_drift: 4.0,
+            ..FaultSpec::clean()
+        };
+        let plan = FaultPlan::generate(&spec, 64, 200, &Rng::new(12));
+        let (mut early, mut late) = (0usize, 0usize);
+        for w in plan.windows() {
+            if w.from < 100 {
+                early += 1;
+            } else {
+                late += 1;
+            }
+        }
+        assert!(
+            late > early,
+            "rising hazard must concentrate failures late: early={early} late={late}"
+        );
+    }
+
+    #[test]
+    fn checkpoint_plan_is_neither_empty_nor_static() {
+        let plan = FaultPlan::clean(8).with_policy(RecoveryPolicy::Checkpoint { interval: 4 });
+        assert!(!plan.is_empty());
+        assert!(!plan.is_static());
+    }
+
+    #[test]
+    fn drifted_plan_is_not_static() {
+        let plan = FaultPlan::clean(8).with_speed_drift(3, 0.01);
+        assert!(!plan.is_empty());
+        assert!(!plan.is_static());
+        // drift compounds multiplicatively over iterations
+        let m1 = plan.mult(3, 1);
+        let m10 = plan.mult(3, 10);
+        assert!(m10 > m1 && m1 > 1.0);
+        // other workers stay nominal
+        assert_eq!(plan.mult(2, 10), 1.0);
     }
 
     #[test]

@@ -102,6 +102,8 @@ fn pooled_faulty_sweeps_bitwise_equal_serial() {
         fail_prob: 0.05,
         downtime: 2,
         policy: RecoveryPolicy::Redistribute,
+        speed_drift: 0.0,
+        hazard_drift: 0.0,
     };
     let mk_jobs = |rng: &mut Rng| {
         vec![
@@ -138,6 +140,174 @@ fn pooled_faulty_sweeps_bitwise_equal_serial() {
 }
 
 #[test]
+fn pooled_nonstationary_sweeps_bitwise_equal_serial() {
+    // Time-varying plans — drifting speeds, a rising hazard, and
+    // checkpoint/restart replay loops — must ride the same per-K split
+    // streams as the stationary fault plane: thread count moves no bits.
+    let l = 1_200;
+    let mut params = SimParams::new(l, l);
+    params.jitter_comp = 0.08;
+    let prov = AnalyticCost { t_map_full: 0.2, l, t_a: 1e-6, t_p: 1e-5 };
+    let ks: Vec<usize> = (1..=16).collect();
+    let drift = FaultSpec { speed_drift: 0.03, ..FaultSpec::clean() };
+    let hazard = FaultSpec {
+        fail_prob: 0.03,
+        hazard_drift: 2.0,
+        downtime: 2,
+        policy: RecoveryPolicy::Redistribute,
+        ..FaultSpec::clean()
+    };
+    let ckpt = FaultSpec {
+        fail_prob: 0.05,
+        downtime: 2,
+        policy: RecoveryPolicy::Checkpoint { interval: 3 },
+        ..FaultSpec::clean()
+    };
+    let mk_jobs = |rng: &mut Rng| {
+        vec![
+            SweepJob::new(params.clone(), l, &prov, ks.clone(), 4, rng).with_fault(drift),
+            SweepJob::new(params.clone(), l, &prov, ks.clone(), 4, rng).with_fault(hazard),
+            SweepJob::new(params.clone(), l, &prov, ks.clone(), 4, rng).with_fault(ckpt),
+        ]
+    };
+    let reference = simulated_curves(&mk_jobs(&mut Rng::new(0xFA6)), 1);
+    for threads in [1usize, 4, 8] {
+        let got = simulated_curves(&mk_jobs(&mut Rng::new(0xFA6)), threads);
+        assert_eq!(reference.len(), got.len());
+        for (sweep, (want, have)) in reference.iter().zip(&got).enumerate() {
+            assert_eq!(want.len(), have.len());
+            for (a, b) in want.iter().zip(have.iter()) {
+                assert_eq!(a.k, b.k, "threads={threads}");
+                assert_eq!(
+                    a.t_k.to_bits(),
+                    b.t_k.to_bits(),
+                    "threads={threads} sweep={sweep} K={}: t_k {} vs {}",
+                    a.k,
+                    a.t_k,
+                    b.t_k
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_drift_spec_is_the_stationary_plan() {
+    // The new drift knobs at zero must change nothing: generated plans
+    // stay static, draw no extra randomness, and static replays still
+    // ride the clean graph (same scheduler counter activity).
+    let (k, l) = (8usize, 1_024usize);
+    let mut params = SimParams::new(l, l);
+    params.jitter_comp = 0.05;
+    let root = Rng::new(0xFA4);
+
+    // A fully clean spec generates the exact empty plan: unit speeds to
+    // the bit, no windows, classified empty.
+    let p0 = FaultPlan::generate(&FaultSpec::clean(), k, 50, &root);
+    assert!(p0.is_empty());
+    assert!(p0.speeds().iter().all(|s| s.to_bits() == 1.0f64.to_bits()));
+
+    // Heterogeneous but stationary: static classification, and the
+    // multiplier is time-invariant to the bit.
+    let spec = FaultSpec { speed_sigma: 0.2, ..FaultSpec::clean() };
+    let plan = FaultPlan::generate(&spec, k, 50, &root);
+    assert!(!plan.is_empty());
+    assert!(plan.is_static(), "no failures, no drift, no checkpoint ⇒ static");
+    for w in 0..k {
+        assert_eq!(
+            plan.mult(w, 0).to_bits(),
+            plan.mult(w, 49).to_bits(),
+            "worker {w}: stationary multiplier drifted"
+        );
+    }
+
+    // The static fast path replays the clean graph: identical scheduler
+    // cache activity to a clean template run of the same shape.
+    let mut prov_clean = AnalyticCost { t_map_full: 0.2, l, t_a: 1e-6, t_p: 1e-5 };
+    let mut prov_faulty = prov_clean.clone();
+    let mut clean = IterationTemplate::new(k, l, &params);
+    let mut want = Vec::new();
+    clean.run_into(7, &mut prov_clean, &mut Rng::new(0xFA5), &mut want);
+    let mut faulty = IterationTemplate::new(k, l, &params);
+    let mut got = Vec::new();
+    let mut scratch = FaultScratch::default();
+    run_faulty_into(
+        &mut faulty,
+        &plan,
+        l,
+        &params,
+        7,
+        &mut prov_faulty,
+        &mut Rng::new(0xFA5),
+        &mut got,
+        &mut scratch,
+    );
+    assert_eq!(want.len(), got.len());
+    assert_eq!(
+        clean.sched_counters(),
+        faulty.sched_counters(),
+        "static plan left the clean-graph path"
+    );
+}
+
+#[test]
+fn checkpoint_without_failures_costs_exactly_the_save_task() {
+    // A Checkpoint plan with zero failures must replay the clean timeline
+    // bitwise, except that every save iteration's total grows by exactly
+    // the one Fixed save task (one downlink payload) — a single float
+    // add, no rng perturbation anywhere.
+    let (k, l) = (6usize, 512usize);
+    let mut params = SimParams::new(l, l);
+    params.jitter_comp = 0.08;
+    params.jitter_comm = 0.05;
+    let iters = 9;
+    let interval = 4u64;
+    let mut prov_clean = AnalyticCost { t_map_full: 0.2, l, t_a: 1e-6, t_p: 1e-5 };
+    let mut prov_ckpt = prov_clean.clone();
+
+    let mut clean = IterationTemplate::new(k, l, &params);
+    let mut want = Vec::new();
+    clean.run_into(iters, &mut prov_clean, &mut Rng::new(0xFA7), &mut want);
+
+    let plan =
+        FaultPlan::clean(k).with_policy(RecoveryPolicy::Checkpoint { interval });
+    assert!(!plan.is_empty() && !plan.is_static(), "checkpointing is time-varying");
+    let mut ckpt = IterationTemplate::new(k, l, &params);
+    let mut got = Vec::new();
+    let mut scratch = FaultScratch::default();
+    run_faulty_into(
+        &mut ckpt,
+        &plan,
+        l,
+        &params,
+        iters,
+        &mut prov_ckpt,
+        &mut Rng::new(0xFA7),
+        &mut got,
+        &mut scratch,
+    );
+
+    assert_eq!(want.len(), got.len());
+    let save_cost = params.net.p2p(l);
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        if i as u64 % interval == 0 {
+            // Everything up to post is untouched; the total grows by the
+            // save task alone.
+            assert_eq!(a.post_done.to_bits(), b.post_done.to_bits(), "save iter {i}");
+            assert_eq!(
+                b.total.to_bits(),
+                (a.total + save_cost).to_bits(),
+                "save iter {i}: {} vs {} + {save_cost}",
+                b.total,
+                a.total
+            );
+        } else {
+            assert_bitwise_eq(a, b, &format!("non-save iter {i}"));
+        }
+    }
+}
+
+#[test]
 fn failure_injection_never_speeds_up_the_sweep() {
     // Pure failure injection (unit speeds, no stragglers): recovery only
     // adds Map tasks and comm edges to the timeline, so every K-point's
@@ -153,6 +323,8 @@ fn failure_injection_never_speeds_up_the_sweep() {
         fail_prob: 0.08,
         downtime: 2,
         policy: RecoveryPolicy::MasterRecompute,
+        speed_drift: 0.0,
+        hazard_drift: 0.0,
     };
     let jobs = vec![
         SweepJob::new(params.clone(), l, &prov, ks.clone(), 5, &mut Rng::new(9)),
