@@ -1,0 +1,145 @@
+//! Bench: what fault tolerance costs — fleet vs serial on the same grid.
+//!
+//! Three cells, one grid (paper-params Jacobi, pooled sweep queue):
+//!
+//! 1. **serial** — the single-process ground truth (`serial_times`);
+//! 2. **clean fleet** — coordinator + 3 workers over localhost TCP, no
+//!    faults: protocol + scheduling overhead only;
+//! 3. **chaos fleet** — same, with one worker killed mid-lease:
+//!    measures the re-lease recovery cost.
+//!
+//! Every fleet run **asserts** its result table is bitwise identical to
+//! the serial baseline — this bench is also an end-to-end determinism
+//! gate. Headline figures land in `BENCH_ci.json`:
+//! `fleet_re_lease_overhead` (re-executed cells / total cells) and
+//! `fleet_duplicate_completions`.
+//!
+//! ```text
+//! cargo bench --bench fleet_overhead
+//! ```
+
+use std::net::TcpListener;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use bsf::experiments::ProblemKind;
+use bsf::fleet::{
+    run_worker, serial_times, serve, FleetConfig, FleetGrid, FleetReport, FleetSpec, WorkerChaos,
+    WorkerConfig,
+};
+use bsf::util::bench::{human_time, CiReport};
+
+fn spec() -> FleetSpec {
+    FleetSpec {
+        problem: ProblemKind::Jacobi,
+        sizes: vec![1_500, 5_000],
+        iters: 3,
+        seed: 0xB5F,
+        quick: true,
+        jitter: 0.05,
+    }
+}
+
+fn cfg() -> FleetConfig {
+    FleetConfig {
+        heartbeat: Duration::from_millis(50),
+        grace: 100,
+        min_deadline: Duration::from_secs(20),
+        safety: 50.0,
+        lease_target: Duration::from_millis(200),
+        max_lease_cells: 16,
+        idle_timeout: Duration::from_secs(60),
+    }
+}
+
+fn run_fleet(chaos: &[WorkerChaos]) -> (Vec<f64>, FleetReport) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let grid = FleetGrid::new(spec()).expect("grid");
+    let cfg = cfg();
+    let coord = thread::spawn(move || serve(&grid, &cfg, listener).expect("serve"));
+    let workers: Vec<_> = chaos
+        .iter()
+        .enumerate()
+        .map(|(i, &ch)| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut wc = WorkerConfig::new(addr, format!("bench-w{i}"));
+                wc.connect_base = Duration::from_millis(1);
+                wc.connect_attempts = 8;
+                wc.chaos = ch;
+                run_worker(&wc).expect("worker")
+            })
+        })
+        .collect();
+    let out = coord.join().expect("coordinator thread");
+    for w in workers {
+        w.join().expect("worker thread");
+    }
+    out
+}
+
+fn assert_bitwise(times: &[f64], truth: &[f64], label: &str) {
+    assert_eq!(times.len(), truth.len(), "{label}: cell count");
+    for (r, (a, b)) in times.iter().zip(truth).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: cell {r} diverged");
+    }
+}
+
+fn main() {
+    let mut ci = CiReport::new("fleet_overhead");
+    println!("== fleet_overhead: fault tolerance cost vs serial ==");
+
+    let grid = FleetGrid::new(spec()).expect("grid");
+    let t0 = Instant::now();
+    let truth = serial_times(&grid);
+    let serial_wall = t0.elapsed().as_secs_f64();
+    println!("serial: {} cells in {}", truth.len(), human_time(serial_wall));
+    ci.metric("fleet_serial_wall_sec", serial_wall);
+
+    let t0 = Instant::now();
+    let (times, report) = run_fleet(&[WorkerChaos::default(); 3]);
+    let clean_wall = t0.elapsed().as_secs_f64();
+    assert_bitwise(&times, &truth, "clean fleet");
+    assert_eq!(report.duplicate_mismatches, 0, "{report:?}");
+    let overhead = report.re_executed_cells as f64 / report.cells.max(1) as f64;
+    println!(
+        "clean fleet (3 workers): {} ({} leases, {} re-leases) — bitwise == serial",
+        human_time(clean_wall),
+        report.leases_issued,
+        report.releases
+    );
+    ci.metric("fleet_clean_wall_sec", clean_wall);
+    ci.metric("fleet_clean_vs_serial", clean_wall / serial_wall.max(1e-9));
+    ci.metric("fleet_re_lease_overhead", overhead);
+    ci.metric("fleet_duplicate_completions", report.duplicate_completions as f64);
+
+    let t0 = Instant::now();
+    let chaos = [
+        WorkerChaos::default(),
+        WorkerChaos::default(),
+        WorkerChaos { kill_after_cells: Some(4), ..Default::default() },
+    ];
+    let (times, report) = run_fleet(&chaos);
+    let chaos_wall = t0.elapsed().as_secs_f64();
+    assert_bitwise(&times, &truth, "chaos fleet");
+    assert!(report.releases >= 1, "killed worker must force a re-lease: {report:?}");
+    assert_eq!(report.duplicate_mismatches, 0, "{report:?}");
+    let chaos_overhead = report.re_executed_cells as f64 / report.cells.max(1) as f64;
+    println!(
+        "chaos fleet (1 worker killed mid-lease): {} ({} cells re-executed, {:.1}% overhead) \
+         — bitwise == serial",
+        human_time(chaos_wall),
+        report.re_executed_cells,
+        100.0 * chaos_overhead
+    );
+    ci.metric("fleet_chaos_wall_sec", chaos_wall);
+    ci.metric("fleet_chaos_re_lease_overhead", chaos_overhead);
+    ci.metric("fleet_chaos_duplicate_completions", report.duplicate_completions as f64);
+
+    if let Err(e) = ci.save("BENCH_ci.json") {
+        eprintln!("warning: could not write BENCH_ci.json: {e}");
+    } else {
+        println!("machine-readable figures merged into BENCH_ci.json");
+    }
+}

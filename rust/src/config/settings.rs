@@ -102,6 +102,23 @@ impl Settings {
         }
     }
 
+    /// Comma-separated usize list lookup with default (used for size
+    /// grids like `--sizes=1500,5000`). Empty entries are rejected so a
+    /// trailing comma fails loudly instead of silently shrinking a grid.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .with_context(|| format!("config {key}={v}: '{p}' is not an integer"))
+                })
+                .collect(),
+        }
+    }
+
     /// bool lookup with default (`true/false/1/0/yes/no`).
     pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
         match self.get(key) {
@@ -220,6 +237,18 @@ mod tests {
         assert_eq!(s.usize_or("n", 0).unwrap(), 10);
         assert!(s.bool_or("b", false).unwrap());
         assert!(s.f64_or("b", 0.0).is_err());
+    }
+
+    #[test]
+    fn usize_list_parses_and_rejects() {
+        let mut s = Settings::new();
+        assert_eq!(s.usize_list_or("sizes", &[1, 2]).unwrap(), vec![1, 2]);
+        s.merge_str("sizes = 1500, 5000,16000\n").unwrap();
+        assert_eq!(s.usize_list_or("sizes", &[]).unwrap(), vec![1500, 5000, 16000]);
+        s.merge_str("bad = 1,,2\n").unwrap();
+        assert!(s.usize_list_or("bad", &[]).is_err());
+        s.merge_str("worse = 1,x\n").unwrap();
+        assert!(s.usize_list_or("worse", &[]).is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::net::transport::{
 use crate::net::NetworkParams;
 use crate::runtime::KernelRuntime;
 use crate::simulator::RecoveryPolicy;
-use crate::util::Timer;
+use crate::util::{Backoff, Timer};
 
 /// Fault telemetry accumulated by the live master loop. All zeros on a
 /// clean run (and always for [`run_sequential`]).
@@ -84,6 +84,12 @@ pub struct RunReport {
     /// problem's [`crate::coordinator::CostSpec`] (zero for
     /// [`run_sequential`]).
     pub gather_timeout: Duration,
+    /// Uplinks the gather discarded as late or stale (mirrors
+    /// [`FaultCounters::late_uplinks_dropped`]), surfaced at the top level
+    /// **unconditionally**: clean and sequential runs report an explicit
+    /// zero rather than omitting the figure, so downstream telemetry can
+    /// difference runs without special-casing the clean path.
+    pub late_uplinks_dropped: usize,
     /// Total wall time (seconds).
     pub wall: f64,
 }
@@ -138,6 +144,7 @@ pub fn run_sequential(
         faults: FaultCounters::default(),
         scatter_timeout: timeouts.scatter,
         gather_timeout: timeouts.gather,
+        late_uplinks_dropped: 0,
         wall: timer.elapsed(),
     }
 }
@@ -265,6 +272,7 @@ impl LiveRunner {
             faults,
             scatter_timeout: timeouts.scatter,
             gather_timeout: timeouts.gather,
+            late_uplinks_dropped: faults.late_uplinks_dropped,
             wall: timer.elapsed(),
         })
     }
@@ -354,7 +362,12 @@ impl LiveRunner {
         // (carrier wid, dead wid), per-carrier extra ranges, and which
         // workers' partials arrived (consulted after `got` is drained).
         let mut counters = FaultCounters::default();
-        let mut respawn_attempts = vec![0usize; self.k];
+        // One bounded-backoff schedule per worker (shared discipline with
+        // the fleet workers' reconnect loop — `util::backoff`). Un-jittered
+        // here: respawn scheduling shares one master thread, so there is
+        // no thundering herd to spread out.
+        let mut backoffs: Vec<Backoff> =
+            (0..self.k).map(|_| Backoff::new(self.respawn_backoff, self.respawn_limit)).collect();
         let mut next_respawn_at: Vec<Option<Instant>> = vec![None; self.k];
         let mut assigned: Vec<(usize, usize)> = Vec::new();
         let mut extras: Vec<Vec<Range<usize>>> = vec![Vec::new(); self.k];
@@ -392,7 +405,6 @@ impl LiveRunner {
                     continue;
                 }
                 next_respawn_at[wid - 1] = None;
-                respawn_attempts[wid - 1] += 1;
                 let w = master.respawn(wid);
                 handles.push(self.spawn_worker(problem, w, parts.range(wid - 1)));
                 alive[wid - 1] = true;
@@ -401,7 +413,7 @@ impl LiveRunner {
                 counters.recovered += 1;
                 eprintln!(
                     "bsf: worker {wid} respawned (attempt {}/{})",
-                    respawn_attempts[wid - 1],
+                    backoffs[wid - 1].attempts(),
                     self.respawn_limit
                 );
             }
@@ -450,10 +462,8 @@ impl LiveRunner {
                             "died before downlink",
                             &mut alive,
                             &mut counters,
-                            &respawn_attempts,
+                            &mut backoffs,
                             &mut next_respawn_at,
-                            self.respawn_limit,
-                            self.respawn_backoff,
                         );
                     } else {
                         return Err(e.into());
@@ -483,10 +493,8 @@ impl LiveRunner {
                                 "missed the gather deadline",
                                 &mut alive,
                                 &mut counters,
-                                &respawn_attempts,
+                                &mut backoffs,
                                 &mut next_respawn_at,
-                                self.respawn_limit,
-                                self.respawn_backoff,
                             );
                         }
                     }
@@ -582,26 +590,22 @@ impl LiveRunner {
     }
 }
 
-/// Record a worker death: mark it dead, bump the telemetry, and — when the
-/// retry budget allows — schedule a respawn with exponential backoff.
-#[allow(clippy::too_many_arguments)]
+/// Record a worker death: mark it dead, bump the telemetry, and — while
+/// the worker's [`Backoff`] budget lasts — schedule a respawn at the
+/// schedule's next delay.
 fn mark_dead(
     wid: usize,
     why: &str,
     alive: &mut [bool],
     counters: &mut FaultCounters,
-    respawn_attempts: &[usize],
+    backoffs: &mut [Backoff],
     next_respawn_at: &mut [Option<Instant>],
-    respawn_limit: usize,
-    respawn_backoff: Duration,
 ) {
     alive[wid - 1] = false;
     counters.injected += 1;
-    if respawn_limit > 0 && respawn_attempts[wid - 1] < respawn_limit {
-        let exp = (respawn_attempts[wid - 1] as u32).min(16);
-        next_respawn_at[wid - 1] =
-            Some(Instant::now() + respawn_backoff * 2u32.saturating_pow(exp));
-        eprintln!("bsf: worker {wid} {why}; respawn scheduled");
+    if let Some(delay) = backoffs[wid - 1].next_delay() {
+        next_respawn_at[wid - 1] = Some(Instant::now() + delay);
+        eprintln!("bsf: worker {wid} {why}; respawn scheduled in {delay:?}");
     } else {
         eprintln!("bsf: worker {wid} {why}; master takes over its sublist");
     }
@@ -782,6 +786,19 @@ mod tests {
         // Snapshots are pure bookkeeping — the approximation is untouched.
         let seq = run_sequential(&Relaxation::unit(64), 8, None);
         assert!((r.final_approx[0] - seq.final_approx[0]).abs() < 1e-12);
+    }
+
+    /// Clean runs (live and sequential) surface an explicit zero for the
+    /// late-uplink figure — the field exists unconditionally, it is not a
+    /// faulty-path extra.
+    #[test]
+    fn clean_runs_report_zero_late_uplinks() {
+        let seq = run_sequential(&Relaxation::unit(32), 5, None);
+        assert_eq!(seq.late_uplinks_dropped, 0);
+        let p: Arc<dyn BsfProblem> = Arc::new(Relaxation::unit(32));
+        let live = LiveRunner::new(3, 5).run(p).unwrap();
+        assert_eq!(live.late_uplinks_dropped, 0);
+        assert_eq!(live.late_uplinks_dropped, live.faults.late_uplinks_dropped);
     }
 
     #[test]

@@ -251,13 +251,18 @@ impl<'a> SweepJob<'a> {
 
 /// Per-worker scratch for pooled sweeps: one engine/template (rebuilt in
 /// place per K-point via [`IterationTemplate::reset_to`]) and one timing
-/// buffer, reused for every job the worker pulls off the queue.
+/// buffer, reused for every job the worker pulls off the queue. Public so
+/// out-of-process executors ([`crate::fleet`] workers) can drive the same
+/// bucket runner ([`run_cell_bucket`]) the in-process pool uses.
 #[derive(Default)]
-struct SweepWorker {
+pub struct SweepScratch {
     tmpl: Option<IterationTemplate>,
     runs: Vec<IterationTiming>,
     fault_scratch: FaultScratch,
 }
+
+/// The old private name, kept for the module's internal prose.
+type SweepWorker = SweepScratch;
 
 /// Mean iteration time of `job` at worker count `k` — a pure function of
 /// `(job, k)`; the worker scratch only caches buffer capacity.
@@ -396,6 +401,42 @@ fn flat_groups(jobs: &[SweepJob], flat: &[(usize, usize)]) -> Vec<Vec<usize>> {
     groups
 }
 
+/// The flat (experiment × K-point) cell list of a job set, in the
+/// job-major order every pooled executor uses: cell `r` is
+/// `(sweep index, K index)`. A pure function of the job list — the fleet
+/// coordinator and its workers each compute it independently and agree.
+pub fn flat_cells(jobs: &[SweepJob]) -> Vec<(usize, usize)> {
+    jobs.iter()
+        .enumerate()
+        .flat_map(|(s, job)| (0..job.ks.len()).map(move |i| (s, i)))
+        .collect()
+}
+
+/// Public form of the shape-bucketed partition ([`flat_groups`]): the
+/// leasable batches of the fleet plane. Each bucket is safe to execute
+/// anywhere — results depend only on `(job, k)` via split RNG streams —
+/// and executing any sub-slice of a bucket through [`run_cell_bucket`]
+/// yields the same per-cell results as the whole bucket (the grouped pass
+/// is bitwise equal to the per-cell loop, pinned in
+/// `rust/tests/determinism.rs`), so partial re-leases stay exact.
+pub fn cell_groups(jobs: &[SweepJob], flat: &[(usize, usize)]) -> Vec<Vec<usize>> {
+    flat_groups(jobs, flat)
+}
+
+/// Execute one shape bucket (or any sub-slice of one) into `out`, one
+/// mean-iteration-time per member cell in order — the public, per-bucket
+/// form of the pooled executor's inner loop, shared by the in-process
+/// pool and the fleet workers.
+pub fn run_cell_bucket(
+    scratch: &mut SweepScratch,
+    jobs: &[SweepJob],
+    flat: &[(usize, usize)],
+    bucket: &[usize],
+    out: &mut Vec<f64>,
+) {
+    sweep_group(scratch, jobs, flat, bucket, out)
+}
+
 /// Evaluate many sweeps through **one** work queue over every
 /// (sweep × K-point) pair: a slow size no longer serialises behind the
 /// previous one, and each worker thread reuses a single engine for its
@@ -405,11 +446,7 @@ fn flat_groups(jobs: &[SweepJob], flat: &[(usize, usize)]) -> Vec<Vec<usize>> {
 /// to running the sweeps one [`simulated_curve`] call at a time, at any
 /// thread count, grouping on or off.
 pub fn simulated_curves(jobs: &[SweepJob], threads: usize) -> Vec<Vec<SpeedupPoint>> {
-    let flat: Vec<(usize, usize)> = jobs
-        .iter()
-        .enumerate()
-        .flat_map(|(s, job)| (0..job.ks.len()).map(move |i| (s, i)))
-        .collect();
+    let flat = flat_cells(jobs);
     let groups = flat_groups(jobs, &flat);
     let times = parallel_map_index_groups_with(
         &groups,

@@ -28,10 +28,10 @@ mod tables;
 
 pub use ablations::{ablation_collectives, ablation_masters, baselines};
 pub use common::{
-    analytic_provider, boundary_row, boundary_rows, calibrate, effective_net,
-    effective_net_with_latency, k_sweep, paper_gravity_params, paper_jacobi_params,
-    sampled_provider, simulated_curve, simulated_curve_threads, simulated_curves, BoundaryRow,
-    BoundarySpec, ExperimentCtx, ProblemKind, SweepJob,
+    analytic_provider, boundary_row, boundary_rows, calibrate, cell_groups, effective_net,
+    effective_net_with_latency, flat_cells, k_sweep, paper_gravity_params, paper_jacobi_params,
+    run_cell_bucket, sampled_provider, simulated_curve, simulated_curve_threads, simulated_curves,
+    BoundaryRow, BoundarySpec, ExperimentCtx, ProblemKind, SweepJob, SweepScratch,
 };
 pub use explorer::explorer;
 pub use faulty::faulty;

@@ -1,0 +1,575 @@
+//! The fleet coordinator: owns the sweep grid, hands out leases on cell
+//! buckets, watches heartbeats, and re-leases work whose owner went
+//! silent or dropped its socket.
+//!
+//! ## Failure semantics (the short version; PERF.md has the contract)
+//!
+//! * Every cell is a pure function of `(job, K)` — the coordinator
+//!   **never re-seeds**, so re-executing a cell anywhere yields the same
+//!   bits. Duplicate completions are last-write-wins and harmless.
+//! * A missed deadline *re-leases* the batch; it does not invalidate the
+//!   original owner. A late/stale `Done` is still recorded — progress is
+//!   monotone even under an expiry storm of false positives.
+//! * Death (socket EOF/reset) and expiry (silent hang) converge on the
+//!   same requeue path; only the counters differ.
+//!
+//! The final result table is therefore bitwise identical to the serial
+//! sweep no matter how many workers died, re-joined, or raced — pinned by
+//! `rust/tests/fleet.rs` and the CI fleet-smoke job.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::experiments::{cell_groups, flat_cells, SweepJob};
+
+use super::lease::{est_cell_seconds, LeaseBook, WorkerStats};
+use super::proto::{write_msg, Msg, MsgReader};
+use super::FleetGrid;
+
+/// Coordinator tuning knobs. Defaults are deliberately loose — false
+/// expiries are bitwise-harmless but waste work, so production leans
+/// patient; the chaos tests tighten these to force the failure paths.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Expected worker heartbeat interval.
+    pub heartbeat: Duration,
+    /// Heartbeats a worker may miss before its lease expires.
+    pub grace: u32,
+    /// Floor on every lease deadline (initial and refreshed) — absorbs
+    /// debug-build and CI timing noise.
+    pub min_deadline: Duration,
+    /// Multiplier on the a-priori lease cost estimate when setting the
+    /// initial deadline.
+    pub safety: f64,
+    /// Target wall time per lease; with throughput history the
+    /// coordinator sizes batches to roughly this.
+    pub lease_target: Duration,
+    /// Hard cap on cells per lease.
+    pub max_lease_cells: usize,
+    /// Bail if *nothing* happens (no message from any worker) for this
+    /// long while work is incomplete — a dead fleet should fail loudly,
+    /// not hang CI.
+    pub idle_timeout: Duration,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            heartbeat: Duration::from_millis(200),
+            grace: 10,
+            min_deadline: Duration::from_secs(5),
+            safety: 20.0,
+            lease_target: Duration::from_millis(500),
+            max_lease_cells: 16,
+            idle_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// What happened during a fleet run — the observability half of the
+/// fault-tolerance contract (the chaos tests assert on these).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetReport {
+    /// Workers that completed the hello handshake.
+    pub workers_joined: usize,
+    /// Leases handed out (including re-leases).
+    pub leases_issued: usize,
+    /// Batches put back on the queue (expiry + death combined).
+    pub releases: usize,
+    /// Re-leases triggered by a missed deadline specifically.
+    pub leases_expired: usize,
+    /// Workers lost to a dead socket mid-run.
+    pub worker_deaths: usize,
+    /// Cell results that overwrote an already-recorded result.
+    pub duplicate_completions: usize,
+    /// Duplicate completions whose bits disagreed with the recorded value
+    /// — **must stay 0**; anything else means determinism is broken.
+    pub duplicate_mismatches: usize,
+    /// Total cells in the grid.
+    pub cells: usize,
+    /// Cells queued for re-execution by the releases above.
+    pub re_executed_cells: usize,
+}
+
+/// Queue + results state for one grid. Pure bookkeeping (no I/O), so the
+/// scheduling decisions are unit-testable without sockets.
+struct GridState {
+    groups: Vec<Vec<usize>>,
+    cell_est: Vec<f64>,
+    /// Result bits per flat cell (`None` = not yet computed).
+    times: Vec<Option<u64>>,
+    queue: VecDeque<usize>,
+    queued: Vec<bool>,
+}
+
+impl GridState {
+    fn from_parts(groups: Vec<Vec<usize>>, cell_est: Vec<f64>) -> GridState {
+        let queue: VecDeque<usize> = (0..groups.len()).collect();
+        let queued = vec![true; groups.len()];
+        GridState { groups, times: vec![None; cell_est.len()], cell_est, queue, queued }
+    }
+
+    fn for_grid(jobs: &[SweepJob], flat: &[(usize, usize)], groups: Vec<Vec<usize>>) -> GridState {
+        let cell_est = flat
+            .iter()
+            .map(|&(s, i)| est_cell_seconds(jobs[s].ks[i], jobs[s].iters))
+            .collect();
+        GridState::from_parts(groups, cell_est)
+    }
+
+    /// A bucket's members that still lack a result.
+    fn incomplete_members(&self, bucket: usize) -> Vec<usize> {
+        self.groups[bucket].iter().copied().filter(|&r| self.times[r].is_none()).collect()
+    }
+
+    /// Pop buckets off the queue for one lease: keep taking while the
+    /// batch stays under both the cell budget and the time target (always
+    /// at least one bucket; exactly one for suspect workers). Fully
+    /// completed buckets are discarded on the way. Returns
+    /// `(bucket ids, per-bucket incomplete members, estimated seconds)`.
+    fn take_batch(
+        &mut self,
+        max_cells: usize,
+        target_secs: f64,
+        single_bucket: bool,
+    ) -> Option<(Vec<usize>, Vec<Vec<usize>>, f64)> {
+        let mut ids = Vec::new();
+        let mut members = Vec::new();
+        let mut est = 0.0;
+        let mut cells = 0usize;
+        while let Some(&b) = self.queue.front() {
+            let inc = self.incomplete_members(b);
+            if inc.is_empty() {
+                self.queue.pop_front();
+                self.queued[b] = false;
+                continue;
+            }
+            if !ids.is_empty()
+                && (single_bucket || cells + inc.len() > max_cells || est >= target_secs)
+            {
+                break;
+            }
+            self.queue.pop_front();
+            self.queued[b] = false;
+            cells += inc.len();
+            est += inc.iter().map(|&r| self.cell_est[r]).sum::<f64>();
+            ids.push(b);
+            members.push(inc);
+        }
+        (!ids.is_empty()).then_some((ids, members, est))
+    }
+
+    /// Record one cell result (last-write-wins). Returns
+    /// `(was duplicate, bits disagreed)`.
+    fn record(&mut self, r: usize, bits: u64) -> (bool, bool) {
+        let verdict = match self.times[r] {
+            Some(prev) => (true, prev != bits),
+            None => (false, false),
+        };
+        self.times[r] = Some(bits);
+        verdict
+    }
+
+    /// Put a lease's buckets back at the front of the queue (recovery
+    /// work preempts fresh work). Already-queued and fully-complete
+    /// buckets are skipped. Returns how many cells will be re-executed.
+    fn requeue(&mut self, buckets: &[usize]) -> usize {
+        let mut cells = 0;
+        for &b in buckets {
+            if self.queued[b] {
+                continue;
+            }
+            let inc = self.incomplete_members(b).len();
+            if inc == 0 {
+                continue;
+            }
+            self.queue.push_front(b);
+            self.queued[b] = true;
+            cells += inc;
+        }
+        cells
+    }
+
+    fn done(&self) -> bool {
+        self.times.iter().all(Option::is_some)
+    }
+}
+
+enum Event {
+    Joined { conn: u64, name: String, writer: TcpStream },
+    Incoming { conn: u64, msg: Msg },
+    Gone { conn: u64 },
+}
+
+struct WorkerHandle {
+    name: String,
+    writer: TcpStream,
+    stats: WorkerStats,
+    /// Set when this worker's lease expired; suspects get single-bucket
+    /// leases until they complete one again.
+    suspect: bool,
+}
+
+/// Per-connection reader: handshake, then pump messages into the event
+/// channel until EOF or error.
+fn reader_thread(conn: u64, stream: TcpStream, tx: mpsc::Sender<Event>) {
+    let writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => {
+            let _ = tx.send(Event::Gone { conn });
+            return;
+        }
+    };
+    let mut reader = MsgReader::new(stream);
+    match reader.next() {
+        Ok(Some(Msg::Hello { name })) => {
+            if tx.send(Event::Joined { conn, name, writer }).is_err() {
+                return;
+            }
+        }
+        _ => {
+            let _ = tx.send(Event::Gone { conn });
+            return;
+        }
+    }
+    loop {
+        match reader.next() {
+            Ok(Some(msg)) => {
+                if tx.send(Event::Incoming { conn, msg }).is_err() {
+                    return;
+                }
+            }
+            _ => {
+                let _ = tx.send(Event::Gone { conn });
+                return;
+            }
+        }
+    }
+}
+
+/// Run the coordinator on an already-bound listener until the grid is
+/// complete. Returns the per-cell mean iteration times (bitwise identical
+/// to [`super::serial_times`]) and the run report.
+pub fn serve(
+    grid: &FleetGrid,
+    cfg: &FleetConfig,
+    listener: TcpListener,
+) -> Result<(Vec<f64>, FleetReport)> {
+    let jobs = grid.jobs();
+    let flat = flat_cells(&jobs);
+    let groups = cell_groups(&jobs, &flat);
+    let mut state = GridState::for_grid(&jobs, &flat, groups);
+    let mut report = FleetReport { cells: flat.len(), ..Default::default() };
+
+    let local = listener.local_addr()?;
+    let (tx, rx) = mpsc::channel::<Event>();
+    let keepalive = tx.clone(); // the channel must outlive every reader
+    let stop = Arc::new(AtomicBool::new(false));
+    let acceptor = {
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            let mut next_conn: u64 = 0;
+            while let Ok((stream, _)) = listener.accept() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                next_conn += 1;
+                let conn = next_conn;
+                let tx = tx.clone();
+                thread::spawn(move || reader_thread(conn, stream, tx));
+            }
+        })
+    };
+
+    let mut workers: HashMap<u64, WorkerHandle> = HashMap::new();
+    let mut book = LeaseBook::default();
+    let heartbeat_ms = cfg.heartbeat.as_millis().max(1) as u64;
+    let tick = cfg.heartbeat.clamp(Duration::from_millis(10), Duration::from_millis(100));
+    let refresh_by = cfg.min_deadline.max(cfg.heartbeat * cfg.grace);
+    let mut last_event = Instant::now();
+
+    // Issue (or decline) work to an idle worker; returns false if the
+    // worker's socket is dead and it should be dropped.
+    let try_issue = |state: &mut GridState,
+                     book: &mut LeaseBook,
+                     report: &mut FleetReport,
+                     w: &mut WorkerHandle,
+                     conn: u64|
+     -> bool {
+        let max_cells = w
+            .stats
+            .cells_for(cfg.lease_target, cfg.max_lease_cells)
+            .min(cfg.max_lease_cells)
+            .max(1);
+        match state.take_batch(max_cells, cfg.lease_target.as_secs_f64(), w.suspect) {
+            Some((ids, members, est)) => {
+                let pad = Duration::from_secs_f64(cfg.safety * est) + cfg.heartbeat * cfg.grace;
+                let deadline = Instant::now() + cfg.min_deadline.max(pad);
+                let lease = book.issue(conn, ids, deadline);
+                report.leases_issued += 1;
+                if write_msg(&mut w.writer, &Msg::Lease { id: lease.id, buckets: members })
+                    .is_err()
+                {
+                    return false;
+                }
+            }
+            None => {
+                if write_msg(&mut w.writer, &Msg::Wait).is_err() {
+                    return false;
+                }
+            }
+        }
+        true
+    };
+
+    while !state.done() {
+        let ev = match rx.recv_timeout(tick) {
+            Ok(ev) => Some(ev),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => bail!("fleet event channel closed"),
+        };
+        if let Some(ev) = ev {
+            last_event = Instant::now();
+            match ev {
+                Event::Joined { conn, name, writer } => {
+                    report.workers_joined += 1;
+                    eprintln!("bsf fleet: worker '{name}' joined (conn {conn})");
+                    let mut w = WorkerHandle {
+                        name,
+                        writer,
+                        stats: WorkerStats::default(),
+                        suspect: false,
+                    };
+                    let spec = Msg::Spec { spec: grid.spec.clone(), heartbeat_ms };
+                    let alive = write_msg(&mut w.writer, &spec).is_ok()
+                        && try_issue(&mut state, &mut book, &mut report, &mut w, conn);
+                    if alive {
+                        workers.insert(conn, w);
+                    } else {
+                        // died during the handshake: reclaim anything the
+                        // failed issue may have booked against it
+                        for lease in book.drop_worker(conn) {
+                            report.releases += 1;
+                            report.re_executed_cells += state.requeue(&lease.buckets);
+                        }
+                    }
+                }
+                Event::Incoming { conn, msg } => match msg {
+                    Msg::Heartbeat { lease: 0 } => {
+                        // busy per our book but idle-pinging would be a
+                        // protocol slip; only issue to genuinely idle ones
+                        let alive = match workers.get_mut(&conn) {
+                            Some(w) if book.worker_lease(conn).is_none() => {
+                                try_issue(&mut state, &mut book, &mut report, w, conn)
+                            }
+                            _ => true,
+                        };
+                        if !alive {
+                            drop_worker(conn, &mut workers, &mut book, &mut state, &mut report);
+                        }
+                    }
+                    Msg::Heartbeat { lease } => {
+                        // stale (expired/re-leased) heartbeats refresh
+                        // nothing — the worker is draining; no reply owed
+                        let _ = book.refresh(lease, Instant::now() + refresh_by);
+                    }
+                    Msg::Done { lease, wall, results } => {
+                        let n = results.len();
+                        for (r, bits) in results {
+                            if r >= state.times.len() {
+                                continue; // corrupt index; drop, don't panic
+                            }
+                            let (dup, mismatch) = state.record(r, bits);
+                            report.duplicate_completions += dup as usize;
+                            report.duplicate_mismatches += mismatch as usize;
+                        }
+                        if book.complete(lease).is_some() {
+                            if let Some(w) = workers.get_mut(&conn) {
+                                w.stats.observe(n, wall);
+                                w.suspect = false;
+                            }
+                        }
+                        // stale Done: results recorded above regardless —
+                        // progress is monotone even under expiry storms
+                        let alive = match workers.get_mut(&conn) {
+                            Some(w) if !state.done() => {
+                                try_issue(&mut state, &mut book, &mut report, w, conn)
+                            }
+                            _ => true,
+                        };
+                        if !alive {
+                            drop_worker(conn, &mut workers, &mut book, &mut state, &mut report);
+                        }
+                    }
+                    _ => {} // coordinator-bound streams carry nothing else
+                },
+                Event::Gone { conn } => {
+                    drop_worker(conn, &mut workers, &mut book, &mut state, &mut report);
+                }
+            }
+        }
+        // expiry sweep (runs on the timer tick and after every event)
+        let now = Instant::now();
+        for lease in book.expired(now) {
+            report.releases += 1;
+            report.leases_expired += 1;
+            report.re_executed_cells += state.requeue(&lease.buckets);
+            if let Some(w) = workers.get_mut(&lease.worker) {
+                w.suspect = true;
+                eprintln!(
+                    "bsf fleet: lease {} of worker '{}' expired; re-leasing {} bucket(s)",
+                    lease.id,
+                    w.name,
+                    lease.buckets.len()
+                );
+            }
+        }
+        if last_event.elapsed() > cfg.idle_timeout {
+            bail!(
+                "fleet coordinator idle for {:?} with {} of {} cells incomplete (no workers?)",
+                cfg.idle_timeout,
+                state.times.iter().filter(|t| t.is_none()).count(),
+                state.times.len()
+            );
+        }
+    }
+
+    // Grid complete: tell everyone to go home, then unblock the acceptor.
+    for w in workers.values_mut() {
+        let _ = write_msg(&mut w.writer, &Msg::Shutdown);
+    }
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(local);
+    let _ = acceptor.join();
+    drop(keepalive);
+
+    let times =
+        state.times.iter().map(|t| f64::from_bits(t.expect("grid complete"))).collect();
+    Ok((times, report))
+}
+
+/// Forget a dead worker and requeue everything it held.
+fn drop_worker(
+    conn: u64,
+    workers: &mut HashMap<u64, WorkerHandle>,
+    book: &mut LeaseBook,
+    state: &mut GridState,
+    report: &mut FleetReport,
+) {
+    if let Some(w) = workers.remove(&conn) {
+        report.worker_deaths += 1;
+        eprintln!("bsf fleet: worker '{}' lost (conn {conn})", w.name);
+    }
+    for lease in book.drop_worker(conn) {
+        report.releases += 1;
+        report.re_executed_cells += state.requeue(&lease.buckets);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 4 buckets of 2 cells each, flat cells 0..8, unit estimates.
+    fn state() -> GridState {
+        let groups = vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]];
+        GridState::from_parts(groups, vec![0.1; 8])
+    }
+
+    #[test]
+    fn take_batch_respects_cell_budget() {
+        let mut s = state();
+        let (ids, members, est) = s.take_batch(4, f64::INFINITY, false).unwrap();
+        assert_eq!(ids, vec![0, 1]);
+        assert_eq!(members, vec![vec![0, 1], vec![2, 3]]);
+        assert!((est - 0.4).abs() < 1e-12);
+        // the next batch starts where the first stopped
+        let (ids2, _, _) = s.take_batch(100, f64::INFINITY, false).unwrap();
+        assert_eq!(ids2, vec![2, 3]);
+        assert!(s.take_batch(100, f64::INFINITY, false).is_none(), "queue drained");
+    }
+
+    #[test]
+    fn take_batch_single_bucket_for_suspects() {
+        let mut s = state();
+        let (ids, _, _) = s.take_batch(100, f64::INFINITY, true).unwrap();
+        assert_eq!(ids.len(), 1);
+    }
+
+    #[test]
+    fn take_batch_always_issues_at_least_one_bucket() {
+        let mut s = state();
+        // budget smaller than any bucket still yields one bucket
+        let (ids, members, _) = s.take_batch(1, 0.0, false).unwrap();
+        assert_eq!(ids.len(), 1);
+        assert_eq!(members[0].len(), 2);
+    }
+
+    #[test]
+    fn take_batch_skips_completed_buckets_and_cells() {
+        let mut s = state();
+        s.record(0, 1);
+        s.record(1, 2); // bucket 0 fully done
+        s.record(2, 3); // bucket 1 half done
+        let (ids, members, _) = s.take_batch(1, f64::INFINITY, false).unwrap();
+        assert_eq!(ids, vec![1]);
+        assert_eq!(members, vec![vec![3]], "only the incomplete member is leased");
+    }
+
+    #[test]
+    fn record_tracks_duplicates_and_mismatches() {
+        let mut s = state();
+        assert_eq!(s.record(0, 42), (false, false));
+        assert_eq!(s.record(0, 42), (true, false), "same bits: benign duplicate");
+        assert_eq!(s.record(0, 43), (true, true), "different bits: determinism broken");
+        assert_eq!(s.times[0], Some(43), "last write wins");
+    }
+
+    #[test]
+    fn requeue_dedups_and_prioritises() {
+        let mut s = state();
+        let (ids, _, _) = s.take_batch(4, f64::INFINITY, false).unwrap(); // buckets 0,1
+        assert_eq!(s.requeue(&ids), 4);
+        assert_eq!(s.requeue(&ids), 0, "already queued: no double-count");
+        // requeued work preempts fresh work
+        let (next, _, _) = s.take_batch(2, f64::INFINITY, false).unwrap();
+        assert!(ids.contains(&next[0]));
+    }
+
+    #[test]
+    fn requeue_skips_completed_buckets() {
+        let mut s = state();
+        let (ids, _, _) = s.take_batch(2, f64::INFINITY, false).unwrap(); // bucket 0
+        s.record(0, 1);
+        s.record(1, 2);
+        assert_eq!(s.requeue(&ids), 0, "nothing left to re-execute");
+        let (next, _, _) = s.take_batch(2, f64::INFINITY, false).unwrap();
+        assert_ne!(next[0], ids[0]);
+    }
+
+    #[test]
+    fn done_requires_every_cell() {
+        let mut s = state();
+        for r in 0..7 {
+            s.record(r, r as u64);
+            assert!(!s.done());
+        }
+        s.record(7, 7);
+        assert!(s.done());
+    }
+
+    #[test]
+    fn default_config_is_patient() {
+        let cfg = FleetConfig::default();
+        assert!(cfg.min_deadline >= Duration::from_secs(1));
+        assert!(cfg.grace >= 2);
+        assert!(cfg.safety >= 1.0);
+    }
+}

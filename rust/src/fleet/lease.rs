@@ -1,0 +1,239 @@
+//! Lease bookkeeping: which worker holds which cell buckets, when each
+//! lease expires, and how fast each worker has been going.
+//!
+//! A lease is a *soft* ownership claim: the coordinator re-leases a batch
+//! when the deadline passes, but a late completion from the original
+//! owner is still accepted (last-write-wins) — re-execution is bitwise
+//! harmless because every cell is a pure function of `(job, K)`. The
+//! deadline math therefore only affects *latency* under faults, never
+//! correctness, which is what lets the defaults stay loose enough for
+//! debug-build CI.
+
+use std::time::{Duration, Instant};
+
+/// Crude a-priori estimate of one cell's simulation wall time in seconds:
+/// the DES hot path is O((5K + 16) × iters) node visits (see PERF.md),
+/// scaled by an empirical per-visit constant. Only used to size leases and
+/// deadlines before a worker has throughput history — an estimate off by
+/// 10x merely changes batch sizes, not results.
+pub fn est_cell_seconds(k: usize, iters: usize) -> f64 {
+    (5.0 * k as f64 + 16.0) * iters as f64 * 1e-7
+}
+
+/// One outstanding lease.
+#[derive(Debug, Clone)]
+pub struct Lease {
+    /// Lease id (nonzero).
+    pub id: u64,
+    /// Connection id of the owning worker.
+    pub worker: u64,
+    /// Bucket ids (indices into the coordinator's partition) on lease.
+    pub buckets: Vec<usize>,
+    /// Expiry: miss this and the batch goes back on the queue.
+    pub deadline: Instant,
+}
+
+/// The coordinator's table of outstanding leases.
+#[derive(Debug, Default)]
+pub struct LeaseBook {
+    active: Vec<Lease>,
+    next_id: u64,
+}
+
+impl LeaseBook {
+    /// Issue a new lease to `worker` and return it (cloned for sending).
+    pub fn issue(&mut self, worker: u64, buckets: Vec<usize>, deadline: Instant) -> Lease {
+        self.next_id += 1;
+        let lease = Lease { id: self.next_id, worker, buckets, deadline };
+        self.active.push(lease.clone());
+        lease
+    }
+
+    /// Push a lease's deadline out (heartbeat received).
+    pub fn refresh(&mut self, id: u64, deadline: Instant) -> bool {
+        match self.active.iter_mut().find(|l| l.id == id) {
+            Some(l) => {
+                l.deadline = deadline;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Remove a completed lease, returning it if it was still active
+    /// (`None` ⇒ the lease had already expired and been re-leased — the
+    /// completion is *stale* but its results are still good).
+    pub fn complete(&mut self, id: u64) -> Option<Lease> {
+        let at = self.active.iter().position(|l| l.id == id)?;
+        Some(self.active.swap_remove(at))
+    }
+
+    /// Remove and return every lease whose deadline has passed.
+    pub fn expired(&mut self, now: Instant) -> Vec<Lease> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].deadline <= now {
+                out.push(self.active.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Remove and return every lease held by `worker` (socket died).
+    pub fn drop_worker(&mut self, worker: u64) -> Vec<Lease> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].worker == worker {
+                out.push(self.active.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// The lease currently held by `worker`, if any.
+    pub fn worker_lease(&self, worker: u64) -> Option<&Lease> {
+        self.active.iter().find(|l| l.worker == worker)
+    }
+
+    /// Outstanding lease count.
+    pub fn len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// True when no leases are outstanding.
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+}
+
+/// EWMA smoothing factor for worker throughput: heavy enough that one
+/// slow lease (page cache miss, CI noise) doesn't crater the estimate,
+/// light enough to adapt within a few leases.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Per-worker throughput history, steering lease sizes: fast workers get
+/// bigger batches, slow (or suspect) workers smaller ones.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerStats {
+    ewma: Option<f64>, // cells per second
+}
+
+impl WorkerStats {
+    /// Fold one completed lease into the estimate.
+    pub fn observe(&mut self, cells: usize, wall_seconds: f64) {
+        if cells == 0 || !wall_seconds.is_finite() || wall_seconds <= 0.0 {
+            return;
+        }
+        let rate = cells as f64 / wall_seconds;
+        self.ewma = Some(match self.ewma {
+            None => rate,
+            Some(prev) => EWMA_ALPHA * rate + (1.0 - EWMA_ALPHA) * prev,
+        });
+    }
+
+    /// Smoothed throughput in cells/second, if any history exists.
+    pub fn rate(&self) -> Option<f64> {
+        self.ewma
+    }
+
+    /// How many cells this worker should get for a lease targeting
+    /// `target` wall time; `fallback` when no history exists yet.
+    pub fn cells_for(&self, target: Duration, fallback: usize) -> usize {
+        match self.ewma {
+            None => fallback,
+            Some(rate) => ((rate * target.as_secs_f64()).floor() as usize).max(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ms: u64) -> Instant {
+        // A fixed origin keeps the tests independent of real elapsed time.
+        static ORIGIN: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+        *ORIGIN.get_or_init(Instant::now) + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn issue_complete_lifecycle() {
+        let mut book = LeaseBook::default();
+        let a = book.issue(1, vec![0, 1], t(100));
+        let b = book.issue(2, vec![2], t(100));
+        assert_ne!(a.id, b.id);
+        assert_ne!(a.id, 0);
+        assert_eq!(book.len(), 2);
+        assert_eq!(book.worker_lease(1).unwrap().id, a.id);
+        let done = book.complete(a.id).unwrap();
+        assert_eq!(done.buckets, vec![0, 1]);
+        assert!(book.complete(a.id).is_none(), "double-complete is stale");
+        assert_eq!(book.len(), 1);
+    }
+
+    #[test]
+    fn expiry_returns_overdue_leases_only() {
+        let mut book = LeaseBook::default();
+        let a = book.issue(1, vec![0], t(50));
+        let _b = book.issue(2, vec![1], t(500));
+        let exp = book.expired(t(100));
+        assert_eq!(exp.len(), 1);
+        assert_eq!(exp[0].id, a.id);
+        assert_eq!(book.len(), 1);
+        // expired lease is gone: a late completion is stale
+        assert!(book.complete(a.id).is_none());
+    }
+
+    #[test]
+    fn refresh_extends_deadline() {
+        let mut book = LeaseBook::default();
+        let a = book.issue(1, vec![0], t(50));
+        assert!(book.refresh(a.id, t(1_000)));
+        assert!(book.expired(t(100)).is_empty());
+        assert!(!book.refresh(999, t(1_000)), "unknown lease not refreshable");
+    }
+
+    #[test]
+    fn drop_worker_reclaims_all_its_leases() {
+        let mut book = LeaseBook::default();
+        book.issue(1, vec![0], t(100));
+        book.issue(1, vec![1], t(100));
+        book.issue(2, vec![2], t(100));
+        let dropped = book.drop_worker(1);
+        assert_eq!(dropped.len(), 2);
+        assert_eq!(book.len(), 1);
+        assert!(book.worker_lease(1).is_none());
+        assert!(book.worker_lease(2).is_some());
+    }
+
+    #[test]
+    fn stats_converge_and_size_leases() {
+        let mut s = WorkerStats::default();
+        assert_eq!(s.cells_for(Duration::from_millis(500), 4), 4, "no history → fallback");
+        s.observe(100, 1.0); // 100 cells/s
+        assert_eq!(s.cells_for(Duration::from_millis(500), 4), 50);
+        s.observe(0, 1.0); // ignored
+        s.observe(100, 0.0); // ignored
+        assert_eq!(s.rate(), Some(100.0));
+        s.observe(200, 1.0); // EWMA moves toward 200
+        let r = s.rate().unwrap();
+        assert!(r > 100.0 && r < 200.0, "rate {r}");
+        // a glacial worker still gets at least one cell
+        let mut slow = WorkerStats::default();
+        slow.observe(1, 1_000.0);
+        assert_eq!(slow.cells_for(Duration::from_millis(500), 4), 1);
+    }
+
+    #[test]
+    fn cell_estimate_scales_with_k_and_iters() {
+        assert!(est_cell_seconds(100, 7) > est_cell_seconds(10, 7));
+        assert!(est_cell_seconds(10, 7) > est_cell_seconds(10, 3));
+        assert!(est_cell_seconds(1, 1) > 0.0);
+    }
+}

@@ -1,0 +1,339 @@
+//! Fleet plane: a lease-based coordinator/worker layer that shards the
+//! pooled (experiment × size × K) sweep queue across OS processes with
+//! end-to-end fault tolerance.
+//!
+//! The unit of work is a **shape bucket** from the same partition the
+//! in-process pool uses ([`crate::experiments::cell_groups`]), so grouped
+//! lane passes survive sharding. The coordinator hands out *leases* on
+//! batches of buckets, tracks per-worker heartbeats against deadlines
+//! derived from a DES cost estimate, and re-leases a batch when its owner
+//! misses the deadline or drops its socket. Crucially it **never
+//! re-seeds**: every cell's result is a pure function of `(job, K)` via
+//! per-K [`crate::util::Rng::split`] streams, so re-executing a cell —
+//! on any worker, any number of times — produces the identical bits, and
+//! the final table is bitwise equal to the serial single-process sweep
+//! regardless of how many workers died, joined late, or executed a cell
+//! twice (last-write-wins is safe). The contract is pinned in
+//! `rust/tests/fleet.rs` and the failure semantics are documented in
+//! PERF.md ("Fleet protocol + failure semantics").
+//!
+//! Wire format: line-delimited JSON over localhost TCP ([`proto`]), with
+//! every result f64 travelling as `to_bits` hex so the bitwise contract
+//! survives text transport.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ClusterConfig;
+use crate::experiments::{
+    analytic_provider, cell_groups, effective_net_with_latency, flat_cells, k_sweep,
+    paper_gravity_params, paper_jacobi_params, run_cell_bucket, ProblemKind, SweepJob,
+    SweepScratch,
+};
+use crate::model::{BsfModel, CostParams};
+use crate::simulator::{AnalyticCost, SimParams};
+use crate::util::{table::sci, Json, Rng, Table};
+
+pub mod coordinator;
+pub mod lease;
+pub mod proto;
+pub mod worker;
+
+pub use coordinator::{serve, FleetConfig, FleetReport};
+pub use worker::{run_worker, WorkerChaos, WorkerConfig, WorkerSummary};
+
+/// The sweep grid a fleet executes, as it travels on the wire: everything
+/// a worker needs to reconstruct the exact job list the coordinator
+/// partitioned — same sizes, same K grids, same RNG forks — so both sides
+/// agree on cell identities and every execution is bitwise reproducible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    /// Which problem family (paper-params mode only: jacobi or gravity).
+    pub problem: ProblemKind,
+    /// Problem sizes, in grid order. Duplicates are allowed and meaningful
+    /// — each occurrence forks its own sweep root, exactly like repeating
+    /// a size in a figure grid.
+    pub sizes: Vec<usize>,
+    /// Simulated iterations averaged per K-point.
+    pub iters: usize,
+    /// Root seed (fixes every per-K stream).
+    pub seed: u64,
+    /// Quick K-grid resolution (mirrors `ExperimentCtx::quick`).
+    pub quick: bool,
+    /// Compute jitter sigma — makes the per-K RNG streams load-bearing,
+    /// so the bitwise contract actually exercises stream placement.
+    pub jitter: f64,
+}
+
+/// CLI/printable name of a problem kind.
+pub fn problem_name(kind: ProblemKind) -> &'static str {
+    match kind {
+        ProblemKind::Jacobi => "jacobi",
+        ProblemKind::Gravity => "gravity",
+        ProblemKind::Cimmino => "cimmino",
+    }
+}
+
+impl FleetSpec {
+    /// Serialize for the wire. The jitter sigma travels as `to_bits` hex —
+    /// it feeds the simulator directly, so it must survive transport
+    /// exactly; the seed travels as a decimal string (JSON numbers are
+    /// only exact to 2^53).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("problem".to_string(), Json::Str(problem_name(self.problem).to_string()));
+        m.insert(
+            "sizes".to_string(),
+            Json::Arr(self.sizes.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("seed".to_string(), Json::Str(self.seed.to_string()));
+        m.insert("quick".to_string(), Json::Bool(self.quick));
+        m.insert("jitter".to_string(), Json::Str(format!("{:016x}", self.jitter.to_bits())));
+        Json::Obj(m)
+    }
+
+    /// Parse the wire form back (exact inverse of [`FleetSpec::to_json`]).
+    pub fn from_json(v: &Json) -> Result<FleetSpec> {
+        let field = |k: &str| v.get(k).ok_or_else(|| anyhow!("fleet spec missing '{k}'"));
+        let problem = field("problem")?
+            .as_str()
+            .and_then(ProblemKind::parse)
+            .ok_or_else(|| anyhow!("fleet spec: bad problem"))?;
+        let sizes = field("sizes")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("fleet spec: sizes must be an array"))?
+            .iter()
+            .map(|e| e.as_usize().ok_or_else(|| anyhow!("fleet spec: bad size")))
+            .collect::<Result<Vec<usize>>>()?;
+        let iters = field("iters")?.as_usize().ok_or_else(|| anyhow!("fleet spec: bad iters"))?;
+        let seed = field("seed")?
+            .as_str()
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| anyhow!("fleet spec: bad seed"))?;
+        let quick = matches!(field("quick")?, Json::Bool(true));
+        let jitter = field("jitter")?
+            .as_str()
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .map(f64::from_bits)
+            .ok_or_else(|| anyhow!("fleet spec: bad jitter"))?;
+        Ok(FleetSpec { problem, sizes, iters, seed, quick, jitter })
+    }
+}
+
+/// A materialized fleet grid: the spec plus per-size cost parameters and
+/// providers. Built identically (and independently) by the coordinator
+/// and every worker from the same [`FleetSpec`].
+pub struct FleetGrid {
+    /// The spec this grid was built from.
+    pub spec: FleetSpec,
+    /// Per-size `(n, params)` in grid order.
+    metas: Vec<(usize, CostParams)>,
+    provs: Vec<AnalyticCost>,
+}
+
+impl FleetGrid {
+    /// Validate a spec and build its grid. Rejects problems without
+    /// published cost parameters and sizes outside the published tables —
+    /// the fleet runs paper-params mode only (calibrated/measured grids
+    /// would need per-host calibration, which breaks cross-process
+    /// bitwise identity by construction).
+    pub fn new(spec: FleetSpec) -> Result<FleetGrid> {
+        let (lookup, valid): (fn(usize) -> Option<CostParams>, &str) = match spec.problem {
+            ProblemKind::Jacobi => (paper_jacobi_params, "1500|5000|10000|16000"),
+            ProblemKind::Gravity => (paper_gravity_params, "300|600|900|1200"),
+            ProblemKind::Cimmino => {
+                bail!("fleet sweeps run on published cost parameters; cimmino has none (use jacobi or gravity)")
+            }
+        };
+        if spec.sizes.is_empty() {
+            bail!("fleet spec has no sizes");
+        }
+        if spec.iters == 0 {
+            bail!("fleet spec needs iters >= 1");
+        }
+        let mut metas = Vec::with_capacity(spec.sizes.len());
+        let mut provs = Vec::with_capacity(spec.sizes.len());
+        for &n in &spec.sizes {
+            let params = lookup(n).ok_or_else(|| {
+                anyhow!(
+                    "no published {} parameters for n={n} (valid sizes: {valid})",
+                    problem_name(spec.problem)
+                )
+            })?;
+            provs.push(analytic_provider(&params));
+            metas.push((n, params));
+        }
+        Ok(FleetGrid { spec, metas, provs })
+    }
+
+    /// Build the job list — the same construction order (and therefore
+    /// the same RNG fork sequence) as the figure harnesses: one
+    /// [`SweepJob`] per size, sweep roots forked from `Rng::new(seed)` in
+    /// grid order.
+    pub fn jobs(&self) -> Vec<SweepJob<'_>> {
+        let cluster = ClusterConfig::default();
+        let mut rng = Rng::new(self.spec.seed);
+        let mut jobs = Vec::with_capacity(self.metas.len());
+        for ((n, params), prov) in self.metas.iter().zip(&self.provs) {
+            let model = BsfModel::new(*params);
+            let ks = k_sweep(model.k_bsf(), self.spec.quick);
+            let (wd, wu) = match self.spec.problem {
+                ProblemKind::Gravity => (7usize, 3usize),
+                _ => (*n, *n),
+            };
+            let sim = SimParams {
+                net: effective_net_with_latency(params.t_c, wd, wu, cluster.net.latency),
+                algo: cluster.algo,
+                reduce_mode: cluster.reduce_mode,
+                words_down: wd,
+                words_up: wu,
+                jitter_comp: self.spec.jitter,
+                jitter_comm: 0.0,
+                masters: cluster.masters,
+            };
+            jobs.push(SweepJob::new(sim, *n, prov, ks, self.spec.iters, &mut rng));
+        }
+        jobs
+    }
+
+    /// Total cell count of the grid.
+    pub fn cells(&self) -> usize {
+        flat_cells(&self.jobs()).len()
+    }
+}
+
+/// Execute the whole grid serially in one process — the ground truth the
+/// fleet must match bitwise. Returns mean iteration time per flat cell.
+pub fn serial_times(grid: &FleetGrid) -> Vec<f64> {
+    let jobs = grid.jobs();
+    let flat = flat_cells(&jobs);
+    let groups = cell_groups(&jobs, &flat);
+    let mut times = vec![0.0f64; flat.len()];
+    let mut scratch = SweepScratch::default();
+    let mut out = Vec::new();
+    for g in &groups {
+        out.clear();
+        run_cell_bucket(&mut scratch, &jobs, &flat, g, &mut out);
+        for (j, &r) in g.iter().enumerate() {
+            times[r] = out[j];
+        }
+    }
+    times
+}
+
+/// Render per-cell times as the fleet's result table: one row per (size,
+/// K) with the exact bits alongside the human-readable figures. Both the
+/// coordinator and `fleet-serial` produce this table from their `times`
+/// vector, so a byte-compare of the two CSVs is the end-to-end
+/// determinism check.
+pub fn fleet_table(grid: &FleetGrid, times: &[f64]) -> Table {
+    let jobs = grid.jobs();
+    let mut t = Table::new(
+        format!(
+            "Fleet sweep: {} sizes {:?} (seed {}, iters {})",
+            problem_name(grid.spec.problem),
+            grid.spec.sizes,
+            grid.spec.seed,
+            grid.spec.iters
+        ),
+        &["n", "K", "T_K sim", "speedup", "T_K bits"],
+    );
+    let mut off = 0;
+    for (job, (n, _)) in jobs.iter().zip(&grid.metas) {
+        let tks = &times[off..off + job.ks.len()];
+        off += job.ks.len();
+        // k_sweep always starts at 1, so tks[0] is the T_1 reference.
+        let t1 = tks[0];
+        for (&k, &tk) in job.ks.iter().zip(tks) {
+            t.row(&[
+                n.to_string(),
+                k.to_string(),
+                sci(tk),
+                format!("{:.2}", t1 / tk),
+                format!("{:016x}", tk.to_bits()),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> FleetSpec {
+        FleetSpec {
+            problem: ProblemKind::Jacobi,
+            sizes: vec![1_500, 5_000],
+            iters: 2,
+            seed: 0xB5F,
+            quick: true,
+            jitter: 0.05,
+        }
+    }
+
+    #[test]
+    fn spec_json_round_trips_exactly() {
+        let s = spec();
+        let v = s.to_json();
+        let text = v.to_string();
+        let back = FleetSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        // jitter bits are exact, not approximately-parsed
+        assert_eq!(back.jitter.to_bits(), s.jitter.to_bits());
+    }
+
+    #[test]
+    fn grid_rejects_bad_specs() {
+        let mut s = spec();
+        s.sizes = vec![1_500, 123];
+        assert!(FleetGrid::new(s).is_err());
+        let mut s = spec();
+        s.problem = ProblemKind::Cimmino;
+        assert!(FleetGrid::new(s).is_err());
+        let mut s = spec();
+        s.sizes.clear();
+        assert!(FleetGrid::new(s).is_err());
+        let mut s = spec();
+        s.iters = 0;
+        assert!(FleetGrid::new(s).is_err());
+    }
+
+    #[test]
+    fn grid_construction_is_deterministic() {
+        let g1 = FleetGrid::new(spec()).unwrap();
+        let g2 = FleetGrid::new(spec()).unwrap();
+        assert_eq!(serial_times(&g1), serial_times(&g2));
+        assert_eq!(g1.cells(), g2.cells());
+        assert!(g1.cells() > 10);
+    }
+
+    #[test]
+    fn serial_times_match_simulated_curves() {
+        // The fleet's ground-truth path is the same pooled executor the
+        // figure harnesses use — cell times must agree bitwise.
+        let grid = FleetGrid::new(spec()).unwrap();
+        let times = serial_times(&grid);
+        let jobs = grid.jobs();
+        let curves = crate::experiments::simulated_curves(&jobs, 1);
+        let mut off = 0;
+        for (job, curve) in jobs.iter().zip(&curves) {
+            for (i, p) in curve.iter().enumerate() {
+                assert_eq!(p.t_k.to_bits(), times[off + i].to_bits(), "cell {i} of size {}", job.l);
+            }
+            off += job.ks.len();
+        }
+    }
+
+    #[test]
+    fn table_carries_exact_bits() {
+        let grid = FleetGrid::new(spec()).unwrap();
+        let times = serial_times(&grid);
+        let t = fleet_table(&grid, &times);
+        assert_eq!(t.len(), times.len());
+        let csv = t.to_csv();
+        assert!(csv.contains(&format!("{:016x}", times[0].to_bits())));
+    }
+}

@@ -1,0 +1,310 @@
+//! Fleet wire protocol: line-delimited JSON over a TCP stream.
+//!
+//! One [`Msg`] enum covers both directions; each message is a single JSON
+//! object on one line, tagged by its `"t"` field. Floats that must survive
+//! transport exactly (cell results) travel as `f64::to_bits` hex strings —
+//! the whole fleet contract is *bitwise* identity with the serial sweep,
+//! so the wire cannot be allowed to round anything.
+//!
+//! | tag        | direction      | meaning                                   |
+//! |------------|----------------|-------------------------------------------|
+//! | `hello`    | worker → coord | join; carries the worker's display name   |
+//! | `spec`     | coord → worker | the [`FleetSpec`] + heartbeat interval    |
+//! | `lease`    | coord → worker | a batch of cell buckets to execute        |
+//! | `wait`     | coord → worker | no work right now; idle-ping and stand by |
+//! | `hb`       | worker → coord | heartbeat (`lease` = 0 means idle)        |
+//! | `done`     | worker → coord | lease finished; per-cell result bits      |
+//! | `shutdown` | coord → worker | grid complete; drain and exit            |
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+use super::FleetSpec;
+
+/// One protocol message (either direction).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker → coordinator: join the fleet.
+    Hello {
+        /// Worker display name (used in logs and the coordinator report).
+        name: String,
+    },
+    /// Coordinator → worker: the sweep grid and the heartbeat interval the
+    /// coordinator expects (milliseconds).
+    Spec {
+        /// The grid to reconstruct locally.
+        spec: FleetSpec,
+        /// Expected heartbeat interval in milliseconds.
+        heartbeat_ms: u64,
+    },
+    /// Coordinator → worker: execute these cell buckets. Each inner list
+    /// holds **flat cell indices** of one (possibly partial) shape bucket;
+    /// the worker runs each through one grouped pass.
+    Lease {
+        /// Lease id (nonzero; echoed in heartbeats and completion).
+        id: u64,
+        /// Buckets of flat cell indices.
+        buckets: Vec<Vec<usize>>,
+    },
+    /// Coordinator → worker: no work available right now.
+    Wait,
+    /// Worker → coordinator: still alive. `lease` echoes the lease being
+    /// executed, or 0 when idle.
+    Heartbeat {
+        /// Lease currently held (0 = idle ping).
+        lease: u64,
+    },
+    /// Worker → coordinator: lease complete.
+    Done {
+        /// The finished lease id.
+        lease: u64,
+        /// Wall-clock seconds spent executing the lease (feeds the
+        /// coordinator's per-worker throughput EWMA; not part of any
+        /// result, so plain JSON number precision is fine).
+        wall: f64,
+        /// Per-cell results as `(flat index, f64 bits)`.
+        results: Vec<(usize, u64)>,
+    },
+    /// Coordinator → worker: grid complete; exit cleanly.
+    Shutdown,
+}
+
+impl Msg {
+    /// Serialize to one JSON object (the line body; no trailing newline).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        match self {
+            Msg::Hello { name } => {
+                m.insert("t".into(), Json::Str("hello".into()));
+                m.insert("name".into(), Json::Str(name.clone()));
+            }
+            Msg::Spec { spec, heartbeat_ms } => {
+                m.insert("t".into(), Json::Str("spec".into()));
+                m.insert("spec".into(), spec.to_json());
+                m.insert("heartbeat_ms".into(), Json::Num(*heartbeat_ms as f64));
+            }
+            Msg::Lease { id, buckets } => {
+                m.insert("t".into(), Json::Str("lease".into()));
+                m.insert("id".into(), Json::Num(*id as f64));
+                m.insert(
+                    "buckets".into(),
+                    Json::Arr(
+                        buckets
+                            .iter()
+                            .map(|b| Json::Arr(b.iter().map(|&r| Json::Num(r as f64)).collect()))
+                            .collect(),
+                    ),
+                );
+            }
+            Msg::Wait => {
+                m.insert("t".into(), Json::Str("wait".into()));
+            }
+            Msg::Heartbeat { lease } => {
+                m.insert("t".into(), Json::Str("hb".into()));
+                m.insert("lease".into(), Json::Num(*lease as f64));
+            }
+            Msg::Done { lease, wall, results } => {
+                m.insert("t".into(), Json::Str("done".into()));
+                m.insert("lease".into(), Json::Num(*lease as f64));
+                m.insert("wall".into(), Json::Num(*wall));
+                m.insert(
+                    "results".into(),
+                    Json::Arr(
+                        results
+                            .iter()
+                            .map(|&(r, bits)| {
+                                Json::Arr(vec![
+                                    Json::Num(r as f64),
+                                    Json::Str(format!("{bits:016x}")),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                );
+            }
+            Msg::Shutdown => {
+                m.insert("t".into(), Json::Str("shutdown".into()));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// Parse one message (inverse of [`Msg::to_json`]).
+    pub fn from_json(v: &Json) -> Result<Msg> {
+        let tag = v
+            .get("t")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("fleet message missing tag"))?;
+        let num =
+            |k: &str| v.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("bad '{k}' field"));
+        match tag {
+            "hello" => {
+                let name = v
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("hello missing name"))?;
+                Ok(Msg::Hello { name: name.to_string() })
+            }
+            "spec" => {
+                let spec = FleetSpec::from_json(
+                    v.get("spec").ok_or_else(|| anyhow!("spec message missing spec"))?,
+                )?;
+                Ok(Msg::Spec { spec, heartbeat_ms: num("heartbeat_ms")? as u64 })
+            }
+            "lease" => {
+                let buckets = v
+                    .get("buckets")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("lease missing buckets"))?
+                    .iter()
+                    .map(|b| {
+                        b.as_arr()
+                            .ok_or_else(|| anyhow!("lease bucket must be an array"))?
+                            .iter()
+                            .map(|e| e.as_usize().ok_or_else(|| anyhow!("bad cell index")))
+                            .collect::<Result<Vec<usize>>>()
+                    })
+                    .collect::<Result<Vec<Vec<usize>>>>()?;
+                Ok(Msg::Lease { id: num("id")? as u64, buckets })
+            }
+            "wait" => Ok(Msg::Wait),
+            "hb" => Ok(Msg::Heartbeat { lease: num("lease")? as u64 }),
+            "done" => {
+                let wall = v
+                    .get("wall")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("done missing wall"))?;
+                let results = v
+                    .get("results")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("done missing results"))?
+                    .iter()
+                    .map(|pair| {
+                        let p = pair
+                            .as_arr()
+                            .filter(|p| p.len() == 2)
+                            .ok_or_else(|| anyhow!("done result must be [idx, bits]"))?;
+                        let r = p[0].as_usize().ok_or_else(|| anyhow!("bad result index"))?;
+                        let bits = p[1]
+                            .as_str()
+                            .and_then(|s| u64::from_str_radix(s, 16).ok())
+                            .ok_or_else(|| anyhow!("bad result bits"))?;
+                        Ok((r, bits))
+                    })
+                    .collect::<Result<Vec<(usize, u64)>>>()?;
+                Ok(Msg::Done { lease: num("lease")? as u64, wall, results })
+            }
+            "shutdown" => Ok(Msg::Shutdown),
+            other => Err(anyhow!("unknown fleet message tag '{other}'")),
+        }
+    }
+}
+
+/// Write one message as a line and flush (a heartbeat sitting in a buffer
+/// is a missed heartbeat).
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    writeln!(w, "{}", msg.to_json()).context("fleet send")?;
+    w.flush().context("fleet flush")
+}
+
+/// Buffered line-at-a-time message reader over a stream.
+pub struct MsgReader<R: Read> {
+    inner: BufReader<R>,
+    line: String,
+}
+
+impl<R: Read> MsgReader<R> {
+    /// Wrap a stream.
+    pub fn new(stream: R) -> MsgReader<R> {
+        MsgReader { inner: BufReader::new(stream), line: String::new() }
+    }
+
+    /// Read the next message. `Ok(None)` on clean EOF (peer closed the
+    /// stream); errors on I/O failure or a malformed line.
+    pub fn next(&mut self) -> Result<Option<Msg>> {
+        self.line.clear();
+        let n = self.inner.read_line(&mut self.line).context("fleet recv")?;
+        if n == 0 {
+            return Ok(None);
+        }
+        let text = self.line.trim_end();
+        let v = Json::parse(text).map_err(|e| anyhow!("fleet recv: bad JSON: {e}"))?;
+        Msg::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::ProblemKind;
+
+    fn round_trip(m: &Msg) -> Msg {
+        let line = m.to_json().to_string();
+        assert!(!line.contains('\n'));
+        Msg::from_json(&Json::parse(&line).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn all_messages_round_trip() {
+        let spec = FleetSpec {
+            problem: ProblemKind::Gravity,
+            sizes: vec![300, 600],
+            iters: 3,
+            seed: u64::MAX - 1, // exercises > 2^53 (string transport)
+            quick: true,
+            jitter: 0.05,
+        };
+        let msgs = [
+            Msg::Hello { name: "w-1".into() },
+            Msg::Spec { spec, heartbeat_ms: 200 },
+            Msg::Lease { id: 7, buckets: vec![vec![0, 4, 9], vec![2]] },
+            Msg::Wait,
+            Msg::Heartbeat { lease: 0 },
+            Msg::Heartbeat { lease: 7 },
+            Msg::Done {
+                lease: 7,
+                wall: 0.125,
+                results: vec![(0, 1.5f64.to_bits()), (4, f64::NAN.to_bits())],
+            },
+            Msg::Shutdown,
+        ];
+        for m in &msgs {
+            assert_eq!(&round_trip(m), m, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn result_bits_survive_exactly() {
+        // The load-bearing property: a result that JSON numbers would
+        // mangle (full 64-bit pattern) survives the hex-string transport.
+        let exotic = f64::from_bits(0x3FF0_0000_0000_0001); // 1.0 + 1 ulp
+        let m = Msg::Done { lease: 1, wall: 0.0, results: vec![(3, exotic.to_bits())] };
+        match round_trip(&m) {
+            Msg::Done { results, .. } => assert_eq!(results[0].1, exotic.to_bits()),
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reader_handles_stream_of_lines_and_eof() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Hello { name: "a".into() }).unwrap();
+        write_msg(&mut buf, &Msg::Wait).unwrap();
+        let mut r = MsgReader::new(&buf[..]);
+        assert_eq!(r.next().unwrap(), Some(Msg::Hello { name: "a".into() }));
+        assert_eq!(r.next().unwrap(), Some(Msg::Wait));
+        assert_eq!(r.next().unwrap(), None);
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        let mut r = MsgReader::new(&b"not json\n"[..]);
+        assert!(r.next().is_err());
+        let mut r = MsgReader::new(&b"{\"t\":\"nope\"}\n"[..]);
+        assert!(r.next().is_err());
+    }
+}

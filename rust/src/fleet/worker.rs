@@ -1,0 +1,382 @@
+//! A fleet worker: connects to the coordinator, rebuilds the sweep grid
+//! locally from the wire spec, and executes leased cell buckets through
+//! the same [`run_cell_bucket`] path the in-process pool uses — so a
+//! fleet of separate OS processes produces bitwise-identical results to
+//! one process.
+//!
+//! Failure posture: a lost coordinator connection is never fatal once the
+//! worker has connected at least once — the worker drains whatever lease
+//! it holds (the work is discarded; the coordinator will re-lease it),
+//! then retries the connection under a bounded, jittered exponential
+//! backoff ([`Backoff`]). Exhausting the budget after a successful run is
+//! a clean exit 0: the likeliest cause is the coordinator finishing and
+//! going away.
+//!
+//! The [`WorkerChaos`] knobs exist for the chaos harness
+//! (`rust/tests/fleet.rs`): they inject kills, hangs, and delayed
+//! completions at deterministic cell-count boundaries so every recovery
+//! path in the coordinator is exercised by tests, not just by luck.
+
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::experiments::{flat_cells, run_cell_bucket, SweepScratch};
+use crate::util::{Backoff, Rng};
+
+use super::proto::{write_msg, Msg, MsgReader};
+use super::FleetGrid;
+
+/// Deterministic fault injection for the chaos harness. All counts are
+/// against the worker's **process-lifetime** executed-cell counter, so an
+/// injection point survives reconnects and is reproducible run to run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerChaos {
+    /// Simulate a SIGKILL: once this many cells have been executed, drop
+    /// the socket without a word (mid-lease) and exit.
+    pub kill_after_cells: Option<usize>,
+    /// Go silent: once this many cells have been executed, sleep
+    /// `hang_hold` before the next bucket (long enough for the lease to
+    /// expire), then carry on — the late `Done` exercises the stale-
+    /// completion path.
+    pub hang_after_cells: Option<usize>,
+    /// How long a hang lasts.
+    pub hang_hold: Duration,
+    /// Delay the first `Done` by this long (forces a duplicate
+    /// completion when longer than the coordinator's deadline).
+    pub done_delay: Option<Duration>,
+}
+
+/// Worker runtime configuration.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Coordinator address, e.g. `127.0.0.1:7500`.
+    pub addr: String,
+    /// Display name (logs + deterministic backoff jitter stream).
+    pub name: String,
+    /// Base delay of the connect backoff.
+    pub connect_base: Duration,
+    /// Connect attempts before giving up.
+    pub connect_attempts: usize,
+    /// Root seed for the jitter stream (any value; only decorrelates
+    /// reconnect stampedes, never results).
+    pub seed: u64,
+    /// Fault injection (all-`None` in production).
+    pub chaos: WorkerChaos,
+}
+
+impl WorkerConfig {
+    /// Production defaults for `addr`, named `name`.
+    pub fn new(addr: impl Into<String>, name: impl Into<String>) -> WorkerConfig {
+        WorkerConfig {
+            addr: addr.into(),
+            name: name.into(),
+            connect_base: Duration::from_millis(50),
+            connect_attempts: 12,
+            seed: 0xB5F,
+            chaos: WorkerChaos::default(),
+        }
+    }
+}
+
+/// What one worker did over its lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerSummary {
+    /// Cells executed and reported.
+    pub cells: usize,
+    /// Leases completed.
+    pub leases: usize,
+    /// Times the coordinator connection was re-established.
+    pub reconnects: usize,
+    /// Cells executed whose results were discarded (connection lost
+    /// mid-lease; the coordinator re-leases them elsewhere).
+    pub drained_cells: usize,
+    /// True when the chaos kill switch fired.
+    pub killed: bool,
+}
+
+/// How one connected session ended.
+enum SessionEnd {
+    /// Coordinator said the grid is complete.
+    Shutdown,
+    /// Chaos kill fired; exit without reconnecting.
+    Killed,
+    /// Connection lost; reconnect and carry on.
+    Lost,
+}
+
+/// Mutable chaos bookkeeping that must survive reconnects.
+#[derive(Default)]
+struct ChaosState {
+    cells_executed: usize,
+    hang_done: bool,
+    done_delayed: bool,
+}
+
+/// FNV-1a of the worker name: a stable per-worker stream tag so every
+/// worker jitters its reconnects differently but reproducibly.
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Run a worker to completion: connect (with backoff), execute leases,
+/// survive coordinator loss, exit on shutdown or exhausted reconnects.
+pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerSummary> {
+    let mut summary = WorkerSummary::default();
+    let mut chaos = ChaosState::default();
+    let jitter = Rng::new(fnv64(&cfg.name) ^ cfg.seed).split(1);
+    let mut backoff = Backoff::new(cfg.connect_base, cfg.connect_attempts).with_jitter(jitter);
+    let mut connected_once = false;
+    loop {
+        let stream = match TcpStream::connect(&cfg.addr) {
+            Ok(s) => {
+                backoff.reset();
+                s
+            }
+            Err(e) => match backoff.next_delay() {
+                Some(delay) => {
+                    thread::sleep(delay);
+                    continue;
+                }
+                None if connected_once => {
+                    // the coordinator most likely finished and went away
+                    return Ok(summary);
+                }
+                None => {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "fleet worker '{}': coordinator at {} unreachable after {} attempts",
+                            cfg.name, cfg.addr, cfg.connect_attempts
+                        )
+                    });
+                }
+            },
+        };
+        connected_once = true;
+        match session(cfg, stream, &mut summary, &mut chaos)? {
+            SessionEnd::Shutdown | SessionEnd::Killed => return Ok(summary),
+            SessionEnd::Lost => {
+                // a successful connect resets the backoff, so bound the
+                // session count itself or an accept-then-drop coordinator
+                // would keep us alive forever
+                summary.reconnects += 1;
+                if summary.reconnects > cfg.connect_attempts {
+                    return Ok(summary);
+                }
+                thread::sleep(cfg.connect_base);
+            }
+        }
+    }
+}
+
+/// One connected session: handshake, rebuild the grid, execute leases.
+fn session(
+    cfg: &WorkerConfig,
+    stream: TcpStream,
+    summary: &mut WorkerSummary,
+    chaos: &mut ChaosState,
+) -> Result<SessionEnd> {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return Ok(SessionEnd::Lost),
+    };
+    let mut reader = MsgReader::new(stream);
+    if write_msg(&mut writer, &Msg::Hello { name: cfg.name.clone() }).is_err() {
+        return Ok(SessionEnd::Lost);
+    }
+    let (spec, heartbeat) = match reader.next() {
+        Ok(Some(Msg::Spec { spec, heartbeat_ms })) => {
+            (spec, Duration::from_millis(heartbeat_ms.max(1)))
+        }
+        Ok(Some(other)) => bail!("fleet worker: expected spec, got {other:?}"),
+        _ => return Ok(SessionEnd::Lost),
+    };
+    // Rebuild the grid locally: same spec ⇒ same jobs, same RNG streams,
+    // same flat cell identities as the coordinator and every peer.
+    let grid = FleetGrid::new(spec)?;
+    let jobs = grid.jobs();
+    let flat = flat_cells(&jobs);
+    let mut scratch = SweepScratch::default();
+    let mut out: Vec<f64> = Vec::new();
+
+    loop {
+        match reader.next() {
+            Ok(Some(Msg::Lease { id, buckets })) => {
+                let started = Instant::now();
+                let mut results: Vec<(usize, u64)> = Vec::new();
+                let mut lost = false;
+                for (bi, bucket) in buckets.iter().enumerate() {
+                    if let Some(n) = cfg.chaos.kill_after_cells {
+                        if chaos.cells_executed >= n {
+                            // simulated SIGKILL: vanish mid-lease without
+                            // a goodbye; the real CI smoke job uses kill -9
+                            summary.killed = true;
+                            return Ok(SessionEnd::Killed);
+                        }
+                    }
+                    if let Some(n) = cfg.chaos.hang_after_cells {
+                        if chaos.cells_executed >= n && !chaos.hang_done {
+                            chaos.hang_done = true;
+                            thread::sleep(cfg.chaos.hang_hold);
+                        }
+                    }
+                    out.clear();
+                    run_cell_bucket(&mut scratch, &jobs, &flat, bucket, &mut out);
+                    chaos.cells_executed += out.len();
+                    if lost {
+                        // draining: the coordinator can't hear us, but we
+                        // finish the lease's work before reconnecting so a
+                        // half-executed template never leaks state
+                        summary.drained_cells += out.len();
+                        continue;
+                    }
+                    for (j, &r) in bucket.iter().enumerate() {
+                        results.push((r, out[j].to_bits()));
+                    }
+                    if bi + 1 < buckets.len()
+                        && write_msg(&mut writer, &Msg::Heartbeat { lease: id }).is_err()
+                    {
+                        summary.drained_cells += results.len();
+                        results.clear();
+                        lost = true;
+                    }
+                }
+                if lost {
+                    return Ok(SessionEnd::Lost);
+                }
+                if let Some(delay) = cfg.chaos.done_delay {
+                    if !chaos.done_delayed {
+                        chaos.done_delayed = true;
+                        thread::sleep(delay);
+                    }
+                }
+                summary.cells += results.len();
+                summary.leases += 1;
+                let wall = started.elapsed().as_secs_f64();
+                let done = Msg::Done { lease: id, wall, results };
+                if write_msg(&mut writer, &done).is_err() {
+                    return Ok(SessionEnd::Lost);
+                }
+            }
+            Ok(Some(Msg::Wait)) => {
+                thread::sleep(heartbeat);
+                if write_msg(&mut writer, &Msg::Heartbeat { lease: 0 }).is_err() {
+                    return Ok(SessionEnd::Lost);
+                }
+            }
+            Ok(Some(Msg::Shutdown)) => return Ok(SessionEnd::Shutdown),
+            Ok(Some(other)) => bail!("fleet worker: unexpected message {other:?}"),
+            _ => return Ok(SessionEnd::Lost),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{serial_times, FleetSpec};
+    use super::*;
+    use crate::experiments::ProblemKind;
+    use std::net::TcpListener;
+
+    #[test]
+    fn fnv64_is_stable_and_distinguishes_names() {
+        assert_eq!(fnv64("w-1"), fnv64("w-1"));
+        assert_ne!(fnv64("w-1"), fnv64("w-2"));
+        assert_ne!(fnv64(""), 0);
+    }
+
+    #[test]
+    fn unreachable_coordinator_errors_after_budget() {
+        let mut cfg = WorkerConfig::new("127.0.0.1:1", "test-unreachable");
+        cfg.connect_base = Duration::from_millis(1);
+        cfg.connect_attempts = 2;
+        let err = run_worker(&cfg).unwrap_err();
+        assert!(err.to_string().contains("unreachable"), "{err}");
+    }
+
+    /// Script one coordinator session by hand: lease a single cell, check
+    /// the result bits match the serial ground truth, shut down.
+    #[test]
+    fn executes_a_lease_and_reports_exact_bits() {
+        let spec = FleetSpec {
+            problem: ProblemKind::Jacobi,
+            sizes: vec![1_500],
+            iters: 1,
+            seed: 7,
+            quick: true,
+            jitter: 0.05,
+        };
+        let truth = serial_times(&FleetGrid::new(spec.clone()).unwrap());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = MsgReader::new(stream);
+            assert!(matches!(reader.next().unwrap(), Some(Msg::Hello { .. })));
+            write_msg(&mut writer, &Msg::Spec { spec, heartbeat_ms: 50 }).unwrap();
+            write_msg(&mut writer, &Msg::Lease { id: 1, buckets: vec![vec![0], vec![2]] })
+                .unwrap();
+            // two buckets ⇒ one mid-lease heartbeat, then the completion
+            assert_eq!(reader.next().unwrap(), Some(Msg::Heartbeat { lease: 1 }));
+            let done = reader.next().unwrap().unwrap();
+            write_msg(&mut writer, &Msg::Shutdown).unwrap();
+            done
+        });
+        let cfg = WorkerConfig::new(addr, "test-exec");
+        let summary = run_worker(&cfg).unwrap();
+        let done = handle.join().unwrap();
+        match done {
+            Msg::Done { lease, results, .. } => {
+                assert_eq!(lease, 1);
+                assert_eq!(results.len(), 2);
+                assert_eq!(results[0], (0, truth[0].to_bits()));
+                assert_eq!(results[1], (2, truth[2].to_bits()));
+            }
+            other => panic!("expected done, got {other:?}"),
+        }
+        assert_eq!(summary.cells, 2);
+        assert_eq!(summary.leases, 1);
+        assert!(!summary.killed);
+    }
+
+    #[test]
+    fn chaos_kill_fires_at_the_cell_boundary() {
+        let spec = FleetSpec {
+            problem: ProblemKind::Jacobi,
+            sizes: vec![1_500],
+            iters: 1,
+            seed: 7,
+            quick: true,
+            jitter: 0.05,
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = MsgReader::new(stream);
+            assert!(matches!(reader.next().unwrap(), Some(Msg::Hello { .. })));
+            write_msg(&mut writer, &Msg::Spec { spec, heartbeat_ms: 50 }).unwrap();
+            write_msg(&mut writer, &Msg::Lease { id: 1, buckets: vec![vec![0], vec![1]] })
+                .unwrap();
+            // bucket 1 executes, heartbeat arrives, then the kill fires
+            // before bucket 2 and the socket just dies
+            assert_eq!(reader.next().unwrap(), Some(Msg::Heartbeat { lease: 1 }));
+            assert_eq!(reader.next().unwrap(), None, "socket dropped without a Done");
+        });
+        let mut cfg = WorkerConfig::new(addr, "test-kill");
+        cfg.chaos.kill_after_cells = Some(1);
+        let summary = run_worker(&cfg).unwrap();
+        handle.join().unwrap();
+        assert!(summary.killed);
+        assert_eq!(summary.cells, 0, "killed before any Done");
+    }
+}

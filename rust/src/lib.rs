@@ -28,7 +28,10 @@
 //!   (JAX + Pallas, built once by `make artifacts`) and executes them on the
 //!   worker hot path;
 //! * [`experiments`] — harnesses regenerating every table and figure of the
-//!   paper's evaluation (Fig. 6, Fig. 7, Tables 2–4) plus ablations.
+//!   paper's evaluation (Fig. 6, Fig. 7, Tables 2–4) plus ablations;
+//! * [`fleet`] — a lease-based coordinator/worker plane that shards the pooled
+//!   sweep queue across OS processes with heartbeats, re-lease recovery, and a
+//!   bitwise-deterministic result table under any single-worker failure.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for measured
 //! results.
@@ -36,6 +39,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fleet;
 pub mod linalg;
 pub mod lists;
 pub mod model;

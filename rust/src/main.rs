@@ -8,6 +8,9 @@
 //! bsf calibrate --problem=jacobi --n=1024
 //! bsf predict   --problem=jacobi --n=10000 [--tau-op=9.3e-10]
 //! bsf sweep     --problem=jacobi --n=1024 [--kmax=K]
+//! bsf fleet-serial [--fleet.problem=jacobi] [--fleet.sizes=1500,5000] [--quick=1]
+//! bsf fleet-coord  [--fleet.addr=127.0.0.1:7500] [--fleet.*=...]
+//! bsf fleet-worker [--fleet.addr=127.0.0.1:7500] [--fleet.name=w1]
 //! ```
 //!
 //! Any `--key=value` flag overrides the config file (see
@@ -34,7 +37,8 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: bsf <experiment|run|calibrate|predict|sweep|trace> [--key=value ...]\n\
+    "usage: bsf <experiment|run|calibrate|predict|sweep|trace|fleet-serial|fleet-coord|fleet-worker> \
+     [--key=value ...]\n\
      experiments: fig6 fig7 table2 table3 table4 sqrt-law faulty nonstationary \
      ablation-collectives ablation-masters baselines explorer all"
         .to_string()
@@ -60,8 +64,111 @@ fn run() -> Result<()> {
         Some("predict") => cmd_predict(&ctx, &settings),
         Some("sweep") => cmd_sweep(&ctx, &settings),
         Some("trace") => cmd_trace(&ctx, &settings),
+        Some("fleet-serial") => cmd_fleet_serial(&ctx, &settings),
+        Some("fleet-coord") => cmd_fleet_coord(&ctx, &settings),
+        Some("fleet-worker") => cmd_fleet_worker(&settings),
         _ => bail!(usage()),
     }
+}
+
+/// Shared `fleet.*` spec flags (the worker receives the spec on the wire,
+/// so only `fleet-serial` and `fleet-coord` read these).
+fn fleet_spec(ctx: &ExperimentCtx, settings: &Settings) -> Result<bsf::fleet::FleetSpec> {
+    let pname = settings.get("fleet.problem").unwrap_or("jacobi");
+    let problem = ProblemKind::parse(pname)
+        .ok_or_else(|| anyhow!("fleet.problem={pname}: expected jacobi|gravity"))?;
+    let default_sizes: &[usize] = match problem {
+        ProblemKind::Gravity => &[300, 600],
+        _ => &[1_500, 5_000],
+    };
+    Ok(bsf::fleet::FleetSpec {
+        problem,
+        sizes: settings.usize_list_or("fleet.sizes", default_sizes)?,
+        iters: settings.usize_or("fleet.iters", if ctx.quick { 3 } else { 7 })?,
+        seed: ctx.seed,
+        quick: ctx.quick,
+        jitter: settings.f64_or("fleet.jitter", 0.05)?,
+    })
+}
+
+fn fleet_addr(settings: &Settings) -> String {
+    settings.get("fleet.addr").unwrap_or("127.0.0.1:7500").to_string()
+}
+
+/// `bsf fleet-serial` — the single-process ground truth: run the grid
+/// serially and save the result table a fleet run must match byte for
+/// byte.
+fn cmd_fleet_serial(ctx: &ExperimentCtx, settings: &Settings) -> Result<()> {
+    let grid = bsf::fleet::FleetGrid::new(fleet_spec(ctx, settings)?)?;
+    let times = bsf::fleet::serial_times(&grid);
+    let t = bsf::fleet::fleet_table(&grid, &times);
+    println!("{}", t.render());
+    ctx.save("fleet_serial", &t);
+    println!("(CSV saved under {:?})", ctx.out_dir);
+    Ok(())
+}
+
+/// `bsf fleet-coord` — bind the fleet address, serve leases until the
+/// grid completes, save the result table and print the fault report.
+fn cmd_fleet_coord(ctx: &ExperimentCtx, settings: &Settings) -> Result<()> {
+    let grid = bsf::fleet::FleetGrid::new(fleet_spec(ctx, settings)?)?;
+    let ms = |key: &str, default: usize| -> Result<std::time::Duration> {
+        Ok(std::time::Duration::from_millis(settings.usize_or(key, default)? as u64))
+    };
+    let cfg = bsf::fleet::FleetConfig {
+        heartbeat: ms("fleet.heartbeat-ms", 200)?,
+        grace: settings.usize_or("fleet.grace", 10)? as u32,
+        min_deadline: ms("fleet.min-deadline-ms", 5_000)?,
+        lease_target: ms("fleet.lease-target-ms", 500)?,
+        max_lease_cells: settings.usize_or("fleet.max-lease-cells", 16)?,
+        idle_timeout: ms("fleet.idle-timeout-ms", 120_000)?,
+        ..Default::default()
+    };
+    let addr = fleet_addr(settings);
+    let listener = std::net::TcpListener::bind(&addr)
+        .map_err(|e| anyhow!("fleet-coord: cannot bind {addr}: {e}"))?;
+    println!("fleet coordinator listening on {addr} ({} cells)...", grid.cells());
+    let (times, report) = bsf::fleet::serve(&grid, &cfg, listener)?;
+    let t = bsf::fleet::fleet_table(&grid, &times);
+    println!("{}", t.render());
+    ctx.save("fleet_result", &t);
+    let mut rt = Table::new(
+        "fleet report",
+        &["workers", "leases", "re-leases", "expired", "deaths", "dup done", "dup mismatch", "re-exec cells"],
+    );
+    rt.row(&[
+        report.workers_joined.to_string(),
+        report.leases_issued.to_string(),
+        report.releases.to_string(),
+        report.leases_expired.to_string(),
+        report.worker_deaths.to_string(),
+        report.duplicate_completions.to_string(),
+        report.duplicate_mismatches.to_string(),
+        report.re_executed_cells.to_string(),
+    ]);
+    println!("{}", rt.render());
+    if report.duplicate_mismatches > 0 {
+        bail!("fleet determinism violated: {} duplicate completions disagreed", report.duplicate_mismatches);
+    }
+    Ok(())
+}
+
+/// `bsf fleet-worker` — join the fleet at `fleet.addr` and execute leases
+/// until the coordinator shuts the run down.
+fn cmd_fleet_worker(settings: &Settings) -> Result<()> {
+    let addr = fleet_addr(settings);
+    let name = settings
+        .get("fleet.name")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("worker-{}", std::process::id()));
+    let mut cfg = bsf::fleet::WorkerConfig::new(addr, name);
+    cfg.connect_attempts = settings.usize_or("fleet.connect-attempts", 12)?;
+    let summary = bsf::fleet::run_worker(&cfg)?;
+    println!(
+        "fleet worker '{}' done: {} cells over {} leases ({} reconnects, {} drained)",
+        cfg.name, summary.cells, summary.leases, summary.reconnects, summary.drained_cells
+    );
+    Ok(())
 }
 
 fn make_ctx(settings: &Settings) -> Result<ExperimentCtx> {

@@ -155,7 +155,13 @@ impl Drop for WorkerEndpoint {
 }
 
 /// Create a master endpoint and `k` worker endpoints.
+///
+/// # Panics
+/// On `k == 0` — a fabric with no workers can never complete a gather,
+/// and failing here names the mistake instead of surfacing it as an
+/// index error deep in the runner.
 pub fn fabric(k: usize) -> (MasterEndpoint, Vec<WorkerEndpoint>) {
+    assert!(k > 0, "fabric requires at least one worker (k = 0)");
     let bus = Arc::new(UplinkBus {
         inbox: Mutex::new(Inbox {
             slots: (0..k).map(|_| None).collect(),
@@ -183,6 +189,17 @@ pub enum TransportError {
     WorkerGone(usize),
     /// The master's endpoint dropped.
     MasterGone,
+    /// A superseded incarnation tried to send: the master respawned this
+    /// worker id while the old endpoint was hung, so its delayed uplink
+    /// was refused rather than clobbering the live incarnation's slot.
+    /// Distinct from [`TransportError::WorkerGone`] so fleet/runner logs
+    /// can tell a dead peer from a zombie one.
+    StaleGeneration {
+        /// Worker id whose send was refused.
+        worker: usize,
+        /// Generation the stale endpoint belonged to.
+        generation: u32,
+    },
     /// Timed out waiting for worker partials.
     Timeout {
         /// How many partials never arrived.
@@ -197,8 +214,15 @@ impl std::fmt::Display for TransportError {
         match self {
             TransportError::WorkerGone(id) => write!(f, "worker {id} disconnected"),
             TransportError::MasterGone => write!(f, "master disconnected"),
+            TransportError::StaleGeneration { worker, generation } => write!(
+                f,
+                "worker {worker} send refused: stale incarnation (generation {generation} superseded by respawn)"
+            ),
             TransportError::Timeout { missing, expected } => {
-                write!(f, "timed out waiting for {missing} of {expected} partials")
+                write!(
+                    f,
+                    "gather timed out waiting for {missing} of {expected} partials (deadline expired; peers still registered)"
+                )
             }
         }
     }
@@ -373,7 +397,8 @@ impl WorkerEndpoint {
     /// slot. Zero heap allocations: the buffer travels by move and comes
     /// back through the next downlink's `reuse`. A superseded incarnation
     /// (the master respawned this worker id while this endpoint was hung)
-    /// gets `WorkerGone` instead of clobbering the new incarnation's slot.
+    /// gets [`TransportError::StaleGeneration`] instead of clobbering the
+    /// new incarnation's slot.
     pub fn send(
         &self,
         epoch: u64,
@@ -386,7 +411,10 @@ impl WorkerEndpoint {
         {
             let mut inbox = self.bus.lock();
             if inbox.generation[self.id - 1] != self.generation {
-                return Err(TransportError::WorkerGone(self.id));
+                return Err(TransportError::StaleGeneration {
+                    worker: self.id,
+                    generation: self.generation,
+                });
             }
             inbox.slots[self.id - 1] =
                 Some(Uplink { worker: self.id, epoch, partial, map_seconds });
@@ -573,10 +601,11 @@ mod tests {
         let (mut master, mut workers) = fabric(2);
         let old = workers.remove(1);
         let new = master.respawn(2);
-        // The old incarnation can no longer deliver...
+        // The old incarnation can no longer deliver — and the error names
+        // the zombie (stale generation), not a dead peer.
         assert!(matches!(
             old.send(0, vec![1.0], 0.0).unwrap_err(),
-            TransportError::WorkerGone(2)
+            TransportError::StaleGeneration { worker: 2, generation: 0 }
         ));
         // ...its recv fails fast (the old downlink sender was dropped)...
         assert!(matches!(old.recv().unwrap_err(), TransportError::MasterGone));
@@ -596,6 +625,20 @@ mod tests {
             }
             other => panic!("unexpected: {other:?}"),
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one worker")]
+    fn fabric_rejects_zero_workers() {
+        let _ = fabric(0);
+    }
+
+    #[test]
+    fn error_display_distinguishes_timeout_and_stale_generation() {
+        let t = TransportError::Timeout { missing: 2, expected: 4 }.to_string();
+        assert!(t.contains("timed out") && t.contains("2 of 4"), "{t}");
+        let s = TransportError::StaleGeneration { worker: 3, generation: 1 }.to_string();
+        assert!(s.contains("stale incarnation") && s.contains("worker 3"), "{s}");
     }
 
     #[test]

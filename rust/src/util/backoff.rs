@@ -1,0 +1,143 @@
+//! Bounded exponential backoff — one retry discipline shared by the live
+//! runner's worker respawns and the fleet workers' coordinator reconnects.
+//!
+//! The schedule is `base × 2^attempt` (exponent clamped at 16 so the
+//! multiplier never overflows), optionally stretched by a deterministic
+//! jitter factor drawn from a caller-supplied [`Rng`] stream — two
+//! processes given the same split stream compute the same delays, so
+//! retry storms stay replayable.
+
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// Exponent clamp: `2^16 × base` is already minutes-to-hours for any
+/// sensible base, and clamping keeps the multiplier within u32.
+const MAX_EXP: u32 = 16;
+
+/// Jitter stretch range: each delay is multiplied by a uniform draw in
+/// `[1.0, 1.5)`. Stretch-only (never shrink) so a jittered schedule still
+/// respects the un-jittered schedule as a lower bound.
+const JITTER_SPAN: f64 = 0.5;
+
+/// A bounded exponential-backoff schedule.
+///
+/// `next_delay` yields `Some(delay)` for the first `limit` attempts and
+/// `None` once the budget is exhausted; the caller decides what
+/// exhaustion means (give up the worker, abort the connect loop).
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    limit: usize,
+    attempts: usize,
+    jitter: Option<Rng>,
+}
+
+impl Backoff {
+    /// A schedule of at most `limit` retries spaced `base × 2^attempt`
+    /// apart. `limit == 0` means "never retry" — the first `next_delay`
+    /// call returns `None`.
+    pub fn new(base: Duration, limit: usize) -> Backoff {
+        Backoff { base, limit, attempts: 0, jitter: None }
+    }
+
+    /// Stretch each delay by a deterministic factor in `[1.0, 1.5)` drawn
+    /// from `rng` (builder form). Pass a [`Rng::split`] stream so
+    /// every retry schedule in a process is a pure function of the root
+    /// seed.
+    pub fn with_jitter(mut self, rng: Rng) -> Backoff {
+        self.jitter = Some(rng);
+        self
+    }
+
+    /// The un-jittered delay before retry number `attempt` (0-based) on a
+    /// schedule with base `base` — exposed so tests and log lines can name
+    /// the deadline a live schedule is about to impose.
+    pub fn delay_for(base: Duration, attempt: usize) -> Duration {
+        base * 2u32.saturating_pow((attempt as u32).min(MAX_EXP))
+    }
+
+    /// Delay to wait before the next retry, or `None` when the retry
+    /// budget is spent. Consumes one attempt; ignoring the returned delay
+    /// still burns the attempt, hence `#[must_use]`.
+    #[must_use]
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        if self.attempts >= self.limit {
+            return None;
+        }
+        let mut delay = Self::delay_for(self.base, self.attempts);
+        self.attempts += 1;
+        if let Some(rng) = self.jitter.as_mut() {
+            delay = delay.mul_f64(1.0 + JITTER_SPAN * rng.uniform());
+        }
+        Some(delay)
+    }
+
+    /// Attempts consumed so far.
+    pub fn attempts(&self) -> usize {
+        self.attempts
+    }
+
+    /// Retries remaining in the budget.
+    pub fn remaining(&self) -> usize {
+        self.limit - self.attempts.min(self.limit)
+    }
+
+    /// Reset the attempt counter — a successful (re)connection earns the
+    /// peer a fresh budget.
+    pub fn reset(&mut self) {
+        self.attempts = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_doubles_until_exhausted() {
+        let base = Duration::from_millis(10);
+        let mut b = Backoff::new(base, 4);
+        let delays: Vec<Duration> = std::iter::from_fn(|| b.next_delay()).collect();
+        assert_eq!(delays, vec![base, base * 2, base * 4, base * 8]);
+        assert!(b.next_delay().is_none(), "budget stays spent");
+        assert_eq!(b.attempts(), 4);
+        assert_eq!(b.remaining(), 0);
+    }
+
+    #[test]
+    fn zero_limit_never_retries() {
+        let mut b = Backoff::new(Duration::from_millis(1), 0);
+        assert!(b.next_delay().is_none());
+    }
+
+    #[test]
+    fn exponent_is_clamped() {
+        let base = Duration::from_nanos(1);
+        assert_eq!(Backoff::delay_for(base, 16), base * (1 << 16));
+        assert_eq!(Backoff::delay_for(base, 63), base * (1 << 16));
+    }
+
+    #[test]
+    fn reset_restores_the_budget() {
+        let mut b = Backoff::new(Duration::from_millis(5), 1);
+        assert!(b.next_delay().is_some());
+        assert!(b.next_delay().is_none());
+        b.reset();
+        assert_eq!(b.next_delay(), Some(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_stretch_only() {
+        let root = Rng::new(0xB5F);
+        let mut a = Backoff::new(Duration::from_millis(10), 6).with_jitter(root.split(1));
+        let mut b = Backoff::new(Duration::from_millis(10), 6).with_jitter(root.split(1));
+        for attempt in 0..6 {
+            let (da, db) = (a.next_delay().unwrap(), b.next_delay().unwrap());
+            assert_eq!(da, db, "same stream, same schedule");
+            let floor = Backoff::delay_for(Duration::from_millis(10), attempt);
+            assert!(da >= floor, "jitter never shrinks: {da:?} < {floor:?}");
+            assert!(da <= floor.mul_f64(1.5), "jitter bounded: {da:?}");
+        }
+    }
+}

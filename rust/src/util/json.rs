@@ -81,6 +81,69 @@ impl Json {
     }
 }
 
+/// Compact serializer — the write half of the fleet wire protocol
+/// (`fleet::proto`). Deterministic output: object keys iterate in
+/// `BTreeMap` order, numbers print via Rust's shortest-round-trip f64
+/// `Display` (so `Json::parse(v.to_string()) == v` for every value this
+/// crate produces). Wire-critical floats should still travel as
+/// `f64::to_bits` hex strings — JSON numbers only guarantee exactness up
+/// to 2^53 for integers, and text round-trips of exotic values (NaN,
+/// infinities) are not representable at all.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => f.write_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    write!(f, "{x}")
+                } else {
+                    // JSON has no NaN/inf literal; null is the least-bad text.
+                    f.write_str("null")
+                }
+            }
+            Json::Str(s) => write_json_str(f, s),
+            Json::Arr(v) => {
+                f.write_str("[")?;
+                for (i, e) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{e}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_json_str(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_json_str(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
 /// Parse failure with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
@@ -349,5 +412,50 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    /// Serializer round-trip: parse(to_string(v)) == v for every value
+    /// shape the fleet protocol emits, including escapes and multibyte
+    /// UTF-8.
+    #[test]
+    fn display_round_trips() {
+        let cases = [
+            "null",
+            "true",
+            "[1,2.5,-3]",
+            r#"{"a":[1,{"b":"c"}],"d":{},"e":"q\"w\\x\ny"}"#,
+            r#""héllo — ok""#,
+            "[]",
+            "{}",
+        ];
+        for src in cases {
+            let v = Json::parse(src).unwrap();
+            let text = v.to_string();
+            assert_eq!(Json::parse(&text).unwrap(), v, "round-trip of {src}: {text}");
+        }
+    }
+
+    /// Object keys serialize in sorted (BTreeMap) order — the wire format
+    /// is deterministic regardless of insertion order.
+    #[test]
+    fn display_is_deterministic() {
+        let v = Json::parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
+        assert_eq!(v.to_string(), r#"{"a":2,"m":3,"z":1}"#);
+    }
+
+    /// Control characters escape as \u00XX and survive the round trip.
+    #[test]
+    fn display_escapes_control_chars() {
+        let v = Json::Str("a\u{1}b".into());
+        assert_eq!(v.to_string(), "\"a\\u0001b\"");
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    /// Non-finite numbers have no JSON literal; they serialize as null
+    /// (callers moving exact f64s use to_bits hex strings instead).
+    #[test]
+    fn display_nonfinite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
     }
 }

@@ -4,6 +4,7 @@
 //! These are hand-rolled substrates (the build is fully offline; no external
 //! crates beyond `xla`/`anyhow`), each with its own unit tests.
 
+pub mod backoff;
 pub mod bench;
 pub mod svg;
 pub mod json;
@@ -13,6 +14,7 @@ pub mod stats;
 pub mod table;
 pub mod timer;
 
+pub use backoff::Backoff;
 pub use json::Json;
 
 pub use rng::Rng;

@@ -149,6 +149,10 @@ fn healthy_run_completes() {
     assert_eq!(report.iterations, 6);
     assert_eq!(report.faults.injected, 0);
     assert_eq!(report.faults.late_uplinks_dropped, 0);
+    // surfaced unconditionally at the top level too: clean runs report a
+    // hard zero, not an absent field
+    assert_eq!(report.late_uplinks_dropped, 0);
+    assert_eq!(report.late_uplinks_dropped, report.faults.late_uplinks_dropped);
 }
 
 #[test]
@@ -185,6 +189,9 @@ fn hung_worker_recovers_with_fault_tolerance() {
     assert!(report.converged);
     assert_eq!(report.iterations, 6);
     assert_eq!(report.faults.injected, 1);
+    // the hung worker's uplink lands after the gather deadline; the
+    // top-level mirror must agree with the fault counters
+    assert_eq!(report.late_uplinks_dropped, report.faults.late_uplinks_dropped);
 }
 
 #[test]

@@ -1,0 +1,220 @@
+//! Fleet chaos harness — the fault-tolerance contract, pinned:
+//!
+//! with any single worker killed (socket dropped mid-lease) or hung
+//! (silent past its deadline) at deterministic injection points, the
+//! fleet's final result table is **bitwise identical** to the serial
+//! single-process sweep, re-leases are observed in the report, and no
+//! duplicate completion ever disagrees on bits.
+//!
+//! Everything runs in-process over localhost TCP: `serve` in one thread,
+//! `run_worker` in others, kills simulated by dropping the socket exactly
+//! where a real SIGKILL would (the CI fleet-smoke job does it with a real
+//! `kill -9`). Timing assertions are deliberately one-sided — false lease
+//! expiries under debug-build CI load are bitwise-harmless by design, so
+//! no test asserts an *absence* of recovery except under a generous
+//! deadline.
+
+use std::net::TcpListener;
+use std::thread;
+use std::time::Duration;
+
+use bsf::experiments::ProblemKind;
+use bsf::fleet::{
+    run_worker, serial_times, serve, FleetConfig, FleetGrid, FleetReport, FleetSpec, WorkerChaos,
+    WorkerConfig, WorkerSummary,
+};
+
+/// Two identical sizes: every K appears in two cells of equal shape, so
+/// the partition has real multi-cell buckets and re-leases cross size
+/// boundaries.
+fn spec() -> FleetSpec {
+    FleetSpec {
+        problem: ProblemKind::Jacobi,
+        sizes: vec![1_500, 1_500],
+        iters: 2,
+        seed: 0xF1EE7,
+        quick: true,
+        jitter: 0.05,
+    }
+}
+
+/// Generous deadlines: nothing should expire unless a worker is truly
+/// gone for many seconds.
+fn loose_cfg() -> FleetConfig {
+    FleetConfig {
+        heartbeat: Duration::from_millis(50),
+        grace: 100,
+        min_deadline: Duration::from_secs(20),
+        safety: 50.0,
+        lease_target: Duration::from_millis(200),
+        max_lease_cells: 16,
+        idle_timeout: Duration::from_secs(60),
+    }
+}
+
+/// Tight deadlines: a silent worker expires in ~a quarter second.
+fn tight_cfg() -> FleetConfig {
+    FleetConfig {
+        heartbeat: Duration::from_millis(25),
+        grace: 4,
+        min_deadline: Duration::from_millis(200),
+        safety: 1.0,
+        lease_target: Duration::from_millis(500),
+        max_lease_cells: 16,
+        idle_timeout: Duration::from_secs(60),
+    }
+}
+
+/// Run one fleet: a coordinator plus one worker per chaos entry.
+fn run_fleet(
+    spec: FleetSpec,
+    cfg: FleetConfig,
+    chaos: &[WorkerChaos],
+) -> (Vec<f64>, FleetReport, Vec<anyhow::Result<WorkerSummary>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let grid = FleetGrid::new(spec).expect("grid");
+    let coord = thread::spawn(move || serve(&grid, &cfg, listener).expect("serve"));
+    let workers: Vec<_> = chaos
+        .iter()
+        .enumerate()
+        .map(|(i, &ch)| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut wc = WorkerConfig::new(addr, format!("chaos-w{i}"));
+                wc.connect_base = Duration::from_millis(1);
+                wc.connect_attempts = 8;
+                wc.chaos = ch;
+                run_worker(&wc)
+            })
+        })
+        .collect();
+    let (times, report) = coord.join().expect("coordinator thread");
+    let summaries = workers.into_iter().map(|h| h.join().expect("worker thread")).collect();
+    (times, report, summaries)
+}
+
+fn assert_bitwise(times: &[f64], truth: &[f64]) {
+    assert_eq!(times.len(), truth.len());
+    for (r, (a, b)) in times.iter().zip(truth).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "cell {r}: fleet {a:e} != serial {b:e}");
+    }
+}
+
+#[test]
+fn repeated_size_grid_has_multicell_buckets() {
+    let grid = FleetGrid::new(spec()).unwrap();
+    let jobs = grid.jobs();
+    let flat = bsf::experiments::flat_cells(&jobs);
+    let groups = bsf::experiments::cell_groups(&jobs, &flat);
+    assert!(
+        groups.iter().any(|g| g.len() >= 2),
+        "chaos grid must exercise multi-cell buckets, got all singletons"
+    );
+    assert_eq!(groups.iter().map(Vec::len).sum::<usize>(), flat.len());
+}
+
+#[test]
+fn clean_fleet_matches_serial_bitwise() {
+    let truth = serial_times(&FleetGrid::new(spec()).unwrap());
+    let chaos = [WorkerChaos::default(); 3];
+    let (times, report, summaries) = run_fleet(spec(), loose_cfg(), &chaos);
+    assert_bitwise(&times, &truth);
+    // >= 1, not == 3: a worker may in principle join after the grid
+    // drains under extreme scheduler starvation
+    assert!(report.workers_joined >= 1, "{report:?}");
+    assert_eq!(report.cells, truth.len());
+    assert_eq!(report.releases, 0, "clean run must not re-lease: {report:?}");
+    assert_eq!(report.leases_expired, 0);
+    assert_eq!(report.duplicate_mismatches, 0);
+    let executed: usize = summaries.iter().map(|s| s.as_ref().unwrap().cells).sum();
+    assert_eq!(executed, truth.len(), "each cell executed exactly once");
+}
+
+/// The acceptance chaos contract: a worker SIGKILLed mid-lease at each of
+/// three deterministic injection points; the fleet must recover with a
+/// bitwise-identical table and at least one re-lease.
+#[test]
+fn killed_worker_recovers_bitwise_at_three_injection_points() {
+    let truth = serial_times(&FleetGrid::new(spec()).unwrap());
+    for kill_at in [1usize, 4, 9] {
+        let chaos = [
+            WorkerChaos::default(),
+            WorkerChaos::default(),
+            WorkerChaos { kill_after_cells: Some(kill_at), ..Default::default() },
+        ];
+        let (times, report, summaries) = run_fleet(spec(), loose_cfg(), &chaos);
+        assert_bitwise(&times, &truth);
+        assert!(report.releases >= 1, "kill@{kill_at}: no re-lease observed: {report:?}");
+        assert!(report.worker_deaths >= 1, "kill@{kill_at}: {report:?}");
+        assert_eq!(report.duplicate_mismatches, 0, "kill@{kill_at}: {report:?}");
+        let killed = summaries[2].as_ref().unwrap();
+        assert!(killed.killed, "kill@{kill_at}: chaos kill never fired");
+    }
+}
+
+/// Lease-expiry edge case: the original owner goes silent past its
+/// deadline, the batch is re-leased, and the owner's late completion is
+/// accepted (duplicate, never a mismatch).
+#[test]
+fn hung_worker_expires_then_late_completion_is_safe() {
+    let truth = serial_times(&FleetGrid::new(spec()).unwrap());
+    let chaos = [
+        WorkerChaos::default(),
+        WorkerChaos {
+            hang_after_cells: Some(2),
+            hang_hold: Duration::from_secs(2),
+            ..Default::default()
+        },
+    ];
+    let (times, report, summaries) = run_fleet(spec(), tight_cfg(), &chaos);
+    assert_bitwise(&times, &truth);
+    assert!(report.leases_expired >= 1, "hang never expired a lease: {report:?}");
+    assert!(report.releases >= 1);
+    assert_eq!(report.duplicate_mismatches, 0, "{report:?}");
+    // the hung worker was never killed and exited cleanly
+    assert!(!summaries[1].as_ref().unwrap().killed);
+}
+
+/// Lease-expiry edge case: duplicate completion of the same cells — the
+/// owner delays its `Done` past the deadline, a peer re-executes, and
+/// both completions are recorded with identical bits.
+#[test]
+fn delayed_done_yields_duplicate_completion_not_mismatch() {
+    let truth = serial_times(&FleetGrid::new(spec()).unwrap());
+    let chaos = [
+        WorkerChaos { done_delay: Some(Duration::from_millis(800)), ..Default::default() },
+        WorkerChaos::default(),
+    ];
+    let (times, report, _) = run_fleet(spec(), tight_cfg(), &chaos);
+    assert_bitwise(&times, &truth);
+    assert!(
+        report.duplicate_completions >= 1,
+        "delayed Done should duplicate at least one cell: {report:?}"
+    );
+    assert_eq!(report.duplicate_mismatches, 0, "duplicates must agree bitwise: {report:?}");
+}
+
+/// Lease-expiry edge case: the coordinator finishes (and vanishes) while
+/// a worker still thinks it holds a lease — the worker drains, fails to
+/// reconnect, and exits cleanly (the process-level contract behind the
+/// CI smoke job's `wait` on worker exit codes).
+#[test]
+fn coordinator_shutdown_with_outstanding_lease_drains_worker() {
+    let truth = serial_times(&FleetGrid::new(spec()).unwrap());
+    let chaos = [
+        WorkerChaos::default(),
+        WorkerChaos {
+            hang_after_cells: Some(0), // hang immediately on the first lease
+            hang_hold: Duration::from_secs(3),
+            ..Default::default()
+        },
+    ];
+    let (times, report, summaries) = run_fleet(spec(), tight_cfg(), &chaos);
+    assert_bitwise(&times, &truth);
+    assert!(report.leases_expired >= 1, "{report:?}");
+    let straggler = summaries[1].as_ref().expect("straggler must exit cleanly (exit 0)");
+    assert!(!straggler.killed);
+    // whatever it executed after the coordinator left was drained work
+    assert_eq!(truth.len(), report.cells);
+}
